@@ -1,0 +1,139 @@
+//! Reproduces **Fig. 4**: the error–FLOPs–#params space spanned by
+//! automatic rank selection.  For each network, sweeping λ traces a curve
+//! from the dense reference (bottom-right) up and left; smaller λ keeps
+//! more rank (more FLOPs, lower error).
+//!
+//! Paper claims (shape): each net's λ-sweep spans a frontier; bigger nets
+//! start lower-right; the frontier is monotone (more FLOPs → less error,
+//! up to noise).
+//!
+//! ```text
+//! cargo run --release --example fig4_rank_selection [-- --fast]
+//! ```
+
+use lc::compress::lowrank::{RankCost, RankSelection};
+use lc::compress::task::{TaskSet, TaskSpec};
+use lc::compress::view::View;
+use lc::harness::{scaled_lowrank_config, Env, Scale};
+use lc::models::lookup;
+use lc::report::{ascii_plot, pct, Series, Table};
+
+fn tasks_for(nl: usize, lambda: f64) -> TaskSet {
+    TaskSet::new(
+        (0..nl)
+            .map(|l| TaskSpec {
+                name: format!("rs{l}"),
+                layers: vec![l],
+                view: View::Matrix,
+                compression: Box::new(RankSelection {
+                    lambda,
+                    cost: RankCost::Flops,
+                    max_rank: 0,
+                }),
+            })
+            .collect(),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let scale = if fast {
+        Scale { n_train: 2048, n_test: 1024, reference_epochs: 6, ..Default::default() }
+    } else {
+        Scale { reference_epochs: 16, ..Default::default() }
+    };
+    let threads = scale.threads;
+    let mut env = Env::new(scale)?;
+
+    let models: &[&str] = if fast { &["mlp-small"] } else { &["mlp-small", "lenet300"] };
+    let lambdas: &[f64] = if fast { &[1e-6, 1e-4] } else { &[1e-7, 1e-6, 1e-5, 1e-4] };
+
+    let mut all_series = Vec::new();
+    let mut table = Table::new(&[
+        "model",
+        "lambda",
+        "test err",
+        "MFLOPs",
+        "params",
+        "FLOPs ratio",
+        "per-layer ranks",
+    ]);
+    let markers = ['o', 'd', '*'];
+
+    for (mi, model) in models.iter().enumerate() {
+        let spec = lookup(model).map_err(anyhow::Error::msg)?;
+        let reference = env.reference(&spec)?;
+        let ref_test = env.evaluate(&reference, true)?;
+        let mut pts = vec![(
+            spec.flops_dense() as f64 / 1e6,
+            ref_test.error * 100.0,
+        )];
+        table.row(&[
+            model.to_string(),
+            "0 (reference)".into(),
+            pct(ref_test.error),
+            format!("{:.3}", spec.flops_dense() as f64 / 1e6),
+            spec.n_params().to_string(),
+            "1.0x".into(),
+            "dense".into(),
+        ]);
+
+        for &lambda in lambdas {
+            let mut cfg = scaled_lowrank_config(threads);
+            if fast {
+                cfg.mu.steps = 8;
+                cfg.mu.growth = 2.6; // same endpoint as the 20-step schedule
+            }
+            let reference = env.reference(&spec)?;
+            let out = env.run_lc(&spec, tasks_for(spec.n_layers(), lambda), cfg, reference)?;
+            let ranks: Vec<usize> = out
+                .thetas
+                .iter()
+                .map(|t| match t {
+                    lc::compress::Theta::LowRank { s, .. } => {
+                        s.iter().filter(|&&x| x != 0.0).count()
+                    }
+                    _ => 0,
+                })
+                .collect();
+            lc::info!(
+                "{model} lambda={lambda:.0e}: err={} flops_ratio={:.1} ranks={ranks:?}",
+                pct(out.final_test.error),
+                out.metrics.flops_ratio()
+            );
+            table.row(&[
+                model.to_string(),
+                format!("{lambda:.0e}"),
+                pct(out.final_test.error),
+                format!("{:.3}", out.metrics.flops as f64 / 1e6),
+                out.metrics.params.to_string(),
+                format!("{:.1}x", out.metrics.flops_ratio()),
+                format!("{ranks:?}"),
+            ]);
+            pts.push((out.metrics.flops as f64 / 1e6, out.final_test.error * 100.0));
+        }
+        all_series.push(Series {
+            label: format!("{model} (lambda sweep)"),
+            marker: markers[mi % markers.len()],
+            points: pts,
+        });
+    }
+
+    println!("\nFig. 4 reproduced — error vs inference FLOPs via rank selection:");
+    println!("{}", table.render());
+    let plot = ascii_plot(
+        "error-compression space (paper Fig. 4): each curve is one net's lambda sweep",
+        "inference MFLOPs",
+        "test error %",
+        &all_series,
+        64,
+        18,
+        true,
+    );
+    println!("{plot}");
+    println!(
+        "paper shape check: curves start at the dense reference (right) and move\n\
+         left/up as lambda grows; larger nets sit further right."
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Quickstart: compress a small MLP with 2-value adaptive quantization
+//! using the LC algorithm, in ~a minute on a laptop CPU.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Mirrors the paper's Listing 1: build the tasks, hand the L step to the
+//! runtime, call run().
+
+use lc::compress::quantize::AdaptiveQuant;
+use lc::compress::task::{TaskSet, TaskSpec};
+use lc::compress::view::View;
+use lc::harness::{scaled_quant_config, Env, Scale};
+use lc::models::lookup;
+use lc::report::pct;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale { n_train: 4096, n_test: 1024, reference_epochs: 10, ..Default::default() };
+    let mut env = Env::new(scale)?;
+    let spec = lookup("mlp-small").map_err(anyhow::Error::msg)?;
+
+    // 1. reference model (cached across runs)
+    let reference = env.reference(&spec)?;
+    let ref_test = env.evaluate(&reference, true)?;
+    println!("reference {}: test_err={}", spec.name, pct(ref_test.error));
+
+    // 2. compression tasks — the paper's mix-and-match structure:
+    //    quantize ALL weights with a single learned 2-value codebook
+    let tasks = TaskSet::new(vec![TaskSpec {
+        name: "quantize_everything".into(),
+        layers: vec![0, 1],
+        view: View::Vector,
+        compression: Box::new(AdaptiveQuant::new(2)),
+    }]);
+
+    // 3. run LC
+    let mut cfg = scaled_quant_config(4);
+    cfg.mu.steps = 12;
+    cfg.quiet = false;
+    let out = env.run_lc(&spec, tasks, cfg, reference)?;
+
+    println!();
+    println!("LC-compressed model:");
+    println!("  test error        {}", pct(out.final_test.error));
+    println!("  train error       {}", pct(out.final_train.error));
+    println!("  storage ratio     {:.1}x smaller", out.metrics.ratio());
+    println!("  wall time         {:.1}s over {} L steps", out.wall_secs, out.records.len());
+    println!("  monitor           {} violations", out.monitor.violations.len());
+    if let lc::compress::Theta::Quantized { codebook, .. } = &out.thetas[0] {
+        println!("  learned codebook  {codebook:?}");
+    }
+    Ok(())
+}

@@ -1,0 +1,112 @@
+"""AOT compile path: lower the L2/L1 graphs to HLO *text* artifacts.
+
+Run once by ``make artifacts``; the Rust coordinator loads the emitted
+``artifacts/*.hlo.txt`` files through the PJRT C API and never touches
+Python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly.
+
+Emitted artifacts (see artifacts/manifest.txt, parsed by
+rust/src/runtime/manifest.rs):
+  * per model variant: ``<name>_train.hlo.txt`` (one SGD step on the
+    penalized L-step objective) and ``<name>_eval.hlo.txt``;
+  * the quantization C-step kernel ``quant_assign_k<K>.hlo.txt`` for a
+    fixed weight-buffer size, used by the Rust k-means when a task fits.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only lenet300]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.quant_assign import quant_assign, BLOCK_N
+
+# Fixed flat-weight buffer size for the quantization C-step artifact.  The
+# largest single compression task in the experiment suite is the whole
+# lenet300-wide net viewed as a vector (~545k weights), so 2^20 covers all
+# tasks; the Rust caller pads with c[0] and corrects counts/distortion.
+QUANT_N = 1 << 20
+QUANT_KS = (2, 4, 16, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name: str):
+    widths, batch, eval_batch = M.MODEL_VARIANTS[name]
+    train = jax.jit(M.make_train_entry(widths)).lower(
+        *M.train_arg_shapes(widths, batch)
+    )
+    evalf = jax.jit(M.make_eval_entry(widths)).lower(
+        *M.eval_arg_shapes(widths, eval_batch)
+    )
+    return to_hlo_text(train), to_hlo_text(evalf)
+
+
+def lower_quant(k: int):
+    def entry(w, c):
+        assign, dist, sums, counts = quant_assign(w, c)
+        return (assign, dist, sums, counts)
+
+    spec_w = jax.ShapeDtypeStruct((QUANT_N,), jnp.float32)
+    spec_c = jax.ShapeDtypeStruct((k,), jnp.float32)
+    lowered = jax.jit(entry).lower(spec_w, spec_c)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--only", default=None, help="lower a single model variant")
+    ap.add_argument("--skip-quant", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = ["version 1"]
+    variants = [args.only] if args.only else list(M.MODEL_VARIANTS)
+    for name in variants:
+        widths, batch, eval_batch = M.MODEL_VARIANTS[name]
+        train_txt, eval_txt = lower_variant(name)
+        tf, ef = f"{name}_train.hlo.txt", f"{name}_eval.hlo.txt"
+        for fn, txt in ((tf, train_txt), (ef, eval_txt)):
+            with open(os.path.join(args.out_dir, fn), "w") as f:
+                f.write(txt)
+        manifest.append(
+            "model {} widths {} batch {} eval_batch {} train {} eval {}".format(
+                name, ",".join(map(str, widths)), batch, eval_batch, tf, ef
+            )
+        )
+        print(f"[aot] {name}: train={len(train_txt)}B eval={len(eval_txt)}B")
+
+    if not args.skip_quant:
+        for k in QUANT_KS:
+            txt = lower_quant(k)
+            fn = f"quant_assign_k{k}.hlo.txt"
+            with open(os.path.join(args.out_dir, fn), "w") as f:
+                f.write(txt)
+            manifest.append(
+                f"quant n {QUANT_N} block {BLOCK_N} k {k} file {fn}"
+            )
+            print(f"[aot] quant_assign k={k}: {len(txt)}B")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"[aot] wrote manifest with {len(manifest) - 1} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""L1 Pallas kernels: tiled matmul and the fused linear layer (matmul+bias+ReLU).
+
+These are the compute hot-spots of the LC algorithm's L step (the model
+forward/backward).  The kernels are written TPU-style:
+
+  * the matmul is tiled into (bm, bn, bk) blocks sized for the MXU systolic
+    array (128x128 where the layer allows it) with the K-reduction expressed
+    as grid revisiting of the same output block -- the canonical Pallas
+    accumulation pattern;
+  * bias-add and ReLU are fused into the final K-step so the activation
+    never round-trips through HBM;
+  * BlockSpecs express the HBM->VMEM schedule; VMEM footprint per grid step
+    is bm*bk + bk*bn + bm*bn floats (see DESIGN.md section "Perf").
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target and
+TPU performance is estimated analytically (DESIGN.md).
+
+The backward pass is provided via ``jax.custom_vjp`` built from the same
+matmul kernel (pallas_call has no automatic transpose rule), so the whole
+train step lowers into one HLO module of Pallas-derived ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles.  For the small showcase layers the wrapper clamps
+# these to the (padded) problem size, so tiny layers run as a single block.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nsteps_k: int):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nsteps_k: int, relu: bool):
+    """Matmul with bias-add (+ optional ReLU) fused into the last K-step."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nsteps_k - 1)
+    def _finish():
+        acc = o_ref[...] + b_ref[...]
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def _pick_tiles(m: int, n: int, k: int, bm: int, bn: int, bk: int):
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    return bm, bn, bk
+
+
+def matmul(x: jax.Array, w: jax.Array, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK) -> jax.Array:
+    """Tiled Pallas matmul ``x @ w`` for f32 2-D operands (pads internally)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = _pick_tiles(m, n, k, bm, bn, bk)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nsteps_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _fused_linear_fwd_impl(x, w, b, relu: bool, bm, bn, bk):
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = _pick_tiles(m, n, k, bm, bn, bk)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b.reshape(1, -1), ((0, 0), (0, np_ - n)))
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_fused_linear_kernel, nsteps_k=grid[2], relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, relu: bool = False):
+    """``relu?(x @ w + b)`` as a single fused Pallas kernel, differentiable.
+
+    The VJP is hand-written from the same tiled matmul kernel:
+      dx = dy' @ w.T,  dw = x.T @ dy',  db = sum(dy'), with dy' = dy * mask.
+    """
+    return _fused_linear_fwd_impl(x, w, b, relu, DEFAULT_BM, DEFAULT_BN, DEFAULT_BK)
+
+
+def _fused_linear_fwd(x, w, b, relu: bool):
+    y = _fused_linear_fwd_impl(x, w, b, relu, DEFAULT_BM, DEFAULT_BN, DEFAULT_BK)
+    # Residuals: inputs plus the activation mask (y > 0 iff pre-act > 0 when
+    # relu; for the identity head the mask is unused).
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(relu: bool, res, dy):
+    x, w, y = res
+    if relu:
+        dy = dy * (y > 0.0).astype(dy.dtype)
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel for the adaptive-quantization C step (k-means E-step).
+
+Given a flat weight vector ``w`` (padded to a block multiple) and a codebook
+``c`` of K centers, one pass computes, entirely in VMEM per block:
+
+  * ``assign``  -- nearest-center index per weight (the k-means assignment),
+  * ``dist``    -- total quadratic distortion  sum_i min_k (w_i - c_k)^2,
+  * ``sums``    -- per-center sums   sum_{i: a_i=k} w_i,
+  * ``counts``  -- per-center counts |{i: a_i=k}|.
+
+``sums``/``counts`` are exactly the sufficient statistics of the Lloyd
+M-step, so the Rust coordinator can run full k-means by alternating this
+artifact with a trivial ``c_k = sums_k / counts_k`` host update.  The
+reduction outputs use the grid-revisiting accumulation pattern (their
+index_map is constant), which the sequential interpret-mode grid executes
+in-order.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): one grid step holds a
+(1, bn) weight tile plus the whole (1, K) codebook in VMEM (K <= 64), and
+the (bn, K) distance matrix is a VPU elementwise job; the one-hot matmul
+producing ``sums`` feeds the MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 4096  # weights per grid step
+
+
+def _kernel(w_ref, c_ref, a_ref, d_ref, s_ref, n_ref, *, k: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        d_ref[...] = jnp.zeros_like(d_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    w = w_ref[...]  # (1, bn)
+    c = c_ref[...]  # (1, k)
+    d2 = (w[0][:, None] - c[0][None, :]) ** 2  # (bn, k)
+    a = jnp.argmin(d2, axis=1)  # (bn,)
+    a_ref[...] = a[None, :].astype(jnp.int32)
+    d_ref[...] += jnp.min(d2, axis=1).sum()[None, None]
+    onehot = (a[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)  # (bn, k)
+    s_ref[...] += jnp.dot(w, onehot, preferred_element_type=jnp.float32)
+    n_ref[...] += jnp.sum(onehot, axis=0)[None, :]
+
+
+def quant_assign(w: jax.Array, c: jax.Array, *, block_n: int = BLOCK_N):
+    """Assignment + distortion + Lloyd sufficient statistics, one fused pass.
+
+    Args:
+      w: f32[N] flat weights; N must be a multiple of ``block_n`` (the AOT
+         wrapper and the Rust caller pad with ``c[0]`` and correct counts).
+      c: f32[K] codebook.
+    Returns:
+      (assign i32[N], dist f32[], sums f32[K], counts f32[K]).
+    """
+    (n,) = w.shape
+    (k,) = c.shape
+    assert n % block_n == 0, (n, block_n)
+    nb = n // block_n
+    wb = w.reshape(nb, block_n)
+    cb = c.reshape(1, k)
+    out_shapes = (
+        jax.ShapeDtypeStruct((nb, block_n), jnp.int32),
+        jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        jax.ShapeDtypeStruct((1, k), jnp.float32),
+        jax.ShapeDtypeStruct((1, k), jnp.float32),
+    )
+    assign, dist, sums, counts = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ),
+        out_shape=out_shapes,
+        interpret=True,
+    )(wb, cb)
+    return assign.reshape(n), dist.reshape(()), sums.reshape(k), counts.reshape(k)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every kernel in this package must
+match its oracle to float32 tolerance across the hypothesis shape/value
+sweeps in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.matmul(x, w)
+
+
+def fused_linear_ref(x, w, b, relu: bool = False):
+    y = jnp.matmul(x, w) + b[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def quant_assign_ref(w, c):
+    d2 = (w[:, None] - c[None, :]) ** 2
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    dist = jnp.min(d2, axis=1).sum()
+    k = c.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    sums = (w[:, None] * onehot).sum(axis=0)
+    counts = onehot.sum(axis=0)
+    return assign, dist, sums, counts

@@ -1,0 +1,209 @@
+"""L2: the LC algorithm's L step as a JAX compute graph.
+
+The model family is a fully-connected classifier (LeNet300-style MLP); its
+dense layers are the L1 Pallas ``fused_linear`` kernel, so the whole train
+step lowers into one HLO module built from Pallas-derived ops.
+
+The train step implements exactly the paper's L step (Fig. 2, Listing 2):
+
+    min_w  L(w) + mu/2 * || w - Delta(Theta) - lambda/mu ||^2
+
+optimized by SGD with Nesterov momentum (the PyTorch convention used in the
+paper's Listing 2: v <- m*v + g; w <- w - lr*(g + m*v)).  The penalty is
+applied to *weight matrices only* (biases train freely, as in the reference
+library, which compresses `lX.weight` tensors).
+
+The penalty inputs Delta(Theta) and lambda enter the graph as constants of
+the optimization (the C step owns them), matching the LC separation: the L
+step has the same form for every compression type.
+
+Conventions shared with the Rust runtime (rust/src/runtime/):
+  * parameters are a flat list [W1, b1, ..., WL, bL], Wl is f32[in, out]
+  * momenta mirror the parameter list
+  * labels are i32[B]; inputs are f32[B, in_dim]
+  * train_step input order:
+      params..., momenta..., x, y, deltas (one per W), lambdas (one per W),
+      mu (f32[L] -- per weight matrix, 0 disables the penalty for layers
+      not covered by any compression task), lr (f32[])
+  * train_step output order: new_params..., new_momenta..., loss (f32[])
+  * eval_step inputs: params..., x, y; outputs: (loss_sum f32[], correct i32[])
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.linear import fused_linear
+
+MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Model family registry (mirrored by rust/src/models/registry.rs).
+# ---------------------------------------------------------------------------
+
+MODEL_VARIANTS = {
+    # name: (layer widths incl. input/output, train batch, eval batch)
+    "mlp-small": ([784, 100, 10], 128, 512),
+    "lenet300": ([784, 300, 100, 10], 128, 512),
+    "lenet300-wide": ([784, 500, 300, 10], 128, 512),
+}
+
+
+def n_layers(widths):
+    return len(widths) - 1
+
+
+def unflatten_params(flat, widths):
+    """[W1, b1, W2, b2, ...] -> [(W1, b1), ...] with shape checks."""
+    layers = []
+    for l in range(n_layers(widths)):
+        w, b = flat[2 * l], flat[2 * l + 1]
+        assert w.shape == (widths[l], widths[l + 1]), (w.shape, widths, l)
+        assert b.shape == (widths[l + 1],), (b.shape, widths, l)
+        layers.append((w, b))
+    return layers
+
+
+def forward(flat_params, x, widths):
+    """MLP forward: ReLU hidden layers, identity logits head."""
+    layers = unflatten_params(flat_params, widths)
+    h = x
+    for l, (w, b) in enumerate(layers):
+        relu = l < len(layers) - 1
+        h = fused_linear(h, w, b, relu)
+    return h
+
+
+def cross_entropy(logits, y):
+    """Mean softmax cross-entropy; y is i32[B] class labels."""
+    logz = jax.nn.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return jnp.mean(logz - picked)
+
+
+def lc_penalty(flat_params, deltas, lambdas, mu, widths):
+    """sum_l mu_l/2 * || W_l - Delta_l - lambda_l/mu_l ||^2 over weights.
+
+    ``mu`` is a per-weight-matrix vector f32[L]: layers not covered by any
+    compression task get mu_l = 0 (no penalty).  Written in the numerically-
+    safe expanded form so that mu_l = 0 (including the first, direct-
+    compression step) does not divide by zero:
+        mu_l/2 * ||W - D||^2 - <lambda_l, W - D>  (+ const)
+    which has the same gradient in W as the paper's quadratic.
+    """
+    pen = 0.0
+    for l in range(n_layers(widths)):
+        w = flat_params[2 * l]
+        diff = (w - deltas[l]).reshape(-1)
+        pen = pen + 0.5 * mu[l] * jnp.vdot(diff, diff) - jnp.vdot(
+            lambdas[l].reshape(-1), diff
+        )
+    return pen
+
+
+def penalized_loss(flat_params, x, y, deltas, lambdas, mu, widths):
+    return cross_entropy(forward(flat_params, x, widths), y) + lc_penalty(
+        flat_params, deltas, lambdas, mu, widths
+    )
+
+
+def train_step(flat_params, momenta, x, y, deltas, lambdas, mu, lr, widths):
+    """One SGD-with-Nesterov-momentum step on the penalized L-step objective.
+
+    Returns (new_params, new_momenta, loss) where loss is the penalized
+    objective *before* the update (used by the coordinator's monitor).
+    """
+    loss, grads = jax.value_and_grad(penalized_loss)(
+        flat_params, x, y, deltas, lambdas, mu, widths
+    )
+    new_params, new_momenta = [], []
+    for p, v, g in zip(flat_params, momenta, grads):
+        v2 = MOMENTUM * v + g
+        p2 = p - lr * (g + MOMENTUM * v2)
+        new_params.append(p2)
+        new_momenta.append(v2)
+    return new_params, new_momenta, loss
+
+
+def eval_step(flat_params, x, y, widths):
+    """Sum of per-example CE loss and count of correct predictions."""
+    logits = forward(flat_params, x, widths)
+    logz = jax.nn.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+    loss_sum = jnp.sum(logz - picked)
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.int32))
+    return loss_sum, correct
+
+
+# ---------------------------------------------------------------------------
+# Flat-signature entrypoints for AOT lowering (aot.py).  PJRT gives us a flat
+# list of parameters, so the lowered functions take/return flat tuples.
+# ---------------------------------------------------------------------------
+
+
+def make_train_entry(widths):
+    nl = n_layers(widths)
+
+    def entry(*args):
+        i = 0
+        params = list(args[i : i + 2 * nl]); i += 2 * nl
+        momenta = list(args[i : i + 2 * nl]); i += 2 * nl
+        x = args[i]; i += 1
+        y = args[i]; i += 1
+        deltas = list(args[i : i + nl]); i += nl
+        lambdas = list(args[i : i + nl]); i += nl
+        mu = args[i]; i += 1
+        lr = args[i]; i += 1
+        assert i == len(args)
+        new_p, new_m, loss = train_step(
+            params, momenta, x, y, deltas, lambdas, mu, lr, widths
+        )
+        return tuple(new_p) + tuple(new_m) + (loss,)
+
+    return entry
+
+
+def make_eval_entry(widths):
+    nl = n_layers(widths)
+
+    def entry(*args):
+        params = list(args[: 2 * nl])
+        x, y = args[2 * nl], args[2 * nl + 1]
+        loss_sum, correct = eval_step(params, x, y, widths)
+        return (loss_sum, correct)
+
+    return entry
+
+
+def param_shapes(widths):
+    """[(shape, dtype)] for the flat param list [W1, b1, ...]."""
+    shapes = []
+    for l in range(n_layers(widths)):
+        shapes.append(((widths[l], widths[l + 1]), jnp.float32))
+        shapes.append(((widths[l + 1],), jnp.float32))
+    return shapes
+
+
+def train_arg_shapes(widths, batch):
+    """ShapeDtypeStructs in the exact train_step input order."""
+    nl = n_layers(widths)
+    f32, i32 = jnp.float32, jnp.int32
+    ps = [jax.ShapeDtypeStruct(s, d) for s, d in param_shapes(widths)]
+    shapes = list(ps) + list(ps)  # params then momenta
+    shapes.append(jax.ShapeDtypeStruct((batch, widths[0]), f32))
+    shapes.append(jax.ShapeDtypeStruct((batch,), i32))
+    for l in range(nl):
+        shapes.append(jax.ShapeDtypeStruct((widths[l], widths[l + 1]), f32))
+    for l in range(nl):
+        shapes.append(jax.ShapeDtypeStruct((widths[l], widths[l + 1]), f32))
+    shapes.append(jax.ShapeDtypeStruct((nl,), f32))  # mu (per weight matrix)
+    shapes.append(jax.ShapeDtypeStruct((), f32))  # lr
+    return shapes
+
+
+def eval_arg_shapes(widths, batch):
+    f32, i32 = jnp.float32, jnp.int32
+    shapes = [jax.ShapeDtypeStruct(s, d) for s, d in param_shapes(widths)]
+    shapes.append(jax.ShapeDtypeStruct((batch, widths[0]), f32))
+    shapes.append(jax.ShapeDtypeStruct((batch,), i32))
+    return shapes

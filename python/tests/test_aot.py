@@ -1,0 +1,105 @@
+"""AOT path tests: HLO lowering succeeds, text parses, manifest matches the
+model registry, and the lowered train step is numerically faithful to the
+eager train step (same inputs -> same outputs, via jax CPU execution)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_model_variants_match_expected_registry():
+    # must mirror rust/src/models/mod.rs::registry()
+    assert set(M.MODEL_VARIANTS) == {"mlp-small", "lenet300", "lenet300-wide"}
+    widths, batch, eval_batch = M.MODEL_VARIANTS["lenet300"]
+    assert widths == [784, 300, 100, 10]
+    assert batch == 128 and eval_batch == 512
+
+
+def _entry_param_count(hlo_text):
+    """Number of parameters of the ENTRY computation.  Sub-computations
+    (reduction bodies etc.) have their own parameter(i) instructions, so we
+    count only within the ENTRY block (from the 'ENTRY' header line to its
+    closing brace)."""
+    lines = hlo_text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    count = 0
+    for line in lines[start + 1 :]:
+        if line.strip() == "}":
+            break
+        if " parameter(" in line:
+            count += 1
+    return count
+
+
+def test_lowered_hlo_text_nonempty_and_parseable_header():
+    train_txt, eval_txt = aot.lower_variant("mlp-small")
+    assert "HloModule" in train_txt
+    assert "HloModule" in eval_txt
+    # the train module must take the documented number of parameters:
+    # 2*2*nl params+momenta + x + y + 2*nl deltas/lambdas + mu + lr
+    nl = M.n_layers(M.MODEL_VARIANTS["mlp-small"][0])
+    assert _entry_param_count(train_txt) == 4 * nl + 2 + 2 * nl + 2
+    assert _entry_param_count(eval_txt) == 2 * nl + 2
+
+
+def test_quant_lowering_has_expected_parameters():
+    txt = aot.lower_quant(4)
+    assert "HloModule" in txt
+    assert _entry_param_count(txt) == 2  # (w, codebook)
+
+
+def test_train_entry_flat_signature_roundtrip():
+    """The flat AOT entry must agree with the structured train_step."""
+    widths, batch, _ = M.MODEL_VARIANTS["mlp-small"]
+    nl = M.n_layers(widths)
+    rng = np.random.default_rng(0)
+
+    def mk(shape):
+        return jnp.asarray(rng.normal(size=shape, scale=0.1), dtype=jnp.float32)
+
+    params, momenta = [], []
+    for l in range(nl):
+        params += [mk((widths[l], widths[l + 1])), mk((widths[l + 1],))]
+        momenta += [mk((widths[l], widths[l + 1])), mk((widths[l + 1],))]
+    x = mk((batch, widths[0]))
+    y = jnp.asarray(rng.integers(0, widths[-1], size=(batch,)), dtype=jnp.int32)
+    deltas = [mk((widths[l], widths[l + 1])) for l in range(nl)]
+    lambdas = [mk((widths[l], widths[l + 1])) for l in range(nl)]
+    mu = jnp.asarray([0.5] * nl, dtype=jnp.float32)
+    lr = jnp.float32(0.01)
+
+    entry = M.make_train_entry(widths)
+    flat_out = entry(*(params + momenta + [x, y] + deltas + lambdas + [mu, lr]))
+    sp, sm, sl = M.train_step(params, momenta, x, y, deltas, lambdas, mu, lr, widths)
+
+    assert len(flat_out) == 4 * nl + 1
+    for a, b in zip(flat_out[: 2 * nl], sp):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    for a, b in zip(flat_out[2 * nl : 4 * nl], sm):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    np.testing.assert_allclose(flat_out[-1], sl, rtol=1e-6)
+
+
+def test_manifest_written(tmp_path):
+    """End-to-end aot.main with a single variant writes a valid manifest."""
+    out = tmp_path / "arts"
+    import sys
+
+    argv = sys.argv
+    sys.argv = ["aot", "--out-dir", str(out), "--only", "mlp-small", "--skip-quant"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    manifest = (out / "manifest.txt").read_text()
+    assert manifest.startswith("version 1")
+    assert "model mlp-small widths 784,100,10 batch 128 eval_batch 512" in manifest
+    assert (out / "mlp-small_train.hlo.txt").exists()
+    assert (out / "mlp-small_eval.hlo.txt").exists()

@@ -1,0 +1,150 @@
+"""Kernel-vs-oracle tests: the CORE correctness signal for L1.
+
+hypothesis sweeps shapes and values; every Pallas kernel must match its
+pure-jnp oracle (kernels/ref.py) to f32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.linear import fused_linear, matmul
+from compile.kernels.quant_assign import quant_assign
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 70),
+    n=st.integers(1, 70),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x, w = rand((m, k), seed), rand((k, n), seed + 1)
+    got = matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (128, 784, 300),  # lenet300 layer 1, exact batch
+        (128, 300, 100),
+        (128, 100, 10),
+        (1, 1, 1),
+        (129, 257, 127),  # all dims straddle tile boundaries
+        (256, 128, 128),  # exactly tile-aligned
+    ],
+)
+def test_matmul_shapes(m, k, n):
+    x, w = rand((m, k), 7), rand((k, n), 8)
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused linear forward
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, relu, seed):
+    x, w, b = rand((m, k), seed), rand((k, n), seed + 1), rand((n,), seed + 2)
+    got = fused_linear(x, w, b, relu)
+    want = ref.fused_linear_ref(x, w, b, relu)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_fused_linear_relu_clamps():
+    x = jnp.asarray([[1.0, -1.0]], dtype=jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), dtype=jnp.float32)
+    out = fused_linear(x, w, b, True)
+    np.testing.assert_allclose(out, [[1.0, 0.0]])
+
+
+# ---------------------------------------------------------------------------
+# fused linear backward (custom VJP) vs autodiff-of-oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 24),
+    k=st.integers(1, 24),
+    n=st.integers(1, 24),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_grad_matches_ref(m, k, n, relu, seed):
+    x, w, b = rand((m, k), seed), rand((k, n), seed + 1), rand((n,), seed + 2)
+
+    def f_kernel(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, relu) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.fused_linear_ref(x, w, b, relu) ** 2)
+
+    g_kernel = jax.grad(f_kernel, argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for gk, gr in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(gk, gr, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# quant_assign (k-means E-step + sufficient statistics)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nb=st.integers(1, 4),
+    k=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_assign_matches_ref(nb, k, seed):
+    block = 128
+    w = rand((nb * block,), seed)
+    c = rand((k,), seed + 1)
+    a, d, s, n = quant_assign(w, c, block_n=block)
+    a_r, d_r, s_r, n_r = ref.quant_assign_ref(w, c)
+    np.testing.assert_array_equal(a, a_r)
+    np.testing.assert_allclose(d, d_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(s, s_r, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(n, n_r, rtol=0, atol=0)
+
+
+def test_quant_assign_exact_centers():
+    # weights exactly on centers -> zero distortion, exact counts
+    c = jnp.asarray([-1.0, 0.0, 1.0], dtype=jnp.float32)
+    w = jnp.tile(c, 128)  # 384 weights
+    a, d, s, n = quant_assign(w, c, block_n=128)
+    assert float(d) == 0.0
+    np.testing.assert_allclose(n, [128.0, 128.0, 128.0])
+    np.testing.assert_allclose(s, [-128.0, 0.0, 128.0])
+
+
+def test_quant_assign_singleton_codebook():
+    w = rand((256,), 3)
+    c = jnp.asarray([0.25], dtype=jnp.float32)
+    a, d, s, n = quant_assign(w, c, block_n=128)
+    assert int(a.sum()) == 0
+    np.testing.assert_allclose(d, jnp.sum((w - 0.25) ** 2), rtol=1e-5)

@@ -1,0 +1,156 @@
+"""L2 model math vs hand-rolled jnp oracles: forward, loss, penalty, SGD."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+WIDTHS = [12, 8, 5]  # tiny 2-layer MLP for fast exact checks
+
+
+def make_params(widths, seed, scale=0.5):
+    rng = np.random.default_rng(seed)
+    flat = []
+    for l in range(M.n_layers(widths)):
+        flat.append(jnp.asarray(rng.normal(size=(widths[l], widths[l + 1]), scale=scale), dtype=jnp.float32))
+        flat.append(jnp.asarray(rng.normal(size=(widths[l + 1],), scale=scale), dtype=jnp.float32))
+    return flat
+
+
+def forward_oracle(flat, x, widths):
+    h = x
+    nl = M.n_layers(widths)
+    for l in range(nl):
+        h = h @ flat[2 * l] + flat[2 * l + 1][None, :]
+        if l < nl - 1:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def test_forward_matches_oracle():
+    flat = make_params(WIDTHS, 0)
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(9, 12)), dtype=jnp.float32)
+    np.testing.assert_allclose(
+        M.forward(flat, x, WIDTHS), forward_oracle(flat, x, WIDTHS), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 1.0, 0.0], [0.0, 0.0, 0.0]], dtype=jnp.float32)
+    y = jnp.asarray([0, 2], dtype=jnp.int32)
+    # manual: -log softmax[y]
+    p0 = np.exp(2.0) / (np.exp(2.0) + np.exp(1.0) + 1.0)
+    want = (-np.log(p0) - np.log(1.0 / 3.0)) / 2.0
+    np.testing.assert_allclose(M.cross_entropy(logits, y), want, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(mu=st.floats(0.0, 10.0), seed=st.integers(0, 1000))
+def test_penalty_matches_quadratic_form(mu, seed):
+    """For lambda=0 the expanded penalty equals mu/2 ||W - D||^2 exactly."""
+    flat = make_params(WIDTHS, seed)
+    rng = np.random.default_rng(seed + 1)
+    deltas = [
+        jnp.asarray(rng.normal(size=flat[2 * l].shape), dtype=jnp.float32)
+        for l in range(M.n_layers(WIDTHS))
+    ]
+    lambdas = [jnp.zeros_like(d) for d in deltas]
+    mu_vec = jnp.full((M.n_layers(WIDTHS),), mu, dtype=jnp.float32)
+    got = M.lc_penalty(flat, deltas, lambdas, mu_vec, WIDTHS)
+    want = sum(
+        0.5 * mu * float(jnp.sum((flat[2 * l] - deltas[l]) ** 2))
+        for l in range(M.n_layers(WIDTHS))
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_penalty_gradient_is_mu_diff_minus_lambda():
+    """d/dW [mu/2||W-D||^2 - <lam, W-D>] = mu (W - D) - lam."""
+    flat = make_params(WIDTHS, 3)
+    nl = M.n_layers(WIDTHS)
+    rng = np.random.default_rng(4)
+    deltas = [jnp.asarray(rng.normal(size=flat[2 * l].shape), dtype=jnp.float32) for l in range(nl)]
+    lambdas = [jnp.asarray(rng.normal(size=flat[2 * l].shape), dtype=jnp.float32) for l in range(nl)]
+    mu = jnp.full((M.n_layers(WIDTHS),), 2.5, dtype=jnp.float32)
+
+    g = jax.grad(lambda fp: M.lc_penalty(fp, deltas, lambdas, mu, WIDTHS))(flat)
+    for l in range(nl):
+        want = mu[l] * (flat[2 * l] - deltas[l]) - lambdas[l]
+        np.testing.assert_allclose(g[2 * l], want, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(g[2 * l + 1], jnp.zeros_like(g[2 * l + 1]))
+
+
+def test_train_step_is_nesterov_sgd():
+    """With mu=0, lam=0 the update must equal hand-computed PyTorch-Nesterov."""
+    flat = make_params(WIDTHS, 5)
+    moms = [jnp.full_like(p, 0.1) for p in flat]
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(4, 12)), dtype=jnp.float32)
+    y = jnp.asarray(rng.integers(0, 5, size=(4,)), dtype=jnp.int32)
+    nl = M.n_layers(WIDTHS)
+    deltas = [jnp.zeros_like(flat[2 * l]) for l in range(nl)]
+    lambdas = [jnp.zeros_like(flat[2 * l]) for l in range(nl)]
+    mu, lr = jnp.zeros((nl,), dtype=jnp.float32), jnp.float32(0.05)
+
+    new_p, new_m, loss = M.train_step(flat, moms, x, y, deltas, lambdas, mu, lr, WIDTHS)
+
+    grads = jax.grad(
+        lambda fp: M.penalized_loss(fp, x, y, deltas, lambdas, mu, WIDTHS)
+    )(flat)
+    for p, v, g, p2, v2 in zip(flat, moms, grads, new_p, new_m):
+        v_want = M.MOMENTUM * v + g
+        p_want = p - lr * (g + M.MOMENTUM * v_want)
+        np.testing.assert_allclose(v2, v_want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(p2, p_want, rtol=1e-5, atol=1e-6)
+    assert float(loss) > 0.0
+
+
+def test_train_step_reduces_loss_over_iterations():
+    """A few steps of SGD on a fixed batch must reduce the penalized loss."""
+    widths = [6, 16, 3]
+    flat = make_params(widths, 7, scale=0.3)
+    moms = [jnp.zeros_like(p) for p in flat]
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(size=(32, 6)), dtype=jnp.float32)
+    y = jnp.asarray(rng.integers(0, 3, size=(32,)), dtype=jnp.int32)
+    nl = M.n_layers(widths)
+    deltas = [jnp.zeros_like(flat[2 * l]) for l in range(nl)]
+    lambdas = [jnp.zeros_like(flat[2 * l]) for l in range(nl)]
+    mu, lr = jnp.full((nl,), 0.01, dtype=jnp.float32), jnp.float32(0.1)
+
+    losses = []
+    for _ in range(8):
+        flat, moms, loss = M.train_step(flat, moms, x, y, deltas, lambdas, mu, lr, widths)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_eval_step_counts():
+    widths = [4, 3]
+    w = jnp.eye(4, 3, dtype=jnp.float32) * 10.0
+    b = jnp.zeros((3,), dtype=jnp.float32)
+    x = jnp.asarray(np.eye(4, dtype=np.float32))[:3]  # rows select classes 0,1,2
+    y = jnp.asarray([0, 1, 0], dtype=jnp.int32)  # third is wrong on purpose
+    loss_sum, correct = M.eval_step([w, b], x, y, widths)
+    assert int(correct) == 2
+    assert float(loss_sum) > 0.0
+
+
+def test_arg_shapes_roundtrip():
+    widths, batch = [784, 300, 100, 10], 128
+    shapes = M.train_arg_shapes(widths, batch)
+    nl = M.n_layers(widths)
+    assert len(shapes) == 2 * (2 * nl) + 2 + 2 * nl + 2
+    # first param is W1
+    assert shapes[0].shape == (784, 300)
+    # x and y
+    assert shapes[4 * nl].shape == (batch, 784)
+    assert shapes[4 * nl + 1].shape == (batch,)
+    # trailing mu vector + lr scalar
+    assert shapes[-1].shape == () and shapes[-2].shape == (nl,)
+    ev = M.eval_arg_shapes(widths, 512)
+    assert ev[-2].shape == (512, 784)

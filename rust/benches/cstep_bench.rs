@@ -1,0 +1,105 @@
+//! C-step kernel benchmarks: the compression side of every LC iteration.
+//!
+//! One section per scheme family; sizes bracket the experiment suite
+//! (mlp-small whole-net = 79k weights, lenet300 = 266k, lenet300-wide =
+//! 545k; layer matrices up to 784x500).  `cargo bench --bench cstep_bench`.
+
+use lc::bench::Bencher;
+use lc::compress::additive::AdditiveCombination;
+use lc::compress::lowrank::{LowRank, RankCost, RankSelection};
+use lc::compress::prune::{project_l1_ball, ConstraintL0, PenaltyL1};
+use lc::compress::quantize::{kmeans_scalar, optimal_quant_dp, AdaptiveQuant, TernaryQuant};
+use lc::compress::{CContext, Compression, ViewData};
+use lc::tensor::{magnitude_threshold, Matrix};
+use lc::util::rng::Xoshiro256;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn rand_matrix(m: usize, n: usize, seed: u64) -> Matrix {
+    let mut mat = Matrix::zeros(m, n);
+    let mut rng = Xoshiro256::new(seed);
+    rng.fill_normal(&mut mat.data, 0.0, 1.0);
+    mat
+}
+
+fn main() {
+    let mut b = Bencher::default();
+    let ctx = CContext { mu: 1e-2 };
+
+    Bencher::header("quantization C step (eq. 2: scalar k-means)");
+    for &(n, k) in &[(79_400usize, 2usize), (266_200, 2), (266_200, 64), (545_000, 2)] {
+        let w = randvec(n, 1);
+        b.bench_elems(&format!("kmeans_lloyd n={n} k={k}"), n as u64, || {
+            kmeans_scalar(&w, k, 7, 100)
+        });
+    }
+    for &(n, k) in &[(79_400usize, 2usize), (266_200, 2), (266_200, 8)] {
+        let w = randvec(n, 2);
+        b.bench_elems(&format!("optimal_dp n={n} k={k}"), n as u64, || {
+            optimal_quant_dp(&w, k)
+        });
+    }
+    {
+        let n = 266_200;
+        let w = randvec(n, 3);
+        let view = ViewData::Vector(w);
+        b.bench_elems(&format!("ternary_scaled n={n}"), n as u64, || {
+            TernaryQuant.compress(&view, &ctx)
+        });
+    }
+
+    Bencher::header("pruning C step (eq. 4 and l1 forms)");
+    for &n in &[79_400usize, 266_200, 545_000] {
+        let w = randvec(n, 4);
+        let kappa = n / 20;
+        b.bench_elems(&format!("top-kappa select n={n} (O(n) quickselect)"), n as u64, || {
+            magnitude_threshold(&w, kappa)
+        });
+        let view = ViewData::Vector(w.clone());
+        b.bench_elems(&format!("prune_l0 full C step n={n}"), n as u64, || {
+            ConstraintL0 { kappa }.compress(&view, &ctx)
+        });
+    }
+    {
+        let n = 266_200;
+        let w = randvec(n, 5);
+        b.bench_elems(&format!("l1_ball_projection n={n}"), n as u64, || {
+            project_l1_ball(&w, 50.0)
+        });
+        let view = ViewData::Vector(w.clone());
+        b.bench_elems(&format!("prune_l1_penalty n={n}"), n as u64, || {
+            PenaltyL1 { alpha: 1e-3 }.compress(&view, &ctx)
+        });
+    }
+
+    Bencher::header("low-rank C step (SVD + rank enumeration)");
+    for &(m, n) in &[(300usize, 100usize), (784, 300), (784, 500)] {
+        let mat = rand_matrix(m, n, 6);
+        let view = ViewData::Matrix(mat);
+        b.bench_elems(&format!("svd_truncate {m}x{n} r=10"), (m * n) as u64, || {
+            LowRank { target_rank: 10 }.compress(&view, &ctx)
+        });
+        b.bench_elems(&format!("rank_selection {m}x{n}"), (m * n) as u64, || {
+            RankSelection { lambda: 1e-6, cost: RankCost::Flops, max_rank: 0 }
+                .compress(&view, &ctx)
+        });
+    }
+
+    Bencher::header("additive combinations (alternating projections)");
+    {
+        let n = 266_200;
+        let view = ViewData::Vector(randvec(n, 7));
+        b.bench_elems(&format!("quant2 + prune1% n={n}"), n as u64, || {
+            AdditiveCombination::new(vec![
+                Box::new(AdaptiveQuant::new(2)),
+                Box::new(ConstraintL0 { kappa: n / 100 }),
+            ])
+            .compress(&view, &ctx)
+        });
+    }
+
+    println!("\ntotal benchmarks: {}", b.results.len());
+}

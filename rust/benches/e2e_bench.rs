@@ -1,0 +1,107 @@
+//! End-to-end LC benchmarks: a full LC step (L epochs + C step +
+//! multipliers) vs a plain reference-training epoch — the measurement
+//! behind the paper's headline claim that *compression runtime is
+//! comparable to training the reference*.
+//!
+//! `cargo bench --bench e2e_bench` (requires `make artifacts`).
+
+use lc::bench::Bencher;
+use lc::compress::prune::ConstraintL0;
+use lc::compress::quantize::AdaptiveQuant;
+use lc::compress::task::{TaskSet, TaskSpec};
+use lc::compress::view::View;
+use lc::harness::{artifact_dir, Env, Scale};
+use lc::lc::schedule::{LrSchedule, MuSchedule};
+use lc::lc::{LcAlgorithm, LcConfig};
+use lc::models::lookup;
+
+fn main() {
+    if !artifact_dir().join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let scale = Scale { n_train: 2048, n_test: 512, reference_epochs: 2, ..Default::default() };
+    let mut env = Env::new(scale).expect("env");
+    let spec = lookup("lenet300").unwrap();
+    let mut b = Bencher::default();
+    b.budget = std::time::Duration::from_secs(20);
+    b.max_iters = 8;
+
+    let one_step_cfg = |tasks_quiet: bool| LcConfig {
+        mu: MuSchedule { mu0: 1e-3, growth: 1.5, steps: 1 },
+        lr: LrSchedule { lr0: 0.05, decay: 0.98 },
+        epochs_per_step: 1,
+        first_step_epochs: None,
+        use_al: true,
+        seed: 42,
+        threads: 4,
+        eval_every: 0,
+        quiet: tasks_quiet,
+    };
+
+    Bencher::header("end-to-end: one LC step vs one reference epoch (lenet300, 2048 ex)");
+
+    // reference epoch
+    {
+        let alg = LcAlgorithm::new(
+            &mut env.rt,
+            spec.clone(),
+            TaskSet::new(vec![]),
+            one_step_cfg(true),
+        )
+        .unwrap();
+        let mut state = env.reference(&spec).unwrap();
+        let data = env.train_data.clone();
+        b.bench("reference training epoch", || {
+            alg.train_reference(&mut state, &data, 1, &LrSchedule { lr0: 0.05, decay: 1.0 })
+                .unwrap()
+        });
+    }
+
+    // one full LC step (1 epoch L + C + multipliers) for three task mixes
+    let mixes: Vec<(&str, fn(usize) -> TaskSet)> = vec![
+        ("LC step: quantize-all k=2", |n| {
+            let _ = n;
+            TaskSet::new(vec![TaskSpec {
+                name: "q".into(),
+                layers: vec![0, 1, 2],
+                view: View::Vector,
+                compression: Box::new(AdaptiveQuant::new(2)),
+            }])
+        }),
+        ("LC step: prune 5%", |n| {
+            TaskSet::new(vec![TaskSpec {
+                name: "p".into(),
+                layers: vec![0, 1, 2],
+                view: View::Vector,
+                compression: Box::new(ConstraintL0 { kappa: n / 20 }),
+            }])
+        }),
+    ];
+
+    for (label, mk_tasks) in mixes {
+        let n = spec.n_weights();
+        let reference = env.reference(&spec).unwrap();
+        let alg =
+            LcAlgorithm::new(&mut env.rt, spec.clone(), mk_tasks(n), one_step_cfg(true)).unwrap();
+        let train = env.train_data.clone();
+        let test = env.test_data.clone();
+        b.bench(label, || {
+            alg.run(reference.clone(), &train, &test).unwrap()
+        });
+    }
+
+    // paper headline ratio
+    if b.results.len() >= 2 {
+        let ref_epoch = b.results[0].mean_ns;
+        println!();
+        for s in &b.results[1..] {
+            println!(
+                "{}: {:.2}x one reference epoch (paper claim: comparable runtime; an LC\n\
+                 step adds the C step + eval on top of its L-step epochs)",
+                s.name,
+                s.mean_ns / ref_epoch
+            );
+        }
+    }
+}

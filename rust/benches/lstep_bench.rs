@@ -1,0 +1,94 @@
+//! L-step (PJRT) benchmarks: per-train-step latency, eval throughput,
+//! literal-marshalling overhead, and the Pallas quant_assign artifact vs
+//! the pure-Rust k-means E-step.
+//!
+//! `cargo bench --bench lstep_bench` (requires `make artifacts`).
+
+use lc::bench::Bencher;
+use lc::data::synth;
+use lc::harness::artifact_dir;
+use lc::models::{lookup, ParamState};
+use lc::runtime::trainer::{EvalDriver, QuantDriver, TrainDriver};
+use lc::runtime::{lit_f32, Runtime};
+use lc::tensor::Matrix;
+use lc::util::rng::Xoshiro256;
+
+fn main() {
+    let dir = artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return;
+    }
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let mut b = Bencher::default();
+
+    Bencher::header("L step: one penalized SGD train step via PJRT");
+    for model in ["mlp-small", "lenet300", "lenet300-wide"] {
+        let spec = lookup(model).unwrap();
+        let train = TrainDriver::new(&mut rt, model).unwrap();
+        let mut state = ParamState::init(&spec, 1);
+        let data = synth::generate(train.batch, 2, 4);
+        let idx: Vec<usize> = (0..train.batch).collect();
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        data.gather(&idx, &mut x, &mut y);
+        let zeros: Vec<Matrix> = (0..spec.n_layers())
+            .map(|l| {
+                let (m, n) = spec.layer_shape(l);
+                Matrix::zeros(m, n)
+            })
+            .collect();
+        let mu = vec![1e-3f32; spec.n_layers()];
+        // batch=128: report per-example throughput
+        b.bench_elems(&format!("train_step {model} (batch 128)"), train.batch as u64, || {
+            train.step(&mut state, &x, &y, &zeros, &zeros, &mu, 0.05).unwrap()
+        });
+    }
+
+    Bencher::header("eval: full test-set pass via PJRT");
+    for model in ["mlp-small", "lenet300"] {
+        let spec = lookup(model).unwrap();
+        let eval = EvalDriver::new(&mut rt, model).unwrap();
+        let state = ParamState::init(&spec, 2);
+        let data = synth::generate(2048, 3, 4);
+        b.bench_elems(&format!("eval {model} (n=2048)"), 2048, || {
+            eval.eval(&state, &data).unwrap()
+        });
+    }
+
+    Bencher::header("literal marshalling (host -> PJRT input)");
+    {
+        let spec = lookup("lenet300").unwrap();
+        let state = ParamState::init(&spec, 3);
+        // the full train-step input set is ~(4 params + momenta)x2 + data;
+        // measure the dominant weight-matrix conversions
+        b.bench_elems("lit_f32 all lenet300 weights (266k f32)", 266_200, || {
+            let mut lits = Vec::new();
+            for w in &state.weights {
+                lits.push(lit_f32(&w.data, &[w.rows, w.cols]).unwrap());
+            }
+            lits
+        });
+    }
+
+    Bencher::header("quantization C step: Pallas artifact vs pure Rust");
+    {
+        let mut rng = Xoshiro256::new(4);
+        let n = 266_200usize;
+        let w: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let k = 4;
+        let init = vec![-1.5f32, -0.5, 0.5, 1.5];
+        if let Some(drv) = QuantDriver::new(&mut rt, n, k).unwrap() {
+            b.bench_elems(&format!("quant_assign PJRT E-step n={n} k={k}"), n as u64, || {
+                drv.assign(&w, &init).unwrap()
+            });
+            b.bench_elems(&format!("full kmeans via PJRT n={n} k={k}"), n as u64, || {
+                drv.kmeans(&w, &init, 30).unwrap()
+            });
+        }
+        b.bench_elems(&format!("full kmeans pure Rust n={n} k={k}"), n as u64, || {
+            lc::compress::quantize::lloyd_with_init(&w, &init, 30)
+        });
+    }
+
+    println!("\ntotal benchmarks: {}", b.results.len());
+}

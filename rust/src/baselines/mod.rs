@@ -1,0 +1,170 @@
+//! Baselines the paper compares against in Fig. 3:
+//!
+//! * **Direct compression (DC)** — compress the reference weights once,
+//!   no retraining (the `w^DC` point of Fig. 1);
+//! * **Compress → retrain** ("quantize+retrain", similar to Han et al.'s
+//!   Deep Compression retraining stage): compress once, then fine-tune
+//!   the *free* parameters while holding the compression structure fixed.
+//!   For quantization we retrain and re-fit only the codebook values via
+//!   periodic re-projection with fixed assignments; for pruning
+//!   (magnitude pruning + retrain, Fig. 3 right) the mask is fixed and
+//!   surviving weights are fine-tuned by masked SGD.
+//!
+//! Both reuse the same PJRT train artifact as the LC L step: retraining is
+//! plain SGD (all μ_l = 0) followed by a structure-preserving projection
+//! after every epoch, which keeps the iterate feasible without needing a
+//! dedicated masked-SGD artifact.
+
+use anyhow::Result;
+
+use crate::compress::task::TaskSet;
+use crate::compress::{CContext, Theta};
+use crate::data::{BatchIter, Dataset};
+use crate::lc::schedule::LrSchedule;
+use crate::metrics::{account, Compressed};
+use crate::models::{ModelSpec, ParamState};
+use crate::runtime::trainer::{EvalDriver, EvalResult, TrainDriver};
+use crate::tensor::Matrix;
+use crate::util::rng::Xoshiro256;
+
+/// Outcome of a baseline run.
+pub struct BaselineOutcome {
+    pub train: EvalResult,
+    pub test: EvalResult,
+    pub metrics: Compressed,
+    pub thetas: Vec<Theta>,
+}
+
+/// Direct compression: project the reference weights once; no retraining.
+pub fn direct_compression(
+    spec: &ModelSpec,
+    tasks: &TaskSet,
+    state: &ParamState,
+    eval: &EvalDriver,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    mu_for_c: f64,
+) -> Result<BaselineOutcome> {
+    tasks.validate(spec.n_layers()).map_err(anyhow::Error::msg)?;
+    let (snap, thetas) = project_state(spec, tasks, state, mu_for_c);
+    let deltas: Vec<Matrix> = snap.weights.clone();
+    let metrics = account(spec, tasks, &thetas, &deltas);
+    Ok(BaselineOutcome {
+        train: eval.eval(&snap, train_data)?,
+        test: eval.eval(&snap, test_data)?,
+        metrics,
+        thetas,
+    })
+}
+
+/// Compress → retrain: alternate epochs of plain SGD with re-projection
+/// onto the compression's feasible set (structure fixed by re-projection).
+/// This is the thin-red-curve baseline of Fig. 3 (left: quantize+retrain;
+/// right: magnitude prune+retrain when the task is ℓ0-constraint pruning).
+#[allow(clippy::too_many_arguments)]
+pub fn compress_retrain(
+    spec: &ModelSpec,
+    tasks: &TaskSet,
+    mut state: ParamState,
+    train_drv: &TrainDriver,
+    eval: &EvalDriver,
+    train_data: &Dataset,
+    test_data: &Dataset,
+    epochs: usize,
+    lr: &LrSchedule,
+    seed: u64,
+    mu_for_c: f64,
+) -> Result<BaselineOutcome> {
+    tasks.validate(spec.n_layers()).map_err(anyhow::Error::msg)?;
+    let nl = spec.n_layers();
+    let zeros: Vec<Matrix> = (0..nl)
+        .map(|l| {
+            let (m, n) = spec.layer_shape(l);
+            Matrix::zeros(m, n)
+        })
+        .collect();
+    let mu = vec![0.0f32; nl];
+    let mut rng = Xoshiro256::new(seed);
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+
+    // initial projection
+    let (proj, mut thetas) = project_state(spec, tasks, &state, mu_for_c);
+    state = proj;
+
+    for e in 0..epochs {
+        state.reset_momenta();
+        let lr_e = lr.lr_at(e);
+        let mut it = BatchIter::new(train_data, train_drv.batch, &mut rng);
+        while it.next_into(&mut x, &mut y) {
+            train_drv.step(&mut state, &x, &y, &zeros, &zeros, &mu, lr_e)?;
+        }
+        // re-project after every epoch to stay (approximately) feasible
+        let (proj, th) = project_state(spec, tasks, &state, mu_for_c);
+        state = proj;
+        thetas = th;
+    }
+
+    let deltas: Vec<Matrix> = state.weights.clone();
+    let metrics = account(spec, tasks, &thetas, &deltas);
+    Ok(BaselineOutcome {
+        train: eval.eval(&state, train_data)?,
+        test: eval.eval(&state, test_data)?,
+        metrics,
+        thetas,
+    })
+}
+
+/// Project a state's weights onto every task's feasible set.
+fn project_state(
+    spec: &ModelSpec,
+    tasks: &TaskSet,
+    state: &ParamState,
+    mu_for_c: f64,
+) -> (ParamState, Vec<Theta>) {
+    let nl = spec.n_layers();
+    let mut snap = state.clone();
+    let mut deltas: Vec<Matrix> = snap.weights.clone();
+    let ctx = CContext { mu: mu_for_c };
+    let mut thetas = Vec::with_capacity(tasks.tasks.len());
+    for t in &tasks.tasks {
+        let view = t.gather(&state.weights);
+        let theta = t.compression.compress(&view, &ctx);
+        t.scatter(&theta.decompress(), &mut deltas);
+        thetas.push(theta);
+    }
+    for l in 0..nl {
+        snap.weights[l].data.copy_from_slice(&deltas[l].data);
+    }
+    (snap, thetas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quantize::AdaptiveQuant;
+    use crate::compress::task::TaskSpec;
+    use crate::compress::view::View;
+    use crate::models::lookup;
+
+    #[test]
+    fn project_state_makes_weights_feasible() {
+        let spec = lookup("mlp-small").unwrap();
+        let state = ParamState::init(&spec, 7);
+        let tasks = TaskSet::new(vec![TaskSpec {
+            name: "q".into(),
+            layers: vec![0, 1],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(2)),
+        }]);
+        let (snap, thetas) = project_state(&spec, &tasks, &state, 1.0);
+        assert_eq!(thetas.len(), 1);
+        // all weights now take at most 2 distinct values per task
+        let mut vals: Vec<f32> = snap.weights[0].data.clone();
+        vals.extend_from_slice(&snap.weights[1].data);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vals.dedup();
+        assert!(vals.len() <= 2, "got {} distinct values", vals.len());
+        // biases untouched
+        assert_eq!(snap.biases, state.biases);
+    }
+}

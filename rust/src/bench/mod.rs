@@ -1,0 +1,197 @@
+//! Micro-benchmark harness (criterion stand-in, substrate).
+//!
+//! Adaptive iteration count targeting a fixed measurement budget, warmup,
+//! and robust statistics (median, mean, stddev, min).  Used by the
+//! `rust/benches/*.rs` binaries (`cargo bench`, `harness = false`).
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl Stats {
+    pub fn throughput_mps(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / (self.mean_ns / 1e9) / 1e6)
+    }
+
+    pub fn render(&self) -> String {
+        let tp = match self.throughput_mps() {
+            Some(t) => format!("  {:>9.2} Melem/s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10} {:>10} {:>9} {:>6}{}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            format!("±{}", fmt_ns(self.stddev_ns)),
+            format!("n={}", self.iters),
+            tp
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a per-benchmark time budget.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: usize,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            max_iters: 10_000,
+            ..Default::default()
+        }
+    }
+
+    /// Run `f` repeatedly; `f` must return something observable to prevent
+    /// the optimizer from deleting the work (we black-box it).
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Stats {
+        self.bench_with_elements(name, None, &mut f)
+    }
+
+    /// Like [`bench`], with a throughput denominator.
+    pub fn bench_elems<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: F,
+    ) -> &Stats {
+        self.bench_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_with_elements<T>(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> &Stats {
+        // warmup + calibration
+        let wstart = Instant::now();
+        let mut calib_iters = 0usize;
+        while wstart.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let target = ((self.budget.as_nanos() as f64 / per_iter) as usize)
+            .clamp(5, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target);
+        for _ in 0..target {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let median = samples[n / 2];
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        let stats = Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: median,
+            stddev_ns: var.sqrt(),
+            min_ns: samples[0],
+            elements,
+        };
+        println!("{}", stats.render());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn header(title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>10} {:>10} {:>9} {:>6}",
+            "benchmark", "mean", "median", "stddev", "iters"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(20),
+            max_iters: 1000,
+            results: Vec::new(),
+        };
+        let stats = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(stats.iters >= 5);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.median_ns <= stats.mean_ns * 10.0);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            stddev_ns: 0.0,
+            min_ns: 1e9,
+            elements: Some(2_000_000),
+        };
+        assert!((s.throughput_mps().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(1.25e9), "1.250s");
+    }
+}

@@ -1,0 +1,192 @@
+//! Additive combinations of compressions (paper §2, Table 1, and [18]):
+//! Δ(Θ) = Δ₁(Θ₁) + Δ₂(Θ₂) (+ Δ₃...).
+//!
+//! The C step  min ‖w − Σⱼ Δⱼ(Θⱼ)‖²  is solved by block coordinate
+//! descent (alternating projections): holding all components but j fixed,
+//! the subproblem is exactly component j's own C step on the residual
+//! w − Σ_{i≠j} Δᵢ(Θᵢ).  Each pass cannot increase the distortion, so the
+//! iteration converges; we stop on relative improvement < 1e-6 or
+//! `max_passes`.
+//!
+//! This reproduces the paper's showcase row "single-codebook quantization
+//! with additive pruning" (Table 2).
+
+use super::{CContext, Compression, Theta, ViewData};
+
+pub struct AdditiveCombination {
+    pub components: Vec<Box<dyn Compression>>,
+    pub max_passes: usize,
+}
+
+impl AdditiveCombination {
+    pub fn new(components: Vec<Box<dyn Compression>>) -> Self {
+        assert!(!components.is_empty());
+        Self { components, max_passes: 20 }
+    }
+}
+
+impl Compression for AdditiveCombination {
+    fn name(&self) -> String {
+        let names: Vec<String> = self.components.iter().map(|c| c.name()).collect();
+        format!("additive[{}]", names.join(" + "))
+    }
+
+    fn needs_matrix(&self) -> bool {
+        self.components.iter().any(|c| c.needs_matrix())
+    }
+
+    fn compress(&self, view: &ViewData, ctx: &CContext) -> Theta {
+        let w = view.as_flat();
+        let n = w.len();
+        let j_count = self.components.len();
+
+        // current decompressed value of each component
+        let mut parts: Vec<Vec<f32>> = vec![vec![0.0; n]; j_count];
+        let mut thetas: Vec<Option<Theta>> = (0..j_count).map(|_| None).collect();
+
+        let rebuild_view = |residual: Vec<f32>| -> ViewData {
+            match view {
+                ViewData::Vector(_) => ViewData::Vector(residual),
+                ViewData::Matrix(m) => ViewData::Matrix(crate::tensor::Matrix::from_vec(
+                    m.rows, m.cols, residual,
+                )),
+            }
+        };
+
+        // Inner C steps may be *local* solvers (Lloyd k-means), so a later
+        // pass can land on a worse joint configuration than an earlier one.
+        // We keep the best full-pass snapshot, which also guarantees the
+        // result is never worse than running pass 1 alone (and pass 1 is
+        // never worse than the first component by itself).
+        let mut best: Option<(f64, Vec<Theta>)> = None;
+        let mut last_dist = f64::INFINITY;
+        for _pass in 0..self.max_passes {
+            for j in 0..j_count {
+                // residual = w - sum_{i != j} parts[i]
+                let mut residual = w.to_vec();
+                for (i, p) in parts.iter().enumerate() {
+                    if i != j {
+                        for (r, &x) in residual.iter_mut().zip(p.iter()) {
+                            *r -= x;
+                        }
+                    }
+                }
+                let theta = self.components[j].compress(&rebuild_view(residual), ctx);
+                parts[j] = theta.decompress();
+                thetas[j] = Some(theta);
+            }
+            // total distortion
+            let mut recon = vec![0.0f32; n];
+            for p in &parts {
+                for (r, &x) in recon.iter_mut().zip(p.iter()) {
+                    *r += x;
+                }
+            }
+            let dist = crate::tensor::dist_sq(w, &recon);
+            if best.as_ref().map_or(true, |(d, _)| dist < *d) {
+                best = Some((dist, thetas.iter().map(|t| t.clone().unwrap()).collect()));
+            }
+            if last_dist.is_finite() && last_dist - dist <= 1e-6 * last_dist.abs().max(1e-12) {
+                break;
+            }
+            last_dist = dist;
+        }
+        Theta::Additive(best.unwrap().1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::distortion;
+    use crate::compress::prune::ConstraintL0;
+    use crate::compress::quantize::{AdaptiveQuant, BinaryQuant};
+    use crate::util::rng::Xoshiro256;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn additive_beats_each_component_alone() {
+        let w = randvec(300, 1);
+        let view = ViewData::Vector(w.clone());
+        let ctx = CContext::default();
+        let q = AdaptiveQuant::new(2);
+        let p = ConstraintL0 { kappa: 30 };
+        let dq = distortion(&view, &q.compress(&view, &ctx));
+        let dp = distortion(&view, &p.compress(&view, &ctx));
+        let add = AdditiveCombination::new(vec![
+            Box::new(AdaptiveQuant::new(2)),
+            Box::new(ConstraintL0 { kappa: 30 }),
+        ]);
+        let da = distortion(&view, &add.compress(&view, &ctx));
+        assert!(da <= dq + 1e-9, "additive {da} vs quant {dq}");
+        assert!(da <= dp + 1e-9, "additive {da} vs prune {dp}");
+    }
+
+    #[test]
+    fn additive_exact_when_components_suffice() {
+        // w = c * signs + sparse spike: binary+sparse reconstructs exactly
+        let mut w = vec![0.5f32; 64];
+        for i in 32..64 {
+            w[i] = -0.5;
+        }
+        w[7] += 3.0;
+        let view = ViewData::Vector(w.clone());
+        let add = AdditiveCombination::new(vec![
+            Box::new(BinaryQuant { scaled: true }),
+            Box::new(ConstraintL0 { kappa: 1 }),
+        ]);
+        let t = add.compress(&view, &CContext::default());
+        assert!(distortion(&view, &t) < 1e-6);
+    }
+
+    #[test]
+    fn additive_distortion_nonincreasing_across_passes() {
+        // run with 1 pass vs many passes: more passes can only improve
+        let w = randvec(200, 3);
+        let view = ViewData::Vector(w.clone());
+        let ctx = CContext::default();
+        let mk = || -> Vec<Box<dyn Compression>> {
+            vec![Box::new(AdaptiveQuant::new(2)), Box::new(ConstraintL0 { kappa: 20 })]
+        };
+        let mut one = AdditiveCombination::new(mk());
+        one.max_passes = 1;
+        let mut many = AdditiveCombination::new(mk());
+        many.max_passes = 20;
+        let d1 = distortion(&view, &one.compress(&view, &ctx));
+        let dm = distortion(&view, &many.compress(&view, &ctx));
+        assert!(dm <= d1 + 1e-9, "1 pass {d1}, many {dm}");
+    }
+
+    #[test]
+    fn theta_is_additive_variant() {
+        let view = ViewData::Vector(randvec(50, 4));
+        let add = AdditiveCombination::new(vec![
+            Box::new(AdaptiveQuant::new(2)),
+            Box::new(ConstraintL0 { kappa: 5 }),
+        ]);
+        match add.compress(&view, &CContext::default()) {
+            Theta::Additive(parts) => assert_eq!(parts.len(), 2),
+            _ => panic!("expected additive theta"),
+        }
+    }
+
+    #[test]
+    fn triple_combination_runs() {
+        let view = ViewData::Vector(randvec(100, 5));
+        let add = AdditiveCombination::new(vec![
+            Box::new(AdaptiveQuant::new(2)),
+            Box::new(ConstraintL0 { kappa: 10 }),
+            Box::new(BinaryQuant { scaled: true }),
+        ]);
+        let t = add.compress(&view, &CContext::default());
+        let base = distortion(
+            &view,
+            &AdaptiveQuant::new(2).compress(&view, &CContext::default()),
+        );
+        assert!(distortion(&view, &t) <= base + 1e-9);
+    }
+}

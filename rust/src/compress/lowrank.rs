@@ -1,0 +1,220 @@
+//! Low-rank C steps (paper §4.3).
+//!
+//! * [`LowRank`] — compress a weight matrix to a *given* target rank:
+//!   the C step is the Eckart–Young projection (truncated SVD).
+//! * [`RankSelection`] — *automatic* rank selection ([17]): the C step
+//!
+//! ```text
+//! min over Θ_l, r_l of  λ·C_l(r_l) + μ/2 ‖W_l − Θ_l‖²
+//! s.t. rank(Θ_l) = r_l ≤ R_l
+//! ```
+//!
+//!   is solved exactly by one SVD plus enumeration over r: for each rank
+//!   the optimal Θ is the truncated SVD and the distortion is the tail
+//!   energy, so the objective is λ·C(r) + μ/2·Σ_{i>r} σᵢ².  `C(r)` is the
+//!   chosen cost model: storage floats or inference FLOPs, both
+//!   `r·(m+n)` per layer for a dense layer (scaled by `alpha` weights).
+
+use super::{CContext, Compression, Theta, ViewData};
+use crate::linalg::{svd, tail_energy, truncate};
+
+/// Cost model C(r) for rank selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankCost {
+    /// Storage floats of the factors: r·(m+n).
+    Storage,
+    /// Inference multiply-accumulates through the factored layer: r·(m+n)
+    /// per example (vs m·n dense) — the paper's FLOPs criterion.
+    Flops,
+}
+
+/// Fixed-target-rank low-rank compression.
+#[derive(Clone, Copy, Debug)]
+pub struct LowRank {
+    pub target_rank: usize,
+}
+
+impl Compression for LowRank {
+    fn name(&self) -> String {
+        format!("low_rank(r={})", self.target_rank)
+    }
+
+    fn needs_matrix(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, view: &ViewData, _ctx: &CContext) -> Theta {
+        let m = view.as_matrix();
+        let d = svd(m);
+        let r = self.target_rank.min(d.s.len()).max(1);
+        let (u, s, v) = truncate(&d, r);
+        Theta::LowRank { u, s, v }
+    }
+}
+
+/// Automatic rank selection with penalty weight `lambda` (the paper's λ;
+/// per-layer weights α_l fold into it via the task config).
+#[derive(Clone, Copy, Debug)]
+pub struct RankSelection {
+    pub lambda: f64,
+    pub cost: RankCost,
+    /// Optional cap R_l on the admissible rank (0 = min(m,n)).
+    pub max_rank: usize,
+}
+
+impl RankSelection {
+    pub fn new(lambda: f64) -> Self {
+        Self { lambda, cost: RankCost::Storage, max_rank: 0 }
+    }
+
+    /// Cost C(r) for an m x n layer under the configured model.
+    pub fn cost_of(&self, r: usize, m: usize, n: usize) -> f64 {
+        match self.cost {
+            RankCost::Storage | RankCost::Flops => (r * (m + n)) as f64,
+        }
+    }
+
+    /// Exact solution of the rank-selection C step: returns the chosen
+    /// rank (possibly 0 = layer entirely zeroed).
+    pub fn select_rank(&self, s: &[f32], m: usize, n: usize, mu: f64) -> usize {
+        let rmax = if self.max_rank == 0 { s.len() } else { self.max_rank.min(s.len()) };
+        let mut best_r = 0usize;
+        let mut best = f64::INFINITY;
+        for r in 0..=rmax {
+            let obj = self.lambda * self.cost_of(r, m, n) + 0.5 * mu * tail_energy(s, r);
+            if obj < best {
+                best = obj;
+                best_r = r;
+            }
+        }
+        best_r
+    }
+}
+
+impl Compression for RankSelection {
+    fn name(&self) -> String {
+        let c = match self.cost {
+            RankCost::Storage => "storage",
+            RankCost::Flops => "flops",
+        };
+        format!("rank_selection(lambda={:.1e},cost={c})", self.lambda)
+    }
+
+    fn needs_matrix(&self) -> bool {
+        true
+    }
+
+    fn compress(&self, view: &ViewData, ctx: &CContext) -> Theta {
+        let mat = view.as_matrix();
+        let d = svd(mat);
+        let r = self.select_rank(&d.s, mat.rows, mat.cols, ctx.mu);
+        if r == 0 {
+            // rank-0: the zero matrix; represent as empty factors
+            let u = crate::tensor::Matrix::zeros(mat.rows, 1);
+            let v = crate::tensor::Matrix::zeros(mat.cols, 1);
+            return Theta::LowRank { u, s: vec![0.0], v };
+        }
+        let (u, s, v) = truncate(&d, r);
+        Theta::LowRank { u, s, v }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::distortion;
+    use crate::tensor::Matrix;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_matrix(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut mat = Matrix::zeros(m, n);
+        rng.fill_normal(&mut mat.data, 0.0, 1.0);
+        mat
+    }
+
+    #[test]
+    fn low_rank_exact_for_low_rank_input() {
+        // build an exactly rank-2 matrix
+        let a = rand_matrix(8, 2, 1);
+        let b = rand_matrix(2, 6, 2);
+        let w = a.matmul(&b);
+        let view = ViewData::Matrix(w.clone());
+        let t = LowRank { target_rank: 2 }.compress(&view, &CContext::default());
+        assert!(distortion(&view, &t) < 1e-6);
+        // rank 1 must be lossy
+        let t1 = LowRank { target_rank: 1 }.compress(&view, &CContext::default());
+        assert!(distortion(&view, &t1) > 1e-3);
+    }
+
+    #[test]
+    fn low_rank_distortion_equals_tail_energy() {
+        let w = rand_matrix(10, 7, 3);
+        let d = svd(&w);
+        let view = ViewData::Matrix(w.clone());
+        for r in 1..=7 {
+            let t = LowRank { target_rank: r }.compress(&view, &CContext::default());
+            let dist = distortion(&view, &t);
+            let tail = tail_energy(&d.s, r);
+            assert!((dist - tail).abs() < 1e-3 * tail.max(1e-6), "r={r}");
+        }
+    }
+
+    #[test]
+    fn rank_selection_monotone_in_lambda() {
+        let w = rand_matrix(12, 9, 4);
+        let d = svd(&w);
+        let mut last_rank = usize::MAX;
+        for &lambda in &[1e-6, 1e-3, 1e-1, 1e1] {
+            let rs = RankSelection::new(lambda);
+            let r = rs.select_rank(&d.s, 12, 9, 1.0);
+            assert!(r <= last_rank, "rank must shrink as lambda grows");
+            last_rank = r;
+        }
+        // extreme lambdas
+        assert_eq!(RankSelection::new(1e12).select_rank(&d.s, 12, 9, 1.0), 0);
+        assert_eq!(RankSelection::new(0.0).select_rank(&d.s, 12, 9, 1.0), 9);
+    }
+
+    #[test]
+    fn rank_selection_monotone_in_mu() {
+        // larger mu weights distortion more -> rank grows
+        let w = rand_matrix(12, 9, 5);
+        let d = svd(&w);
+        let rs = RankSelection::new(1e-2);
+        let r_small = rs.select_rank(&d.s, 12, 9, 1e-3);
+        let r_big = rs.select_rank(&d.s, 12, 9, 1e3);
+        assert!(r_big >= r_small);
+    }
+
+    #[test]
+    fn rank_selection_objective_is_exact_argmin() {
+        let w = rand_matrix(9, 6, 6);
+        let d = svd(&w);
+        let rs = RankSelection::new(0.05);
+        let mu = 2.0;
+        let r = rs.select_rank(&d.s, 9, 6, mu);
+        let obj =
+            |rr: usize| rs.lambda * rs.cost_of(rr, 9, 6) + 0.5 * mu * tail_energy(&d.s, rr);
+        for rr in 0..=6 {
+            assert!(obj(r) <= obj(rr) + 1e-9, "r={r} beaten by rr={rr}");
+        }
+    }
+
+    #[test]
+    fn rank_zero_decompresses_to_zero() {
+        let w = rand_matrix(5, 4, 7);
+        let view = ViewData::Matrix(w.clone());
+        let t = RankSelection { lambda: 1e12, cost: RankCost::Storage, max_rank: 0 }
+            .compress(&view, &CContext { mu: 1.0 });
+        assert!(t.decompress().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn max_rank_cap_respected() {
+        let w = rand_matrix(10, 10, 8);
+        let d = svd(&w);
+        let rs = RankSelection { lambda: 0.0, cost: RankCost::Flops, max_rank: 3 };
+        assert!(rs.select_rank(&d.s, 10, 10, 1.0) <= 3);
+    }
+}

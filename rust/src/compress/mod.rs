@@ -1,0 +1,200 @@
+//! The C-step library: every compression scheme of the paper's Table 1.
+//!
+//! A compression is a pair of mappings (paper §3):
+//!
+//! * decompression Δ : Θ ∈ R^Q → w ∈ R^P,
+//! * compression Π(w) = argmin_Θ ‖w − Δ(Θ)‖² (l2 projection onto the
+//!   feasible set).
+//!
+//! Every scheme implements [`Compression`]: `compress` solves the C step on
+//! a [`ViewData`] (the reshaped weights of one compression task) and
+//! returns a [`Theta`] — the low-dimensional parameters plus enough
+//! structure to decompress and to account storage/FLOPs.
+//!
+//! Supported (Table 1): adaptive quantization (k-means and optimal-DP),
+//! binarization {−1,1} and {−c,c}, ternarization {−c,0,c}; ℓ0/ℓ1
+//! constraint and penalty pruning; low-rank to a fixed rank and with
+//! automatic rank selection (FLOPs or storage cost); and additive
+//! combinations of any of the above.
+
+pub mod additive;
+pub mod lowrank;
+pub mod prune;
+pub mod quantize;
+pub mod task;
+pub mod view;
+
+use crate::tensor::Matrix;
+pub use view::{View, ViewData};
+
+/// Context the C step may depend on.  Penalty-form schemes (ℓ0/ℓ1 penalty,
+/// rank selection) need the current penalty weight μ: their projection
+/// trades distortion against the compression cost at exchange rate α/μ
+/// (or λ/μ).  Constraint-form schemes ignore it.
+#[derive(Clone, Copy, Debug)]
+pub struct CContext {
+    /// Current penalty parameter μ.  The LC driver passes
+    /// `max(mu, mu_floor)` so the direct-compression init (μ = 0) still
+    /// has a well-defined penalty-form C step (see lc/algorithm.rs).
+    pub mu: f64,
+}
+
+impl Default for CContext {
+    fn default() -> Self {
+        CContext { mu: 1.0 }
+    }
+}
+
+/// Θ: the compressed parameters of one task, scheme-specific.
+#[derive(Clone, Debug)]
+pub enum Theta {
+    /// Learned codebook + per-weight assignment (adaptive quantization).
+    Quantized { codebook: Vec<f32>, assignments: Vec<u32> },
+    /// Sign pattern with a shared scale (binarization / ternarization).
+    /// `values[i] ∈ {-1, 0, +1}`; decompressed weight is `scale * values[i]`.
+    Signs { scale: f32, values: Vec<i8>, ternary: bool },
+    /// Sparse vector (pruning): sorted indices + values, original length.
+    Sparse { len: usize, indices: Vec<u32>, values: Vec<f32> },
+    /// Low-rank factors W ≈ U diag(S) Vᵀ.
+    LowRank { u: Matrix, s: Vec<f32>, v: Matrix },
+    /// Sum of component compressions (additive combinations).
+    Additive(Vec<Theta>),
+}
+
+impl Theta {
+    /// Δ(Θ): reconstruct the (flat) weight view.
+    pub fn decompress(&self) -> Vec<f32> {
+        match self {
+            Theta::Quantized { codebook, assignments } => assignments
+                .iter()
+                .map(|&a| codebook[a as usize])
+                .collect(),
+            Theta::Signs { scale, values, .. } => {
+                values.iter().map(|&s| scale * s as f32).collect()
+            }
+            Theta::Sparse { len, indices, values } => {
+                let mut out = vec![0.0f32; *len];
+                for (&i, &v) in indices.iter().zip(values.iter()) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+            Theta::LowRank { u, s, v } => crate::linalg::reconstruct(u, s, v).data,
+            Theta::Additive(parts) => {
+                let mut out = parts[0].decompress();
+                for p in &parts[1..] {
+                    for (o, x) in out.iter_mut().zip(p.decompress()) {
+                        *o += x;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Storage cost of Θ in bits (the paper's storage criterion; float32
+    /// reference weights are 32 bits each).
+    pub fn storage_bits(&self) -> u64 {
+        match self {
+            Theta::Quantized { codebook, assignments } => {
+                let k = codebook.len().max(1) as u64;
+                let idx_bits = (64 - (k - 1).leading_zeros() as u64).max(1);
+                32 * codebook.len() as u64 + idx_bits * assignments.len() as u64
+            }
+            Theta::Signs { values, ternary, .. } => {
+                let per = if *ternary { 2 } else { 1 };
+                32 + per * values.len() as u64
+            }
+            Theta::Sparse { len, indices, values } => {
+                let idx_bits = (64 - ((*len).max(2) as u64 - 1).leading_zeros() as u64).max(1);
+                (32 + idx_bits) * values.len().max(indices.len()) as u64
+            }
+            Theta::LowRank { u, s, v } => {
+                // store U*diag(S) and V
+                32 * (u.rows * u.cols + v.rows * v.cols) as u64 + 0 * s.len() as u64
+            }
+            Theta::Additive(parts) => parts.iter().map(|p| p.storage_bits()).sum(),
+        }
+    }
+
+    /// Number of free parameters in Θ (the paper's #params criterion).
+    pub fn n_params(&self) -> u64 {
+        match self {
+            Theta::Quantized { codebook, assignments } => {
+                (codebook.len() + assignments.len()) as u64
+            }
+            Theta::Signs { values, .. } => 1 + values.len() as u64,
+            Theta::Sparse { values, .. } => 2 * values.len() as u64,
+            Theta::LowRank { u, v, .. } => (u.rows * u.cols + v.rows * v.cols) as u64,
+            Theta::Additive(parts) => parts.iter().map(|p| p.n_params()).sum(),
+        }
+    }
+}
+
+/// A compression scheme (one row of Table 1).
+pub trait Compression: Send + Sync {
+    /// Human-readable scheme name for reports/configs.
+    fn name(&self) -> String;
+
+    /// Solve the C step: Θ = Π(view) = argmin_Θ ‖w − Δ(Θ)‖².
+    fn compress(&self, view: &ViewData, ctx: &CContext) -> Theta;
+
+    /// Whether this scheme requires a matrix view (low-rank family).
+    fn needs_matrix(&self) -> bool {
+        false
+    }
+}
+
+/// Distortion ‖w − Δ(Θ)‖² of a proposed Θ against the view it came from.
+pub fn distortion(view: &ViewData, theta: &Theta) -> f64 {
+    let w = view.as_flat();
+    let d = theta.decompress();
+    crate::tensor::dist_sq(w, &d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantized_decompress_and_bits() {
+        let t = Theta::Quantized { codebook: vec![-1.0, 1.0], assignments: vec![0, 1, 1, 0] };
+        assert_eq!(t.decompress(), vec![-1.0, 1.0, 1.0, -1.0]);
+        // 2 centers * 32 + 4 * 1 bit
+        assert_eq!(t.storage_bits(), 64 + 4);
+        let t16 = Theta::Quantized { codebook: vec![0.0; 16], assignments: vec![0; 10] };
+        assert_eq!(t16.storage_bits(), 16 * 32 + 10 * 4);
+    }
+
+    #[test]
+    fn signs_decompress() {
+        let t = Theta::Signs { scale: 0.5, values: vec![1, -1, 0, 1], ternary: true };
+        assert_eq!(t.decompress(), vec![0.5, -0.5, 0.0, 0.5]);
+        assert_eq!(t.storage_bits(), 32 + 8);
+        let b = Theta::Signs { scale: 1.0, values: vec![1, -1], ternary: false };
+        assert_eq!(b.storage_bits(), 32 + 2);
+    }
+
+    #[test]
+    fn sparse_decompress() {
+        let t = Theta::Sparse { len: 5, indices: vec![1, 4], values: vec![2.0, -3.0] };
+        assert_eq!(t.decompress(), vec![0.0, 2.0, 0.0, 0.0, -3.0]);
+        // 2 entries * (32 + ceil(log2 5)=3) = 70
+        assert_eq!(t.storage_bits(), 2 * (32 + 3));
+    }
+
+    #[test]
+    fn additive_decompress_sums() {
+        let a = Theta::Sparse { len: 3, indices: vec![0], values: vec![1.0] };
+        let b = Theta::Quantized { codebook: vec![0.25], assignments: vec![0, 0, 0] };
+        let t = Theta::Additive(vec![a, b]);
+        assert_eq!(t.decompress(), vec![1.25, 0.25, 0.25]);
+    }
+
+    #[test]
+    fn distortion_zero_for_exact() {
+        let view = ViewData::Vector(vec![1.0, -1.0]);
+        let t = Theta::Quantized { codebook: vec![-1.0, 1.0], assignments: vec![1, 0] };
+        assert_eq!(distortion(&view, &t), 0.0);
+    }
+}

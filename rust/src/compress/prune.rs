@@ -1,0 +1,346 @@
+//! Pruning C steps (paper §4.2): all four combinations of ℓ0/ℓ1 ×
+//! constraint/penalty.
+//!
+//! * ℓ0-constraint (‖θ‖₀ ≤ κ): keep the top-κ magnitudes (eq. 4) —
+//!   the exact l2 projection onto the ℓ0 ball;
+//! * ℓ1-constraint (‖θ‖₁ ≤ κ): Euclidean projection onto the ℓ1 ball
+//!   (Duchi et al. 2008, O(n) expected via the pivoting variant);
+//! * ℓ0-penalty (α‖θ‖₀ added to the objective): the C step
+//!   min ‖w−θ‖² + (2α/μ)‖θ‖₀ hard-thresholds at |wᵢ| > √(2α/μ) ([5]);
+//! * ℓ1-penalty (α‖θ‖₁): soft-thresholding at α/μ.
+
+use super::{CContext, Compression, Theta, ViewData};
+use crate::tensor::magnitude_threshold;
+
+/// ℓ0-constrained pruning: keep exactly `kappa` weights.
+#[derive(Clone, Copy, Debug)]
+pub struct ConstraintL0 {
+    pub kappa: usize,
+}
+
+impl Compression for ConstraintL0 {
+    fn name(&self) -> String {
+        format!("prune_l0_constraint(kappa={})", self.kappa)
+    }
+
+    fn compress(&self, view: &ViewData, _ctx: &CContext) -> Theta {
+        let w = view.as_flat();
+        let kappa = self.kappa.min(w.len());
+        let t = magnitude_threshold(w, kappa);
+        // Two passes so threshold ties cannot displace strictly-larger
+        // entries (caught by prop_l0_prune_is_projection: with many zeros
+        // the threshold is 0 and a one-pass `>= t` scan keeps the first
+        // kappa zeros instead of the large weights).
+        let mut indices = Vec::with_capacity(kappa);
+        let mut values = Vec::with_capacity(kappa);
+        for (i, &x) in w.iter().enumerate() {
+            if x.abs() > t && indices.len() < kappa {
+                indices.push(i as u32);
+                values.push(x);
+            }
+        }
+        if indices.len() < kappa {
+            for (i, &x) in w.iter().enumerate() {
+                if indices.len() >= kappa {
+                    break;
+                }
+                if x.abs() == t && !indices.contains(&(i as u32)) {
+                    indices.push(i as u32);
+                    values.push(x);
+                }
+            }
+            let mut pairs: Vec<(u32, f32)> =
+                indices.into_iter().zip(values.into_iter()).collect();
+            pairs.sort_by_key(|p| p.0);
+            indices = pairs.iter().map(|p| p.0).collect();
+            values = pairs.iter().map(|p| p.1).collect();
+        }
+        Theta::Sparse { len: w.len(), indices, values }
+    }
+}
+
+/// ℓ1-constrained pruning: project onto `{θ : ‖θ‖₁ ≤ kappa}`.
+#[derive(Clone, Copy, Debug)]
+pub struct ConstraintL1 {
+    pub kappa: f64,
+}
+
+impl Compression for ConstraintL1 {
+    fn name(&self) -> String {
+        format!("prune_l1_constraint(kappa={})", self.kappa)
+    }
+
+    fn compress(&self, view: &ViewData, _ctx: &CContext) -> Theta {
+        let w = view.as_flat();
+        let theta = project_l1_ball(w, self.kappa);
+        sparse_from_dense(&theta)
+    }
+}
+
+/// ℓ0-penalty pruning: objective `L(w) + α‖w‖₀`; C step hard-thresholds
+/// at `√(2α/μ)`.
+#[derive(Clone, Copy, Debug)]
+pub struct PenaltyL0 {
+    pub alpha: f64,
+}
+
+impl Compression for PenaltyL0 {
+    fn name(&self) -> String {
+        format!("prune_l0_penalty(alpha={})", self.alpha)
+    }
+
+    fn compress(&self, view: &ViewData, ctx: &CContext) -> Theta {
+        let w = view.as_flat();
+        let thr = (2.0 * self.alpha / ctx.mu).sqrt() as f32;
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &x) in w.iter().enumerate() {
+            if x.abs() > thr {
+                indices.push(i as u32);
+                values.push(x);
+            }
+        }
+        Theta::Sparse { len: w.len(), indices, values }
+    }
+}
+
+/// ℓ1-penalty pruning: objective `L(w) + α‖w‖₁`; C step soft-thresholds
+/// at `α/μ`.
+#[derive(Clone, Copy, Debug)]
+pub struct PenaltyL1 {
+    pub alpha: f64,
+}
+
+impl Compression for PenaltyL1 {
+    fn name(&self) -> String {
+        format!("prune_l1_penalty(alpha={})", self.alpha)
+    }
+
+    fn compress(&self, view: &ViewData, ctx: &CContext) -> Theta {
+        let w = view.as_flat();
+        let thr = (self.alpha / ctx.mu) as f32;
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &x) in w.iter().enumerate() {
+            let mag = x.abs() - thr;
+            if mag > 0.0 {
+                indices.push(i as u32);
+                values.push(x.signum() * mag);
+            }
+        }
+        Theta::Sparse { len: w.len(), indices, values }
+    }
+}
+
+/// Euclidean projection of `w` onto the ℓ1 ball of radius `z`
+/// (Duchi et al. 2008: sort-based variant, O(n log n)).
+pub fn project_l1_ball(w: &[f32], z: f64) -> Vec<f32> {
+    assert!(z >= 0.0);
+    let l1: f64 = w.iter().map(|&x| x.abs() as f64).sum();
+    if l1 <= z {
+        return w.to_vec();
+    }
+    if z == 0.0 {
+        return vec![0.0; w.len()];
+    }
+    let mut mags: Vec<f64> = w.iter().map(|&x| x.abs() as f64).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut cum = 0.0f64;
+    let mut rho = 0usize;
+    let mut cum_at_rho = 0.0f64;
+    for (i, &m) in mags.iter().enumerate() {
+        cum += m;
+        if m > (cum - z) / (i + 1) as f64 {
+            rho = i + 1;
+            cum_at_rho = cum;
+        }
+    }
+    let tau = (cum_at_rho - z) / rho as f64;
+    w.iter()
+        .map(|&x| {
+            let m = (x.abs() as f64 - tau).max(0.0);
+            (x.signum() as f64 * m) as f32
+        })
+        .collect()
+}
+
+fn sparse_from_dense(theta: &[f32]) -> Theta {
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    for (i, &x) in theta.iter().enumerate() {
+        if x != 0.0 {
+            indices.push(i as u32);
+            values.push(x);
+        }
+    }
+    Theta::Sparse { len: theta.len(), indices, values }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::distortion;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn l0_constraint_keeps_topk() {
+        let view = ViewData::Vector(vec![0.1, -0.5, 0.3, -0.2, 0.9]);
+        let t = ConstraintL0 { kappa: 2 }.compress(&view, &CContext::default());
+        assert_eq!(t.decompress(), vec![0.0, -0.5, 0.0, 0.0, 0.9]);
+        if let Theta::Sparse { indices, .. } = &t {
+            assert_eq!(indices, &vec![1, 4]);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn l0_constraint_is_l2_projection() {
+        // among all kappa-sparse vectors, top-k must minimize distortion:
+        // compare against every support of size kappa on a small input
+        let w = vec![0.4f32, -0.1, 0.7, 0.2];
+        let view = ViewData::Vector(w.clone());
+        let t = ConstraintL0 { kappa: 2 }.compress(&view, &CContext::default());
+        let got = distortion(&view, &t);
+        let mut best = f64::INFINITY;
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                let d: f64 = w
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| *i != a && *i != b)
+                    .map(|(_, &x)| (x as f64) * (x as f64))
+                    .sum();
+                best = best.min(d);
+            }
+        }
+        assert!((got - best).abs() < 1e-9);
+    }
+
+    #[test]
+    fn l0_kappa_larger_than_n() {
+        let view = ViewData::Vector(vec![1.0, 2.0]);
+        let t = ConstraintL0 { kappa: 10 }.compress(&view, &CContext::default());
+        assert_eq!(t.decompress(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn l0_exact_support_size_with_ties() {
+        let view = ViewData::Vector(vec![0.5f32; 6]);
+        let t = ConstraintL0 { kappa: 3 }.compress(&view, &CContext::default());
+        if let Theta::Sparse { values, .. } = &t {
+            assert_eq!(values.len(), 3);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn l1_projection_inside_ball_is_identity() {
+        let w = vec![0.1f32, -0.2, 0.1];
+        assert_eq!(project_l1_ball(&w, 1.0), w);
+    }
+
+    #[test]
+    fn l1_projection_norm_equals_radius() {
+        let mut rng = Xoshiro256::new(4);
+        let w: Vec<f32> = (0..100).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for z in [0.5f64, 2.0, 10.0] {
+            let p = project_l1_ball(&w, z);
+            let l1: f64 = p.iter().map(|&x| x.abs() as f64).sum();
+            assert!((l1 - z).abs() < 1e-4, "z={z} got l1={l1}");
+        }
+    }
+
+    #[test]
+    fn l1_projection_is_closest_point() {
+        // projection property: for any v in the ball, <w - p, v - p> <= 0
+        let mut rng = Xoshiro256::new(5);
+        let w: Vec<f32> = (0..20).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let z = 3.0;
+        let p = project_l1_ball(&w, z);
+        for _ in 0..50 {
+            let mut v: Vec<f32> = (0..20).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+            let l1: f64 = v.iter().map(|&x| x.abs() as f64).sum();
+            if l1 > z {
+                let s = (z / l1) as f32;
+                v.iter_mut().for_each(|x| *x *= s);
+            }
+            let ip: f64 = w
+                .iter()
+                .zip(p.iter())
+                .zip(v.iter())
+                .map(|((&wi, &pi), &vi)| ((wi - pi) as f64) * ((vi - pi) as f64))
+                .sum();
+            assert!(ip <= 1e-5, "violates projection inequality: {ip}");
+        }
+    }
+
+    #[test]
+    fn l0_penalty_threshold_scales_with_mu() {
+        let view = ViewData::Vector(vec![0.5, 1.5, -0.1, -2.0]);
+        let alpha = 0.5;
+        // mu = 1 -> thr = 1.0: keeps 1.5, -2.0
+        let t1 = PenaltyL0 { alpha }.compress(&view, &CContext { mu: 1.0 });
+        assert_eq!(t1.decompress(), vec![0.0, 1.5, 0.0, -2.0]);
+        // mu = 100 -> thr = 0.1: keeps all but -0.1 (|x| > thr strict)
+        let t2 = PenaltyL0 { alpha }.compress(&view, &CContext { mu: 100.0 });
+        assert_eq!(t2.decompress(), vec![0.5, 1.5, 0.0, -2.0]);
+    }
+
+    #[test]
+    fn l0_penalty_minimizes_its_objective() {
+        // C-step objective: ||w - theta||^2 + (2 alpha/mu)||theta||_0,
+        // check against exhaustive support enumeration on 6 entries
+        let w = vec![0.9f32, -0.3, 0.05, 1.2, -0.7, 0.2];
+        let view = ViewData::Vector(w.clone());
+        let (alpha, mu) = (0.1, 2.0);
+        let t = PenaltyL0 { alpha }.compress(&view, &CContext { mu });
+        let cost = |theta: &[f32]| -> f64 {
+            let nnz = theta.iter().filter(|&&x| x != 0.0).count() as f64;
+            crate::tensor::dist_sq(&w, theta) + (2.0 * alpha / mu) * nnz
+        };
+        let got = cost(&t.decompress());
+        for mask in 0u32..64 {
+            let theta: Vec<f32> = w
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| if mask & (1 << i) != 0 { x } else { 0.0 })
+                .collect();
+            assert!(got <= cost(&theta) + 1e-9, "mask={mask}");
+        }
+    }
+
+    #[test]
+    fn l1_penalty_soft_threshold() {
+        let view = ViewData::Vector(vec![1.0, -0.05, 0.3]);
+        let t = PenaltyL1 { alpha: 0.2 }.compress(&view, &CContext { mu: 2.0 });
+        // thr = 0.1
+        let d = t.decompress();
+        assert!((d[0] - 0.9).abs() < 1e-6);
+        assert_eq!(d[1], 0.0);
+        assert!((d[2] - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l1_penalty_minimizes_objective_pointwise() {
+        // soft threshold is the prox of alpha/mu * |.|; verify numerically
+        let (alpha, mu) = (0.3, 1.5);
+        let thr = alpha / mu;
+        for &w in &[0.9f32, -0.15, 0.0, 2.0, -0.21] {
+            let view = ViewData::Vector(vec![w]);
+            let t = PenaltyL1 { alpha }.compress(&view, &CContext { mu });
+            let got_theta = t.decompress()[0] as f64;
+            let obj = |th: f64| (w as f64 - th).powi(2) + 2.0 * thr * th.abs();
+            let got = obj(got_theta);
+            // dense scan
+            let mut best = f64::INFINITY;
+            let mut th = -3.0;
+            while th < 3.0 {
+                best = best.min(obj(th));
+                th += 1e-4;
+            }
+            assert!(got <= best + 1e-6, "w={w}: got={got} best={best}");
+        }
+    }
+}

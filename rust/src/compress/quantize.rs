@@ -1,0 +1,513 @@
+//! Quantization C steps (paper §4.1).
+//!
+//! The C step of adaptive quantization is the scalar k-means problem
+//! (eq. 2):  min over codebook C and assignments z of
+//! Σᵢ Σₖ z_ik (wᵢ − cₖ)².  We provide:
+//!
+//! * [`AdaptiveQuant`] — Lloyd's k-means with k-means++ init (the default,
+//!   matching the reference library), or the **globally optimal** scalar
+//!   solution by dynamic programming over the sorted weights
+//!   (`Solver::OptimalDp`, Bruce 1965 / Wu 1991), accelerated by the
+//!   divide-and-conquer monotonicity argument to O(K·N·log N);
+//! * [`BinaryQuant`] — {−1, 1} (Θ = signs) and scaled {−c, c} with the
+//!   closed-form optimal c = mean|w|;
+//! * [`TernaryQuant`] — scaled {−c, 0, c}: the optimal support maximizes
+//!   (Σ_top-m |w|)²/m; solved exactly by a sort + prefix scan.
+
+use super::{CContext, Compression, Theta, ViewData};
+use crate::util::rng::Xoshiro256;
+
+/// k-means solver choice for adaptive quantization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Solver {
+    /// Lloyd iterations from a k-means++ init (fast, near-optimal).
+    Lloyd,
+    /// Exact DP on sorted scalars (optimal; O(K N log N)).
+    OptimalDp,
+}
+
+/// Adaptive quantization with a learned codebook of size `k`.
+#[derive(Clone, Debug)]
+pub struct AdaptiveQuant {
+    pub k: usize,
+    pub solver: Solver,
+    pub seed: u64,
+    pub max_iters: usize,
+}
+
+impl AdaptiveQuant {
+    pub fn new(k: usize) -> Self {
+        Self { k, solver: Solver::Lloyd, seed: 0x5EED, max_iters: 100 }
+    }
+
+    pub fn optimal(k: usize) -> Self {
+        Self { k, solver: Solver::OptimalDp, seed: 0x5EED, max_iters: 0 }
+    }
+}
+
+impl Compression for AdaptiveQuant {
+    fn name(&self) -> String {
+        match self.solver {
+            Solver::Lloyd => format!("adaptive_quant(k={})", self.k),
+            Solver::OptimalDp => format!("adaptive_quant_dp(k={})", self.k),
+        }
+    }
+
+    fn compress(&self, view: &ViewData, _ctx: &CContext) -> Theta {
+        let w = view.as_flat();
+        let (codebook, assignments) = match self.solver {
+            Solver::Lloyd => kmeans_scalar(w, self.k, self.seed, self.max_iters),
+            Solver::OptimalDp => optimal_quant_dp(w, self.k),
+        };
+        Theta::Quantized { codebook, assignments }
+    }
+}
+
+/// Lloyd's algorithm on scalars with k-means++ seeding.
+/// Returns (codebook sorted ascending, assignments).
+pub fn kmeans_scalar(w: &[f32], k: usize, seed: u64, max_iters: usize) -> (Vec<f32>, Vec<u32>) {
+    assert!(k >= 1);
+    if w.is_empty() {
+        return (vec![0.0; k], Vec::new());
+    }
+    let mut rng = Xoshiro256::new(seed);
+    let centers = kmeanspp_init(w, k, &mut rng);
+    lloyd_with_init(w, &centers, max_iters)
+}
+
+/// Lloyd's algorithm from an explicit initial codebook (used to compare
+/// the host implementation against the PJRT quant_assign kernel with
+/// identical starting points, and by callers that want custom seeding).
+pub fn lloyd_with_init(w: &[f32], init: &[f32], max_iters: usize) -> (Vec<f32>, Vec<u32>) {
+    let k = init.len();
+    assert!(k >= 1);
+    if w.is_empty() {
+        return (init.to_vec(), Vec::new());
+    }
+    let mut centers = init.to_vec();
+    centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let mut assign = vec![0u32; w.len()];
+    let mut last_dist = f64::INFINITY;
+    for _ in 0..max_iters.max(1) {
+        // E-step: nearest center (centers sorted -> binary search by midpoints)
+        assign_nearest_sorted(w, &centers, &mut assign);
+        // M-step
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0u64; k];
+        for (&wi, &a) in w.iter().zip(assign.iter()) {
+            sums[a as usize] += wi as f64;
+            counts[a as usize] += 1;
+        }
+        let mut dist = 0.0f64;
+        for (&wi, &a) in w.iter().zip(assign.iter()) {
+            let c = if counts[a as usize] > 0 {
+                sums[a as usize] / counts[a as usize] as f64
+            } else {
+                centers[a as usize] as f64
+            };
+            let d = wi as f64 - c;
+            dist += d * d;
+        }
+        for j in 0..k {
+            if counts[j] > 0 {
+                centers[j] = (sums[j] / counts[j] as f64) as f32;
+            }
+            // empty clusters keep their center (harmless for scalars)
+        }
+        centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if last_dist - dist <= 1e-12 * last_dist.abs().max(1.0) {
+            break;
+        }
+        last_dist = dist;
+    }
+    assign_nearest_sorted(w, &centers, &mut assign);
+    (centers, assign)
+}
+
+fn assign_nearest_sorted(w: &[f32], centers: &[f32], assign: &mut [u32]) {
+    // midpoints between consecutive sorted centers partition the line
+    let mids: Vec<f32> = centers.windows(2).map(|p| 0.5 * (p[0] + p[1])).collect();
+    for (ai, &wi) in assign.iter_mut().zip(w.iter()) {
+        let mut j = mids.partition_point(|&m| m < wi);
+        // resolve exact-midpoint ties toward the nearer center
+        if j > 0 && (wi - centers[j - 1]).abs() <= (wi - centers[j]).abs() {
+            j -= 1;
+        }
+        *ai = j as u32;
+    }
+}
+
+fn kmeanspp_init(w: &[f32], k: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+    let mut centers = Vec::with_capacity(k);
+    centers.push(w[rng.below(w.len())]);
+    let mut d2: Vec<f64> = w
+        .iter()
+        .map(|&x| {
+            let d = (x - centers[0]) as f64;
+            d * d
+        })
+        .collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // all points coincide with a center: jitter duplicates
+            w[rng.below(w.len())]
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut pick = w.len() - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                if target < d {
+                    pick = i;
+                    break;
+                }
+                target -= d;
+            }
+            w[pick]
+        };
+        centers.push(next);
+        for (i, &x) in w.iter().enumerate() {
+            let d = (x - next) as f64;
+            d2[i] = d2[i].min(d * d);
+        }
+    }
+    centers
+}
+
+/// Globally optimal K-level scalar quantization by dynamic programming on
+/// the sorted values, with the divide-and-conquer optimization exploiting
+/// monotonicity of the optimal split points: O(K · N log N).
+pub fn optimal_quant_dp(w: &[f32], k: usize) -> (Vec<f32>, Vec<u32>) {
+    assert!(k >= 1);
+    let n = w.len();
+    if n == 0 {
+        return (vec![0.0; k], Vec::new());
+    }
+    // sort values, remembering original positions
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| w[a].partial_cmp(&w[b]).unwrap());
+    let sorted: Vec<f64> = order.iter().map(|&i| w[i] as f64).collect();
+
+    // prefix sums for O(1) interval cost: cost(i..j) over sorted[i..j]
+    let mut ps = vec![0.0f64; n + 1];
+    let mut ps2 = vec![0.0f64; n + 1];
+    for i in 0..n {
+        ps[i + 1] = ps[i] + sorted[i];
+        ps2[i + 1] = ps2[i] + sorted[i] * sorted[i];
+    }
+    let cost = |i: usize, j: usize| -> f64 {
+        // sum of squared deviation from mean over sorted[i..j] (exclusive j)
+        if j <= i {
+            return 0.0;
+        }
+        let cnt = (j - i) as f64;
+        let s = ps[j] - ps[i];
+        let s2 = ps2[j] - ps2[i];
+        (s2 - s * s / cnt).max(0.0)
+    };
+
+    let k = k.min(n);
+    // dp[j] = best cost of quantizing sorted[0..j] with the current number
+    // of levels; split[lvl][j] = chosen boundary for backtracking.
+    let mut dp: Vec<f64> = (0..=n).map(|j| cost(0, j)).collect();
+    let mut splits: Vec<Vec<u32>> = Vec::with_capacity(k);
+    splits.push(vec![0u32; n + 1]);
+    for _lvl in 1..k {
+        let mut ndp = vec![f64::INFINITY; n + 1];
+        let mut nsplit = vec![0u32; n + 1];
+        ndp[0] = 0.0;
+        // divide & conquer over j with monotone argmin
+        dnc_fill(&dp, &mut ndp, &mut nsplit, &cost, 1, n, 0, n);
+        dp = ndp;
+        splits.push(nsplit);
+    }
+
+    // backtrack boundaries
+    let mut bounds = vec![n; k + 1];
+    bounds[0] = 0;
+    let mut j = n;
+    for lvl in (1..k).rev() {
+        j = splits[lvl][j] as usize;
+        bounds[lvl] = j;
+    }
+    bounds[k] = n;
+
+    // codebook = interval means; assignments via original order
+    let mut codebook = Vec::with_capacity(k);
+    for lvl in 0..k {
+        let (i, j) = (bounds[lvl], bounds[lvl + 1]);
+        let c = if j > i { (ps[j] - ps[i]) / (j - i) as f64 } else { f64::NAN };
+        codebook.push(c);
+    }
+    // fill empty intervals (possible when k > distinct values) with neighbors
+    for lvl in 0..k {
+        if codebook[lvl].is_nan() {
+            codebook[lvl] = if lvl > 0 { codebook[lvl - 1] } else { sorted[0] };
+        }
+    }
+    let mut assignments = vec![0u32; n];
+    for lvl in 0..k {
+        for pos in bounds[lvl]..bounds[lvl + 1] {
+            assignments[order[pos]] = lvl as u32;
+        }
+    }
+    (codebook.iter().map(|&c| c as f32).collect(), assignments)
+}
+
+/// Divide-and-conquer DP fill: for j in [jlo, jhi], ndp[j] =
+/// min over i in [ilo, ihi] of dp[i] + cost(i, j), where the optimal i is
+/// monotone non-decreasing in j (interval costs satisfy the QI/Monge
+/// condition).
+fn dnc_fill<F: Fn(usize, usize) -> f64>(
+    dp: &[f64],
+    ndp: &mut [f64],
+    nsplit: &mut [u32],
+    cost: &F,
+    jlo: usize,
+    jhi: usize,
+    ilo: usize,
+    ihi: usize,
+) {
+    if jlo > jhi {
+        return;
+    }
+    let jmid = (jlo + jhi) / 2;
+    let mut best = f64::INFINITY;
+    let mut best_i = ilo;
+    let i_top = ihi.min(jmid.saturating_sub(1)).max(ilo);
+    for i in ilo..=i_top.min(jmid.saturating_sub(1)) {
+        let c = dp[i] + cost(i, jmid);
+        if c < best {
+            best = c;
+            best_i = i;
+        }
+    }
+    if jmid == 0 {
+        best = 0.0;
+        best_i = 0;
+    }
+    if best < ndp[jmid] {
+        ndp[jmid] = best;
+        nsplit[jmid] = best_i as u32;
+    }
+    if jmid > jlo {
+        dnc_fill(dp, ndp, nsplit, cost, jlo, jmid - 1, ilo, best_i);
+    }
+    dnc_fill(dp, ndp, nsplit, cost, jmid + 1, jhi, best_i, ihi);
+}
+
+/// Binarization into {−1, 1} (fixed) or {−c, c} with learned scale.
+#[derive(Clone, Copy, Debug)]
+pub struct BinaryQuant {
+    /// If true, learn the optimal common scale c = mean|w|; else c = 1.
+    pub scaled: bool,
+}
+
+impl Compression for BinaryQuant {
+    fn name(&self) -> String {
+        if self.scaled { "binary_scaled".into() } else { "binary".into() }
+    }
+
+    fn compress(&self, view: &ViewData, _ctx: &CContext) -> Theta {
+        let w = view.as_flat();
+        // Optimal scale for min Σ(wᵢ − c·sign(wᵢ))² is c = mean|w| ([4]).
+        let scale = if self.scaled {
+            (w.iter().map(|&x| x.abs() as f64).sum::<f64>() / w.len().max(1) as f64) as f32
+        } else {
+            1.0
+        };
+        let values = w.iter().map(|&x| if x >= 0.0 { 1i8 } else { -1i8 }).collect();
+        Theta::Signs { scale, values, ternary: false }
+    }
+}
+
+/// Scaled ternarization into {−c, 0, c} ([4]): the optimal support is the
+/// top-m magnitudes where m maximizes (Σ_top-m |w|)²/m, and c is the mean
+/// of the selected magnitudes.
+#[derive(Clone, Copy, Debug)]
+pub struct TernaryQuant;
+
+impl Compression for TernaryQuant {
+    fn name(&self) -> String {
+        "ternary_scaled".into()
+    }
+
+    fn compress(&self, view: &ViewData, _ctx: &CContext) -> Theta {
+        let w = view.as_flat();
+        if w.is_empty() {
+            return Theta::Signs { scale: 0.0, values: Vec::new(), ternary: true };
+        }
+        let mut order: Vec<usize> = (0..w.len()).collect();
+        order.sort_by(|&a, &b| w[b].abs().partial_cmp(&w[a].abs()).unwrap());
+        // maximize gain(m) = (prefix_m)^2 / m  <=>  minimize distortion
+        let mut best_m = 1usize;
+        let mut best_gain = f64::NEG_INFINITY;
+        let mut prefix = 0.0f64;
+        for (m, &i) in order.iter().enumerate() {
+            prefix += w[i].abs() as f64;
+            let gain = prefix * prefix / (m + 1) as f64;
+            if gain > best_gain {
+                best_gain = gain;
+                best_m = m + 1;
+            }
+        }
+        let selected: f64 = order[..best_m].iter().map(|&i| w[i].abs() as f64).sum();
+        let scale = (selected / best_m as f64) as f32;
+        let mut values = vec![0i8; w.len()];
+        for &i in &order[..best_m] {
+            values[i] = if w[i] >= 0.0 { 1 } else { -1 };
+        }
+        Theta::Signs { scale, values, ternary: true }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::distortion;
+
+    fn dist_of(w: &[f32], cb: &[f32], asg: &[u32]) -> f64 {
+        w.iter()
+            .zip(asg.iter())
+            .map(|(&x, &a)| {
+                let d = (x - cb[a as usize]) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    #[test]
+    fn kmeans_two_clear_clusters() {
+        let w = vec![-1.1, -0.9, -1.0, 0.9, 1.0, 1.1];
+        let (cb, asg) = kmeans_scalar(&w, 2, 1, 100);
+        assert!((cb[0] + 1.0).abs() < 1e-5, "cb={cb:?}");
+        assert!((cb[1] - 1.0).abs() < 1e-5);
+        assert_eq!(&asg[..3], &[0, 0, 0]);
+        assert_eq!(&asg[3..], &[1, 1, 1]);
+    }
+
+    #[test]
+    fn dp_matches_brute_force_small() {
+        // brute-force all partitions of a sorted 7-point set into 3 intervals
+        let w = vec![0.1f32, 0.2, 0.25, 1.0, 1.1, 3.0, 3.2];
+        let (cb, asg) = optimal_quant_dp(&w, 3);
+        let got = dist_of(&w, &cb, &asg);
+        // brute force
+        let mut best = f64::INFINITY;
+        let n = w.len();
+        for b1 in 1..n {
+            for b2 in (b1 + 1)..n {
+                let seg = |lo: usize, hi: usize| {
+                    let s: f64 = w[lo..hi].iter().map(|&x| x as f64).sum();
+                    let m = s / (hi - lo) as f64;
+                    w[lo..hi].iter().map(|&x| (x as f64 - m) * (x as f64 - m)).sum::<f64>()
+                };
+                best = best.min(seg(0, b1) + seg(b1, b2) + seg(b2, n));
+            }
+        }
+        assert!((got - best).abs() < 1e-9, "dp={got} brute={best}");
+    }
+
+    #[test]
+    fn dp_never_worse_than_lloyd() {
+        let mut rng = Xoshiro256::new(3);
+        let w: Vec<f32> = (0..500).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for k in [2usize, 4, 8] {
+            let (cb_l, asg_l) = kmeans_scalar(&w, k, 5, 100);
+            let (cb_d, asg_d) = optimal_quant_dp(&w, k);
+            let dl = dist_of(&w, &cb_l, &asg_l);
+            let dd = dist_of(&w, &cb_d, &asg_d);
+            assert!(dd <= dl + 1e-6, "k={k}: dp={dd} lloyd={dl}");
+        }
+    }
+
+    #[test]
+    fn dp_k_exceeds_distinct_values() {
+        let w = vec![1.0f32, 1.0, 2.0];
+        let (cb, asg) = optimal_quant_dp(&w, 5);
+        assert_eq!(cb.len(), 3); // clamped to n
+        let d = dist_of(&w, &cb, &asg);
+        assert!(d < 1e-12);
+    }
+
+    #[test]
+    fn adaptive_quant_compression_trait() {
+        let view = ViewData::Vector(vec![-2.0, -1.9, 2.0, 2.1]);
+        let t = AdaptiveQuant::new(2).compress(&view, &CContext::default());
+        assert!(distortion(&view, &t) < 0.02);
+        if let Theta::Quantized { codebook, .. } = &t {
+            assert_eq!(codebook.len(), 2);
+        } else {
+            panic!("wrong theta kind");
+        }
+    }
+
+    #[test]
+    fn binary_scaled_optimal_scale() {
+        let view = ViewData::Vector(vec![0.5, -1.5, 1.0, -1.0]);
+        let t = BinaryQuant { scaled: true }.compress(&view, &CContext::default());
+        if let Theta::Signs { scale, values, .. } = &t {
+            assert!((scale - 1.0).abs() < 1e-6); // mean|w| = 1.0
+            assert_eq!(values, &vec![1, -1, 1, -1]);
+        } else {
+            panic!();
+        }
+        // scaled binary must beat fixed binary in distortion here
+        let t_fixed = BinaryQuant { scaled: false }.compress(&view, &CContext::default());
+        assert!(distortion(&view, &t) <= distortion(&view, &t_fixed));
+    }
+
+    #[test]
+    fn ternary_zeroes_small_weights() {
+        let view = ViewData::Vector(vec![2.0, -2.0, 0.01, -0.02, 2.1]);
+        let t = TernaryQuant.compress(&view, &CContext::default());
+        if let Theta::Signs { scale, values, ternary } = &t {
+            assert!(*ternary);
+            assert!(*scale > 1.5);
+            assert_eq!(values[2], 0);
+            assert_eq!(values[3], 0);
+            assert_eq!(values[0], 1);
+            assert_eq!(values[1], -1);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn ternary_optimal_vs_exhaustive_support() {
+        let mut rng = Xoshiro256::new(17);
+        let w: Vec<f32> = (0..40).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let view = ViewData::Vector(w.clone());
+        let t = TernaryQuant.compress(&view, &CContext::default());
+        let got = distortion(&view, &t);
+        // exhaustive over support size with optimal scale per size
+        let mut mags: Vec<f64> = w.iter().map(|&x| x.abs() as f64).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let total: f64 = mags.iter().map(|m| m * m).sum();
+        let mut best = total; // m = 0
+        let mut prefix = 0.0;
+        for (m, &v) in mags.iter().enumerate() {
+            prefix += v;
+            best = best.min(total - prefix * prefix / (m + 1) as f64);
+        }
+        assert!((got - best).abs() < 1e-6, "got={got} best={best}");
+    }
+
+    #[test]
+    fn kmeans_handles_constant_input() {
+        let w = vec![0.5f32; 64];
+        let (cb, asg) = kmeans_scalar(&w, 4, 2, 50);
+        let d = dist_of(&w, &cb, &asg);
+        assert!(d < 1e-12);
+    }
+
+    #[test]
+    fn kmeans_deterministic_in_seed() {
+        let mut rng = Xoshiro256::new(8);
+        let w: Vec<f32> = (0..200).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let a = kmeans_scalar(&w, 4, 9, 100);
+        let b = kmeans_scalar(&w, 4, 9, 100);
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+    }
+}

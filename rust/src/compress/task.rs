@@ -1,0 +1,268 @@
+//! Compression tasks: the paper's `(parameters) → (view, compression)`
+//! mapping structure (§5).
+//!
+//! A task gathers a subset of the model's weight matrices into a view,
+//! compresses it, and scatters the decompressed result back into per-layer
+//! Δ buffers.  Tasks are independent (their C steps run in parallel in the
+//! coordinator) and must not overlap; layers not covered by any task train
+//! unregularized (their μ_l is 0 in the L step).
+
+use super::view::{View, ViewData};
+use super::{CContext, Compression, Theta};
+use crate::tensor::Matrix;
+
+/// One compression task.
+pub struct TaskSpec {
+    pub name: String,
+    /// Indices of the weight matrices this task covers (layer ids, 0-based).
+    pub layers: Vec<usize>,
+    pub view: View,
+    pub compression: Box<dyn Compression>,
+}
+
+impl TaskSpec {
+    /// Gather the covered layers' weights into the task's view.
+    pub fn gather(&self, weights: &[Matrix]) -> ViewData {
+        match self.view {
+            View::Vector => {
+                let mut flat = Vec::new();
+                for &l in &self.layers {
+                    flat.extend_from_slice(&weights[l].data);
+                }
+                ViewData::Vector(flat)
+            }
+            View::Matrix => {
+                assert_eq!(
+                    self.layers.len(),
+                    1,
+                    "matrix view requires exactly one layer (task {})",
+                    self.name
+                );
+                ViewData::Matrix(weights[self.layers[0]].clone())
+            }
+        }
+    }
+
+    /// Scatter a decompressed flat buffer back into the per-layer deltas.
+    pub fn scatter(&self, flat: &[f32], deltas: &mut [Matrix]) {
+        match self.view {
+            View::Vector => {
+                let mut off = 0usize;
+                for &l in &self.layers {
+                    let n = deltas[l].data.len();
+                    deltas[l].data.copy_from_slice(&flat[off..off + n]);
+                    off += n;
+                }
+                assert_eq!(off, flat.len(), "scatter length mismatch (task {})", self.name);
+            }
+            View::Matrix => {
+                let l = self.layers[0];
+                assert_eq!(flat.len(), deltas[l].data.len());
+                deltas[l].data.copy_from_slice(flat);
+            }
+        }
+    }
+
+    /// Run the C step for this task.
+    pub fn c_step(&self, weights: &[Matrix], ctx: &CContext) -> (Theta, ViewData) {
+        let view = self.gather(weights);
+        let theta = self.compression.compress(&view, ctx);
+        (theta, view)
+    }
+
+    /// Total number of scalar weights covered.
+    pub fn covered_weights(&self, weights: &[Matrix]) -> usize {
+        self.layers.iter().map(|&l| weights[l].data.len()).sum()
+    }
+}
+
+/// The full set of tasks for one model.
+pub struct TaskSet {
+    pub tasks: Vec<TaskSpec>,
+}
+
+impl TaskSet {
+    pub fn new(tasks: Vec<TaskSpec>) -> Self {
+        Self { tasks }
+    }
+
+    /// Validate against a model with `n_layers` weight matrices:
+    /// * layer ids in range,
+    /// * no layer covered twice,
+    /// * matrix-view tasks cover exactly one layer,
+    /// * matrix-requiring compressions (low-rank family) use matrix views.
+    pub fn validate(&self, n_layers: usize) -> Result<(), String> {
+        let mut covered = vec![false; n_layers];
+        for t in &self.tasks {
+            if t.layers.is_empty() {
+                return Err(format!("task {}: no layers", t.name));
+            }
+            for &l in &t.layers {
+                if l >= n_layers {
+                    return Err(format!(
+                        "task {}: layer {l} out of range (model has {n_layers})",
+                        t.name
+                    ));
+                }
+                if covered[l] {
+                    return Err(format!("task {}: layer {l} covered twice", t.name));
+                }
+                covered[l] = true;
+            }
+            if t.view == View::Matrix && t.layers.len() != 1 {
+                return Err(format!(
+                    "task {}: matrix view requires exactly one layer, got {}",
+                    t.name,
+                    t.layers.len()
+                ));
+            }
+            if t.compression.needs_matrix() && t.view != View::Matrix {
+                return Err(format!(
+                    "task {}: compression {} requires a matrix (as_is) view",
+                    t.name,
+                    t.compression.name()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Which layers have some compression task (for building the μ vector).
+    pub fn covered_layers(&self, n_layers: usize) -> Vec<bool> {
+        let mut covered = vec![false; n_layers];
+        for t in &self.tasks {
+            for &l in &t.layers {
+                covered[l] = true;
+            }
+        }
+        covered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::lowrank::LowRank;
+    use crate::compress::prune::ConstraintL0;
+    use crate::compress::quantize::AdaptiveQuant;
+
+    fn weights() -> Vec<Matrix> {
+        vec![
+            Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]),
+            Matrix::from_vec(1, 3, vec![5.0, 6.0, 7.0]),
+            Matrix::from_vec(2, 1, vec![8.0, 9.0]),
+        ]
+    }
+
+    #[test]
+    fn gather_vector_concatenates() {
+        let t = TaskSpec {
+            name: "t".into(),
+            layers: vec![0, 2],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(2)),
+        };
+        let v = t.gather(&weights());
+        assert_eq!(v.as_flat(), &[1.0, 2.0, 3.0, 4.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn scatter_roundtrip() {
+        let w = weights();
+        let t = TaskSpec {
+            name: "t".into(),
+            layers: vec![0, 2],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(2)),
+        };
+        let v = t.gather(&w);
+        let mut deltas = vec![Matrix::zeros(2, 2), Matrix::zeros(1, 3), Matrix::zeros(2, 1)];
+        t.scatter(v.as_flat(), &mut deltas);
+        assert_eq!(deltas[0], w[0]);
+        assert_eq!(deltas[2], w[2]);
+        assert_eq!(deltas[1].data, vec![0.0, 0.0, 0.0]); // untouched
+    }
+
+    #[test]
+    fn matrix_view_single_layer() {
+        let t = TaskSpec {
+            name: "lr".into(),
+            layers: vec![1],
+            view: View::Matrix,
+            compression: Box::new(LowRank { target_rank: 1 }),
+        };
+        let v = t.gather(&weights());
+        assert_eq!(v.as_matrix().rows, 1);
+    }
+
+    #[test]
+    fn validate_catches_overlap() {
+        let ts = TaskSet::new(vec![
+            TaskSpec {
+                name: "a".into(),
+                layers: vec![0, 1],
+                view: View::Vector,
+                compression: Box::new(AdaptiveQuant::new(2)),
+            },
+            TaskSpec {
+                name: "b".into(),
+                layers: vec![1],
+                view: View::Vector,
+                compression: Box::new(ConstraintL0 { kappa: 1 }),
+            },
+        ]);
+        assert!(ts.validate(3).unwrap_err().contains("covered twice"));
+    }
+
+    #[test]
+    fn validate_catches_out_of_range_and_matrix_misuse() {
+        let ts = TaskSet::new(vec![TaskSpec {
+            name: "a".into(),
+            layers: vec![5],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(2)),
+        }]);
+        assert!(ts.validate(3).unwrap_err().contains("out of range"));
+
+        let ts2 = TaskSet::new(vec![TaskSpec {
+            name: "lr".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(LowRank { target_rank: 2 }),
+        }]);
+        assert!(ts2.validate(3).unwrap_err().contains("matrix"));
+
+        let ts3 = TaskSet::new(vec![TaskSpec {
+            name: "m2".into(),
+            layers: vec![0, 1],
+            view: View::Matrix,
+            compression: Box::new(LowRank { target_rank: 2 }),
+        }]);
+        assert!(ts3.validate(3).is_err());
+    }
+
+    #[test]
+    fn covered_layers_mask() {
+        let ts = TaskSet::new(vec![TaskSpec {
+            name: "a".into(),
+            layers: vec![0, 2],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(2)),
+        }]);
+        assert_eq!(ts.covered_layers(3), vec![true, false, true]);
+    }
+
+    #[test]
+    fn c_step_produces_feasible_theta() {
+        let w = weights();
+        let t = TaskSpec {
+            name: "q".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(4)),
+        };
+        let (theta, view) = t.c_step(&w, &CContext::default());
+        // 4 distinct values, k=4 -> exact
+        assert!(crate::compress::distortion(&view, &theta) < 1e-10);
+    }
+}

@@ -1,0 +1,95 @@
+//! Compression views: how a task's parameters are reshaped for compression.
+//!
+//! The paper's `AsVector` / `AsIs` structures: a *view* disentangles the
+//! compression from the model structure.  A task may gather several layers'
+//! weight matrices into one flat vector (joint quantization/pruning), or
+//! keep a single layer as a matrix (low-rank).
+
+use crate::tensor::Matrix;
+
+/// How to present the gathered parameters to the compression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum View {
+    /// Concatenate everything into one flat vector (`AsVector`).
+    Vector,
+    /// Keep a single weight matrix as-is (`AsIs`); required by low-rank.
+    Matrix,
+}
+
+impl View {
+    pub fn parse(s: &str) -> Result<View, String> {
+        match s {
+            "vector" | "as_vector" => Ok(View::Vector),
+            "matrix" | "as_is" => Ok(View::Matrix),
+            other => Err(format!("unknown view {other:?} (expected vector|matrix)")),
+        }
+    }
+}
+
+/// The materialized data of a view.
+#[derive(Clone, Debug)]
+pub enum ViewData {
+    Vector(Vec<f32>),
+    Matrix(Matrix),
+}
+
+impl ViewData {
+    /// Flat slice of the underlying data (row-major for matrices).
+    pub fn as_flat(&self) -> &[f32] {
+        match self {
+            ViewData::Vector(v) => v,
+            ViewData::Matrix(m) => &m.data,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_flat().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Matrix access; panics if the view is a vector (task validation
+    /// guarantees low-rank only ever sees matrices).
+    pub fn as_matrix(&self) -> &Matrix {
+        match self {
+            ViewData::Matrix(m) => m,
+            ViewData::Vector(_) => panic!("compression requires a matrix view"),
+        }
+    }
+
+    pub fn kind(&self) -> View {
+        match self {
+            ViewData::Vector(_) => View::Vector,
+            ViewData::Matrix(_) => View::Matrix,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_views() {
+        assert_eq!(View::parse("vector").unwrap(), View::Vector);
+        assert_eq!(View::parse("as_is").unwrap(), View::Matrix);
+        assert!(View::parse("banana").is_err());
+    }
+
+    #[test]
+    fn flat_access() {
+        let v = ViewData::Vector(vec![1.0, 2.0]);
+        assert_eq!(v.as_flat(), &[1.0, 2.0]);
+        let m = ViewData::Matrix(Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(m.as_flat().len(), 4);
+        assert_eq!(m.kind(), View::Matrix);
+    }
+
+    #[test]
+    #[should_panic(expected = "matrix view")]
+    fn vector_as_matrix_panics() {
+        ViewData::Vector(vec![1.0]).as_matrix();
+    }
+}

@@ -1,0 +1,147 @@
+//! Datasets for the experiment suite.
+//!
+//! MNIST is not downloadable in this offline environment, so the suite runs
+//! on **SynthDigits** (`synth.rs`): a procedural 28x28 10-class glyph
+//! generator with per-sample geometric jitter and pixel noise, calibrated
+//! so the LeNet300-style reference nets reach a few-percent test error —
+//! the same regime as LeNet300/MNIST in the paper.  See DESIGN.md
+//! "Substitutions".
+
+pub mod synth;
+
+/// An in-memory classification dataset of flat f32 images.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `n * dim` row-major image buffer, values in [0, 1].
+    pub images: Vec<f32>,
+    /// `n` class labels in `[0, classes)`.
+    pub labels: Vec<i32>,
+    pub dim: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Copy examples at `idx` into contiguous (x, y) batch buffers.
+    pub fn gather(&self, idx: &[usize], x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        x.clear();
+        y.clear();
+        x.reserve(idx.len() * self.dim);
+        y.reserve(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.image(i));
+            y.push(self.labels[i]);
+        }
+    }
+
+    /// Split into (first `n_train`, rest).
+    pub fn split(mut self, n_train: usize) -> (Dataset, Dataset) {
+        assert!(n_train <= self.len());
+        let test_images = self.images.split_off(n_train * self.dim);
+        let test_labels = self.labels.split_off(n_train);
+        let test = Dataset {
+            images: test_images,
+            labels: test_labels,
+            dim: self.dim,
+            classes: self.classes,
+        };
+        (self, test)
+    }
+}
+
+/// Epoch iterator yielding shuffled fixed-size batches (drops the ragged
+/// tail, as the AOT train artifact is shape-static).
+pub struct BatchIter<'a> {
+    data: &'a Dataset,
+    order: Vec<usize>,
+    pos: usize,
+    batch: usize,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(data: &'a Dataset, batch: usize, rng: &mut crate::util::rng::Xoshiro256) -> Self {
+        let mut order: Vec<usize> = (0..data.len()).collect();
+        rng.shuffle(&mut order);
+        Self { data, order, pos: 0, batch }
+    }
+
+    /// Number of full batches in one epoch.
+    pub fn batches_per_epoch(n: usize, batch: usize) -> usize {
+        n / batch
+    }
+
+    /// Fill `x`/`y` with the next batch; returns false at epoch end.
+    pub fn next_into(&mut self, x: &mut Vec<f32>, y: &mut Vec<i32>) -> bool {
+        if self.pos + self.batch > self.order.len() {
+            return false;
+        }
+        let idx = &self.order[self.pos..self.pos + self.batch];
+        self.data.gather(idx, x, y);
+        self.pos += self.batch;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            images: (0..20).map(|i| i as f32).collect(),
+            labels: (0..10).map(|i| (i % 3) as i32).collect(),
+            dim: 2,
+            classes: 3,
+        }
+    }
+
+    #[test]
+    fn gather_copies_rows() {
+        let d = tiny();
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        d.gather(&[3, 0], &mut x, &mut y);
+        assert_eq!(x, vec![6.0, 7.0, 0.0, 1.0]);
+        assert_eq!(y, vec![0, 0]);
+    }
+
+    #[test]
+    fn split_sizes() {
+        let (tr, te) = tiny().split(7);
+        assert_eq!(tr.len(), 7);
+        assert_eq!(te.len(), 3);
+        assert_eq!(te.image(0)[0], 14.0);
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch_without_repeats() {
+        let d = tiny();
+        let mut rng = Xoshiro256::new(1);
+        let mut it = BatchIter::new(&d, 3, &mut rng);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        let mut seen = Vec::new();
+        while it.next_into(&mut x, &mut y) {
+            assert_eq!(y.len(), 3);
+            for pair in x.chunks(2) {
+                seen.push(pair[0] as usize / 2);
+            }
+        }
+        assert_eq!(seen.len(), 9); // 10 / 3 * 3, ragged tail dropped
+        let mut s = seen.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 9); // no repeats within epoch
+    }
+}

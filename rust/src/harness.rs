@@ -1,0 +1,248 @@
+//! Experiment harness shared by `examples/` and `rust/benches/`: dataset +
+//! runtime setup, reference-model caching, and one-call LC experiment runs.
+//!
+//! Every paper table/figure driver (examples/table2_showcase.rs,
+//! examples/fig3_*.rs, examples/fig4_*.rs) is a thin loop over
+//! [`run_lc_experiment`] with different task sets, so experiments stay
+//! reproducible and comparable: same data seeds, same reference model per
+//! (model, seed, epochs) triple, cached on disk.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::baselines::{compress_retrain, direct_compression, BaselineOutcome};
+use crate::compress::task::TaskSet;
+use crate::data::{synth, Dataset};
+use crate::lc::schedule::LrSchedule;
+use crate::lc::{LcAlgorithm, LcConfig, LcOutcome};
+use crate::models::{checkpoint, ModelSpec, ParamState};
+use crate::runtime::trainer::{EvalDriver, EvalResult, TrainDriver};
+use crate::runtime::Runtime;
+
+/// Standard experiment-scale parameters (scaled down from the paper's
+/// 40x20-epoch showcase to laptop scale; see EXPERIMENTS.md for the
+/// mapping).  Override fields freely.
+#[derive(Clone, Debug)]
+pub struct Scale {
+    pub n_train: usize,
+    pub n_test: usize,
+    pub data_seed: u64,
+    pub model_seed: u64,
+    pub reference_epochs: usize,
+    pub reference_lr0: f64,
+    pub threads: usize,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Self {
+            n_train: 8192,
+            n_test: 2048,
+            data_seed: 1,
+            model_seed: 42,
+            reference_epochs: 20,
+            reference_lr0: 0.1,
+            threads: 4,
+        }
+    }
+}
+
+impl Scale {
+    /// Fast scale for tests / smoke runs.
+    pub fn tiny() -> Self {
+        Self { n_train: 1024, n_test: 512, reference_epochs: 3, ..Default::default() }
+    }
+}
+
+/// One materialized experiment environment.
+pub struct Env {
+    pub rt: Runtime,
+    pub train_data: Dataset,
+    pub test_data: Dataset,
+    pub scale: Scale,
+}
+
+impl Env {
+    pub fn new(scale: Scale) -> Result<Env> {
+        let dir = artifact_dir();
+        let rt = Runtime::new(&dir)?;
+        let (train_data, test_data) =
+            synth::train_test(scale.n_train, scale.n_test, scale.data_seed, scale.threads);
+        Ok(Env { rt, train_data, test_data, scale })
+    }
+
+    /// Train (or load from cache) the reference model for `spec`.
+    pub fn reference(&mut self, spec: &ModelSpec) -> Result<ParamState> {
+        let cache = cache_path(spec, &self.scale);
+        if cache.exists() {
+            if let Ok(state) = checkpoint::load(&cache) {
+                crate::info!("loaded cached reference {}", cache.display());
+                return Ok(state);
+            }
+        }
+        let alg = LcAlgorithm::new(
+            &mut self.rt,
+            spec.clone(),
+            TaskSet::new(vec![]),
+            LcConfig { threads: self.scale.threads, ..Default::default() },
+        )?;
+        let mut state = ParamState::init(spec, self.scale.model_seed);
+        crate::info!(
+            "training reference {} for {} epochs",
+            spec.name,
+            self.scale.reference_epochs
+        );
+        alg.train_reference(
+            &mut state,
+            &self.train_data,
+            self.scale.reference_epochs,
+            &LrSchedule { lr0: self.scale.reference_lr0, decay: 0.98 },
+        )?;
+        if let Some(parent) = cache.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let _ = checkpoint::save(&state, &cache);
+        Ok(state)
+    }
+
+    pub fn evaluate(&mut self, state: &ParamState, test: bool) -> Result<EvalResult> {
+        let eval = EvalDriver::new(&mut self.rt, &state.spec.name)?;
+        eval.eval(state, if test { &self.test_data } else { &self.train_data })
+    }
+
+    /// Run a full LC experiment from a reference state.
+    pub fn run_lc(
+        &mut self,
+        spec: &ModelSpec,
+        tasks: TaskSet,
+        cfg: LcConfig,
+        reference: ParamState,
+    ) -> Result<LcOutcome> {
+        let alg = LcAlgorithm::new(&mut self.rt, spec.clone(), tasks, cfg)?;
+        alg.run(reference, &self.train_data, &self.test_data)
+    }
+
+    /// Run the direct-compression baseline.
+    pub fn run_dc(
+        &mut self,
+        spec: &ModelSpec,
+        tasks: &TaskSet,
+        reference: &ParamState,
+        mu_for_c: f64,
+    ) -> Result<BaselineOutcome> {
+        let eval = EvalDriver::new(&mut self.rt, &spec.name)?;
+        direct_compression(spec, tasks, reference, &eval, &self.train_data, &self.test_data, mu_for_c)
+    }
+
+    /// Run the compress→retrain baseline.
+    pub fn run_retrain(
+        &mut self,
+        spec: &ModelSpec,
+        tasks: &TaskSet,
+        reference: ParamState,
+        epochs: usize,
+        lr0: f64,
+        mu_for_c: f64,
+    ) -> Result<BaselineOutcome> {
+        let train = TrainDriver::new(&mut self.rt, &spec.name)?;
+        let eval = EvalDriver::new(&mut self.rt, &spec.name)?;
+        compress_retrain(
+            spec,
+            tasks,
+            reference,
+            &train,
+            &eval,
+            &self.train_data,
+            &self.test_data,
+            epochs,
+            &LrSchedule { lr0, decay: 0.98 },
+            self.scale.model_seed ^ 0xD15C,
+            mu_for_c,
+        )
+    }
+}
+
+/// The paper-showcase LC config, scaled down and **recalibrated**: the
+/// paper's mu0 = 9e-5 (x1.1^i over 40x20-epoch steps) is tuned to the
+/// MNIST cross-entropy loss scale; on SynthDigits the same exponential
+/// form needs a larger endpoint to reach feasibility within 20x2-epoch
+/// steps.  Calibration sweep (EXPERIMENTS.md §Calibration): final mu of
+/// O(1..10) drives ||w − Δ(Θ)|| to ~1e-2 while keeping every L step's
+/// loss decreasing (§7 monitor clean).
+pub fn scaled_quant_config(threads: usize) -> LcConfig {
+    LcConfig {
+        mu: crate::lc::MuSchedule { mu0: 1e-2, growth: 1.4, steps: 20 },
+        lr: LrSchedule { lr0: 0.09, decay: 0.96 },
+        epochs_per_step: 2,
+        first_step_epochs: Some(4),
+        use_al: true,
+        seed: 42,
+        threads,
+        eval_every: 0,
+        quiet: true,
+    }
+}
+
+/// Scaled low-rank config (paper grows mu faster when low-rank is
+/// involved: 1.4 vs 1.1 per step; we keep that ratio with 1.6 vs 1.4).
+pub fn scaled_lowrank_config(threads: usize) -> LcConfig {
+    LcConfig {
+        mu: crate::lc::MuSchedule { mu0: 1e-2, growth: 1.6, steps: 20 },
+        lr: LrSchedule { lr0: 0.05, decay: 0.96 },
+        epochs_per_step: 2,
+        first_step_epochs: Some(4),
+        use_al: true,
+        seed: 42,
+        threads,
+        eval_every: 0,
+        quiet: true,
+    }
+}
+
+/// Artifacts directory: $LCC_ARTIFACTS or ./artifacts relative to the
+/// crate root (examples run from the workspace root).
+pub fn artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("LCC_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.join("manifest.txt").exists() {
+        return cwd;
+    }
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn cache_path(spec: &ModelSpec, scale: &Scale) -> PathBuf {
+    let dir = std::env::temp_dir().join("lcc_ref_cache");
+    dir.join(format!(
+        "{}_n{}_s{}_e{}_m{}.lcck",
+        spec.name, scale.n_train, scale.data_seed, scale.reference_epochs, scale.model_seed
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_defaults() {
+        let s = Scale::default();
+        assert_eq!(s.n_train, 8192);
+        let t = Scale::tiny();
+        assert!(t.n_train < s.n_train);
+    }
+
+    #[test]
+    fn scaled_config_reaches_feasibility_scale_mu() {
+        // recalibrated for SynthDigits (see doc comment): the schedule
+        // must end with mu large enough to enforce feasibility (O(1..100))
+        // while starting small enough to let early L steps train freely.
+        let c = scaled_quant_config(2);
+        let final_mu = c.mu.mu_at(c.mu.steps - 1);
+        assert!(c.mu.mu0 <= 1e-1, "mu0 too large: {}", c.mu.mu0);
+        assert!((1.0..1e3).contains(&final_mu), "final mu {final_mu:.3e}");
+        let l = scaled_lowrank_config(2);
+        assert!(l.mu.growth > c.mu.growth, "low-rank schedule must grow faster");
+    }
+}

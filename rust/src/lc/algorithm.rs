@@ -1,0 +1,401 @@
+//! The `LCAlgorithm` class (paper Fig. 2), Rust edition.
+//!
+//! ```text
+//! w ← pretrained weights
+//! Θ ← Π(w)                                  direct-compression init
+//! λ ← 0
+//! for μ = μ0 < μ1 < ... :
+//!     w ← argmin_w L(w) + μ/2‖w − Δ(Θ) − λ/μ‖²      L step  (PJRT)
+//!     Θ ← argmin_Θ ‖w − λ/μ − Δ(Θ)‖²                C step  (rust, parallel per task)
+//!     λ ← λ − μ(w − Δ(Θ))                           multipliers (AL mode)
+//! return w, Θ
+//! ```
+//!
+//! The quadratic-penalty variant is AL with λ pinned at 0 (`use_al: false`).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::monitor::Monitor;
+use super::schedule::{LrSchedule, MuSchedule};
+use crate::compress::task::TaskSet;
+use crate::compress::{distortion, CContext, Theta, ViewData};
+use crate::data::{BatchIter, Dataset};
+use crate::metrics::{account, Compressed};
+use crate::models::{ModelSpec, ParamState};
+use crate::runtime::trainer::{EvalDriver, EvalResult, TrainDriver};
+use crate::tensor::Matrix;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::parallel_map;
+
+/// Configuration of one LC run.
+#[derive(Clone, Debug)]
+pub struct LcConfig {
+    pub mu: MuSchedule,
+    pub lr: LrSchedule,
+    /// SGD epochs per L step (the paper's showcase uses 20).
+    pub epochs_per_step: usize,
+    /// §7 practical advice: optionally train the *first* L step longer.
+    pub first_step_epochs: Option<usize>,
+    /// Augmented Lagrangian (true, the library default) vs quadratic penalty.
+    pub use_al: bool,
+    pub seed: u64,
+    /// Threads for parallel per-task C steps.
+    pub threads: usize,
+    /// Evaluate train/test error every k LC steps (0 = only at the end).
+    pub eval_every: usize,
+    pub quiet: bool,
+}
+
+impl Default for LcConfig {
+    fn default() -> Self {
+        Self {
+            mu: MuSchedule::paper_quant(20),
+            lr: LrSchedule { lr0: 0.09, decay: 0.98 },
+            epochs_per_step: 3,
+            first_step_epochs: None,
+            use_al: true,
+            seed: 42,
+            threads: 4,
+            eval_every: 0,
+            quiet: false,
+        }
+    }
+}
+
+/// Telemetry of one LC step.
+#[derive(Clone, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub mu: f64,
+    pub lr: f32,
+    /// Mean penalized loss over the first epoch of the L step.
+    pub l_loss_start: f64,
+    /// Mean penalized loss over the last epoch of the L step.
+    pub l_loss_end: f64,
+    /// Feasibility ‖w − Δ(Θ)‖² summed over covered layers, after the C step.
+    pub feasibility: f64,
+    /// Per-task distortions after the C step.
+    pub task_distortions: Vec<f64>,
+    pub test_eval: Option<EvalResult>,
+}
+
+/// Result of a completed LC run.
+pub struct LcOutcome {
+    pub records: Vec<StepRecord>,
+    pub thetas: Vec<Theta>,
+    pub monitor: Monitor,
+    /// Final *compressed* model evals.
+    pub final_train: EvalResult,
+    pub final_test: EvalResult,
+    pub metrics: Compressed,
+    pub wall_secs: f64,
+    /// The final compressed model state (weights = Δ(Θ)).
+    pub compressed_state: ParamState,
+}
+
+/// The LC coordinator.
+pub struct LcAlgorithm {
+    pub spec: ModelSpec,
+    pub tasks: TaskSet,
+    pub cfg: LcConfig,
+    train: TrainDriver,
+    eval: EvalDriver,
+}
+
+impl LcAlgorithm {
+    pub fn new(
+        rt: &mut crate::runtime::Runtime,
+        spec: ModelSpec,
+        tasks: TaskSet,
+        cfg: LcConfig,
+    ) -> Result<Self> {
+        tasks.validate(spec.n_layers()).map_err(anyhow::Error::msg)?;
+        let train = TrainDriver::new(rt, &spec.name)?;
+        let eval = EvalDriver::new(rt, &spec.name)?;
+        anyhow::ensure!(train.widths == spec.widths, "artifact/spec width mismatch");
+        Ok(Self { spec, tasks, cfg, train, eval })
+    }
+
+    /// Train the reference (uncompressed) model for `epochs`; returns the
+    /// trained state.  This is ordinary SGD: all μ_l = 0.
+    pub fn train_reference(
+        &self,
+        state: &mut ParamState,
+        data: &Dataset,
+        epochs: usize,
+        lr: &LrSchedule,
+    ) -> Result<()> {
+        let nl = self.spec.n_layers();
+        let zeros: Vec<Matrix> = (0..nl)
+            .map(|l| {
+                let (m, n) = self.spec.layer_shape(l);
+                Matrix::zeros(m, n)
+            })
+            .collect();
+        let mu = vec![0.0f32; nl];
+        let mut rng = Xoshiro256::new(self.cfg.seed ^ 0xBEEF);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        for e in 0..epochs {
+            let mut it = BatchIter::new(data, self.train.batch, &mut rng);
+            let lr_e = lr.lr_at(e);
+            while it.next_into(&mut x, &mut y) {
+                self.train.step(state, &x, &y, &zeros, &zeros, &mu, lr_e)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate a state on a dataset.
+    pub fn evaluate(&self, state: &ParamState, data: &Dataset) -> Result<EvalResult> {
+        self.eval.eval(state, data)
+    }
+
+    /// Run the LC loop starting from a (pretrained) state.
+    pub fn run(
+        &self,
+        mut state: ParamState,
+        train_data: &Dataset,
+        test_data: &Dataset,
+    ) -> Result<LcOutcome> {
+        let t0 = Instant::now();
+        let nl = self.spec.n_layers();
+        let covered = self.tasks.covered_layers(nl);
+        let mu_floor = self.cfg.mu.mu0.max(1e-12);
+
+        // Δ(Θ) and λ buffers, per weight matrix
+        let mut deltas: Vec<Matrix> = (0..nl)
+            .map(|l| {
+                let (m, n) = self.spec.layer_shape(l);
+                Matrix::zeros(m, n)
+            })
+            .collect();
+        let mut lambdas: Vec<Matrix> = deltas.clone();
+        let mut thetas: Vec<Option<Theta>> = self.tasks.tasks.iter().map(|_| None).collect();
+        let mut monitor = Monitor::new(self.cfg.quiet);
+        let mut records = Vec::new();
+
+        // --- direct-compression init: Θ ← Π(w), λ = 0 ---------------------
+        self.c_step(
+            usize::MAX,
+            mu_floor,
+            &state,
+            &lambdas,
+            0.0, // λ not yet active
+            &mut deltas,
+            &mut thetas,
+            &mut monitor,
+        );
+
+        // --- main loop -----------------------------------------------------
+        let mut rng = Xoshiro256::new(self.cfg.seed);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        for (step, mu) in self.cfg.mu.iter() {
+            let lr = self.cfg.lr.lr_at(step);
+            let epochs = if step == 0 {
+                self.cfg.first_step_epochs.unwrap_or(self.cfg.epochs_per_step)
+            } else {
+                self.cfg.epochs_per_step
+            };
+
+            // L step: fresh optimizer per step (paper Listing 2)
+            state.reset_momenta();
+            let mu_vec: Vec<f32> = covered
+                .iter()
+                .map(|&c| if c { mu as f32 } else { 0.0 })
+                .collect();
+            let mut first_epoch_loss = 0.0f64;
+            let mut last_epoch_loss = 0.0f64;
+            for e in 0..epochs.max(1) {
+                let mut it = BatchIter::new(train_data, self.train.batch, &mut rng);
+                let mut sum = 0.0f64;
+                let mut count = 0usize;
+                while it.next_into(&mut x, &mut y) {
+                    let loss =
+                        self.train.step(&mut state, &x, &y, &deltas, &lambdas, &mu_vec, lr)?;
+                    sum += loss as f64;
+                    count += 1;
+                }
+                let mean = sum / count.max(1) as f64;
+                if e == 0 {
+                    first_epoch_loss = mean;
+                }
+                last_epoch_loss = mean;
+            }
+            if epochs > 1 {
+                monitor.check_l_step(step, first_epoch_loss, last_epoch_loss);
+            }
+
+            // C step on w − λ/μ
+            let dists = self.c_step(
+                step,
+                mu.max(mu_floor),
+                &state,
+                &lambdas,
+                if self.cfg.use_al { mu } else { 0.0 },
+                &mut deltas,
+                &mut thetas,
+                &mut monitor,
+            );
+
+            // multipliers step (AL only)
+            if self.cfg.use_al {
+                for l in 0..nl {
+                    if covered[l] {
+                        for i in 0..lambdas[l].data.len() {
+                            lambdas[l].data[i] -=
+                                (mu as f32) * (state.weights[l].data[i] - deltas[l].data[i]);
+                        }
+                    }
+                }
+            }
+
+            // feasibility ‖w − Δ(Θ)‖² over covered layers
+            let feasibility: f64 = (0..nl)
+                .filter(|&l| covered[l])
+                .map(|l| state.weights[l].dist_sq(&deltas[l]))
+                .sum();
+
+            let test_eval = if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
+                let snap = self.compressed_snapshot(&state, &deltas, &covered);
+                Some(self.eval.eval(&snap, test_data)?)
+            } else {
+                None
+            };
+
+            if !self.cfg.quiet {
+                crate::info!(
+                    "LC step {step:3} mu={mu:.3e} lr={lr:.4} L:{first_epoch_loss:.4}->{last_epoch_loss:.4} feas={feasibility:.3e}{}",
+                    match &test_eval {
+                        Some(e) => format!(" test_err={:.2}%", e.error * 100.0),
+                        None => String::new(),
+                    }
+                );
+            }
+
+            records.push(StepRecord {
+                step,
+                mu,
+                lr,
+                l_loss_start: first_epoch_loss,
+                l_loss_end: last_epoch_loss,
+                feasibility,
+                task_distortions: dists,
+                test_eval,
+            });
+        }
+
+        // --- finalize: the compressed model is Δ(Θ) -------------------------
+        let compressed_state = self.compressed_snapshot(&state, &deltas, &covered);
+        let final_train = self.eval.eval(&compressed_state, train_data)?;
+        let final_test = self.eval.eval(&compressed_state, test_data)?;
+        let thetas: Vec<Theta> = thetas.into_iter().map(|t| t.unwrap()).collect();
+        let metrics = account(&self.spec, &self.tasks, &thetas, &deltas);
+
+        Ok(LcOutcome {
+            records,
+            thetas,
+            monitor,
+            final_train,
+            final_test,
+            metrics,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            compressed_state,
+        })
+    }
+
+    /// Build the compressed model: covered layers take Δ(Θ), uncovered
+    /// layers keep the trained weights; biases always keep trained values.
+    fn compressed_snapshot(
+        &self,
+        state: &ParamState,
+        deltas: &[Matrix],
+        covered: &[bool],
+    ) -> ParamState {
+        let mut snap = state.clone();
+        for l in 0..deltas.len() {
+            if covered[l] {
+                snap.weights[l].data.copy_from_slice(&deltas[l].data);
+            }
+        }
+        snap
+    }
+
+    /// Run all tasks' C steps (in parallel) on w_eff = w − λ/μ and scatter
+    /// the decompressed results into `deltas`.  Returns per-task distortions.
+    #[allow(clippy::too_many_arguments)]
+    fn c_step(
+        &self,
+        step: usize,
+        mu_for_c: f64,
+        state: &ParamState,
+        lambdas: &[Matrix],
+        mu_for_lambda: f64, // 0 disables the λ/μ shift (QP mode or init)
+        deltas: &mut [Matrix],
+        thetas: &mut [Option<Theta>],
+        monitor: &mut Monitor,
+    ) -> Vec<f64> {
+        let nl = self.spec.n_layers();
+        // effective weights for the C step
+        let w_eff: Vec<Matrix> = (0..nl)
+            .map(|l| {
+                let mut w = state.weights[l].clone();
+                if mu_for_lambda > 0.0 {
+                    let inv_mu = (1.0 / mu_for_lambda) as f32;
+                    for (wi, &li) in w.data.iter_mut().zip(lambdas[l].data.iter()) {
+                        *wi -= inv_mu * li;
+                    }
+                }
+                w
+            })
+            .collect();
+
+        let ctx = CContext { mu: mu_for_c };
+        let n_tasks = self.tasks.tasks.len();
+        // capture only Sync data (avoid `self`, whose PJRT handles are !Sync)
+        let task_list = &self.tasks.tasks;
+        let w_eff_ref = &w_eff;
+        let results: Vec<(Theta, ViewData, f64)> =
+            parallel_map(n_tasks, self.cfg.threads.max(1), move |ti| {
+                let task = &task_list[ti];
+                let view = task.gather(w_eff_ref);
+                let theta = task.compression.compress(&view, &ctx);
+                let dist = distortion(&view, &theta);
+                (theta, view, dist)
+            });
+
+        let mut dists = Vec::with_capacity(n_tasks);
+        for (ti, (theta, view, dist)) in results.into_iter().enumerate() {
+            // §7 invariant: new projection at least as good as stale Θ
+            if let Some(old) = &thetas[ti] {
+                // Penalty-form schemes (ℓ0/ℓ1 penalty, rank selection)
+                // legitimately trade distortion against the compression cost
+                // as μ changes, so the distortion-only check applies to
+                // constraint-form schemes; we still record it for all.
+                let old_dist = distortion(&view, old);
+                if step != usize::MAX {
+                    monitor.check_c_step(step, &self.tasks.tasks[ti].name, old_dist, dist);
+                }
+            }
+            let flat = theta.decompress();
+            self.tasks.tasks[ti].scatter(&flat, deltas);
+            thetas[ti] = Some(theta);
+            dists.push(dist);
+        }
+        dists
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_paper_like() {
+        let c = LcConfig::default();
+        assert!(c.use_al);
+        assert!((c.mu.mu0 - 9e-5).abs() < 1e-12);
+        assert!((c.lr.decay - 0.98).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,284 @@
+//! Build an LC experiment (model, tasks, schedules) from a config file —
+//! the `lcc compress --config exp.lcc` entry path.
+//!
+//! Config schema (see `examples/configs/*.lcc`):
+//!
+//! ```text
+//! [model]
+//! name = "lenet300"
+//! seed = 42
+//!
+//! [data]
+//! n_train = 8192
+//! n_test = 2048
+//! seed = 1
+//!
+//! [lc]
+//! mu0 = 9e-5
+//! mu_growth = 1.1
+//! l_steps = 40
+//! epochs_per_step = 20
+//! lr0 = 0.09
+//! lr_decay = 0.98
+//! al = true
+//! eval_every = 5
+//!
+//! [task.<name>]                  # one section per compression task
+//! layers = [0, 1, 2]
+//! view = "vector"                # or "as_is"
+//! compression = "adaptive_quant" # see parse_compression for the catalogue
+//! k = 2
+//! # additive combinations: compression = "additive",
+//! #   components = ["prune_l0", "adaptive_quant"], kappa = 2662, k = 2
+//! ```
+
+use crate::compress::additive::AdditiveCombination;
+use crate::compress::lowrank::{LowRank, RankCost, RankSelection};
+use crate::compress::prune::{ConstraintL0, ConstraintL1, PenaltyL0, PenaltyL1};
+use crate::compress::quantize::{AdaptiveQuant, BinaryQuant, TernaryQuant};
+use crate::compress::task::{TaskSet, TaskSpec};
+use crate::compress::view::View;
+use crate::compress::Compression;
+use crate::lc::schedule::{LrSchedule, MuSchedule};
+use crate::lc::LcConfig;
+use crate::models::{lookup, ModelSpec};
+use crate::util::config::{Config, Section};
+
+/// A fully specified experiment parsed from a config file.
+pub struct Experiment {
+    pub spec: ModelSpec,
+    pub tasks: TaskSet,
+    pub lc: LcConfig,
+    pub model_seed: u64,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub data_seed: u64,
+    pub reference_epochs: usize,
+}
+
+impl Experiment {
+    pub fn from_config(cfg: &Config) -> Result<Experiment, String> {
+        let model = cfg.section("model").ok_or("missing [model] section")?;
+        let spec = lookup(&model.require_str("name")?)?;
+        let model_seed = model.usize_or("seed", 42) as u64;
+        let reference_epochs = model.usize_or("reference_epochs", 20);
+
+        let data = cfg.section("data");
+        let (n_train, n_test, data_seed) = match data {
+            Some(d) => (
+                d.usize_or("n_train", 8192),
+                d.usize_or("n_test", 2048),
+                d.usize_or("seed", 1) as u64,
+            ),
+            None => (8192, 2048, 1),
+        };
+
+        let lc_sec = cfg.section("lc").ok_or("missing [lc] section")?;
+        let lc = LcConfig {
+            mu: MuSchedule {
+                mu0: lc_sec.f64_or("mu0", 9e-5),
+                growth: lc_sec.f64_or("mu_growth", 1.1),
+                steps: lc_sec.usize_or("l_steps", 40),
+            },
+            lr: LrSchedule {
+                lr0: lc_sec.f64_or("lr0", 0.09),
+                decay: lc_sec.f64_or("lr_decay", 0.98),
+            },
+            epochs_per_step: lc_sec.usize_or("epochs_per_step", 20),
+            first_step_epochs: match lc_sec.usize_or("first_step_epochs", 0) {
+                0 => None,
+                n => Some(n),
+            },
+            use_al: lc_sec.get("al").and_then(|v| v.as_bool()).unwrap_or(true),
+            seed: lc_sec.usize_or("seed", 42) as u64,
+            threads: lc_sec.usize_or("threads", 4),
+            eval_every: lc_sec.usize_or("eval_every", 0),
+            quiet: lc_sec.get("quiet").and_then(|v| v.as_bool()).unwrap_or(false),
+        };
+
+        let mut tasks = Vec::new();
+        for sec in cfg.sections_with_prefix("task") {
+            tasks.push(parse_task(sec)?);
+        }
+        let tasks = TaskSet::new(tasks);
+        tasks.validate(spec.n_layers())?;
+
+        Ok(Experiment {
+            spec,
+            tasks,
+            lc,
+            model_seed,
+            n_train,
+            n_test,
+            data_seed,
+            reference_epochs,
+        })
+    }
+}
+
+fn parse_task(sec: &Section) -> Result<TaskSpec, String> {
+    let layers = sec.usize_list("layers")?;
+    let view = View::parse(&sec.str_or("view", "vector"))?;
+    let compression = parse_compression(sec, &sec.require_str("compression")?)?;
+    let name = sec.name.strip_prefix("task.").unwrap_or(&sec.name).to_string();
+    Ok(TaskSpec { name, layers, view, compression })
+}
+
+/// The compression catalogue (paper Table 1) by config name.
+pub fn parse_compression(sec: &Section, kind: &str) -> Result<Box<dyn Compression>, String> {
+    Ok(match kind {
+        "adaptive_quant" => Box::new(AdaptiveQuant::new(sec.usize_or("k", 2))),
+        "adaptive_quant_dp" => Box::new(AdaptiveQuant::optimal(sec.usize_or("k", 2))),
+        "binary" => Box::new(BinaryQuant { scaled: false }),
+        "binary_scaled" => Box::new(BinaryQuant { scaled: true }),
+        "ternary_scaled" => Box::new(TernaryQuant),
+        "prune_l0" => Box::new(ConstraintL0 { kappa: sec.usize_or("kappa", 100) }),
+        "prune_l1" => Box::new(ConstraintL1 { kappa: sec.f64_or("kappa_l1", 1.0) }),
+        "prune_l0_penalty" => Box::new(PenaltyL0 { alpha: sec.f64_or("alpha", 1e-4) }),
+        "prune_l1_penalty" => Box::new(PenaltyL1 { alpha: sec.f64_or("alpha", 1e-4) }),
+        "low_rank" => Box::new(LowRank { target_rank: sec.usize_or("rank", 1).max(1) }),
+        "rank_selection" => Box::new(RankSelection {
+            lambda: sec.f64_or("lambda", 1e-6),
+            cost: match sec.str_or("cost", "storage").as_str() {
+                "flops" => RankCost::Flops,
+                _ => RankCost::Storage,
+            },
+            max_rank: sec.usize_or("max_rank", 0),
+        }),
+        "additive" => {
+            let comps = sec
+                .get("components")
+                .and_then(|v| v.as_list())
+                .ok_or_else(|| format!("[{}] additive: missing components list", sec.name))?;
+            let mut parts: Vec<Box<dyn Compression>> = Vec::new();
+            for c in comps {
+                let cname = c
+                    .as_str()
+                    .ok_or_else(|| format!("[{}] additive: non-string component", sec.name))?;
+                if cname == "additive" {
+                    return Err(format!("[{}] additive cannot nest", sec.name));
+                }
+                parts.push(parse_compression(sec, cname)?);
+            }
+            if parts.is_empty() {
+                return Err(format!("[{}] additive: empty components", sec.name));
+            }
+            Box::new(AdditiveCombination::new(parts))
+        }
+        other => {
+            return Err(format!(
+                "[{}] unknown compression {other:?}; see Table 1 catalogue in lc/builder.rs",
+                sec.name
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[model]
+name = "lenet300"
+seed = 7
+
+[lc]
+mu0 = 9e-5
+mu_growth = 1.1
+l_steps = 40
+epochs_per_step = 20
+lr0 = 0.09
+
+[task.quant_all]
+layers = [0, 1, 2]
+view = "vector"
+compression = "adaptive_quant"
+k = 2
+"#;
+
+    #[test]
+    fn builds_paper_showcase_experiment() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let exp = Experiment::from_config(&cfg).unwrap();
+        assert_eq!(exp.spec.name, "lenet300");
+        assert_eq!(exp.tasks.tasks.len(), 1);
+        assert_eq!(exp.tasks.tasks[0].layers, vec![0, 1, 2]);
+        assert_eq!(exp.lc.mu.steps, 40);
+        assert!((exp.lc.lr.lr0 - 0.09).abs() < 1e-12);
+        assert_eq!(exp.tasks.tasks[0].compression.name(), "adaptive_quant(k=2)");
+    }
+
+    #[test]
+    fn additive_task_parses() {
+        let text = r#"
+[model]
+name = "lenet300"
+[lc]
+l_steps = 1
+[task.mix]
+layers = [0, 1, 2]
+view = "vector"
+compression = "additive"
+components = ["prune_l0", "adaptive_quant"]
+kappa = 2662
+k = 2
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let exp = Experiment::from_config(&cfg).unwrap();
+        let name = exp.tasks.tasks[0].compression.name();
+        assert!(name.contains("additive"), "{name}");
+        assert!(name.contains("prune_l0_constraint(kappa=2662)"), "{name}");
+    }
+
+    #[test]
+    fn all_catalogue_entries_parse() {
+        for kind in [
+            "adaptive_quant",
+            "adaptive_quant_dp",
+            "binary",
+            "binary_scaled",
+            "ternary_scaled",
+            "prune_l0",
+            "prune_l1",
+            "prune_l0_penalty",
+            "prune_l1_penalty",
+            "low_rank",
+            "rank_selection",
+        ] {
+            let cfg = Config::parse("[task.t]\nlayers = [0]\n").unwrap();
+            let sec = cfg.section("task.t").unwrap();
+            assert!(parse_compression(sec, kind).is_ok(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn errors_surface() {
+        let cfg = Config::parse("[model]\nname = \"nope\"\n[lc]\nl_steps = 1\n").unwrap();
+        assert!(Experiment::from_config(&cfg).is_err());
+
+        let cfg2 = Config::parse(
+            "[model]\nname = \"lenet300\"\n[lc]\nl_steps = 1\n[task.bad]\nlayers = [9]\nview = \"vector\"\ncompression = \"binary\"\n",
+        )
+        .unwrap();
+        match Experiment::from_config(&cfg2) {
+            Err(e) => assert!(e.contains("out of range")),
+            Ok(_) => panic!("expected out-of-range error"),
+        }
+
+        let cfg3 = Config::parse("[task.x]\nlayers = [0]\ncompression = \"warp_drive\"\n").unwrap();
+        let sec = cfg3.section("task.x").unwrap();
+        assert!(parse_compression(sec, "warp_drive").is_err());
+    }
+
+    #[test]
+    fn nested_additive_rejected() {
+        let text = "[task.x]\nlayers = [0]\ncompression = \"additive\"\ncomponents = [\"additive\"]\n";
+        let cfg = Config::parse(text).unwrap();
+        let sec = cfg.section("task.x").unwrap();
+        match parse_compression(sec, "additive") {
+            Err(e) => assert!(e.contains("nest")),
+            Ok(_) => panic!("expected nesting error"),
+        }
+    }
+}

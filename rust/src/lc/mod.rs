@@ -1,0 +1,16 @@
+//! The LC algorithm coordinator (paper §3 and Fig. 2): the system
+//! contribution of the paper, implemented as the Rust L3 layer.
+//!
+//! [`algorithm::LcAlgorithm`] alternates PJRT-executed L steps
+//! ([`crate::runtime::trainer::TrainDriver`]) with the C-step library
+//! ([`crate::compress`]) under an exponentially increasing μ schedule
+//! ([`schedule`]), with augmented-Lagrangian multipliers and the paper's
+//! §7 monitoring diagnostics ([`monitor`]).
+
+pub mod algorithm;
+pub mod builder;
+pub mod monitor;
+pub mod schedule;
+
+pub use algorithm::{LcAlgorithm, LcConfig, LcOutcome, StepRecord};
+pub use schedule::MuSchedule;

@@ -1,0 +1,102 @@
+//! Monitoring diagnostics from the paper's §7 "Practical advice":
+//!
+//! * the L step's penalized loss must decrease within each step — if an L
+//!   step ends with a higher total loss than it started, the optimization
+//!   parameters need tuning (we emit a warning and count the violation);
+//! * each task's C-step distortion ‖w − Δ(Θ)‖² must not increase vs the
+//!   same step's previous C value at equal w — in practice we check the
+//!   projection property per step: distortion after the C step must not
+//!   exceed the distortion of *keeping the previous Θ* (a failed check
+//!   almost always means a buggy `compress`).
+
+/// One violation record.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Violation {
+    /// L step ended with higher penalized loss (step, start, end).
+    LStepLossIncreased { step: usize, start: f64, end: f64 },
+    /// C step produced larger distortion than keeping the old Θ
+    /// (step, task name, old, new).
+    CStepDistortionIncreased { step: usize, task: String, old: f64, new: f64 },
+}
+
+/// Collects per-run diagnostics.
+#[derive(Debug, Default)]
+pub struct Monitor {
+    pub violations: Vec<Violation>,
+    pub quiet: bool,
+}
+
+impl Monitor {
+    pub fn new(quiet: bool) -> Self {
+        Self { violations: Vec::new(), quiet }
+    }
+
+    /// Check the §7 L-step invariant.
+    pub fn check_l_step(&mut self, step: usize, start: f64, end: f64) {
+        if end > start + 1e-9 * start.abs().max(1.0) {
+            if !self.quiet {
+                crate::warn_!(
+                    "L step {step}: penalized loss increased {start:.6} -> {end:.6} (tune lr/epochs)"
+                );
+            }
+            self.violations.push(Violation::LStepLossIncreased { step, start, end });
+        }
+    }
+
+    /// Check the §7 C-step invariant: the fresh projection must be at
+    /// least as good as the stale one.
+    pub fn check_c_step(&mut self, step: usize, task: &str, old_theta_dist: f64, new_dist: f64) {
+        if new_dist > old_theta_dist + 1e-9 * old_theta_dist.abs().max(1e-12) {
+            if !self.quiet {
+                crate::warn_!(
+                    "C step {step} task {task}: distortion increased {old_theta_dist:.6e} -> {new_dist:.6e} (buggy compress?)"
+                );
+            }
+            self.violations.push(Violation::CStepDistortionIncreased {
+                step,
+                task: task.to_string(),
+                old: old_theta_dist,
+                new: new_dist,
+            });
+        }
+    }
+
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l_step_violation_detected() {
+        let mut m = Monitor::new(true);
+        m.check_l_step(0, 1.0, 0.5); // fine
+        assert!(m.ok());
+        m.check_l_step(1, 0.5, 0.8); // violation
+        assert_eq!(m.violations.len(), 1);
+        match &m.violations[0] {
+            Violation::LStepLossIncreased { step, .. } => assert_eq!(*step, 1),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn c_step_violation_detected() {
+        let mut m = Monitor::new(true);
+        m.check_c_step(0, "t", 1.0, 0.9);
+        assert!(m.ok());
+        m.check_c_step(1, "t", 0.9, 1.1);
+        assert!(!m.ok());
+    }
+
+    #[test]
+    fn tolerates_float_noise() {
+        let mut m = Monitor::new(true);
+        m.check_l_step(0, 1.0, 1.0 + 1e-12);
+        m.check_c_step(0, "t", 1e-8, 1e-8 + 1e-22);
+        assert!(m.ok());
+    }
+}

@@ -1,0 +1,80 @@
+//! μ and learning-rate schedules (paper §6–7).
+//!
+//! The paper uses exponential schedules μ_i = μ0 · a^i with a ∈ [1.1, 1.4]
+//! (1.1 for quantization/pruning, 1.4 when low-rank is involved) and an SGD
+//! learning rate decayed by 0.98 after every L step.
+
+/// Exponential μ schedule: μ_i = mu0 · growth^i, i = 0..steps.
+#[derive(Clone, Copy, Debug)]
+pub struct MuSchedule {
+    pub mu0: f64,
+    pub growth: f64,
+    pub steps: usize,
+}
+
+impl MuSchedule {
+    /// The paper's quantization/pruning default: 9e-5 · 1.1^i, 40 steps.
+    pub fn paper_quant(steps: usize) -> Self {
+        Self { mu0: 9e-5, growth: 1.1, steps }
+    }
+
+    /// The paper's low-rank default: 9e-5 · 1.4^i.
+    pub fn paper_lowrank(steps: usize) -> Self {
+        Self { mu0: 9e-5, growth: 1.4, steps }
+    }
+
+    pub fn mu_at(&self, step: usize) -> f64 {
+        self.mu0 * self.growth.powi(step as i32)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        (0..self.steps).map(move |i| (i, self.mu_at(i)))
+    }
+}
+
+/// Learning-rate schedule: lr_i = lr0 · decay^i (per L step, matching the
+/// paper's Listing 2).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub lr0: f64,
+    pub decay: f64,
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, step: usize) -> f32 {
+        (self.lr0 * self.decay.powi(step as i32)) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mu_schedule_matches_paper_values() {
+        let s = MuSchedule::paper_quant(40);
+        assert!((s.mu_at(0) - 9e-5).abs() < 1e-12);
+        assert!((s.mu_at(1) - 9.9e-5).abs() < 1e-10);
+        // μ grows strictly
+        let mus: Vec<f64> = s.iter().map(|(_, m)| m).collect();
+        assert_eq!(mus.len(), 40);
+        for w in mus.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn lowrank_grows_faster() {
+        let q = MuSchedule::paper_quant(10);
+        let l = MuSchedule::paper_lowrank(10);
+        assert!(l.mu_at(9) > q.mu_at(9));
+    }
+
+    #[test]
+    fn lr_decays() {
+        let lr = LrSchedule { lr0: 0.09, decay: 0.98 };
+        assert!((lr.lr_at(0) - 0.09).abs() < 1e-9);
+        assert!(lr.lr_at(10) < 0.09);
+        assert!((lr.lr_at(1) - 0.09 * 0.98).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,34 @@
+//! # lc-compress
+//!
+//! A Rust + JAX + Pallas reproduction of *"A flexible, extensible software
+//! framework for model compression based on the LC algorithm"* (Idelbayev &
+//! Carreira-Perpiñán, 2020).
+//!
+//! The LC algorithm alternates:
+//!
+//! * an **L (learning) step** — train the uncompressed model on the task
+//!   loss plus a quadratic attachment to the current compression; here an
+//!   AOT-compiled JAX/Pallas train step executed through PJRT
+//!   ([`runtime`]);
+//! * a **C (compression) step** — project the current weights onto the
+//!   feasible set of the chosen compression in the l2 sense ([`compress`]);
+//!
+//! while driving the penalty weight mu to infinity on a schedule ([`lc`]).
+//!
+//! See DESIGN.md for the complete system inventory and the per-experiment
+//! index, and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench;
+pub mod harness;
+pub mod compress;
+pub mod data;
+pub mod lc;
+pub mod linalg;
+pub mod metrics;
+pub mod models;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod testing;
+pub mod util;

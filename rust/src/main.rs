@@ -1,0 +1,253 @@
+//! `lcc` — the LC model-compression coordinator CLI.
+//!
+//! ```text
+//! lcc info                                     # models, artifacts, catalogue
+//! lcc train    --model lenet300 --epochs 20 --out ref.lcck
+//! lcc eval     --checkpoint ref.lcck
+//! lcc compress --config examples/configs/quantize_all.lcc [--checkpoint ref.lcck]
+//! ```
+//!
+//! All randomness is seeded; runs are reproducible bit-for-bit.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use lc::data::synth;
+use lc::lc::builder::Experiment;
+use lc::lc::schedule::LrSchedule;
+use lc::lc::LcAlgorithm;
+use lc::models::{checkpoint, lookup, ParamState};
+use lc::report::{pct, Table};
+use lc::runtime::Runtime;
+use lc::util::cli::Args;
+use lc::util::config::Config;
+use lc::util::log::{set_level, Level};
+
+const VALUE_OPTS: &[&str] = &[
+    "model", "epochs", "out", "checkpoint", "config", "artifacts", "seed", "n-train", "n-test",
+    "lr0", "threads",
+];
+
+fn main() {
+    let args = match Args::parse_env(VALUE_OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.has("quiet") {
+        set_level(Level::Warn);
+    }
+    if args.has("verbose") {
+        set_level(Level::Debug);
+    }
+    let result = match args.command.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("compress") => cmd_compress(&args),
+        Some(other) => {
+            eprintln!("unknown command {other:?}");
+            usage();
+            std::process::exit(2);
+        }
+        None => {
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: lcc <command> [options]\n\
+         commands:\n  \
+         info                                     list models, artifacts, compression catalogue\n  \
+         train    --model NAME [--epochs N] [--seed S] --out FILE.lcck\n  \
+         eval     --checkpoint FILE.lcck [--n-test N]\n  \
+         compress --config EXP.lcc [--checkpoint REF.lcck]\n\
+         common options: --artifacts DIR (default ./artifacts), --quiet, --verbose"
+    );
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    println!("lc-compress: LC algorithm model-compression framework (Rust + JAX + Pallas)\n");
+    let mut t = Table::new(&["model", "widths", "weights", "params", "MACs"]);
+    for spec in lc::models::registry() {
+        t.row(&[
+            spec.name.clone(),
+            format!("{:?}", spec.widths),
+            spec.n_weights().to_string(),
+            spec.n_params().to_string(),
+            spec.flops_dense().to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("compression catalogue (Table 1): adaptive_quant[_dp], binary[_scaled],");
+    println!("  ternary_scaled, prune_l0, prune_l1, prune_l0_penalty, prune_l1_penalty,");
+    println!("  low_rank, rank_selection, additive combinations of the above\n");
+    match Runtime::new(&dir) {
+        Ok(rt) => {
+            println!("artifacts: {} (platform: {})", dir.display(), rt.platform());
+            for (name, m) in &rt.manifest.models {
+                println!("  model {name}: train={} eval={}", m.train_file, m.eval_file);
+            }
+            for q in &rt.manifest.quants {
+                println!("  quant_assign: n={} k={} ({})", q.n, q.k, q.file);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+/// Shared setup: synthetic train/test data.
+fn load_data(
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+    threads: usize,
+) -> (lc::data::Dataset, lc::data::Dataset) {
+    lc::info!("generating SynthDigits: {n_train} train / {n_test} test (seed {seed})");
+    synth::train_test(n_train, n_test, seed, threads)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get("model").context("--model required")?;
+    let epochs: usize = args.get_parse("epochs", 20).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_parse("seed", 42u64).map_err(anyhow::Error::msg)?;
+    let lr0: f64 = args.get_parse("lr0", 0.1f64).map_err(anyhow::Error::msg)?;
+    let n_train: usize = args.get_parse("n-train", 8192).map_err(anyhow::Error::msg)?;
+    let n_test: usize = args.get_parse("n-test", 2048).map_err(anyhow::Error::msg)?;
+    let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
+    let out = args.get("out").context("--out required")?;
+
+    let spec = lookup(model).map_err(anyhow::Error::msg)?;
+    let mut rt = Runtime::new(&artifact_dir(args))?;
+    let (train_data, test_data) = load_data(n_train, n_test, 1, threads);
+
+    let alg = LcAlgorithm::new(
+        &mut rt,
+        spec.clone(),
+        lc::compress::task::TaskSet::new(vec![]),
+        lc::lc::LcConfig { seed, threads, ..Default::default() },
+    )?;
+    let mut state = ParamState::init(&spec, seed);
+    lc::info!("training reference {model} for {epochs} epochs (lr0={lr0})");
+    let t0 = std::time::Instant::now();
+    alg.train_reference(&mut state, &train_data, epochs, &LrSchedule { lr0, decay: 0.98 })?;
+    let train_eval = alg.evaluate(&state, &train_data)?;
+    let test_eval = alg.evaluate(&state, &test_data)?;
+    println!(
+        "reference {model}: train_err={} test_err={} ({:.1}s)",
+        pct(train_eval.error),
+        pct(test_eval.error),
+        t0.elapsed().as_secs_f64()
+    );
+    checkpoint::save(&state, Path::new(out))?;
+    println!("saved checkpoint to {out}");
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let ckpt = args.get("checkpoint").context("--checkpoint required")?;
+    let n_test: usize = args.get_parse("n-test", 2048).map_err(anyhow::Error::msg)?;
+    let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
+    let state = checkpoint::load(Path::new(ckpt))?;
+    let mut rt = Runtime::new(&artifact_dir(args))?;
+    let (_, test_data) = load_data(0, n_test, 1, threads);
+    let eval = lc::runtime::trainer::EvalDriver::new(&mut rt, &state.spec.name)?;
+    let r = eval.eval(&state, &test_data)?;
+    println!(
+        "{}: test_err={} mean_loss={:.4} (n={})",
+        state.spec.name,
+        pct(r.error),
+        r.mean_loss,
+        r.n
+    );
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let cfg_path = args.get("config").context("--config required")?;
+    let cfg = Config::load(cfg_path).map_err(anyhow::Error::msg)?;
+    let exp = Experiment::from_config(&cfg).map_err(anyhow::Error::msg)?;
+    let mut rt = Runtime::new(&artifact_dir(args))?;
+    let (train_data, test_data) =
+        load_data(exp.n_train, exp.n_test, exp.data_seed, exp.lc.threads);
+
+    let alg = LcAlgorithm::new(&mut rt, exp.spec.clone(), exp.tasks, exp.lc.clone())?;
+
+    // reference model: load checkpoint or train from scratch
+    let mut state = match args.get("checkpoint") {
+        Some(p) => {
+            let s = checkpoint::load(Path::new(p))?;
+            if s.spec != exp.spec {
+                bail!("checkpoint model {:?} != config model {:?}", s.spec.name, exp.spec.name);
+            }
+            s
+        }
+        None => {
+            let mut s = ParamState::init(&exp.spec, exp.model_seed);
+            lc::info!("training reference for {} epochs", exp.reference_epochs);
+            alg.train_reference(
+                &mut s,
+                &train_data,
+                exp.reference_epochs,
+                &LrSchedule { lr0: 0.1, decay: 0.98 },
+            )?;
+            s
+        }
+    };
+    state.reset_momenta();
+    let ref_train = alg.evaluate(&state, &train_data)?;
+    let ref_test = alg.evaluate(&state, &test_data)?;
+    println!(
+        "reference: train_err={} test_err={}",
+        pct(ref_train.error),
+        pct(ref_test.error)
+    );
+
+    let out = alg.run(state, &train_data, &test_data)?;
+    let mut t =
+        Table::new(&["", "train err", "test err", "storage ratio", "FLOPs ratio", "params"]);
+    t.row(&[
+        "reference".into(),
+        pct(ref_train.error),
+        pct(ref_test.error),
+        "1.0x".into(),
+        "1.0x".into(),
+        exp.spec.n_params().to_string(),
+    ]);
+    t.row(&[
+        "LC compressed".into(),
+        pct(out.final_train.error),
+        pct(out.final_test.error),
+        format!("{:.1}x", out.metrics.ratio()),
+        format!("{:.1}x", out.metrics.flops_ratio()),
+        out.metrics.params.to_string(),
+    ]);
+    println!("\n{}", t.render());
+    println!(
+        "LC wall time: {:.1}s over {} L steps; monitor violations: {}",
+        out.wall_secs,
+        out.records.len(),
+        out.monitor.violations.len()
+    );
+    if let Some(outp) = args.get("out") {
+        checkpoint::save(&out.compressed_state, Path::new(outp))?;
+        println!("saved compressed model to {outp}");
+    }
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Compression accounting: storage bits, parameter counts, inference FLOPs
+//! — the axes of the paper's error–compression trade-off plots.
+
+use crate::compress::task::TaskSet;
+use crate::compress::Theta;
+use crate::models::ModelSpec;
+use crate::tensor::Matrix;
+
+/// Compression metrics of one compressed model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Compressed {
+    /// Bits to store the compressed parameters (weights + uncompressed
+    /// parts at float32).
+    pub storage_bits: u64,
+    /// Bits of the dense float32 reference.
+    pub dense_bits: u64,
+    /// Inference multiply-accumulates per example.
+    pub flops: u64,
+    /// Dense reference MACs.
+    pub dense_flops: u64,
+    /// Free parameters of the compressed representation.
+    pub params: u64,
+}
+
+impl Compressed {
+    /// Storage compression ratio rho = dense / compressed.
+    pub fn ratio(&self) -> f64 {
+        self.dense_bits as f64 / self.storage_bits.max(1) as f64
+    }
+
+    pub fn flops_ratio(&self) -> f64 {
+        self.dense_flops as f64 / self.flops.max(1) as f64
+    }
+}
+
+/// Account a compressed model: `thetas[i]` is task i's compressed form,
+/// `deltas` the decompressed per-layer weights (for nnz-based FLOPs of
+/// schemes that do not change the layer structure).
+pub fn account(
+    spec: &ModelSpec,
+    tasks: &TaskSet,
+    thetas: &[Theta],
+    deltas: &[Matrix],
+) -> Compressed {
+    assert_eq!(thetas.len(), tasks.tasks.len());
+    let nl = spec.n_layers();
+    let bias_params: u64 = spec.widths[1..].iter().sum::<usize>() as u64;
+    let dense_bits = 32 * (spec.n_weights() as u64 + bias_params);
+    let dense_flops = spec.flops_dense();
+
+    // storage: compressed tasks + uncovered weight layers + biases (f32)
+    let covered = tasks.covered_layers(nl);
+    let mut storage_bits: u64 = 32 * bias_params;
+    let mut params: u64 = bias_params;
+    for (l, &cov) in covered.iter().enumerate() {
+        if !cov {
+            let (m, n) = spec.layer_shape(l);
+            storage_bits += 32 * (m * n) as u64;
+            params += (m * n) as u64;
+        }
+    }
+    for t in thetas {
+        storage_bits += t.storage_bits();
+        params += t.n_params();
+    }
+
+    // FLOPs: per layer — low-rank layers cost r(m+n); other layers cost
+    // their nonzero count in the decompressed weights (pruning reduces
+    // MACs; quantization does not).
+    let mut flops: u64 = 0;
+    let mut lowrank_rank = vec![None::<usize>; nl];
+    for (ti, t) in tasks.tasks.iter().enumerate() {
+        if let Theta::LowRank { s, .. } = &thetas[ti] {
+            let r = s.iter().filter(|&&x| x != 0.0).count();
+            lowrank_rank[t.layers[0]] = Some(r);
+        }
+    }
+    for l in 0..nl {
+        let (m, n) = spec.layer_shape(l);
+        flops += match lowrank_rank[l] {
+            Some(r) => (r * (m + n)) as u64,
+            None => deltas[l].data.iter().filter(|&&x| x != 0.0).count() as u64,
+        };
+    }
+    Compressed { storage_bits, dense_bits, flops, dense_flops, params }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quantize::AdaptiveQuant;
+    use crate::compress::task::{TaskSet, TaskSpec};
+    use crate::compress::view::View;
+    use crate::compress::{CContext, Compression};
+    use crate::models::lookup;
+
+    fn dense_deltas(spec: &ModelSpec) -> Vec<Matrix> {
+        (0..spec.n_layers())
+            .map(|l| {
+                let (m, n) = spec.layer_shape(l);
+                Matrix::from_vec(m, n, vec![1.0; m * n])
+            })
+            .collect()
+    }
+
+    #[test]
+    fn uncompressed_model_ratio_is_one() {
+        let spec = lookup("lenet300").unwrap();
+        let tasks = TaskSet::new(vec![]);
+        let c = account(&spec, &tasks, &[], &dense_deltas(&spec));
+        assert_eq!(c.storage_bits, c.dense_bits);
+        assert!((c.ratio() - 1.0).abs() < 1e-12);
+        assert_eq!(c.flops, c.dense_flops);
+    }
+
+    #[test]
+    fn quantize_all_k2_ratio_near_32x() {
+        let spec = lookup("lenet300").unwrap();
+        let task = TaskSpec {
+            name: "q".into(),
+            layers: vec![0, 1, 2],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(2)),
+        };
+        // build a theta directly: k=2 codebook + 1-bit assignments
+        let n = spec.n_weights();
+        let theta = crate::compress::Theta::Quantized {
+            codebook: vec![-0.1, 0.1],
+            assignments: vec![0; n],
+        };
+        let tasks = TaskSet::new(vec![task]);
+        let c = account(&spec, &tasks, &[theta], &dense_deltas(&spec));
+        // weights go from 32 bits to ~1 bit; biases stay f32 so the overall
+        // ratio is a bit under 32 but well above 25
+        assert!(c.ratio() > 25.0 && c.ratio() < 32.0, "ratio={}", c.ratio());
+        // quantization does not reduce FLOPs
+        assert_eq!(c.flops, c.dense_flops);
+    }
+
+    #[test]
+    fn sparse_reduces_flops() {
+        let spec = lookup("mlp-small").unwrap();
+        let tasks = TaskSet::new(vec![]);
+        let mut deltas = dense_deltas(&spec);
+        // zero 90% of layer 0
+        let n0 = deltas[0].data.len();
+        for i in 0..(n0 * 9 / 10) {
+            deltas[0].data[i] = 0.0;
+        }
+        let c = account(&spec, &tasks, &[], &deltas);
+        assert!(c.flops < c.dense_flops);
+    }
+
+    #[test]
+    fn lowrank_flops_use_factored_cost() {
+        let spec = lookup("mlp-small").unwrap();
+        let (m, n) = spec.layer_shape(0);
+        let view_w = Matrix::from_vec(m, n, vec![1.0; m * n]);
+        let lr = crate::compress::lowrank::LowRank { target_rank: 5 };
+        let theta =
+            lr.compress(&crate::compress::ViewData::Matrix(view_w), &CContext::default());
+        let tasks = TaskSet::new(vec![TaskSpec {
+            name: "lr".into(),
+            layers: vec![0],
+            view: View::Matrix,
+            compression: Box::new(lr),
+        }]);
+        let c = account(&spec, &tasks, &[theta], &dense_deltas(&spec));
+        // layer0 cost <= 5*(784+100); layer1 stays dense at 1000 MACs
+        assert!(c.flops <= (5 * (784 + 100) + 1000) as u64);
+        assert!(c.flops < c.dense_flops);
+    }
+}

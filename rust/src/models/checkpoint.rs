@@ -1,0 +1,129 @@
+//! Checkpoint I/O for [`ParamState`] (substrate; no serde available).
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "LCCK" | version u32 | name_len u32 | name bytes
+//! n_widths u32 | widths u32...
+//! then per layer: W data f32..., b data f32...   (weights; momenta zeroed)
+//! ```
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{lookup, ModelSpec, ParamState};
+
+const MAGIC: &[u8; 4] = b"LCCK";
+const VERSION: u32 = 1;
+
+pub fn save(state: &ParamState, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    let name = state.spec.name.as_bytes();
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    f.write_all(&(state.spec.widths.len() as u32).to_le_bytes())?;
+    for &w in &state.spec.widths {
+        f.write_all(&(w as u32).to_le_bytes())?;
+    }
+    for l in 0..state.spec.n_layers() {
+        write_f32s(&mut f, &state.weights[l].data)?;
+        write_f32s(&mut f, &state.biases[l])?;
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<ParamState> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not an lcc checkpoint", path.display());
+    }
+    let version = read_u32(&mut f)?;
+    if version != VERSION {
+        bail!("{}: unsupported checkpoint version {version}", path.display());
+    }
+    let name_len = read_u32(&mut f)? as usize;
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name)?;
+    let name = String::from_utf8(name).context("checkpoint model name")?;
+    let n_widths = read_u32(&mut f)? as usize;
+    let mut widths = Vec::with_capacity(n_widths);
+    for _ in 0..n_widths {
+        widths.push(read_u32(&mut f)? as usize);
+    }
+    let spec: ModelSpec = lookup(&name).map_err(anyhow::Error::msg)?;
+    if spec.widths != widths {
+        bail!(
+            "{}: checkpoint widths {widths:?} do not match registry {:?}",
+            path.display(),
+            spec.widths
+        );
+    }
+    let mut state = ParamState::init(&spec, 0);
+    for l in 0..spec.n_layers() {
+        read_f32s(&mut f, &mut state.weights[l].data)?;
+        read_f32s(&mut f, &mut state.biases[l])?;
+    }
+    state.reset_momenta();
+    Ok(state)
+}
+
+fn write_f32s<W: Write>(w: &mut W, data: &[f32]) -> Result<()> {
+    for &v in data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
+    let mut buf = [0u8; 4];
+    for v in out.iter_mut() {
+        r.read_exact(&mut buf)?;
+        *v = f32::from_le_bytes(buf);
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let spec = lookup("mlp-small").unwrap();
+        let state = ParamState::init(&spec, 99);
+        let dir = std::env::temp_dir().join("lcc_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.lcck");
+        save(&state, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.spec, state.spec);
+        assert_eq!(loaded.weights[0].data, state.weights[0].data);
+        assert_eq!(loaded.biases[1], state.biases[1]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("lcc_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.lcck");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,194 @@
+//! Model registry and host-side parameter state.
+//!
+//! Mirrors `python/compile/model.py`: an MLP family with per-layer weight
+//! matrices `W_l: in x out` and biases, flat parameter ordering
+//! `[W1, b1, ..., WL, bL]`, Glorot-uniform init.  The registry entries must
+//! match the variants lowered by `aot.py` (checked at runtime against the
+//! artifact manifest).
+
+pub mod checkpoint;
+
+use crate::tensor::Matrix;
+use crate::util::rng::{glorot_bound, Xoshiro256};
+
+/// Static description of one model variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Layer widths including input and output, e.g. [784, 300, 100, 10].
+    pub widths: Vec<usize>,
+    pub batch: usize,
+    pub eval_batch: usize,
+}
+
+impl ModelSpec {
+    pub fn n_layers(&self) -> usize {
+        self.widths.len() - 1
+    }
+
+    pub fn layer_shape(&self, l: usize) -> (usize, usize) {
+        (self.widths[l], self.widths[l + 1])
+    }
+
+    /// Total scalar weights (matrices only, the compressible parameters).
+    pub fn n_weights(&self) -> usize {
+        (0..self.n_layers()).map(|l| self.widths[l] * self.widths[l + 1]).sum()
+    }
+
+    /// Total parameters including biases.
+    pub fn n_params(&self) -> usize {
+        self.n_weights() + self.widths[1..].iter().sum::<usize>()
+    }
+
+    /// Inference multiply-accumulates per example for the dense model.
+    pub fn flops_dense(&self) -> u64 {
+        (0..self.n_layers())
+            .map(|l| (self.widths[l] * self.widths[l + 1]) as u64)
+            .sum()
+    }
+}
+
+/// The built-in registry (must mirror MODEL_VARIANTS in model.py).
+pub fn registry() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "mlp-small".into(),
+            widths: vec![784, 100, 10],
+            batch: 128,
+            eval_batch: 512,
+        },
+        ModelSpec {
+            name: "lenet300".into(),
+            widths: vec![784, 300, 100, 10],
+            batch: 128,
+            eval_batch: 512,
+        },
+        ModelSpec {
+            name: "lenet300-wide".into(),
+            widths: vec![784, 500, 300, 10],
+            batch: 128,
+            eval_batch: 512,
+        },
+    ]
+}
+
+pub fn lookup(name: &str) -> Result<ModelSpec, String> {
+    registry()
+        .into_iter()
+        .find(|m| m.name == name)
+        .ok_or_else(|| format!("unknown model {name:?}; known: mlp-small, lenet300, lenet300-wide"))
+}
+
+/// Host-side parameter state of a model instance: weights, biases, and the
+/// SGD momentum buffers the L step threads through the train artifact.
+#[derive(Clone, Debug)]
+pub struct ParamState {
+    pub spec: ModelSpec,
+    pub weights: Vec<Matrix>,
+    pub biases: Vec<Vec<f32>>,
+    pub w_momenta: Vec<Matrix>,
+    pub b_momenta: Vec<Vec<f32>>,
+}
+
+impl ParamState {
+    /// Glorot-uniform weights, zero biases and momenta.
+    pub fn init(spec: &ModelSpec, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for l in 0..spec.n_layers() {
+            let (fan_in, fan_out) = spec.layer_shape(l);
+            let bound = glorot_bound(fan_in, fan_out);
+            let mut w = Matrix::zeros(fan_in, fan_out);
+            for v in w.data.iter_mut() {
+                *v = rng.uniform_in(-bound, bound);
+            }
+            weights.push(w);
+            biases.push(vec![0.0; fan_out]);
+        }
+        let w_momenta = weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect();
+        let b_momenta = biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        Self { spec: spec.clone(), weights, biases, w_momenta, b_momenta }
+    }
+
+    /// Zero the momentum buffers (fresh optimizer per L step, matching the
+    /// paper's Listing 2 which constructs a new SGD per step).
+    pub fn reset_momenta(&mut self) {
+        for m in self.w_momenta.iter_mut() {
+            m.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for m in self.b_momenta.iter_mut() {
+            m.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    /// Replace every weight matrix with the given deltas (used to finish
+    /// LC: the final model *is* the decompressed Δ(Θ)).
+    pub fn set_weights(&mut self, deltas: &[Matrix]) {
+        assert_eq!(deltas.len(), self.weights.len());
+        for (w, d) in self.weights.iter_mut().zip(deltas.iter()) {
+            assert_eq!((w.rows, w.cols), (d.rows, d.cols));
+            w.data.copy_from_slice(&d.data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_entries_consistent() {
+        for spec in registry() {
+            assert!(spec.widths.len() >= 2);
+            assert_eq!(spec.widths[0], 784);
+            assert_eq!(*spec.widths.last().unwrap(), 10);
+        }
+    }
+
+    #[test]
+    fn lenet300_counts_match_paper() {
+        let m = lookup("lenet300").unwrap();
+        // 784*300 + 300*100 + 100*10 = 266200 weights; paper prunes to 5%
+        // with kappa = 13310 = 266200 * 0.05
+        assert_eq!(m.n_weights(), 266_200);
+        assert_eq!((m.n_weights() as f64 * 0.05) as usize, 13_310);
+        assert_eq!((m.n_weights() as f64 * 0.01) as usize, 2_662);
+        assert_eq!(m.n_params(), 266_200 + 300 + 100 + 10);
+    }
+
+    #[test]
+    fn lookup_unknown_fails() {
+        assert!(lookup("resnet50").is_err());
+    }
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let spec = lookup("mlp-small").unwrap();
+        let a = ParamState::init(&spec, 42);
+        let b = ParamState::init(&spec, 42);
+        assert_eq!(a.weights[0].data, b.weights[0].data);
+        let bound = glorot_bound(784, 100);
+        assert!(a.weights[0].data.iter().all(|&v| v.abs() <= bound));
+        assert!(a.biases[0].iter().all(|&v| v == 0.0));
+        let c = ParamState::init(&spec, 43);
+        assert_ne!(a.weights[0].data, c.weights[0].data);
+    }
+
+    #[test]
+    fn reset_momenta_zeroes() {
+        let spec = lookup("mlp-small").unwrap();
+        let mut st = ParamState::init(&spec, 1);
+        st.w_momenta[0].data[0] = 5.0;
+        st.b_momenta[0][0] = 5.0;
+        st.reset_momenta();
+        assert_eq!(st.w_momenta[0].data[0], 0.0);
+        assert_eq!(st.b_momenta[0][0], 0.0);
+    }
+
+    #[test]
+    fn flops_dense_lenet300() {
+        let m = lookup("lenet300").unwrap();
+        assert_eq!(m.flops_dense(), 266_200);
+    }
+}

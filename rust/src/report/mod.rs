@@ -1,0 +1,181 @@
+//! Report rendering: markdown tables and ASCII plots for regenerating the
+//! paper's tables and figures on a terminal.
+
+/// A simple markdown table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:w$} |", cells[i], w = widths[i]));
+            }
+            s
+        };
+        let mut out = String::new();
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// A labelled (x, y) series for ASCII plotting.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub marker: char,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render series into an ASCII scatter/line plot (log-x optional).
+pub fn ascii_plot(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    log_x: bool,
+) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        for &(x, y) in &s.points {
+            let x = if log_x { x.max(1e-300).log10() } else { x };
+            pts.push((x, y));
+        }
+    }
+    if pts.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in &s.points {
+            let x = if log_x { x.max(1e-300).log10() } else { x };
+            let col = (((x - xmin) / (xmax - xmin)) * (width - 1) as f64).round() as usize;
+            let row = (((y - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            grid[row][col.min(width - 1)] = s.marker;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!("  y: {ylabel}  [{ymin:.3} .. {ymax:.3}]\n"));
+    for row in &grid {
+        out.push_str("  |");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "   x: {xlabel}{}  [{:.3} .. {:.3}]\n",
+        if log_x { " (log10)" } else { "" },
+        xmin,
+        xmax
+    ));
+    for s in series {
+        out.push_str(&format!("   {} {}\n", s.marker, s.label));
+    }
+    out
+}
+
+/// Format a fraction as a percentage string like "2.13%".
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "err"]);
+        t.row(&["quantize".into(), "2.56%".into()]);
+        t.row(&["x".into(), "2.1%".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        // all lines equal width
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+
+    #[test]
+    fn plot_contains_markers_and_bounds() {
+        let s = Series {
+            label: "LC".into(),
+            marker: 'o',
+            points: vec![(1.0, 2.0), (10.0, 4.0), (100.0, 8.0)],
+        };
+        let p = ascii_plot("t", "ratio", "err", &[s], 40, 10, true);
+        assert!(p.contains('o'));
+        assert!(p.contains("log10"));
+        assert!(p.contains("LC"));
+    }
+
+    #[test]
+    fn plot_empty_series() {
+        let p = ascii_plot("t", "x", "y", &[], 10, 5, false);
+        assert!(p.contains("no data"));
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.0213), "2.13%");
+    }
+}

@@ -1,0 +1,205 @@
+//! Parser for `artifacts/manifest.txt`, the contract between the AOT
+//! compile path (`python/compile/aot.py`) and the Rust runtime.
+//!
+//! Line-oriented format, one record per line:
+//!
+//! ```text
+//! version 1
+//! model lenet300 widths 784,300,100,10 batch 128 eval_batch 512 train lenet300_train.hlo.txt eval lenet300_eval.hlo.txt
+//! quant n 1048576 block 4096 k 2 file quant_assign_k2.hlo.txt
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered model variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelArtifact {
+    pub name: String,
+    pub widths: Vec<usize>,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub train_file: String,
+    pub eval_file: String,
+}
+
+/// One lowered quantization C-step kernel.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantArtifact {
+    pub n: usize,
+    pub block: usize,
+    pub k: usize,
+    pub file: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelArtifact>,
+    pub quants: Vec<QuantArtifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let mut m = Manifest { dir: dir.to_path_buf(), ..Default::default() };
+        let mut version_seen = false;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let err = |msg: &str| format!("manifest line {}: {msg}", lineno + 1);
+            match toks[0] {
+                "version" => {
+                    if toks.get(1) != Some(&"1") {
+                        return Err(err("unsupported manifest version"));
+                    }
+                    version_seen = true;
+                }
+                "model" => {
+                    let kv = parse_kv(&toks[2..]).map_err(|e| err(&e))?;
+                    let widths = kv
+                        .get("widths")
+                        .ok_or_else(|| err("model: missing widths"))?
+                        .split(',')
+                        .map(|s| s.parse::<usize>().map_err(|_| err("bad widths")))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    m.models.insert(
+                        toks[1].to_string(),
+                        ModelArtifact {
+                            name: toks[1].to_string(),
+                            widths,
+                            batch: get_usize(&kv, "batch").map_err(|e| err(&e))?,
+                            eval_batch: get_usize(&kv, "eval_batch").map_err(|e| err(&e))?,
+                            train_file: get_str(&kv, "train").map_err(|e| err(&e))?,
+                            eval_file: get_str(&kv, "eval").map_err(|e| err(&e))?,
+                        },
+                    );
+                }
+                "quant" => {
+                    let kv = parse_kv(&toks[1..]).map_err(|e| err(&e))?;
+                    m.quants.push(QuantArtifact {
+                        n: get_usize(&kv, "n").map_err(|e| err(&e))?,
+                        block: get_usize(&kv, "block").map_err(|e| err(&e))?,
+                        k: get_usize(&kv, "k").map_err(|e| err(&e))?,
+                        file: get_str(&kv, "file").map_err(|e| err(&e))?,
+                    });
+                }
+                other => return Err(err(&format!("unknown record kind {other:?}"))),
+            }
+        }
+        if !version_seen {
+            return Err("manifest: missing version line".into());
+        }
+        Ok(m)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifact, String> {
+        self.models.get(name).ok_or_else(|| {
+            format!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Smallest lowered quant kernel with codebook size >= k that fits n
+    /// weights, if any.
+    pub fn quant_for(&self, n: usize, k: usize) -> Option<&QuantArtifact> {
+        self.quants
+            .iter()
+            .filter(|q| q.k == k && q.n >= n)
+            .min_by_key(|q| q.n)
+    }
+
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_kv(toks: &[&str]) -> Result<BTreeMap<String, String>, String> {
+    if toks.len() % 2 != 0 {
+        return Err("odd key/value token count".into());
+    }
+    Ok(toks
+        .chunks(2)
+        .map(|c| (c[0].to_string(), c[1].to_string()))
+        .collect())
+}
+
+fn get_usize(kv: &BTreeMap<String, String>, key: &str) -> Result<usize, String> {
+    kv.get(key)
+        .ok_or_else(|| format!("missing key {key}"))?
+        .parse()
+        .map_err(|_| format!("bad usize for key {key}"))
+}
+
+fn get_str(kv: &BTreeMap<String, String>, key: &str) -> Result<String, String> {
+    kv.get(key).cloned().ok_or_else(|| format!("missing key {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version 1
+model lenet300 widths 784,300,100,10 batch 128 eval_batch 512 train t.hlo.txt eval e.hlo.txt
+quant n 1048576 block 4096 k 2 file q2.hlo.txt
+quant n 1048576 block 4096 k 16 file q16.hlo.txt
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let model = m.model("lenet300").unwrap();
+        assert_eq!(model.widths, vec![784, 300, 100, 10]);
+        assert_eq!(model.batch, 128);
+        assert_eq!(model.train_file, "t.hlo.txt");
+        assert_eq!(m.quants.len(), 2);
+        assert_eq!(m.path_of("x").to_str().unwrap(), "/tmp/a/x");
+    }
+
+    #[test]
+    fn quant_for_picks_fitting_kernel() {
+        let m = Manifest::parse(SAMPLE, Path::new(".")).unwrap();
+        assert_eq!(m.quant_for(500_000, 2).unwrap().file, "q2.hlo.txt");
+        assert!(m.quant_for(500_000, 64).is_none());
+        assert!(m.quant_for(2_000_000, 2).is_none());
+    }
+
+    #[test]
+    fn missing_version_rejected() {
+        assert!(Manifest::parse("model x widths 1,2 batch 1 eval_batch 1 train t eval e", Path::new("."))
+            .is_err());
+    }
+
+    #[test]
+    fn unknown_record_rejected() {
+        assert!(Manifest::parse("version 1\nbogus x", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // integration sanity: if artifacts/ exists, it must parse and
+        // contain every registry model
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            for spec in crate::models::registry() {
+                let art = m.model(&spec.name).unwrap();
+                assert_eq!(art.widths, spec.widths, "model {} widths drifted", spec.name);
+                assert_eq!(art.batch, spec.batch);
+                assert_eq!(art.eval_batch, spec.eval_batch);
+            }
+        }
+    }
+}

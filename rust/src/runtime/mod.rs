@@ -1,0 +1,136 @@
+//! PJRT runtime: load AOT artifacts and run them from the Rust hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO-text artifact →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One [`Runtime`] owns the PJRT client and a cache of compiled
+//! executables keyed by artifact file name; [`trainer`] builds the typed
+//! drivers (train step, eval, quantization C-step kernel) on top.
+
+pub mod manifest;
+pub mod trainer;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub use manifest::Manifest;
+
+/// Owns the PJRT client and compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    exes: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by file name).
+    pub fn executable(&mut self, file: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exe = std::rc::Rc::new(exe);
+        self.exes.insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs; expects the single-tuple output
+    /// convention (aot.py lowers with return_tuple=True) and returns the
+    /// untupled literals.
+    pub fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = exe.execute::<xla::Literal>(inputs).context("executing artifact")?;
+        let lit = bufs[0][0].to_literal_sync().context("fetching result")?;
+        lit.to_tuple().context("untupling result")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal marshalling helpers (host Vec<f32>/Vec<i32> <-> xla::Literal).
+// ---------------------------------------------------------------------------
+
+/// f32 literal of arbitrary shape from a flat row-major slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_f32: {} elements for shape {dims:?}", data.len());
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::F32, dims);
+    lit.copy_raw_from(data).context("copying f32 data into literal")?;
+    Ok(lit)
+}
+
+/// i32 literal (labels).
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_i32: {} elements for shape {dims:?}", data.len());
+    let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::S32, dims);
+    lit.copy_raw_from(data).context("copying i32 data into literal")?;
+    Ok(lit)
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a literal's f32 data.
+pub fn lit_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("reading f32 literal")
+}
+
+/// Extract a literal's i32 data.
+pub fn lit_to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("reading i32 literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(lit_to_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let data = vec![1i32, -2, 3];
+        let lit = lit_i32(&data, &[3]).unwrap();
+        assert_eq!(lit_to_i32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = lit_scalar(2.5);
+        assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
+    }
+}

@@ -1,0 +1,266 @@
+//! Typed drivers over the AOT artifacts: the L-step train step, the eval
+//! step, and the quantization C-step kernel.
+//!
+//! These are the only places that know the artifact calling conventions
+//! (input/output orderings documented in `python/compile/model.py`).
+
+use anyhow::{ensure, Context, Result};
+
+use super::{lit_f32, lit_i32, lit_scalar, lit_to_f32, lit_to_i32, Runtime};
+use crate::data::Dataset;
+use crate::models::ParamState;
+use crate::tensor::Matrix;
+
+/// Driver for `<model>_train.hlo.txt`: one SGD step on the penalized
+/// L-step objective.
+pub struct TrainDriver {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    pub widths: Vec<usize>,
+    pub batch: usize,
+}
+
+impl TrainDriver {
+    pub fn new(rt: &mut Runtime, model: &str) -> Result<TrainDriver> {
+        let art = rt.manifest.model(model).map_err(anyhow::Error::msg)?.clone();
+        let exe = rt.executable(&art.train_file)?;
+        Ok(TrainDriver { exe, widths: art.widths, batch: art.batch })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.widths.len() - 1
+    }
+
+    /// Execute one train step, updating `state` in place.  `deltas` and
+    /// `lambdas` are per-weight-matrix; `mu` is the per-layer penalty
+    /// vector (0 entries disable the penalty); returns the penalized loss
+    /// at the *start* of the step.
+    pub fn step(
+        &self,
+        state: &mut ParamState,
+        x: &[f32],
+        y: &[i32],
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let nl = self.n_layers();
+        ensure!(deltas.len() == nl && lambdas.len() == nl && mu.len() == nl);
+        ensure!(x.len() == self.batch * self.widths[0], "bad x batch size");
+        ensure!(y.len() == self.batch, "bad y batch size");
+
+        let mut inputs = Vec::with_capacity(4 * nl + 4 + 2 * nl);
+        // params
+        for l in 0..nl {
+            let w = &state.weights[l];
+            inputs.push(lit_f32(&w.data, &[w.rows, w.cols])?);
+            inputs.push(lit_f32(&state.biases[l], &[state.biases[l].len()])?);
+        }
+        // momenta
+        for l in 0..nl {
+            let m = &state.w_momenta[l];
+            inputs.push(lit_f32(&m.data, &[m.rows, m.cols])?);
+            inputs.push(lit_f32(&state.b_momenta[l], &[state.b_momenta[l].len()])?);
+        }
+        inputs.push(lit_f32(x, &[self.batch, self.widths[0]])?);
+        inputs.push(lit_i32(y, &[self.batch])?);
+        for d in deltas {
+            inputs.push(lit_f32(&d.data, &[d.rows, d.cols])?);
+        }
+        for lam in lambdas {
+            inputs.push(lit_f32(&lam.data, &[lam.rows, lam.cols])?);
+        }
+        inputs.push(lit_f32(mu, &[nl])?);
+        inputs.push(lit_scalar(lr));
+
+        let outs = Runtime::run(&self.exe, &inputs)?;
+        ensure!(outs.len() == 4 * nl + 1, "train artifact returned {} outputs", outs.len());
+
+        // unpack: new params, new momenta, loss
+        let mut it = outs.into_iter();
+        for l in 0..nl {
+            let w = it.next().unwrap();
+            state.weights[l].data.copy_from_slice(&lit_to_f32(&w)?);
+            let b = it.next().unwrap();
+            state.biases[l].copy_from_slice(&lit_to_f32(&b)?);
+        }
+        for l in 0..nl {
+            let m = it.next().unwrap();
+            state.w_momenta[l].data.copy_from_slice(&lit_to_f32(&m)?);
+            let bm = it.next().unwrap();
+            state.b_momenta[l].copy_from_slice(&lit_to_f32(&bm)?);
+        }
+        let loss = it.next().unwrap().get_first_element::<f32>().context("reading loss")?;
+        Ok(loss)
+    }
+}
+
+/// Driver for `<model>_eval.hlo.txt`: loss and error over a dataset.
+pub struct EvalDriver {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    pub widths: Vec<usize>,
+    pub eval_batch: usize,
+}
+
+/// Result of an evaluation pass.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalResult {
+    pub mean_loss: f64,
+    /// Error rate in [0, 1].
+    pub error: f64,
+    pub n: usize,
+}
+
+impl EvalDriver {
+    pub fn new(rt: &mut Runtime, model: &str) -> Result<EvalDriver> {
+        let art = rt.manifest.model(model).map_err(anyhow::Error::msg)?.clone();
+        let exe = rt.executable(&art.eval_file)?;
+        Ok(EvalDriver { exe, widths: art.widths, eval_batch: art.eval_batch })
+    }
+
+    fn run_chunk(&self, state: &ParamState, x: &[f32], y: &[i32]) -> Result<(f64, i64)> {
+        let nl = self.widths.len() - 1;
+        let mut inputs = Vec::with_capacity(2 * nl + 2);
+        for l in 0..nl {
+            let w = &state.weights[l];
+            inputs.push(lit_f32(&w.data, &[w.rows, w.cols])?);
+            inputs.push(lit_f32(&state.biases[l], &[state.biases[l].len()])?);
+        }
+        inputs.push(lit_f32(x, &[self.eval_batch, self.widths[0]])?);
+        inputs.push(lit_i32(y, &[self.eval_batch])?);
+        let outs = Runtime::run(&self.exe, &inputs)?;
+        ensure!(outs.len() == 2, "eval artifact returned {} outputs", outs.len());
+        let loss_sum = outs[0].get_first_element::<f32>()? as f64;
+        let correct = lit_to_i32(&outs[1])?[0] as i64;
+        Ok((loss_sum, correct))
+    }
+
+    /// Evaluate the model on a whole dataset.  The last partial chunk is
+    /// padded with copies of example 0 and its contribution subtracted
+    /// exactly (one extra all-example-0 chunk evaluation, cached per call).
+    pub fn eval(&self, state: &ParamState, data: &Dataset) -> Result<EvalResult> {
+        let b = self.eval_batch;
+        let dim = self.widths[0];
+        ensure!(data.dim == dim, "dataset dim {} != model dim {dim}", data.dim);
+        let n = data.len();
+        ensure!(n > 0, "empty dataset");
+
+        let mut total_loss = 0.0f64;
+        let mut total_correct = 0i64;
+        let full_chunks = n / b;
+        let mut x = Vec::with_capacity(b * dim);
+        let mut y: Vec<i32> = Vec::with_capacity(b);
+        for c in 0..full_chunks {
+            let idx: Vec<usize> = (c * b..(c + 1) * b).collect();
+            data.gather(&idx, &mut x, &mut y);
+            let (l, k) = self.run_chunk(state, &x, &y)?;
+            total_loss += l;
+            total_correct += k;
+        }
+        let rem = n - full_chunks * b;
+        if rem > 0 {
+            // padded final chunk
+            let mut idx: Vec<usize> = (full_chunks * b..n).collect();
+            idx.resize(b, 0); // pad with example 0
+            data.gather(&idx, &mut x, &mut y);
+            let (l_pad, k_pad) = self.run_chunk(state, &x, &y)?;
+            // one pure-example-0 chunk gives the exact per-example values
+            let idx0 = vec![0usize; b];
+            data.gather(&idx0, &mut x, &mut y);
+            let (l0, k0) = self.run_chunk(state, &x, &y)?;
+            let pad = (b - rem) as f64;
+            total_loss += l_pad - l0 / b as f64 * pad;
+            total_correct += k_pad - ((k0 as f64 / b as f64) * pad).round() as i64;
+        }
+        Ok(EvalResult {
+            mean_loss: total_loss / n as f64,
+            error: 1.0 - total_correct as f64 / n as f64,
+            n,
+        })
+    }
+}
+
+/// Driver for `quant_assign_k<K>.hlo.txt`: the Pallas k-means E-step +
+/// sufficient statistics, used to run full Lloyd k-means with the M-step
+/// on the host (see python/compile/kernels/quant_assign.py).
+pub struct QuantDriver {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl QuantDriver {
+    /// Load the kernel for codebook size `k` able to hold `n_weights`.
+    pub fn new(rt: &mut Runtime, n_weights: usize, k: usize) -> Result<Option<QuantDriver>> {
+        let Some(art) = rt.manifest.quant_for(n_weights, k).cloned() else {
+            return Ok(None);
+        };
+        let exe = rt.executable(&art.file)?;
+        Ok(Some(QuantDriver { exe, n: art.n, k: art.k }))
+    }
+
+    /// One E-step pass: returns (assignments, distortion, per-center sums,
+    /// per-center counts), corrected for the padding.
+    pub fn assign(&self, w: &[f32], codebook: &[f32]) -> Result<(Vec<u32>, f64, Vec<f64>, Vec<u64>)> {
+        ensure!(w.len() <= self.n, "weights ({}) exceed kernel size {}", w.len(), self.n);
+        ensure!(codebook.len() == self.k, "codebook size mismatch");
+        let pad = self.n - w.len();
+        // pad with codebook[0]: zero distortion, counted in center 0
+        let mut wp = Vec::with_capacity(self.n);
+        wp.extend_from_slice(w);
+        wp.resize(self.n, codebook[0]);
+
+        let inputs = [lit_f32(&wp, &[self.n])?, lit_f32(codebook, &[self.k])?];
+        let outs = Runtime::run(&self.exe, &inputs)?;
+        ensure!(outs.len() == 4, "quant artifact returned {} outputs", outs.len());
+        let assign_raw = lit_to_i32(&outs[0])?;
+        let dist = outs[1].get_first_element::<f32>()? as f64;
+        let sums_raw = lit_to_f32(&outs[2])?;
+        let counts_raw = lit_to_f32(&outs[3])?;
+
+        let assignments: Vec<u32> = assign_raw[..w.len()].iter().map(|&a| a as u32).collect();
+        let mut sums: Vec<f64> = sums_raw.iter().map(|&s| s as f64).collect();
+        let mut counts: Vec<u64> = counts_raw.iter().map(|&c| c as u64).collect();
+        // remove the padding's contribution (pad values == codebook[0] may
+        // tie with another center; the kernel breaks argmin ties toward the
+        // lowest index, so they land in the first center equal to c[0])
+        let pad_center = codebook
+            .iter()
+            .position(|&c| c == codebook[0])
+            .unwrap_or(0);
+        sums[pad_center] -= pad as f64 * codebook[0] as f64;
+        counts[pad_center] = counts[pad_center].saturating_sub(pad as u64);
+        Ok((assignments, dist, sums, counts))
+    }
+
+    /// Full Lloyd k-means through the PJRT kernel (host M-step).
+    /// Returns (codebook, assignments).
+    pub fn kmeans(
+        &self,
+        w: &[f32],
+        init: &[f32],
+        max_iters: usize,
+    ) -> Result<(Vec<f32>, Vec<u32>)> {
+        let mut centers = init.to_vec();
+        ensure!(centers.len() == self.k);
+        let mut last_dist = f64::INFINITY;
+        let mut assignments = vec![0u32; w.len()];
+        for _ in 0..max_iters.max(1) {
+            let (assign, dist, sums, counts) = self.assign(w, &centers)?;
+            assignments = assign;
+            for j in 0..self.k {
+                if counts[j] > 0 {
+                    centers[j] = (sums[j] / counts[j] as f64) as f32;
+                }
+            }
+            if last_dist - dist <= 1e-12 * last_dist.abs().max(1.0) {
+                break;
+            }
+            last_dist = dist;
+        }
+        // final E-step so assignments match the final centers
+        let (assign, _, _, _) = self.assign(w, &centers)?;
+        assignments.copy_from_slice(&assign);
+        Ok((centers, assignments))
+    }
+}

@@ -1,0 +1,309 @@
+//! Flat f32 tensors and the dense matrix ops the C steps need (substrate).
+//!
+//! The LC coordinator owns model parameters host-side as flat `Vec<f32>`
+//! buffers (mirroring the L2 artifact calling convention) and the C-step
+//! library works on views of those buffers.  We implement exactly the dense
+//! linear algebra the compressions require — no general ndarray dependency.
+
+/// A dense row-major matrix owning its data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix data length mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// `self * other`, straightforward ikj-ordered triple loop (cache
+    /// friendly for row-major operands).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.fro_norm_sq().sqrt()
+    }
+
+    /// Squared Frobenius distance to `other`.
+    pub fn dist_sq(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| a - b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flat-slice helpers used across C steps and the coordinator.
+// ---------------------------------------------------------------------------
+
+/// Squared l2 distance between two equal-length slices (f64 accumulator).
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Squared l2 norm of a slice.
+pub fn norm_sq(a: &[f32]) -> f64 {
+    a.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(a: &[f32]) -> f64 {
+    if a.is_empty() {
+        0.0
+    } else {
+        a.iter().map(|&x| x as f64).sum::<f64>() / a.len() as f64
+    }
+}
+
+/// k-th smallest element magnitude threshold: returns the value `t` such
+/// that exactly `keep` entries of `a` have `|a_i| >= t` (ties broken
+/// arbitrarily but consistently).  O(n) average via quickselect.
+pub fn magnitude_threshold(a: &[f32], keep: usize) -> f32 {
+    assert!(keep <= a.len());
+    if keep == 0 {
+        return f32::INFINITY;
+    }
+    let mut mags: Vec<f32> = a.iter().map(|x| x.abs()).collect();
+    let idx = mags.len() - keep; // element at idx in ascending order
+    quickselect(&mut mags, idx)
+}
+
+/// In-place quickselect: value that would be at `k` in sorted order.
+pub fn quickselect(xs: &mut [f32], k: usize) -> f32 {
+    assert!(k < xs.len());
+    let (mut lo, mut hi) = (0usize, xs.len() - 1);
+    // deterministic pseudo-random pivots (avoid quadratic adversarial cases)
+    let mut state = 0x9E3779B97F4A7C15u64 ^ (xs.len() as u64);
+    loop {
+        if lo == hi {
+            return xs[lo];
+        }
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        let pivot_idx = lo + (state as usize) % (hi - lo + 1);
+        let pivot = xs[pivot_idx];
+        // three-way partition
+        let (mut i, mut j, mut p) = (lo, hi, lo);
+        while p <= j {
+            if xs[p] < pivot {
+                xs.swap(p, i);
+                i += 1;
+                p += 1;
+            } else if xs[p] > pivot {
+                xs.swap(p, j);
+                if j == 0 {
+                    break;
+                }
+                j -= 1;
+            } else {
+                p += 1;
+            }
+        }
+        if k < i {
+            hi = i - 1;
+        } else if k > j {
+            lo = j + 1;
+        } else {
+            return pivot;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let i3 = Matrix::identity(3);
+        assert_eq!(a.matmul(&i3), a);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn fro_norms() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-12);
+        let b = Matrix::zeros(1, 2);
+        assert!((a.dist_sq(&b) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slice_helpers() {
+        assert!((dist_sq(&[1.0, 2.0], &[0.0, 0.0]) - 5.0).abs() < 1e-12);
+        assert!((norm_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-12);
+        assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-12);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn quickselect_matches_sort() {
+        let xs = vec![5.0, 1.0, 4.0, 2.0, 3.0, 2.0, 9.0, -1.0];
+        for k in 0..xs.len() {
+            let mut a = xs.clone();
+            let got = quickselect(&mut a, k);
+            let mut b = xs.clone();
+            b.sort_by(|p, q| p.partial_cmp(q).unwrap());
+            assert_eq!(got, b[k], "k={k}");
+        }
+    }
+
+    #[test]
+    fn magnitude_threshold_keeps_exactly_k() {
+        let a = vec![0.1, -0.5, 0.3, -0.2, 0.9, 0.05];
+        for keep in 1..=a.len() {
+            let t = magnitude_threshold(&a, keep);
+            let kept = a.iter().filter(|x| x.abs() >= t).count();
+            assert_eq!(kept, keep, "keep={keep} t={t}");
+        }
+        assert_eq!(magnitude_threshold(&a, 0), f32::INFINITY);
+    }
+
+    #[test]
+    fn quickselect_handles_duplicates() {
+        let mut xs = vec![2.0; 100];
+        assert_eq!(quickselect(&mut xs, 50), 2.0);
+    }
+}

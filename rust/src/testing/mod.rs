@@ -1,0 +1,203 @@
+//! Mini property-testing library (proptest stand-in, substrate).
+//!
+//! Deterministic generator-driven property tests with linear shrinking:
+//! [`forall`] draws `cases` random inputs from a [`Gen`], runs the
+//! property, and on failure greedily shrinks the input before panicking
+//! with the minimal counterexample it found.
+//!
+//! Used by the coordinator invariants in `rust/tests/prop_*.rs`.
+
+use crate::util::rng::Xoshiro256;
+
+/// A generator of values plus a shrinking strategy.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Value;
+    /// Candidate smaller values (tried in order during shrinking).
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let _ = value;
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` generated inputs; shrink on failure.
+pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Xoshiro256::new(seed);
+    for case in 0..cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // greedy shrink
+            let mut best = value.clone();
+            let mut best_msg = msg;
+            let mut improved = true;
+            let mut rounds = 0;
+            while improved && rounds < 200 {
+                improved = false;
+                rounds += 1;
+                for cand in gen.shrink(&best) {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Generator: f32 vectors with configurable length range and value scale.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+    /// Include adversarial values (0, ±scale, duplicates).
+    pub edge_cases: bool,
+}
+
+impl Default for VecF32 {
+    fn default() -> Self {
+        Self { min_len: 1, max_len: 64, scale: 2.0, edge_cases: true }
+    }
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Xoshiro256) -> Vec<f32> {
+        let len = self.min_len + rng.below(self.max_len - self.min_len + 1);
+        (0..len)
+            .map(|_| {
+                if self.edge_cases && rng.below(8) == 0 {
+                    match rng.below(3) {
+                        0 => 0.0,
+                        1 => self.scale,
+                        _ => -self.scale,
+                    }
+                } else {
+                    rng.normal_f32(0.0, self.scale)
+                }
+            })
+            .collect()
+    }
+
+    fn shrink(&self, value: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        let n = value.len();
+        if n > self.min_len {
+            // halve
+            out.push(value[..(n / 2).max(self.min_len)].to_vec());
+            // drop one element
+            out.push(value[..n - 1].to_vec());
+        }
+        // zero out elements
+        if let Some(i) = value.iter().position(|&x| x != 0.0) {
+            let mut v = value.clone();
+            v[i] = 0.0;
+            out.push(v);
+        }
+        out
+    }
+}
+
+/// Generator: usize in [lo, hi].
+pub struct USize {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl Gen for USize {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Xoshiro256) -> usize {
+        self.lo + rng.below(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, value: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *value > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (value - self.lo) / 2);
+            out.push(value - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Pair generator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Xoshiro256) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&value.0)
+            .into_iter()
+            .map(|a| (a, value.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&value.1).into_iter().map(|b| (value.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(1, 50, &VecF32::default(), |v| {
+            if v.len() <= 64 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let caught = std::panic::catch_unwind(|| {
+            forall(2, 100, &VecF32 { min_len: 1, max_len: 32, scale: 1.0, edge_cases: false }, |v| {
+                if v.len() < 4 {
+                    Ok(())
+                } else {
+                    Err(format!("len {} >= 4", v.len()))
+                }
+            });
+        });
+        let msg = format!("{:?}", caught.unwrap_err().downcast_ref::<String>());
+        // greedy shrink should reach exactly the boundary length 4
+        assert!(msg.contains("len 4 >= 4"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn usize_gen_in_range() {
+        let g = USize { lo: 3, hi: 9 };
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!((3..=9).contains(&v));
+        }
+        assert!(g.shrink(&9).contains(&3));
+    }
+
+    #[test]
+    fn pair_gen_shrinks_both_sides() {
+        let g = Pair(USize { lo: 0, hi: 4 }, USize { lo: 0, hi: 4 });
+        let shrunk = g.shrink(&(4, 4));
+        assert!(shrunk.iter().any(|&(a, b)| a < 4 && b == 4));
+        assert!(shrunk.iter().any(|&(a, b)| a == 4 && b < 4));
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal command-line parser (clap stand-in, substrate).
+//!
+//! Supports the subcommand + `--flag[=| ]value` + `--switch` grammar used by
+//! the `lcc` binary and the example drivers:
+//!
+//! ```text
+//! lcc compress --config cfg.lcc --seed 42 --quiet
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--switch` flags.
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (testable); `std::env::args()`
+    /// minus argv[0] in production.
+    pub fn parse_tokens(tokens: &[String], value_opts: &[&str]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    args.options.insert(k.to_string(), v[1..].to_string());
+                } else if value_opts.contains(&stripped) {
+                    i += 1;
+                    let v = tokens
+                        .get(i)
+                        .ok_or_else(|| format!("option --{stripped} expects a value"))?;
+                    args.options.insert(stripped.to_string(), v.clone());
+                } else {
+                    args.switches.push(stripped.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok.clone());
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn parse_env(value_opts: &[&str]) -> Result<Args, String> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse_tokens(&tokens, value_opts)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("option --{key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_switches() {
+        let a = Args::parse_tokens(
+            &toks(&["compress", "--config", "c.lcc", "--seed=42", "--quiet", "extra"]),
+            &["config", "seed"],
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("compress"));
+        assert_eq!(a.get("config"), Some("c.lcc"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.has("quiet"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let err = Args::parse_tokens(&toks(&["--config"]), &["config"]).unwrap_err();
+        assert!(err.contains("expects a value"));
+    }
+
+    #[test]
+    fn get_parse_defaults_and_errors() {
+        let a = Args::parse_tokens(&toks(&["--seed=7"]), &[]).unwrap();
+        assert_eq!(a.get_parse::<u64>("seed", 0).unwrap(), 7);
+        assert_eq!(a.get_parse::<u64>("absent", 99).unwrap(), 99);
+        let b = Args::parse_tokens(&toks(&["--seed=xyz"]), &[]).unwrap();
+        assert!(b.get_parse::<u64>("seed", 0).is_err());
+    }
+
+    #[test]
+    fn equals_form_needs_no_declaration() {
+        let a = Args::parse_tokens(&toks(&["--alpha=1e-6"]), &[]).unwrap();
+        assert_eq!(a.get("alpha"), Some("1e-6"));
+    }
+}

@@ -1,0 +1,299 @@
+//! Experiment configuration files (serde/toml stand-in, substrate).
+//!
+//! A line-oriented `key = value` format with `[section]` headers, `#`
+//! comments, string/number/bool/list values — enough to express every
+//! experiment in the suite.  Example (`examples/configs/quantize.lcc`):
+//!
+//! ```text
+//! [model]
+//! name = "lenet300"
+//! seed = 42
+//!
+//! [lc]
+//! mu0 = 9e-5
+//! mu_growth = 1.1
+//! l_steps = 40
+//! epochs_per_step = 20
+//! lr0 = 0.09
+//! lr_decay = 0.98
+//!
+//! [task.all_weights]
+//! layers = [0, 1, 2]
+//! view = "vector"
+//! compression = "adaptive_quant"
+//! k = 2
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One `[section]` worth of keys.
+#[derive(Debug, Clone, Default)]
+pub struct Section {
+    pub name: String,
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Section {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+    pub fn require_str(&self, key: &str) -> Result<String, String> {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string())
+            .ok_or_else(|| format!("[{}] missing string key {key:?}", self.name))
+    }
+    pub fn usize_list(&self, key: &str) -> Result<Vec<usize>, String> {
+        let v = self
+            .get(key)
+            .and_then(|v| v.as_list())
+            .ok_or_else(|| format!("[{}] missing list key {key:?}", self.name))?;
+        v.iter()
+            .map(|x| x.as_usize().ok_or_else(|| format!("[{}] {key:?}: non-numeric list item", self.name)))
+            .collect()
+    }
+}
+
+/// A parsed config: ordered sections (order matters for tasks).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub sections: Vec<Section>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut current: Option<Section> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: unterminated section header", lineno + 1));
+                }
+                if let Some(sec) = current.take() {
+                    cfg.sections.push(sec);
+                }
+                current = Some(Section {
+                    name: line[1..line.len() - 1].trim().to_string(),
+                    entries: BTreeMap::new(),
+                });
+            } else {
+                let eq = line
+                    .find('=')
+                    .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+                let key = line[..eq].trim().to_string();
+                let val = parse_value(line[eq + 1..].trim())
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                let sec = current
+                    .as_mut()
+                    .ok_or_else(|| format!("line {}: key outside any [section]", lineno + 1))?;
+                sec.entries.insert(key, val);
+            }
+        }
+        if let Some(sec) = current.take() {
+            cfg.sections.push(sec);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&Section> {
+        self.sections.iter().find(|s| s.name == name)
+    }
+
+    /// All sections whose name starts with `prefix.` (e.g. `task.`).
+    pub fn sections_with_prefix(&self, prefix: &str) -> Vec<&Section> {
+        let pat = format!("{prefix}.");
+        self.sections.iter().filter(|s| s.name.starts_with(&pat)).collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' begins a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            return Err(format!("unterminated string: {s}"));
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(format!("unterminated list: {s}"));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value: {s}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if depth == 0 && !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+[model]
+name = "lenet300"   # the showcase net
+seed = 42
+
+[lc]
+mu0 = 9e-5
+mu_growth = 1.1
+al = true
+
+[task.q_all]
+layers = [0, 1, 2]
+view = "vector"
+compression = "adaptive_quant"
+k = 2
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.sections.len(), 3);
+        let m = cfg.section("model").unwrap();
+        assert_eq!(m.require_str("name").unwrap(), "lenet300");
+        assert_eq!(m.usize_or("seed", 0), 42);
+        let lc = cfg.section("lc").unwrap();
+        assert!((lc.f64_or("mu0", 0.0) - 9e-5).abs() < 1e-12);
+        assert_eq!(lc.get("al").unwrap().as_bool(), Some(true));
+        let tasks = cfg.sections_with_prefix("task");
+        assert_eq!(tasks.len(), 1);
+        assert_eq!(tasks[0].usize_list("layers").unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn comment_inside_string_is_kept() {
+        let cfg = Config::parse("[a]\nk = \"has # inside\"\n").unwrap();
+        assert_eq!(cfg.section("a").unwrap().require_str("k").unwrap(), "has # inside");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        assert!(Config::parse("[a]\nbroken\n").unwrap_err().contains("line 2"));
+        assert!(Config::parse("key = 1\n").unwrap_err().contains("outside any"));
+        assert!(Config::parse("[a]\nk = \"unterminated\n").unwrap_err().contains("line 2"));
+    }
+
+    #[test]
+    fn nested_lists() {
+        let cfg = Config::parse("[a]\nk = [[1, 2], [3]]\n").unwrap();
+        let v = cfg.section("a").unwrap().get("k").unwrap().as_list().unwrap();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].as_list().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn missing_keys_report_section() {
+        let cfg = Config::parse("[model]\nname = \"x\"\n").unwrap();
+        let err = cfg.section("model").unwrap().require_str("absent").unwrap_err();
+        assert!(err.contains("[model]"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Shared substrates: RNG, CLI parsing, config files, thread pool, logging.
+//!
+//! None of the usual ecosystem crates (clap/serde/rayon/log) are available
+//! in this offline build, so each is implemented here at the scale this
+//! project needs.
+
+pub mod cli;
+pub mod config;
+pub mod log;
+pub mod rng;
+pub mod threadpool;

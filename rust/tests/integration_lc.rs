@@ -1,0 +1,203 @@
+//! End-to-end LC algorithm integration tests: small but *real* runs through
+//! the PJRT L step and the Rust C step.
+
+use lc::compress::prune::ConstraintL0;
+use lc::compress::quantize::AdaptiveQuant;
+use lc::compress::task::{TaskSet, TaskSpec};
+use lc::compress::view::View;
+use lc::harness::{artifact_dir, Env, Scale};
+use lc::lc::schedule::{LrSchedule, MuSchedule};
+use lc::lc::LcConfig;
+use lc::models::lookup;
+
+fn env_or_skip(scale: Scale) -> Option<Env> {
+    if !artifact_dir().join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Env::new(scale).expect("env"))
+}
+
+fn tiny_lc_config() -> LcConfig {
+    LcConfig {
+        mu: MuSchedule { mu0: 1e-3, growth: 3.0, steps: 5 },
+        lr: LrSchedule { lr0: 0.08, decay: 0.95 },
+        epochs_per_step: 1,
+        first_step_epochs: Some(2),
+        use_al: true,
+        seed: 42,
+        threads: 2,
+        eval_every: 0,
+        quiet: true,
+    }
+}
+
+#[test]
+fn lc_quantize_end_to_end() {
+    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let spec = lookup("mlp-small").unwrap();
+    let reference = env.reference(&spec).unwrap();
+    let ref_test = env.evaluate(&reference, true).unwrap();
+
+    let tasks = TaskSet::new(vec![TaskSpec {
+        name: "q_all".into(),
+        layers: vec![0, 1],
+        view: View::Vector,
+        compression: Box::new(AdaptiveQuant::new(2)),
+    }]);
+    let out = env.run_lc(&spec, tasks, tiny_lc_config(), reference).unwrap();
+
+    // structure: every weight takes one of exactly 2 codebook values
+    let mut vals: Vec<f32> = out.compressed_state.weights[0].data.clone();
+    vals.extend_from_slice(&out.compressed_state.weights[1].data);
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.dedup();
+    assert!(vals.len() <= 2, "quantized model has {} distinct weights", vals.len());
+
+    // compression accounting: k=2 quantization of all weights ~ 25-32x
+    assert!(out.metrics.ratio() > 20.0, "ratio={}", out.metrics.ratio());
+
+    // quality: compressed model should stay within a few points of the
+    // reference (quantization to 2 values costs accuracy but the LC loop
+    // must recover most of it — direct compression is far worse)
+    let dc = {
+        let reference = env.reference(&spec).unwrap();
+        let tasks = TaskSet::new(vec![TaskSpec {
+            name: "q_all".into(),
+            layers: vec![0, 1],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(2)),
+        }]);
+        env.run_dc(&spec, &tasks, &reference, 1e-3).unwrap()
+    };
+    assert!(
+        out.final_test.error <= dc.test.error + 0.02,
+        "LC ({:.3}) must beat or match direct compression ({:.3})",
+        out.final_test.error,
+        dc.test.error
+    );
+    // sanity: errors are meaningful probabilities
+    assert!(out.final_test.error >= 0.0 && out.final_test.error <= 1.0);
+    assert!(ref_test.error < 0.5, "reference should be well-trained");
+
+    // telemetry: records complete, feasibility shrinks over the run
+    assert_eq!(out.records.len(), 5);
+    let first_feas = out.records.first().unwrap().feasibility;
+    let last_feas = out.records.last().unwrap().feasibility;
+    assert!(
+        last_feas < first_feas,
+        "feasibility must shrink: {first_feas:.3e} -> {last_feas:.3e}"
+    );
+}
+
+#[test]
+fn lc_prune_end_to_end_sparsity_exact() {
+    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let spec = lookup("mlp-small").unwrap();
+    let reference = env.reference(&spec).unwrap();
+    let kappa = spec.n_weights() / 20; // keep 5%
+
+    let tasks = TaskSet::new(vec![TaskSpec {
+        name: "prune".into(),
+        layers: vec![0, 1],
+        view: View::Vector,
+        compression: Box::new(ConstraintL0 { kappa }),
+    }]);
+    let out = env.run_lc(&spec, tasks, tiny_lc_config(), reference).unwrap();
+
+    let nnz: usize = out
+        .compressed_state
+        .weights
+        .iter()
+        .map(|w| w.data.iter().filter(|&&x| x != 0.0).count())
+        .sum();
+    assert!(nnz <= kappa, "pruned model has {nnz} > kappa={kappa} nonzeros");
+    assert!(out.metrics.flops_ratio() > 5.0, "flops ratio {}", out.metrics.flops_ratio());
+    assert!(out.final_test.error < 0.6, "err={}", out.final_test.error);
+}
+
+#[test]
+fn lc_mixed_tasks_and_uncovered_layer() {
+    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let spec = lookup("lenet300").unwrap();
+    let reference = env.reference(&spec).unwrap();
+    let ref_w1 = reference.weights[1].clone();
+
+    // quantize layer 0, prune layer 2, leave layer 1 uncompressed
+    let tasks = TaskSet::new(vec![
+        TaskSpec {
+            name: "q0".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(4)),
+        },
+        TaskSpec {
+            name: "p2".into(),
+            layers: vec![2],
+            view: View::Vector,
+            compression: Box::new(ConstraintL0 { kappa: 200 }),
+        },
+    ]);
+    let mut cfg = tiny_lc_config();
+    cfg.mu.steps = 3;
+    let out = env.run_lc(&spec, tasks, cfg, reference).unwrap();
+
+    // layer 0 quantized to <= 4 values
+    let mut v0 = out.compressed_state.weights[0].data.clone();
+    v0.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v0.dedup();
+    assert!(v0.len() <= 4, "layer0 has {} distinct values", v0.len());
+    // layer 2 sparse
+    let nnz2 = out.compressed_state.weights[2].data.iter().filter(|&&x| x != 0.0).count();
+    assert!(nnz2 <= 200);
+    // layer 1 was trained (not projected): many distinct values, and it
+    // moved from the reference (it kept training during L steps)
+    let mut v1 = out.compressed_state.weights[1].data.clone();
+    v1.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v1.dedup();
+    assert!(v1.len() > 1000, "uncovered layer should stay dense/continuous");
+    assert_ne!(out.compressed_state.weights[1].data, ref_w1.data);
+    // per-task distortion telemetry present
+    assert_eq!(out.records.last().unwrap().task_distortions.len(), 2);
+}
+
+#[test]
+fn lc_qp_mode_also_converges() {
+    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let spec = lookup("mlp-small").unwrap();
+    let reference = env.reference(&spec).unwrap();
+    let tasks = TaskSet::new(vec![TaskSpec {
+        name: "q".into(),
+        layers: vec![0, 1],
+        view: View::Vector,
+        compression: Box::new(AdaptiveQuant::new(4)),
+    }]);
+    let mut cfg = tiny_lc_config();
+    cfg.use_al = false; // quadratic-penalty variant
+    let out = env.run_lc(&spec, tasks, cfg, reference).unwrap();
+    assert!(out.final_test.error < 0.5);
+    let first = out.records.first().unwrap().feasibility;
+    let last = out.records.last().unwrap().feasibility;
+    assert!(last < first);
+}
+
+#[test]
+fn lc_monitor_clean_on_wellbehaved_run() {
+    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let spec = lookup("mlp-small").unwrap();
+    let reference = env.reference(&spec).unwrap();
+    let tasks = TaskSet::new(vec![TaskSpec {
+        name: "q".into(),
+        layers: vec![0, 1],
+        view: View::Vector,
+        compression: Box::new(AdaptiveQuant::new(8)),
+    }]);
+    let out = env.run_lc(&spec, tasks, tiny_lc_config(), reference).unwrap();
+    // constraint-form quantization with a healthy schedule should trigger
+    // no monitor violations (the paper's section-7 diagnostics)
+    assert!(
+        out.monitor.violations.len() <= 1,
+        "unexpected violations: {:?}",
+        out.monitor.violations
+    );
+}

@@ -1,0 +1,250 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These exercise the Rust ⇄ HLO contract end to end: the train artifact
+//! must implement the documented penalized-SGD semantics, the eval artifact
+//! must count correctly, and the Pallas quant_assign artifact must agree
+//! with the pure-Rust k-means E-step.
+//!
+//! Requires `make artifacts` to have run (skipped with a clear message
+//! otherwise).
+
+use lc::compress::quantize::kmeans_scalar;
+use lc::data::synth;
+use lc::harness::artifact_dir;
+use lc::models::{lookup, ParamState};
+use lc::runtime::trainer::{EvalDriver, QuantDriver, TrainDriver};
+use lc::runtime::Runtime;
+use lc::tensor::Matrix;
+use lc::util::rng::Xoshiro256;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn zeros_like(spec: &lc::models::ModelSpec) -> Vec<Matrix> {
+    (0..spec.n_layers())
+        .map(|l| {
+            let (m, n) = spec.layer_shape(l);
+            Matrix::zeros(m, n)
+        })
+        .collect()
+}
+
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = lookup("mlp-small").unwrap();
+    let train = TrainDriver::new(&mut rt, &spec.name).unwrap();
+    let mut state = ParamState::init(&spec, 3);
+    let data = synth::generate(train.batch, 5, 2);
+    let idx: Vec<usize> = (0..train.batch).collect();
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    data.gather(&idx, &mut x, &mut y);
+
+    let zeros = zeros_like(&spec);
+    let mu = vec![0.0f32; spec.n_layers()];
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let loss = train.step(&mut state, &x, &y, &zeros, &zeros, &mu, 0.1).unwrap();
+        losses.push(loss);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.8),
+        "SGD on a fixed batch must reduce loss: {losses:?}"
+    );
+}
+
+#[test]
+fn train_step_penalty_pulls_weights_toward_delta() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = lookup("mlp-small").unwrap();
+    let train = TrainDriver::new(&mut rt, &spec.name).unwrap();
+    let data = synth::generate(train.batch, 6, 2);
+    let idx: Vec<usize> = (0..train.batch).collect();
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    data.gather(&idx, &mut x, &mut y);
+
+    // deltas = 0 with a large mu: weights should shrink toward zero much
+    // faster than with mu = 0
+    let zeros = zeros_like(&spec);
+    let run = |mu_val: f32| {
+        let mut st = ParamState::init(&spec, 7);
+        let mu = vec![mu_val; spec.n_layers()];
+        for _ in 0..6 {
+            train.step(&mut st, &x, &y, &zeros, &zeros, &mu, 0.05).unwrap();
+        }
+        st.weights.iter().map(|w| w.fro_norm_sq()).sum::<f64>()
+    };
+    let norm_free = run(0.0);
+    let norm_penalized = run(5.0);
+    assert!(
+        norm_penalized < norm_free * 0.5,
+        "penalty must shrink weights: free={norm_free:.4} penalized={norm_penalized:.4}"
+    );
+}
+
+#[test]
+fn train_step_lambda_shifts_attachment_point() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = lookup("mlp-small").unwrap();
+    let train = TrainDriver::new(&mut rt, &spec.name).unwrap();
+    let data = synth::generate(train.batch, 8, 2);
+    let idx: Vec<usize> = (0..train.batch).collect();
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    data.gather(&idx, &mut x, &mut y);
+
+    // with lambda = mu * target and delta = 0, the effective attachment is
+    // delta + lambda/mu = target
+    let mu_val = 10.0f32;
+    let target = 0.05f32;
+    let zeros = zeros_like(&spec);
+    let lambdas: Vec<Matrix> = (0..spec.n_layers())
+        .map(|l| {
+            let (m, n) = spec.layer_shape(l);
+            Matrix::from_vec(m, n, vec![mu_val * target; m * n])
+        })
+        .collect();
+    let mu = vec![mu_val; spec.n_layers()];
+    let mut st = ParamState::init(&spec, 9);
+    for _ in 0..20 {
+        train.step(&mut st, &x, &y, &zeros, &lambdas, &mu, 0.05).unwrap();
+    }
+    // mean weight should be pulled toward +target rather than 0
+    let mean: f64 = st.weights.iter().map(|w| lc::tensor::mean(&w.data)).sum::<f64>()
+        / spec.n_layers() as f64;
+    assert!(mean > target as f64 * 0.3, "mean={mean} should approach {target}");
+}
+
+#[test]
+fn eval_driver_counts_match_train_driver_predictions() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = lookup("mlp-small").unwrap();
+    let eval = EvalDriver::new(&mut rt, &spec.name).unwrap();
+    let state = ParamState::init(&spec, 11);
+    // random init on 10 classes: error should be near 90%
+    let data = synth::generate(1024, 7, 2);
+    let r = eval.eval(&state, &data).unwrap();
+    assert_eq!(r.n, 1024);
+    assert!(r.error > 0.75 && r.error <= 1.0, "random-init error {}", r.error);
+    assert!(r.mean_loss > 1.5, "random-init loss {}", r.mean_loss);
+}
+
+#[test]
+fn eval_driver_handles_non_divisible_dataset() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let spec = lookup("mlp-small").unwrap();
+    let eval = EvalDriver::new(&mut rt, &spec.name).unwrap();
+    let state = ParamState::init(&spec, 11);
+    let full = synth::generate(700, 9, 2); // 700 = 512 + 188 (padded chunk)
+    let r_padded = eval.eval(&state, &full).unwrap();
+    assert_eq!(r_padded.n, 700);
+    // brute-force check: evaluate in two slices via a divisible dataset
+    // by comparing against the 512-prefix + recomputing total from parts
+    let (head, tail) = full.clone().split(512);
+    let r_head = eval.eval(&state, &head).unwrap();
+    let r_tail = eval.eval(&state, &tail).unwrap();
+    let total_correct =
+        (1.0 - r_head.error) * 512.0 + (1.0 - r_tail.error) * 188.0;
+    let got_correct = (1.0 - r_padded.error) * 700.0;
+    assert!(
+        (total_correct - got_correct).abs() < 1.5,
+        "correct counts disagree: {got_correct} vs {total_correct}"
+    );
+    let total_loss = r_head.mean_loss * 512.0 + r_tail.mean_loss * 188.0;
+    assert!(
+        (total_loss - r_padded.mean_loss * 700.0).abs() < 0.05 * total_loss,
+        "loss disagrees"
+    );
+}
+
+#[test]
+fn quant_artifact_matches_rust_kmeans_estep() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Xoshiro256::new(13);
+    let w: Vec<f32> = (0..10_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    for k in [2usize, 4, 16] {
+        let Some(drv) = QuantDriver::new(&mut rt, w.len(), k).unwrap() else {
+            eprintln!("SKIP k={k}: no quant artifact");
+            continue;
+        };
+        // fixed codebook: percentile-ish init
+        let codebook: Vec<f32> =
+            (0..k).map(|j| -1.5 + 3.0 * j as f32 / (k - 1).max(1) as f32).collect();
+        let (assign, dist, sums, counts) = drv.assign(&w, &codebook).unwrap();
+        // oracle E-step in Rust
+        let mut dist_ref = 0.0f64;
+        let mut sums_ref = vec![0.0f64; k];
+        let mut counts_ref = vec![0u64; k];
+        for (i, &wi) in w.iter().enumerate() {
+            let mut best = 0usize;
+            let mut bestd = f32::INFINITY;
+            for (j, &c) in codebook.iter().enumerate() {
+                let d = (wi - c) * (wi - c);
+                if d < bestd {
+                    bestd = d;
+                    best = j;
+                }
+            }
+            assert_eq!(assign[i] as usize, best, "assignment {i} for k={k}");
+            dist_ref += bestd as f64;
+            sums_ref[best] += wi as f64;
+            counts_ref[best] += 1;
+        }
+        assert!((dist - dist_ref).abs() < 1e-2 * dist_ref.max(1.0), "k={k} dist");
+        for j in 0..k {
+            assert_eq!(counts[j], counts_ref[j], "k={k} counts[{j}]");
+            assert!((sums[j] - sums_ref[j]).abs() < 1e-2 * sums_ref[j].abs().max(1.0));
+        }
+    }
+}
+
+#[test]
+fn quant_artifact_full_kmeans_close_to_rust_lloyd() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut rng = Xoshiro256::new(17);
+    let w: Vec<f32> = (0..50_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let k = 4;
+    let Some(drv) = QuantDriver::new(&mut rt, w.len(), k).unwrap() else {
+        eprintln!("SKIP: no quant artifact");
+        return;
+    };
+    // identical init for both implementations
+    let init = vec![-1.5f32, -0.5, 0.5, 1.5];
+    let (cb_pjrt, asg_pjrt) = drv.kmeans(&w, &init, 50).unwrap();
+    let (cb_rust, asg_rust) = lc::compress::quantize::lloyd_with_init(&w, &init, 50);
+    let dist = |cb: &[f32], asg: &[u32]| -> f64 {
+        w.iter()
+            .zip(asg.iter())
+            .map(|(&x, &a)| ((x - cb[a as usize]) as f64).powi(2))
+            .sum()
+    };
+    let d_pjrt = dist(&cb_pjrt, &asg_pjrt);
+    let d_rust = dist(&cb_rust, &asg_rust);
+    // same init, same update rule -> same fixed point (float tolerance)
+    assert!(
+        (d_pjrt - d_rust).abs() < 1e-3 * d_rust,
+        "PJRT kmeans {d_pjrt:.3} vs rust {d_rust:.3}"
+    );
+    // and its codebook must match
+    let mut cb_p = cb_pjrt.clone();
+    cb_p.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for (a, b) in cb_p.iter().zip(cb_rust.iter()) {
+        assert!((a - b).abs() < 1e-3, "codebooks differ: {cb_p:?} vs {cb_rust:?}");
+    }
+}
+
+#[test]
+fn manifest_matches_model_registry() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for spec in lc::models::registry() {
+        let art = rt.manifest.model(&spec.name).unwrap();
+        assert_eq!(art.widths, spec.widths);
+        assert_eq!(art.batch, spec.batch);
+        assert_eq!(art.eval_batch, spec.eval_batch);
+    }
+}

@@ -3,25 +3,23 @@
 //! behind the paper's headline claim that *compression runtime is
 //! comparable to training the reference*.
 //!
-//! `cargo bench --bench e2e_bench` (requires `make artifacts`).
+//! `cargo bench --bench e2e_bench`.  Runs on whichever backend the runtime
+//! auto-selects (native needs no artifacts).
 
 use lc::bench::Bencher;
 use lc::compress::prune::ConstraintL0;
 use lc::compress::quantize::AdaptiveQuant;
 use lc::compress::task::{TaskSet, TaskSpec};
 use lc::compress::view::View;
-use lc::harness::{artifact_dir, Env, Scale};
+use lc::harness::{Env, Scale};
 use lc::lc::schedule::{LrSchedule, MuSchedule};
 use lc::lc::{LcAlgorithm, LcConfig};
 use lc::models::lookup;
 
 fn main() {
-    if !artifact_dir().join("manifest.txt").exists() {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
-        return;
-    }
     let scale = Scale { n_train: 2048, n_test: 512, reference_epochs: 2, ..Default::default() };
     let mut env = Env::new(scale).expect("env");
+    println!("backend: {}", env.rt.backend_name());
     let spec = lookup("lenet300").unwrap();
     let mut b = Bencher::default();
     b.budget = std::time::Duration::from_secs(20);

@@ -1,8 +1,10 @@
-//! L-step (PJRT) benchmarks: per-train-step latency, eval throughput,
-//! literal-marshalling overhead, and the Pallas quant_assign artifact vs
-//! the pure-Rust k-means E-step.
+//! L-step benchmarks: per-train-step latency, eval throughput,
+//! literal-marshalling overhead, and the quant_assign kernel vs the
+//! pure-Rust k-means E-step.
 //!
-//! `cargo bench --bench lstep_bench` (requires `make artifacts`).
+//! `cargo bench --bench lstep_bench`.  Runs on whichever backend the
+//! runtime auto-selects: native (always available) or PJRT artifacts
+//! (`make artifacts` + real bindings) — the printed backend name says which.
 
 use lc::bench::Bencher;
 use lc::data::synth;
@@ -14,15 +16,11 @@ use lc::tensor::Matrix;
 use lc::util::rng::Xoshiro256;
 
 fn main() {
-    let dir = artifact_dir();
-    if !dir.join("manifest.txt").exists() {
-        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
-        return;
-    }
-    let mut rt = Runtime::new(&dir).expect("runtime");
+    let mut rt = Runtime::new(&artifact_dir()).expect("runtime");
+    println!("backend: {} ({})", rt.backend_name(), rt.platform());
     let mut b = Bencher::default();
 
-    Bencher::header("L step: one penalized SGD train step via PJRT");
+    Bencher::header("L step: one penalized SGD train step");
     for model in ["mlp-small", "lenet300", "lenet300-wide"] {
         let spec = lookup(model).unwrap();
         let train = TrainDriver::new(&mut rt, model).unwrap();
@@ -44,7 +42,7 @@ fn main() {
         });
     }
 
-    Bencher::header("eval: full test-set pass via PJRT");
+    Bencher::header("eval: full test-set pass");
     for model in ["mlp-small", "lenet300"] {
         let spec = lookup(model).unwrap();
         let eval = EvalDriver::new(&mut rt, model).unwrap();
@@ -70,7 +68,7 @@ fn main() {
         });
     }
 
-    Bencher::header("quantization C step: Pallas artifact vs pure Rust");
+    Bencher::header("quantization C step: E-step kernel vs pure Rust");
     {
         let mut rng = Xoshiro256::new(4);
         let n = 266_200usize;
@@ -78,16 +76,34 @@ fn main() {
         let k = 4;
         let init = vec![-1.5f32, -0.5, 0.5, 1.5];
         if let Some(drv) = QuantDriver::new(&mut rt, n, k).unwrap() {
-            b.bench_elems(&format!("quant_assign PJRT E-step n={n} k={k}"), n as u64, || {
+            b.bench_elems(&format!("quant_assign kernel E-step n={n} k={k}"), n as u64, || {
                 drv.assign(&w, &init).unwrap()
             });
-            b.bench_elems(&format!("full kmeans via PJRT n={n} k={k}"), n as u64, || {
+            b.bench_elems(&format!("full kmeans via kernel n={n} k={k}"), n as u64, || {
                 drv.kmeans(&w, &init, 30).unwrap()
             });
         }
         b.bench_elems(&format!("full kmeans pure Rust n={n} k={k}"), n as u64, || {
             lc::compress::quantize::lloyd_with_init(&w, &init, 30)
         });
+    }
+
+    Bencher::header("native GEMM (tensor::matmul_par)");
+    {
+        let mut rng = Xoshiro256::new(9);
+        for &(m, k, n) in &[(128usize, 784usize, 300usize), (128, 784, 100), (512, 784, 300)] {
+            let mut a = Matrix::zeros(m, k);
+            rng.fill_normal(&mut a.data, 0.0, 1.0);
+            let mut bm = Matrix::zeros(k, n);
+            rng.fill_normal(&mut bm.data, 0.0, 1.0);
+            let macs = (m * k * n) as u64;
+            b.bench_elems(&format!("matmul serial {m}x{k}x{n}"), macs, || a.matmul(&bm));
+            for threads in [2usize, 4, 8] {
+                b.bench_elems(&format!("matmul_par t={threads} {m}x{k}x{n}"), macs, || {
+                    a.matmul_par(&bm, threads)
+                });
+            }
+        }
     }
 
     println!("\ntotal benchmarks: {}", b.results.len());

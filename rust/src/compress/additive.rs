@@ -35,6 +35,23 @@ impl Compression for AdditiveCombination {
         self.components.iter().any(|c| c.needs_matrix())
     }
 
+    fn constraint_form(&self) -> bool {
+        // Always false: even when every component is constraint-form, the
+        // joint C step is a *cold-started local* block-coordinate solver
+        // (see the comment in `compress`: a later run may land on a worse
+        // joint configuration), so the §7 "fresh Θ at least as good as
+        // stale Θ" invariant the monitor checks does not hold — gating it
+        // off avoids the same false-positive class as penalty-form schemes.
+        false
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        for c in &self.components {
+            c.validate().map_err(|e| format!("component {}: {e}", c.name()))?;
+        }
+        Ok(())
+    }
+
     fn compress(&self, view: &ViewData, ctx: &CContext) -> Theta {
         let w = view.as_flat();
         let n = w.len();

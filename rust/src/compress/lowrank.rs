@@ -43,10 +43,24 @@ impl Compression for LowRank {
         true
     }
 
+    fn validate(&self) -> Result<(), String> {
+        if self.target_rank == 0 {
+            return Err(
+                "low_rank: target_rank 0 would zero the layer; use rank_selection (which may \
+                 choose rank 0) or a rank >= 1"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+
     fn compress(&self, view: &ViewData, _ctx: &CContext) -> Theta {
+        // rank 0 is rejected by `validate` (TaskSet::validate runs it before
+        // any C step); the old silent clamp to rank 1 hid misconfigurations
+        assert!(self.target_rank >= 1, "LowRank{{target_rank: 0}} must be rejected at validation");
         let m = view.as_matrix();
         let d = svd(m);
-        let r = self.target_rank.min(d.s.len()).max(1);
+        let r = self.target_rank.min(d.s.len());
         let (u, s, v) = truncate(&d, r);
         Theta::LowRank { u, s, v }
     }
@@ -68,6 +82,15 @@ impl RankSelection {
     }
 
     /// Cost C(r) for an m x n layer under the configured model.
+    ///
+    /// For a *dense* layer the two criteria genuinely coincide: storing the
+    /// factors `U·diag(S)` (m×r) and `V` (n×r) takes `r·(m+n)` floats, and
+    /// inference through the factored layer (`x → (x·U')·Vᵀ`) costs
+    /// `r·(m+n)` MACs per example — so both arms intentionally share one
+    /// formula (pinned by `cost_models_coincide_for_dense_layers`).  The
+    /// enum is kept because the criteria diverge for structured layers
+    /// (e.g. convolutions, where FLOPs scale with the spatial output size
+    /// while storage does not), which a future conv path will dispatch on.
     pub fn cost_of(&self, r: usize, m: usize, n: usize) -> f64 {
         match self.cost {
             RankCost::Storage | RankCost::Flops => (r * (m + n)) as f64,
@@ -102,6 +125,10 @@ impl Compression for RankSelection {
 
     fn needs_matrix(&self) -> bool {
         true
+    }
+
+    fn constraint_form(&self) -> bool {
+        false // the selected rank trades tail energy against λ·C(r) at rate μ
     }
 
     fn compress(&self, view: &ViewData, ctx: &CContext) -> Theta {
@@ -216,5 +243,34 @@ mod tests {
         let d = svd(&w);
         let rs = RankSelection { lambda: 0.0, cost: RankCost::Flops, max_rank: 3 };
         assert!(rs.select_rank(&d.s, 10, 10, 1.0) <= 3);
+    }
+
+    #[test]
+    fn rank_zero_rejected_at_validation() {
+        assert!(LowRank { target_rank: 0 }.validate().is_err());
+        assert!(LowRank { target_rank: 1 }.validate().is_ok());
+        // and through the task system
+        use crate::compress::task::{TaskSet, TaskSpec};
+        use crate::compress::view::View;
+        let ts = TaskSet::new(vec![TaskSpec {
+            name: "lr0".into(),
+            layers: vec![0],
+            view: View::Matrix,
+            compression: Box::new(LowRank { target_rank: 0 }),
+        }]);
+        let err = ts.validate(2).unwrap_err();
+        assert!(err.contains("target_rank 0"), "{err}");
+    }
+
+    #[test]
+    fn cost_models_coincide_for_dense_layers() {
+        // pins the intended dense-layer values: C(r) = r·(m+n) for both
+        // criteria (see the cost_of doc comment for why they coincide)
+        for &(r, m, n, want) in &[(1usize, 10usize, 20usize, 30.0f64), (3, 10, 20, 90.0), (5, 784, 300, 5420.0)] {
+            let storage = RankSelection { lambda: 1.0, cost: RankCost::Storage, max_rank: 0 };
+            let flops = RankSelection { lambda: 1.0, cost: RankCost::Flops, max_rank: 0 };
+            assert_eq!(storage.cost_of(r, m, n), want);
+            assert_eq!(flops.cost_of(r, m, n), want);
+        }
     }
 }

@@ -143,6 +143,24 @@ pub trait Compression: Send + Sync {
     fn needs_matrix(&self) -> bool {
         false
     }
+
+    /// Whether the C step is *constraint-form* — an exact l2 projection
+    /// onto a μ-independent feasible set, so at equal `w` the fresh Θ can
+    /// never fit worse than a stale one — as opposed to *penalty-form*
+    /// (ℓ0/ℓ1-penalty pruning, rank selection), which trades distortion
+    /// against the compression cost at a μ-dependent exchange rate and may
+    /// legitimately return a higher-distortion Θ.  The coordinator's §7
+    /// monitor only applies its distortion-monotonicity check to
+    /// constraint-form schemes (see `lc/algorithm.rs`).
+    fn constraint_form(&self) -> bool {
+        true
+    }
+
+    /// Static validation of the scheme's hyper-parameters; surfaced through
+    /// `TaskSet::validate` before any C step runs.
+    fn validate(&self) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 /// Distortion ‖w − Δ(Θ)‖² of a proposed Θ against the view it came from.
@@ -196,5 +214,44 @@ mod tests {
         let view = ViewData::Vector(vec![1.0, -1.0]);
         let t = Theta::Quantized { codebook: vec![-1.0, 1.0], assignments: vec![1, 0] };
         assert_eq!(distortion(&view, &t), 0.0);
+    }
+
+    #[test]
+    fn constraint_form_classification() {
+        use crate::compress::lowrank::{LowRank, RankSelection};
+        use crate::compress::prune::{ConstraintL0, ConstraintL1, PenaltyL0, PenaltyL1};
+        use crate::compress::quantize::{AdaptiveQuant, BinaryQuant, TernaryQuant};
+
+        // constraint-form: projections onto fixed feasible sets
+        assert!(AdaptiveQuant::new(2).constraint_form());
+        assert!(BinaryQuant { scaled: true }.constraint_form());
+        assert!(TernaryQuant.constraint_form());
+        assert!(ConstraintL0 { kappa: 3 }.constraint_form());
+        assert!(ConstraintL1 { kappa: 1.0 }.constraint_form());
+        assert!(LowRank { target_rank: 2 }.constraint_form());
+        // penalty-form: μ-dependent distortion/cost trade-off
+        assert!(!PenaltyL0 { alpha: 1e-4 }.constraint_form());
+        assert!(!PenaltyL1 { alpha: 1e-4 }.constraint_form());
+        assert!(!RankSelection::new(1e-4).constraint_form());
+        // additive: never checked — its block-coordinate C step is a
+        // cold-started local solver, so the projection invariant fails
+        // even with all-constraint components
+        let add = crate::compress::additive::AdditiveCombination::new(vec![
+            Box::new(AdaptiveQuant::new(2)),
+            Box::new(ConstraintL0 { kappa: 3 }),
+        ]);
+        assert!(!add.constraint_form());
+    }
+
+    #[test]
+    fn penalty_form_distortion_not_monotone_in_mu() {
+        // The rationale for the monitor gate: a penalty-form C step at a
+        // smaller mu keeps fewer weights, so its distortion at the same w is
+        // larger — the distortion-only §7 check would flag a healthy run.
+        use crate::compress::prune::PenaltyL0;
+        let view = ViewData::Vector(vec![0.5, 1.5, -0.1, -2.0]);
+        let keep_more = PenaltyL0 { alpha: 0.5 }.compress(&view, &CContext { mu: 100.0 });
+        let keep_less = PenaltyL0 { alpha: 0.5 }.compress(&view, &CContext { mu: 1.0 });
+        assert!(distortion(&view, &keep_less) > distortion(&view, &keep_more));
     }
 }

@@ -30,7 +30,11 @@ impl Compression for ConstraintL0 {
         // Two passes so threshold ties cannot displace strictly-larger
         // entries (caught by prop_l0_prune_is_projection: with many zeros
         // the threshold is 0 and a one-pass `>= t` scan keeps the first
-        // kappa zeros instead of the large weights).
+        // kappa zeros instead of the large weights).  The pass predicates
+        // `|x| > t` and `|x| == t` are disjoint, so the tie pass can never
+        // revisit a pass-1 index and needs no dedup at all — the old
+        // `indices.contains` scan was O(n·kappa) pure overhead on
+        // many-ties inputs like mostly-zero layers.
         let mut indices = Vec::with_capacity(kappa);
         let mut values = Vec::with_capacity(kappa);
         for (i, &x) in w.iter().enumerate() {
@@ -44,7 +48,7 @@ impl Compression for ConstraintL0 {
                 if indices.len() >= kappa {
                     break;
                 }
-                if x.abs() == t && !indices.contains(&(i as u32)) {
+                if x.abs() == t {
                     indices.push(i as u32);
                     values.push(x);
                 }
@@ -102,6 +106,10 @@ impl Compression for PenaltyL0 {
         }
         Theta::Sparse { len: w.len(), indices, values }
     }
+
+    fn constraint_form(&self) -> bool {
+        false // μ-dependent hard threshold: distortion trades against α‖θ‖₀
+    }
 }
 
 /// ℓ1-penalty pruning: objective `L(w) + α‖w‖₁`; C step soft-thresholds
@@ -129,6 +137,10 @@ impl Compression for PenaltyL1 {
             }
         }
         Theta::Sparse { len: w.len(), indices, values }
+    }
+
+    fn constraint_form(&self) -> bool {
+        false // μ-dependent soft threshold: distortion trades against α‖θ‖₁
     }
 }
 
@@ -233,6 +245,39 @@ mod tests {
         } else {
             panic!();
         }
+    }
+
+    #[test]
+    fn l0_all_ties_large_input_exact_support() {
+        // Worst case for the old O(n·kappa) `contains` scan: an all-ties
+        // input (mostly-zero layer) where the threshold is the tie value and
+        // the whole support is filled in the tie pass.
+        let n = 50_000usize;
+        let kappa = 20_000usize;
+        let mut w = vec![0.0f32; n];
+        for i in 0..100 {
+            w[i * 7] = 1.0; // a few large entries, rest all-ties at 0
+        }
+        let view = ViewData::Vector(w.clone());
+        let t = ConstraintL0 { kappa }.compress(&view, &CContext::default());
+        if let Theta::Sparse { indices, values, len } = &t {
+            assert_eq!(*len, n);
+            assert_eq!(values.len(), kappa, "support must be exactly kappa");
+            // indices strictly increasing (sorted, unique)
+            for p in indices.windows(2) {
+                assert!(p[0] < p[1], "indices not sorted/unique: {:?}", &p);
+            }
+            // every strictly-above-threshold entry is kept
+            let kept: std::collections::HashSet<u32> = indices.iter().copied().collect();
+            for i in 0..100 {
+                assert!(kept.contains(&((i * 7) as u32)), "large entry {i} dropped");
+            }
+        } else {
+            panic!();
+        }
+        // and it is still the exact l2 projection
+        let d = distortion(&view, &t);
+        assert_eq!(d, 0.0, "dropping only zeros costs nothing");
     }
 
     #[test]

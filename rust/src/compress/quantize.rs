@@ -61,6 +61,13 @@ impl Compression for AdaptiveQuant {
         };
         Theta::Quantized { codebook, assignments }
     }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.k == 0 {
+            return Err("adaptive_quant: codebook size k must be >= 1".into());
+        }
+        Ok(())
+    }
 }
 
 /// Lloyd's algorithm on scalars with k-means++ seeding.

@@ -90,12 +90,17 @@ impl TaskSet {
     /// * layer ids in range,
     /// * no layer covered twice,
     /// * matrix-view tasks cover exactly one layer,
-    /// * matrix-requiring compressions (low-rank family) use matrix views.
+    /// * matrix-requiring compressions (low-rank family) use matrix views,
+    /// * each scheme's own hyper-parameter validation passes
+    ///   ([`Compression::validate`], e.g. `low_rank` rejects rank 0).
     pub fn validate(&self, n_layers: usize) -> Result<(), String> {
         let mut covered = vec![false; n_layers];
         for t in &self.tasks {
             if t.layers.is_empty() {
                 return Err(format!("task {}: no layers", t.name));
+            }
+            if let Err(e) = t.compression.validate() {
+                return Err(format!("task {}: {e}", t.name));
             }
             for &l in &t.layers {
                 if l >= n_layers {

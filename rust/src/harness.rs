@@ -64,9 +64,16 @@ pub struct Env {
 }
 
 impl Env {
+    /// Auto-selected backend: PJRT when artifacts are available, otherwise
+    /// the native CPU backend — experiments run hermetically either way.
     pub fn new(scale: Scale) -> Result<Env> {
+        Self::with_backend(scale, crate::runtime::BackendChoice::Auto)
+    }
+
+    pub fn with_backend(scale: Scale, choice: crate::runtime::BackendChoice) -> Result<Env> {
         let dir = artifact_dir();
-        let rt = Runtime::new(&dir)?;
+        let rt = Runtime::with_backend_threads(&dir, choice, scale.threads)?;
+        crate::info!("L-step backend: {}", rt.backend_name());
         let (train_data, test_data) =
             synth::train_test(scale.n_train, scale.n_test, scale.data_seed, scale.threads);
         Ok(Env { rt, train_data, test_data, scale })

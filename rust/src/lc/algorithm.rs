@@ -367,14 +367,15 @@ impl LcAlgorithm {
 
         let mut dists = Vec::with_capacity(n_tasks);
         for (ti, (theta, view, dist)) in results.into_iter().enumerate() {
-            // §7 invariant: new projection at least as good as stale Θ
+            // §7 invariant: new projection at least as good as stale Θ.
+            // It only holds for constraint-form schemes (exact l2
+            // projections); penalty-form schemes (ℓ0/ℓ1 penalty, rank
+            // selection) legitimately trade distortion against the
+            // compression cost as μ changes, so checking them would record
+            // false positives — gated on `Compression::constraint_form`.
             if let Some(old) = &thetas[ti] {
-                // Penalty-form schemes (ℓ0/ℓ1 penalty, rank selection)
-                // legitimately trade distortion against the compression cost
-                // as μ changes, so the distortion-only check applies to
-                // constraint-form schemes; we still record it for all.
-                let old_dist = distortion(&view, old);
-                if step != usize::MAX {
+                if step != usize::MAX && self.tasks.tasks[ti].compression.constraint_form() {
+                    let old_dist = distortion(&view, old);
                     monitor.check_c_step(step, &self.tasks.tasks[ti].name, old_dist, dist);
                 }
             }

@@ -42,6 +42,7 @@ use crate::compress::Compression;
 use crate::lc::schedule::{LrSchedule, MuSchedule};
 use crate::lc::LcConfig;
 use crate::models::{lookup, ModelSpec};
+use crate::runtime::BackendChoice;
 use crate::util::config::{Config, Section};
 
 /// A fully specified experiment parsed from a config file.
@@ -54,6 +55,9 @@ pub struct Experiment {
     pub n_test: usize,
     pub data_seed: u64,
     pub reference_epochs: usize,
+    /// L-step execution backend (`[runtime] backend = "auto"|"native"|"pjrt"`;
+    /// the `--backend` CLI flag overrides it).
+    pub backend: BackendChoice,
 }
 
 impl Experiment {
@@ -96,6 +100,11 @@ impl Experiment {
             quiet: lc_sec.get("quiet").and_then(|v| v.as_bool()).unwrap_or(false),
         };
 
+        let backend = match cfg.section("runtime") {
+            Some(r) => BackendChoice::parse(&r.str_or("backend", "auto"))?,
+            None => BackendChoice::Auto,
+        };
+
         let mut tasks = Vec::new();
         for sec in cfg.sections_with_prefix("task") {
             tasks.push(parse_task(sec)?);
@@ -112,6 +121,7 @@ impl Experiment {
             n_test,
             data_seed,
             reference_epochs,
+            backend,
         })
     }
 }
@@ -136,7 +146,8 @@ pub fn parse_compression(sec: &Section, kind: &str) -> Result<Box<dyn Compressio
         "prune_l1" => Box::new(ConstraintL1 { kappa: sec.f64_or("kappa_l1", 1.0) }),
         "prune_l0_penalty" => Box::new(PenaltyL0 { alpha: sec.f64_or("alpha", 1e-4) }),
         "prune_l1_penalty" => Box::new(PenaltyL1 { alpha: sec.f64_or("alpha", 1e-4) }),
-        "low_rank" => Box::new(LowRank { target_rank: sec.usize_or("rank", 1).max(1) }),
+        // no clamp: rank 0 is rejected with a clear error at task validation
+        "low_rank" => Box::new(LowRank { target_rank: sec.usize_or("rank", 1) }),
         "rank_selection" => Box::new(RankSelection {
             lambda: sec.f64_or("lambda", 1e-6),
             cost: match sec.str_or("cost", "storage").as_str() {
@@ -207,6 +218,37 @@ k = 2
         assert_eq!(exp.lc.mu.steps, 40);
         assert!((exp.lc.lr.lr0 - 0.09).abs() < 1e-12);
         assert_eq!(exp.tasks.tasks[0].compression.name(), "adaptive_quant(k=2)");
+        assert_eq!(exp.backend, BackendChoice::Auto);
+    }
+
+    #[test]
+    fn backend_key_parses_and_rejects_unknown() {
+        let with_backend = format!("{SAMPLE}\n[runtime]\nbackend = \"native\"\n");
+        let exp = Experiment::from_config(&Config::parse(&with_backend).unwrap()).unwrap();
+        assert_eq!(exp.backend, BackendChoice::Native);
+
+        let bad = format!("{SAMPLE}\n[runtime]\nbackend = \"tpu\"\n");
+        assert!(Experiment::from_config(&Config::parse(&bad).unwrap())
+            .unwrap_err()
+            .contains("unknown backend"));
+    }
+
+    #[test]
+    fn low_rank_rank_zero_rejected_via_config() {
+        let text = r#"
+[model]
+name = "lenet300"
+[lc]
+l_steps = 1
+[task.lr]
+layers = [0]
+view = "as_is"
+compression = "low_rank"
+rank = 0
+"#;
+        let cfg = Config::parse(text).unwrap();
+        let err = Experiment::from_config(&cfg).unwrap_err();
+        assert!(err.contains("target_rank 0"), "{err}");
     }
 
     #[test]

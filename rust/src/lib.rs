@@ -7,13 +7,38 @@
 //! The LC algorithm alternates:
 //!
 //! * an **L (learning) step** — train the uncompressed model on the task
-//!   loss plus a quadratic attachment to the current compression; here an
-//!   AOT-compiled JAX/Pallas train step executed through PJRT
+//!   loss plus a quadratic attachment to the current compression
 //!   ([`runtime`]);
 //! * a **C (compression) step** — project the current weights onto the
 //!   feasible set of the chosen compression in the l2 sense ([`compress`]);
 //!
 //! while driving the penalty weight mu to infinity on a schedule ([`lc`]).
+//!
+//! ## Execution backends
+//!
+//! The L step (and the quantization E-step kernel) runs on one of two
+//! interchangeable backends behind the [`runtime::Backend`] trait:
+//!
+//! * **native** ([`runtime::backend::native`]) — a pure-Rust CPU
+//!   implementation of the reference semantics documented in
+//!   `python/compile/model.py` and `python/compile/kernels/ref.py`
+//!   (penalized momentum-SGD, softmax cross-entropy, argmax error counts,
+//!   k-means assignment with low-index tie-breaking), built on the tiled
+//!   threadpool-parallel GEMM in [`tensor`].  Needs no artifacts, no
+//!   Python, no PJRT: `cargo build --release && cargo test -q` and every
+//!   example run hermetically on this path.
+//! * **pjrt** ([`runtime::backend::pjrt`]) — executes the AOT-lowered
+//!   JAX/Pallas HLO artifacts produced by `python/compile/aot.py` through a
+//!   PJRT client.  Requires `make artifacts` plus real `xla` bindings (the
+//!   offline build vendors a stub; see `rust/vendor/README.md`).
+//!
+//! Dispatch ([`runtime::BackendChoice`]): `Auto` (the default) uses PJRT
+//! when an artifact manifest loads *and* a PJRT client can be created, and
+//! falls back to native otherwise.  `lcc --backend native|pjrt|auto` and the
+//! `[runtime] backend = "..."` config key force a choice.  The typed
+//! drivers ([`runtime::trainer`]) are thin dispatchers over the trait, so
+//! the LC coordinator is backend-agnostic — the paper's L/C decoupling,
+//! carried into the execution substrate.
 //!
 //! See DESIGN.md for the complete system inventory and the per-experiment
 //! index, and EXPERIMENTS.md for paper-vs-measured results.

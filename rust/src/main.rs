@@ -19,14 +19,14 @@ use lc::lc::schedule::LrSchedule;
 use lc::lc::LcAlgorithm;
 use lc::models::{checkpoint, lookup, ParamState};
 use lc::report::{pct, Table};
-use lc::runtime::Runtime;
+use lc::runtime::{BackendChoice, Runtime};
 use lc::util::cli::Args;
 use lc::util::config::Config;
 use lc::util::log::{set_level, Level};
 
 const VALUE_OPTS: &[&str] = &[
     "model", "epochs", "out", "checkpoint", "config", "artifacts", "seed", "n-train", "n-test",
-    "lr0", "threads",
+    "lr0", "threads", "backend",
 ];
 
 fn main() {
@@ -72,12 +72,27 @@ fn usage() {
          train    --model NAME [--epochs N] [--seed S] --out FILE.lcck\n  \
          eval     --checkpoint FILE.lcck [--n-test N]\n  \
          compress --config EXP.lcc [--checkpoint REF.lcck]\n\
-         common options: --artifacts DIR (default ./artifacts), --quiet, --verbose"
+         common options: --artifacts DIR (default ./artifacts),\n                 \
+         --backend auto|native|pjrt (default auto), --quiet, --verbose"
     );
 }
 
 fn artifact_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+/// CLI backend choice (`--backend auto|native|pjrt`), or `None` when absent.
+fn cli_backend(args: &Args) -> Result<Option<BackendChoice>> {
+    match args.get("backend") {
+        None => Ok(None),
+        Some(s) => BackendChoice::parse(s).map(Some).map_err(anyhow::Error::msg),
+    }
+}
+
+fn runtime_from_args(args: &Args, config_choice: BackendChoice) -> Result<Runtime> {
+    let choice = cli_backend(args)?.unwrap_or(config_choice);
+    let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
+    Runtime::with_backend_threads(&artifact_dir(args), choice, threads)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -97,17 +112,31 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("compression catalogue (Table 1): adaptive_quant[_dp], binary[_scaled],");
     println!("  ternary_scaled, prune_l0, prune_l1, prune_l0_penalty, prune_l1_penalty,");
     println!("  low_rank, rank_selection, additive combinations of the above\n");
-    match Runtime::new(&dir) {
+    // a bad --backend value is a usage error (propagated), not an
+    // "unavailable backend" condition (reported leniently below)
+    let choice = cli_backend(args)?.unwrap_or(BackendChoice::Auto);
+    let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
+    match Runtime::with_backend_threads(&dir, choice, threads) {
         Ok(rt) => {
-            println!("artifacts: {} (platform: {})", dir.display(), rt.platform());
-            for (name, m) in &rt.manifest.models {
-                println!("  model {name}: train={} eval={}", m.train_file, m.eval_file);
-            }
-            for q in &rt.manifest.quants {
-                println!("  quant_assign: n={} k={} ({})", q.n, q.k, q.file);
+            println!("backend: {} ({})", rt.backend_name(), rt.platform());
+            match &rt.manifest {
+                Some(m) => {
+                    println!("artifacts: {}", dir.display());
+                    for (name, art) in &m.models {
+                        println!("  model {name}: train={} eval={}", art.train_file, art.eval_file);
+                    }
+                    for q in &m.quants {
+                        println!("  quant_assign: n={} k={} ({})", q.n, q.k, q.file);
+                    }
+                }
+                None => println!(
+                    "artifacts: none at {} (native backend needs none; run `make artifacts` \
+                     and rebuild with real PJRT bindings to enable --backend pjrt)",
+                    dir.display()
+                ),
             }
         }
-        Err(e) => println!("artifacts: unavailable ({e}); run `make artifacts`"),
+        Err(e) => println!("backend: unavailable ({e})"),
     }
     Ok(())
 }
@@ -134,7 +163,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = args.get("out").context("--out required")?;
 
     let spec = lookup(model).map_err(anyhow::Error::msg)?;
-    let mut rt = Runtime::new(&artifact_dir(args))?;
+    let mut rt = runtime_from_args(args, BackendChoice::Auto)?;
+    lc::info!("L-step backend: {}", rt.backend_name());
     let (train_data, test_data) = load_data(n_train, n_test, 1, threads);
 
     let alg = LcAlgorithm::new(
@@ -165,7 +195,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let n_test: usize = args.get_parse("n-test", 2048).map_err(anyhow::Error::msg)?;
     let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
     let state = checkpoint::load(Path::new(ckpt))?;
-    let mut rt = Runtime::new(&artifact_dir(args))?;
+    let mut rt = runtime_from_args(args, BackendChoice::Auto)?;
     let (_, test_data) = load_data(0, n_test, 1, threads);
     let eval = lc::runtime::trainer::EvalDriver::new(&mut rt, &state.spec.name)?;
     let r = eval.eval(&state, &test_data)?;
@@ -183,7 +213,8 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let cfg_path = args.get("config").context("--config required")?;
     let cfg = Config::load(cfg_path).map_err(anyhow::Error::msg)?;
     let exp = Experiment::from_config(&cfg).map_err(anyhow::Error::msg)?;
-    let mut rt = Runtime::new(&artifact_dir(args))?;
+    let mut rt = runtime_from_args(args, exp.backend)?;
+    lc::info!("L-step backend: {}", rt.backend_name());
     let (train_data, test_data) =
         load_data(exp.n_train, exp.n_test, exp.data_seed, exp.lc.threads);
 

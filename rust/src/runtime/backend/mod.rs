@@ -1,0 +1,113 @@
+//! Execution backends for the L step (and the quantization E-step kernel).
+//!
+//! The LC separation of concerns (paper §3) keeps the *math* of the L step
+//! fixed — penalized SGD on `L(w) + Σ_l μ_l/2‖w_l − Δ_l − λ_l/μ_l‖²` — while
+//! the *execution substrate* is swappable:
+//!
+//! * [`pjrt::PjrtBackend`] executes AOT-lowered JAX/Pallas HLO artifacts
+//!   through a PJRT client (requires `make artifacts` + real `xla` bindings);
+//! * [`native::NativeBackend`] is a pure-Rust CPU implementation of the same
+//!   reference semantics (documented in `python/compile/model.py` and
+//!   `python/compile/kernels/ref.py`), built on the tiled parallel GEMM in
+//!   [`crate::tensor`] — it needs no artifacts and runs anywhere.
+//!
+//! [`crate::runtime::Runtime`] selects the backend ([`BackendChoice`]):
+//! `Auto` prefers PJRT when an artifact manifest loads and a client can be
+//! created, and falls back to native otherwise.  The typed drivers in
+//! [`crate::runtime::trainer`] are thin dispatchers over this trait.
+
+pub mod native;
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::models::{ModelSpec, ParamState};
+use crate::tensor::Matrix;
+
+/// Which backend the runtime should use.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// PJRT when artifacts + a client are available, native otherwise.
+    #[default]
+    Auto,
+    /// Pure-Rust CPU backend; never touches PJRT or artifacts.
+    Native,
+    /// PJRT artifacts only; fail if unavailable.
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Result<BackendChoice, String> {
+        match s {
+            "auto" => Ok(BackendChoice::Auto),
+            "native" => Ok(BackendChoice::Native),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            other => Err(format!("unknown backend {other:?} (expected auto|native|pjrt)")),
+        }
+    }
+}
+
+/// Raw result of one k-means E-step over a **padded** weight buffer (the
+/// kernel calling convention): per-weight assignments, total distortion,
+/// and per-center sufficient statistics, *including* the padding's
+/// contribution (the driver removes it).
+pub struct QuantAssignRaw {
+    pub assignments: Vec<u32>,
+    pub distortion: f64,
+    pub sums: Vec<f64>,
+    pub counts: Vec<u64>,
+}
+
+/// An execution backend for the L step, the eval pass, and the quantization
+/// E-step kernel.  Methods take `&mut self` because backends may cache
+/// compiled executables lazily.
+pub trait Backend {
+    /// Short identifier ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Human-readable platform string for reports.
+    fn platform(&self) -> String {
+        self.name().to_string()
+    }
+
+    /// The model spec as this backend knows it: manifest-sourced for PJRT
+    /// (shape-static artifacts), registry-sourced for native.
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec>;
+
+    /// One SGD-with-Nesterov-momentum step on the penalized L-step
+    /// objective, updating `state` (params + momenta) in place.  Returns
+    /// the penalized loss at the *start* of the step.  Input contract
+    /// matches `python/compile/model.py::train_step`.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        spec: &ModelSpec,
+        state: &mut ParamState,
+        x: &[f32],
+        y: &[i32],
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+    ) -> Result<f32>;
+
+    /// Sum of per-example CE loss and count of correct predictions over one
+    /// fixed-size chunk (`python/compile/model.py::eval_step`).
+    fn eval_chunk(
+        &mut self,
+        spec: &ModelSpec,
+        state: &ParamState,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f64, i64)>;
+
+    /// Padded kernel size able to hold an E-step over `n` weights with `k`
+    /// centers, or `None` if this backend has no such kernel.
+    fn quant_kernel_size(&mut self, n: usize, k: usize) -> Result<Option<usize>>;
+
+    /// One k-means E-step + sufficient statistics over the padded buffer
+    /// `w` (length exactly a kernel size previously returned by
+    /// [`Backend::quant_kernel_size`]).  Argmin ties break toward the
+    /// lowest center index (`python/compile/kernels/ref.py`).
+    fn quant_assign(&mut self, w: &[f32], codebook: &[f32]) -> Result<QuantAssignRaw>;
+}

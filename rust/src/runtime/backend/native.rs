@@ -1,0 +1,518 @@
+//! Native pure-Rust CPU backend.
+//!
+//! Implements the MLP forward/backward/SGD train step, the eval pass, and
+//! the k-means assign kernel **exactly per the reference semantics** of
+//! `python/compile/model.py` and `python/compile/kernels/ref.py`:
+//!
+//! * forward: ReLU hidden layers, identity logits head;
+//! * loss: mean softmax cross-entropy plus the LC penalty in its
+//!   numerically-safe expanded form
+//!   `Σ_l μ_l/2‖W_l − Δ_l‖² − ⟨λ_l, W_l − Δ_l⟩` (same gradient in `W` as
+//!   the paper's quadratic, well-defined at μ_l = 0);
+//! * optimizer: SGD with Nesterov momentum in the PyTorch convention of the
+//!   paper's Listing 2 (`v ← m·v + g; w ← w − lr·(g + m·v)`), penalty
+//!   applied to weight matrices only (biases train freely);
+//! * eval: summed per-example CE and argmax-correct counts (first index on
+//!   ties, matching `jnp.argmax`);
+//! * quant assign: scalar k-means E-step with argmin ties toward the lowest
+//!   center index, over fixed-size padded buffers mirroring the lowered
+//!   Pallas kernel's block structure.
+//!
+//! All GEMMs go through the tiled, threadpool-parallel kernels in
+//! [`crate::tensor`] ([`Matrix::matmul_par`] / [`Matrix::matmul_nt_par`]).
+
+use anyhow::{ensure, Result};
+
+use super::{Backend, QuantAssignRaw};
+use crate::models::{ModelSpec, ParamState};
+use crate::tensor::Matrix;
+use crate::util::threadpool::parallel_map;
+
+/// SGD momentum, mirroring `MOMENTUM` in `python/compile/model.py`.
+pub const MOMENTUM: f32 = 0.9;
+
+/// Padded block granularity of the quant-assign kernel, mirroring the
+/// `block 4096` records the AOT path lowers (`python/compile/aot.py`).
+pub const QUANT_BLOCK: usize = 4096;
+
+/// Pure-Rust CPU backend; `threads` bounds the GEMM/assign parallelism.
+pub struct NativeBackend {
+    threads: usize,
+}
+
+impl NativeBackend {
+    pub fn new(threads: usize) -> NativeBackend {
+        NativeBackend { threads: threads.max(1) }
+    }
+
+    /// Forward pass retaining every activation: `acts[0] = x`,
+    /// `acts[l+1] = relu?(acts[l] · W_l + b_l)` (ReLU on hidden layers only).
+    fn forward(
+        &self,
+        spec: &ModelSpec,
+        state: &ParamState,
+        x: &[f32],
+        b: usize,
+    ) -> Result<Vec<Matrix>> {
+        let nl = spec.n_layers();
+        ensure!(b > 0, "empty batch");
+        ensure!(
+            x.len() == b * spec.widths[0],
+            "x has {} elements for batch {b} x dim {}",
+            x.len(),
+            spec.widths[0]
+        );
+        ensure!(state.weights.len() == nl, "state/spec layer count mismatch");
+        let mut acts = Vec::with_capacity(nl + 1);
+        acts.push(Matrix::from_vec(b, spec.widths[0], x.to_vec()));
+        for l in 0..nl {
+            let (rows, cols) = spec.layer_shape(l);
+            let w = &state.weights[l];
+            ensure!(
+                (w.rows, w.cols) == (rows, cols),
+                "layer {l}: weight shape {}x{} != spec {rows}x{cols}",
+                w.rows,
+                w.cols
+            );
+            ensure!(state.biases[l].len() == cols, "layer {l}: bias length mismatch");
+            let mut z = acts[l].matmul_par(w, self.threads);
+            let relu = l < nl - 1;
+            let bias = &state.biases[l];
+            for r in 0..b {
+                let row = z.row_mut(r);
+                for (v, &bi) in row.iter_mut().zip(bias.iter()) {
+                    *v += bi;
+                    if relu && *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            acts.push(z);
+        }
+        Ok(acts)
+    }
+}
+
+/// Row-stable log-sum-exp of one logits row (max-subtraction, f32 like the
+/// lowered artifact).
+fn logsumexp_row(row: &[f32]) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for &v in row {
+        if v > m {
+            m = v;
+        }
+    }
+    let mut s = 0.0f32;
+    for &v in row {
+        s += (v - m).exp();
+    }
+    m + s.ln()
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        format!("native CPU ({} threads)", self.threads)
+    }
+
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
+        crate::models::lookup(model).map_err(anyhow::Error::msg)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        spec: &ModelSpec,
+        state: &mut ParamState,
+        x: &[f32],
+        y: &[i32],
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let nl = spec.n_layers();
+        let b = y.len();
+        ensure!(
+            deltas.len() == nl && lambdas.len() == nl && mu.len() == nl,
+            "penalty input count mismatch"
+        );
+        let classes = *spec.widths.last().unwrap();
+        for &yi in y {
+            ensure!((0..classes as i32).contains(&yi), "label {yi} out of range [0,{classes})");
+        }
+
+        // ---- forward + loss ------------------------------------------------
+        let acts = self.forward(spec, state, x, b)?;
+        let logits = &acts[nl];
+        let mut logz = vec![0.0f32; b];
+        let mut ce_sum = 0.0f64;
+        for i in 0..b {
+            let row = logits.row(i);
+            let lz = logsumexp_row(row);
+            logz[i] = lz;
+            ce_sum += (lz - row[y[i] as usize]) as f64;
+        }
+        let ce = ce_sum / b as f64;
+        let mut penalty = 0.0f64;
+        for l in 0..nl {
+            let (w, d, lam) = (&state.weights[l], &deltas[l], &lambdas[l]);
+            ensure!((d.rows, d.cols) == (w.rows, w.cols), "delta {l} shape mismatch");
+            ensure!((lam.rows, lam.cols) == (w.rows, w.cols), "lambda {l} shape mismatch");
+            let mut quad = 0.0f64;
+            let mut lin = 0.0f64;
+            for ((&wi, &di), &li) in w.data.iter().zip(d.data.iter()).zip(lam.data.iter()) {
+                let diff = (wi - di) as f64;
+                quad += diff * diff;
+                lin += li as f64 * diff;
+            }
+            penalty += 0.5 * mu[l] as f64 * quad - lin;
+        }
+        let loss = (ce + penalty) as f32;
+
+        // ---- backward ------------------------------------------------------
+        // dZ_L = (softmax(logits) − onehot(y)) / B
+        let mut dz = Matrix::zeros(b, classes);
+        for i in 0..b {
+            let lrow = logits.row(i);
+            let drow = dz.row_mut(i);
+            for j in 0..classes {
+                let p = (lrow[j] - logz[i]).exp();
+                let one = if y[i] as usize == j { 1.0 } else { 0.0 };
+                drow[j] = (p - one) / b as f32;
+            }
+        }
+
+        for l in (0..nl).rev() {
+            // gradients for layer l (computed before any parameter update)
+            let mut dw = acts[l].matmul_tn_par(&dz, self.threads);
+            let (d, lam) = (&deltas[l], &lambdas[l]);
+            for ((g, (&wi, &di)), &li) in dw
+                .data
+                .iter_mut()
+                .zip(state.weights[l].data.iter().zip(d.data.iter()))
+                .zip(lam.data.iter())
+            {
+                *g += mu[l] * (wi - di) - li;
+            }
+            let cols = dw.cols;
+            let mut db = vec![0.0f32; cols];
+            for r in 0..b {
+                for (s, &v) in db.iter_mut().zip(dz.row(r).iter()) {
+                    *s += v;
+                }
+            }
+
+            // propagate through the layer input before updating W_l; the
+            // hidden ReLU mask is `h > 0` (equivalent to pre-act > 0, and
+            // matching the Pallas VJP's `y > 0` mask)
+            if l > 0 {
+                let mut dh = dz.matmul_nt_par(&state.weights[l], self.threads);
+                for (g, &h) in dh.data.iter_mut().zip(acts[l].data.iter()) {
+                    if h <= 0.0 {
+                        *g = 0.0;
+                    }
+                }
+                dz = dh;
+            }
+
+            // Nesterov update: v ← m·v + g; p ← p − lr·(g + m·v)
+            let (w, v) = (&mut state.weights[l], &mut state.w_momenta[l]);
+            for ((wi, vi), &g) in w.data.iter_mut().zip(v.data.iter_mut()).zip(dw.data.iter()) {
+                let v2 = MOMENTUM * *vi + g;
+                *wi -= lr * (g + MOMENTUM * v2);
+                *vi = v2;
+            }
+            let (bias, bv) = (&mut state.biases[l], &mut state.b_momenta[l]);
+            for ((bi, vi), &g) in bias.iter_mut().zip(bv.iter_mut()).zip(db.iter()) {
+                let v2 = MOMENTUM * *vi + g;
+                *bi -= lr * (g + MOMENTUM * v2);
+                *vi = v2;
+            }
+        }
+        Ok(loss)
+    }
+
+    fn eval_chunk(
+        &mut self,
+        spec: &ModelSpec,
+        state: &ParamState,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f64, i64)> {
+        let b = y.len();
+        let classes = *spec.widths.last().unwrap();
+        for &yi in y {
+            ensure!((0..classes as i32).contains(&yi), "label {yi} out of range [0,{classes})");
+        }
+        let acts = self.forward(spec, state, x, b)?;
+        let logits = &acts[spec.n_layers()];
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0i64;
+        for i in 0..b {
+            let row = logits.row(i);
+            let lz = logsumexp_row(row);
+            loss_sum += (lz - row[y[i] as usize]) as f64;
+            // argmax with first-index tie-breaking (jnp.argmax)
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            if best == y[i] as usize {
+                correct += 1;
+            }
+        }
+        Ok((loss_sum, correct))
+    }
+
+    fn quant_kernel_size(&mut self, n: usize, k: usize) -> Result<Option<usize>> {
+        ensure!(k >= 1, "codebook size must be >= 1");
+        let blocks = (n.max(1) + QUANT_BLOCK - 1) / QUANT_BLOCK;
+        Ok(Some(blocks * QUANT_BLOCK))
+    }
+
+    fn quant_assign(&mut self, w: &[f32], codebook: &[f32]) -> Result<QuantAssignRaw> {
+        let k = codebook.len();
+        ensure!(k >= 1, "empty codebook");
+        let n = w.len();
+        let chunk = ((n + self.threads - 1) / self.threads).max(1);
+        let n_chunks = (n + chunk - 1) / chunk;
+        let parts = parallel_map(n_chunks.max(1), self.threads, |ci| {
+            let lo = ci * chunk;
+            let hi = ((ci + 1) * chunk).min(n);
+            let mut assign = Vec::with_capacity(hi.saturating_sub(lo));
+            let mut dist = 0.0f64;
+            let mut sums = vec![0.0f64; k];
+            let mut counts = vec![0u64; k];
+            for &wi in &w[lo..hi] {
+                let mut best = 0usize;
+                let mut bestd = f32::INFINITY;
+                for (j, &c) in codebook.iter().enumerate() {
+                    let d = (wi - c) * (wi - c);
+                    if d < bestd {
+                        bestd = d;
+                        best = j;
+                    }
+                }
+                assign.push(best as u32);
+                dist += bestd as f64;
+                sums[best] += wi as f64;
+                counts[best] += 1;
+            }
+            (assign, dist, sums, counts)
+        });
+        let mut assignments = Vec::with_capacity(n);
+        let mut distortion = 0.0f64;
+        let mut sums = vec![0.0f64; k];
+        let mut counts = vec![0u64; k];
+        for (a, d, s, c) in parts {
+            assignments.extend(a);
+            distortion += d;
+            for j in 0..k {
+                sums[j] += s[j];
+                counts[j] += c[j];
+            }
+        }
+        Ok(QuantAssignRaw { assignments, distortion, sums, counts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec { name: "tiny".into(), widths: vec![6, 5, 4], batch: 8, eval_batch: 8 }
+    }
+
+    fn zeros_like(spec: &ModelSpec) -> Vec<Matrix> {
+        (0..spec.n_layers())
+            .map(|l| {
+                let (m, n) = spec.layer_shape(l);
+                Matrix::zeros(m, n)
+            })
+            .collect()
+    }
+
+    fn batch(spec: &ModelSpec, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Xoshiro256::new(seed);
+        let mut x = vec![0.0f32; b * spec.widths[0]];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let classes = *spec.widths.last().unwrap();
+        let y = (0..b).map(|_| rng.below(classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn sgd_reduces_loss_on_fixed_batch() {
+        let spec = tiny_spec();
+        let mut be = NativeBackend::new(2);
+        let mut state = ParamState::init(&spec, 3);
+        let (x, y) = batch(&spec, 16, 4);
+        let zeros = zeros_like(&spec);
+        let mu = vec![0.0f32; spec.n_layers()];
+        let first = be
+            .train_step(&spec, &mut state, &x, &y, &zeros, &zeros, &mu, 0.1)
+            .unwrap();
+        let mut last = first;
+        for _ in 0..40 {
+            last = be
+                .train_step(&spec, &mut state, &x, &y, &zeros, &zeros, &mu, 0.1)
+                .unwrap();
+        }
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn loss_is_ln_classes_at_uniform_logits() {
+        // zero weights + zero biases -> uniform logits -> CE = ln(C)
+        let spec = tiny_spec();
+        let mut be = NativeBackend::new(1);
+        let mut state = ParamState::init(&spec, 1);
+        for w in state.weights.iter_mut() {
+            w.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let (x, y) = batch(&spec, 8, 5);
+        let zeros = zeros_like(&spec);
+        let mu = vec![0.0f32; spec.n_layers()];
+        let loss = be
+            .train_step(&spec, &mut state, &x, &y, &zeros, &zeros, &mu, 0.0)
+            .unwrap();
+        assert!((loss - (4.0f32).ln()).abs() < 1e-5, "loss={loss}");
+    }
+
+    #[test]
+    fn penalty_term_enters_loss_and_gradient() {
+        let spec = tiny_spec();
+        let mut be = NativeBackend::new(1);
+        let state0 = ParamState::init(&spec, 7);
+        let (x, y) = batch(&spec, 8, 8);
+        let zeros = zeros_like(&spec);
+        let mu0 = vec![0.0f32; spec.n_layers()];
+        let mu5 = vec![5.0f32; spec.n_layers()];
+
+        let mut s_free = state0.clone();
+        let l_free = be
+            .train_step(&spec, &mut s_free, &x, &y, &zeros, &zeros, &mu0, 0.0)
+            .unwrap();
+        let mut s_pen = state0.clone();
+        let l_pen = be
+            .train_step(&spec, &mut s_pen, &x, &y, &zeros, &zeros, &mu5, 0.0)
+            .unwrap();
+        // loss difference is exactly the penalty sum_l mu/2 ||W||^2
+        let norm: f64 = state0.weights.iter().map(|w| w.fro_norm_sq()).sum();
+        assert!(
+            ((l_pen - l_free) as f64 - 2.5 * norm).abs() < 1e-4 * (2.5 * norm).max(1.0),
+            "penalty delta {} want {}",
+            l_pen - l_free,
+            2.5 * norm
+        );
+
+        // with lr > 0 and a large mu toward Delta = 0, weights must shrink
+        let run = |mu: &[f32]| {
+            let mut s = state0.clone();
+            for _ in 0..10 {
+                be.train_step(&spec, &mut s, &x, &y, &zeros, &zeros, mu, 0.05).unwrap();
+            }
+            s.weights.iter().map(|w| w.fro_norm_sq()).sum::<f64>()
+        };
+        assert!(run(&mu5) < run(&mu0) * 0.6);
+    }
+
+    #[test]
+    fn lambda_shifts_attachment_point() {
+        // lambda = mu * target, delta = 0 => effective attachment is +target
+        let spec = tiny_spec();
+        let mut be = NativeBackend::new(1);
+        let (x, y) = batch(&spec, 8, 9);
+        let zeros = zeros_like(&spec);
+        let mu_val = 10.0f32;
+        let target = 0.05f32;
+        let lambdas: Vec<Matrix> = (0..spec.n_layers())
+            .map(|l| {
+                let (m, n) = spec.layer_shape(l);
+                Matrix::from_vec(m, n, vec![mu_val * target; m * n])
+            })
+            .collect();
+        let mu = vec![mu_val; spec.n_layers()];
+        let mut st = ParamState::init(&spec, 9);
+        for _ in 0..60 {
+            be.train_step(&spec, &mut st, &x, &y, &zeros, &lambdas, &mu, 0.02).unwrap();
+        }
+        let mean: f64 = st.weights.iter().map(|w| crate::tensor::mean(&w.data)).sum::<f64>()
+            / spec.n_layers() as f64;
+        assert!(mean > target as f64 * 0.3, "mean={mean} should approach {target}");
+    }
+
+    #[test]
+    fn eval_chunk_counts_and_sums() {
+        let spec = tiny_spec();
+        let mut be = NativeBackend::new(2);
+        let state = ParamState::init(&spec, 11);
+        let (x, y) = batch(&spec, 32, 12);
+        let (loss, correct) = be.eval_chunk(&spec, &state, &x, &y).unwrap();
+        assert!(loss > 0.0);
+        assert!((0..=32).contains(&correct));
+        // determinism
+        let again = be.eval_chunk(&spec, &state, &x, &y).unwrap();
+        assert_eq!(again, (loss, correct));
+    }
+
+    #[test]
+    fn quant_assign_matches_oracle() {
+        let mut be = NativeBackend::new(3);
+        let mut rng = Xoshiro256::new(13);
+        let w: Vec<f32> = (0..2000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let codebook = vec![-1.0f32, 0.0, 1.0];
+        let raw = be.quant_assign(&w, &codebook).unwrap();
+        let mut dist = 0.0f64;
+        let mut sums = vec![0.0f64; 3];
+        let mut counts = vec![0u64; 3];
+        for (i, &wi) in w.iter().enumerate() {
+            let mut best = 0usize;
+            let mut bd = f32::INFINITY;
+            for (j, &c) in codebook.iter().enumerate() {
+                let d = (wi - c) * (wi - c);
+                if d < bd {
+                    bd = d;
+                    best = j;
+                }
+            }
+            assert_eq!(raw.assignments[i], best as u32, "i={i}");
+            dist += bd as f64;
+            sums[best] += wi as f64;
+            counts[best] += 1;
+        }
+        assert!((raw.distortion - dist).abs() < 1e-6 * dist.max(1.0));
+        assert_eq!(raw.counts, counts);
+        for j in 0..3 {
+            assert!((raw.sums[j] - sums[j]).abs() < 1e-9 * sums[j].abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn quant_assign_ties_break_low() {
+        let mut be = NativeBackend::new(1);
+        // 0.5 is equidistant from 0.0 and 1.0 -> index 0 wins
+        let raw = be.quant_assign(&[0.5], &[0.0, 1.0]).unwrap();
+        assert_eq!(raw.assignments, vec![0]);
+        // duplicate centers: lowest index wins
+        let raw2 = be.quant_assign(&[2.0, 2.0], &[2.0, 2.0, 0.0]).unwrap();
+        assert_eq!(raw2.assignments, vec![0, 0]);
+    }
+
+    #[test]
+    fn quant_kernel_size_rounds_to_block() {
+        let mut be = NativeBackend::new(1);
+        assert_eq!(be.quant_kernel_size(1, 2).unwrap(), Some(QUANT_BLOCK));
+        assert_eq!(be.quant_kernel_size(QUANT_BLOCK, 2).unwrap(), Some(QUANT_BLOCK));
+        assert_eq!(be.quant_kernel_size(QUANT_BLOCK + 1, 2).unwrap(), Some(2 * QUANT_BLOCK));
+        assert!(be.quant_kernel_size(10, 0).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! PJRT artifact backend: load AOT-lowered HLO artifacts and execute them
+//! through the PJRT C API (CPU plugin).
+//!
+//! Wraps the `xla` crate: HLO-text artifact → `HloModuleProto::from_text_file`
+//! → `client.compile` → `execute`, with a compiled-executable cache keyed by
+//! artifact file name.  This module is the only place that knows the
+//! artifact calling conventions (input/output orderings documented in
+//! `python/compile/model.py`).
+//!
+//! In offline builds the vendored `xla` stub makes [`PjrtBackend::new`] fail,
+//! which the runtime dispatch treats as "fall back to native".
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::{Backend, QuantAssignRaw};
+use crate::models::{ModelSpec, ParamState};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, lit_to_f32, lit_to_i32};
+use crate::tensor::Matrix;
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, Rc<xla::PjRtLoadedExecutable>>,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client over a parsed artifact manifest.
+    pub fn new(manifest: Manifest) -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend { client, manifest, exes: HashMap::new() })
+    }
+
+    /// Load + compile an artifact (cached by file name).
+    fn executable(&mut self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.path_of(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let exe = Rc::new(exe);
+        self.exes.insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute with literal inputs; expects the single-tuple output
+    /// convention (aot.py lowers with return_tuple=True) and returns the
+    /// untupled literals.
+    fn run(exe: &xla::PjRtLoadedExecutable, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = exe.execute::<xla::Literal>(inputs).context("executing artifact")?;
+        let lit = bufs[0][0].to_literal_sync().context("fetching result")?;
+        lit.to_tuple().context("untupling result")
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
+        let art = self.manifest.model(model).map_err(anyhow::Error::msg)?;
+        Ok(ModelSpec {
+            name: art.name.clone(),
+            widths: art.widths.clone(),
+            batch: art.batch,
+            eval_batch: art.eval_batch,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step(
+        &mut self,
+        spec: &ModelSpec,
+        state: &mut ParamState,
+        x: &[f32],
+        y: &[i32],
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let nl = spec.n_layers();
+        ensure!(deltas.len() == nl && lambdas.len() == nl && mu.len() == nl);
+        ensure!(y.len() == spec.batch, "train artifact is shape-static (batch {})", spec.batch);
+        let art = self.manifest.model(&spec.name).map_err(anyhow::Error::msg)?.clone();
+        ensure!(art.widths == spec.widths, "artifact/spec width mismatch");
+        let exe = self.executable(&art.train_file)?;
+
+        let mut inputs = Vec::with_capacity(4 * nl + 4 + 2 * nl);
+        // params
+        for l in 0..nl {
+            let w = &state.weights[l];
+            inputs.push(lit_f32(&w.data, &[w.rows, w.cols])?);
+            inputs.push(lit_f32(&state.biases[l], &[state.biases[l].len()])?);
+        }
+        // momenta
+        for l in 0..nl {
+            let m = &state.w_momenta[l];
+            inputs.push(lit_f32(&m.data, &[m.rows, m.cols])?);
+            inputs.push(lit_f32(&state.b_momenta[l], &[state.b_momenta[l].len()])?);
+        }
+        inputs.push(lit_f32(x, &[spec.batch, spec.widths[0]])?);
+        inputs.push(lit_i32(y, &[spec.batch])?);
+        for d in deltas {
+            inputs.push(lit_f32(&d.data, &[d.rows, d.cols])?);
+        }
+        for lam in lambdas {
+            inputs.push(lit_f32(&lam.data, &[lam.rows, lam.cols])?);
+        }
+        inputs.push(lit_f32(mu, &[nl])?);
+        inputs.push(lit_scalar(lr));
+
+        let outs = Self::run(&exe, &inputs)?;
+        ensure!(outs.len() == 4 * nl + 1, "train artifact returned {} outputs", outs.len());
+
+        // unpack: new params, new momenta, loss
+        let mut it = outs.into_iter();
+        for l in 0..nl {
+            let w = it.next().unwrap();
+            state.weights[l].data.copy_from_slice(&lit_to_f32(&w)?);
+            let b = it.next().unwrap();
+            state.biases[l].copy_from_slice(&lit_to_f32(&b)?);
+        }
+        for l in 0..nl {
+            let m = it.next().unwrap();
+            state.w_momenta[l].data.copy_from_slice(&lit_to_f32(&m)?);
+            let bm = it.next().unwrap();
+            state.b_momenta[l].copy_from_slice(&lit_to_f32(&bm)?);
+        }
+        let loss = it.next().unwrap().get_first_element::<f32>().context("reading loss")?;
+        Ok(loss)
+    }
+
+    fn eval_chunk(
+        &mut self,
+        spec: &ModelSpec,
+        state: &ParamState,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f64, i64)> {
+        let nl = spec.n_layers();
+        ensure!(
+            y.len() == spec.eval_batch,
+            "eval artifact is shape-static (batch {})",
+            spec.eval_batch
+        );
+        let art = self.manifest.model(&spec.name).map_err(anyhow::Error::msg)?.clone();
+        let exe = self.executable(&art.eval_file)?;
+        let mut inputs = Vec::with_capacity(2 * nl + 2);
+        for l in 0..nl {
+            let w = &state.weights[l];
+            inputs.push(lit_f32(&w.data, &[w.rows, w.cols])?);
+            inputs.push(lit_f32(&state.biases[l], &[state.biases[l].len()])?);
+        }
+        inputs.push(lit_f32(x, &[spec.eval_batch, spec.widths[0]])?);
+        inputs.push(lit_i32(y, &[spec.eval_batch])?);
+        let outs = Self::run(&exe, &inputs)?;
+        ensure!(outs.len() == 2, "eval artifact returned {} outputs", outs.len());
+        let loss_sum = outs[0].get_first_element::<f32>()? as f64;
+        let correct = lit_to_i32(&outs[1])?[0] as i64;
+        Ok((loss_sum, correct))
+    }
+
+    fn quant_kernel_size(&mut self, n: usize, k: usize) -> Result<Option<usize>> {
+        Ok(self.manifest.quant_for(n, k).map(|q| q.n))
+    }
+
+    fn quant_assign(&mut self, w: &[f32], codebook: &[f32]) -> Result<QuantAssignRaw> {
+        let k = codebook.len();
+        let art = self
+            .manifest
+            .quants
+            .iter()
+            .find(|q| q.n == w.len() && q.k == k)
+            .cloned()
+            .ok_or_else(|| anyhow::Error::msg(format!("no quant artifact for n={} k={k}", w.len())))?;
+        let exe = self.executable(&art.file)?;
+        let inputs = [lit_f32(w, &[art.n])?, lit_f32(codebook, &[k])?];
+        let outs = Self::run(&exe, &inputs)?;
+        ensure!(outs.len() == 4, "quant artifact returned {} outputs", outs.len());
+        let assignments: Vec<u32> = lit_to_i32(&outs[0])?.iter().map(|&a| a as u32).collect();
+        let distortion = outs[1].get_first_element::<f32>()? as f64;
+        let sums: Vec<f64> = lit_to_f32(&outs[2])?.iter().map(|&s| s as f64).collect();
+        let counts: Vec<u64> = lit_to_f32(&outs[3])?.iter().map(|&c| c as u64).collect();
+        Ok(QuantAssignRaw { assignments, distortion, sums, counts })
+    }
+}

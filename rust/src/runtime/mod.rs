@@ -1,73 +1,126 @@
-//! PJRT runtime: load AOT artifacts and run them from the Rust hot path.
+//! Execution runtime: backend selection + typed drivers.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO-text artifact →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! One [`Runtime`] owns the PJRT client and a cache of compiled
-//! executables keyed by artifact file name; [`trainer`] builds the typed
-//! drivers (train step, eval, quantization C-step kernel) on top.
+//! A [`Runtime`] owns one [`Backend`] — either the PJRT artifact path
+//! (AOT-compiled JAX/Pallas HLO, [`backend::pjrt`]) or the native pure-Rust
+//! CPU implementation of the same reference semantics ([`backend::native`]).
+//! Selection ([`BackendChoice`]): `Auto` uses PJRT when an artifact manifest
+//! loads *and* a PJRT client can be created, and otherwise falls back to
+//! native, so the whole LC loop runs hermetically with zero artifacts.
+//!
+//! [`trainer`] builds the typed drivers (train step, eval, quantization
+//! C-step kernel) on top; they are thin dispatchers over the backend.
 
+pub mod backend;
 pub mod manifest;
 pub mod trainer;
 
-use std::collections::HashMap;
+use std::cell::RefCell;
 use std::path::Path;
+use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
+pub use backend::{Backend, BackendChoice};
 pub use manifest::Manifest;
 
-/// Owns the PJRT client and compiled-executable cache.
+/// Shared backend handle the drivers clone.  `Rc<RefCell<...>>` because
+/// backends cache compiled executables lazily (`&mut` access) while several
+/// drivers built from one runtime stay live together; PJRT handles are not
+/// `Send`, so a single-threaded cell is the right tool.
+pub type BackendHandle = Rc<RefCell<Box<dyn Backend>>>;
+
+/// Owns the selected execution backend (and the artifact manifest when the
+/// PJRT path is active).
 pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    exes: HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    backend: BackendHandle,
+    /// Parsed artifact manifest — `Some` only on the PJRT path.
+    pub manifest: Option<Manifest>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client and read the artifact manifest.
+    /// Auto-select: PJRT when artifacts + client are available, else native.
     pub fn new(artifact_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifact_dir).map_err(anyhow::Error::msg)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, manifest, exes: HashMap::new() })
+        Self::with_backend(artifact_dir, BackendChoice::Auto)
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Construct with an explicit backend choice (the `--backend` flag) and
+    /// the machine's default parallelism for the native GEMMs.
+    pub fn with_backend(artifact_dir: &Path, choice: BackendChoice) -> Result<Runtime> {
+        Self::with_backend_threads(
+            artifact_dir,
+            choice,
+            crate::util::threadpool::ThreadPool::default_threads(),
+        )
     }
 
-    /// Load + compile an artifact (cached by file name).
-    pub fn executable(&mut self, file: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.exes.get(file) {
-            return Ok(exe.clone());
+    /// Construct with an explicit backend choice and native-backend thread
+    /// count (`--threads` / `Scale.threads`; ignored on the PJRT path,
+    /// where XLA owns its own pool).
+    pub fn with_backend_threads(
+        artifact_dir: &Path,
+        choice: BackendChoice,
+        threads: usize,
+    ) -> Result<Runtime> {
+        match choice {
+            BackendChoice::Native => Ok(Self::native_with_threads(threads)),
+            BackendChoice::Pjrt => {
+                let manifest = Manifest::load(artifact_dir).map_err(anyhow::Error::msg)?;
+                let pj = backend::pjrt::PjrtBackend::new(manifest.clone())?;
+                Ok(Runtime {
+                    backend: Rc::new(RefCell::new(Box::new(pj) as Box<dyn Backend>)),
+                    manifest: Some(manifest),
+                })
+            }
+            BackendChoice::Auto => match Manifest::load(artifact_dir) {
+                Ok(manifest) => match backend::pjrt::PjrtBackend::new(manifest.clone()) {
+                    Ok(pj) => Ok(Runtime {
+                        backend: Rc::new(RefCell::new(Box::new(pj) as Box<dyn Backend>)),
+                        manifest: Some(manifest),
+                    }),
+                    Err(e) => {
+                        crate::info!(
+                            "PJRT unavailable ({e:#}); using the native CPU backend"
+                        );
+                        Ok(Self::native_with_threads(threads))
+                    }
+                },
+                Err(e) => {
+                    crate::info!("no artifact manifest ({e}); using the native CPU backend");
+                    Ok(Self::native_with_threads(threads))
+                }
+            },
         }
-        let path = self.manifest.path_of(file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        let exe = std::rc::Rc::new(exe);
-        self.exes.insert(file.to_string(), exe.clone());
-        Ok(exe)
     }
 
-    /// Execute with literal inputs; expects the single-tuple output
-    /// convention (aot.py lowers with return_tuple=True) and returns the
-    /// untupled literals.
-    pub fn run(
-        exe: &xla::PjRtLoadedExecutable,
-        inputs: &[xla::Literal],
-    ) -> Result<Vec<xla::Literal>> {
-        let bufs = exe.execute::<xla::Literal>(inputs).context("executing artifact")?;
-        let lit = bufs[0][0].to_literal_sync().context("fetching result")?;
-        lit.to_tuple().context("untupling result")
+    /// Pure-Rust CPU backend; needs no artifacts.
+    pub fn native() -> Runtime {
+        Self::native_with_threads(crate::util::threadpool::ThreadPool::default_threads())
+    }
+
+    /// Native backend with an explicit GEMM thread count.
+    pub fn native_with_threads(threads: usize) -> Runtime {
+        let be = backend::native::NativeBackend::new(threads);
+        Runtime { backend: Rc::new(RefCell::new(Box::new(be) as Box<dyn Backend>)), manifest: None }
+    }
+
+    /// Short backend identifier ("native" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.borrow().name()
+    }
+
+    /// Human-readable platform string.
+    pub fn platform(&self) -> String {
+        self.backend.borrow().platform()
+    }
+
+    pub(crate) fn handle(&self) -> BackendHandle {
+        self.backend.clone()
     }
 }
 
 // ---------------------------------------------------------------------------
-// Literal marshalling helpers (host Vec<f32>/Vec<i32> <-> xla::Literal).
+// Literal marshalling helpers (host Vec<f32>/Vec<i32> <-> xla::Literal),
+// used by the PJRT backend and its benches.
 // ---------------------------------------------------------------------------
 
 /// f32 literal of arbitrary shape from a flat row-major slice.
@@ -132,5 +185,26 @@ mod tests {
     fn scalar_literal() {
         let lit = lit_scalar(2.5);
         assert_eq!(lit.get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn auto_selects_native_without_artifacts() {
+        let rt = Runtime::new(Path::new("/definitely/not/a/dir")).unwrap();
+        assert_eq!(rt.backend_name(), "native");
+        assert!(rt.manifest.is_none());
+    }
+
+    #[test]
+    fn explicit_pjrt_fails_without_artifacts() {
+        assert!(Runtime::with_backend(Path::new("/definitely/not/a/dir"), BackendChoice::Pjrt)
+            .is_err());
+    }
+
+    #[test]
+    fn backend_choice_parses() {
+        assert_eq!(BackendChoice::parse("auto").unwrap(), BackendChoice::Auto);
+        assert_eq!(BackendChoice::parse("native").unwrap(), BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert!(BackendChoice::parse("tpu").is_err());
     }
 }

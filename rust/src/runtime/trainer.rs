@@ -1,29 +1,49 @@
-//! Typed drivers over the AOT artifacts: the L-step train step, the eval
-//! step, and the quantization C-step kernel.
+//! Typed drivers over the execution backend: the L-step train step, the
+//! eval step, and the quantization C-step kernel.
 //!
-//! These are the only places that know the artifact calling conventions
-//! (input/output orderings documented in `python/compile/model.py`).
+//! Each driver is a thin dispatcher over [`crate::runtime::Backend`]: the
+//! batching/padding conventions live here, the math lives in the backend
+//! (`backend/native.rs` pure-Rust, `backend/pjrt.rs` AOT artifacts).
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{ensure, Result};
 
-use super::{lit_f32, lit_i32, lit_scalar, lit_to_f32, lit_to_i32, Runtime};
+use super::backend::native::NativeBackend;
+use super::{Backend, BackendHandle, Runtime};
 use crate::data::Dataset;
-use crate::models::ParamState;
+use crate::models::{ModelSpec, ParamState};
 use crate::tensor::Matrix;
 
-/// Driver for `<model>_train.hlo.txt`: one SGD step on the penalized
-/// L-step objective.
+fn native_handle(threads: usize) -> BackendHandle {
+    std::rc::Rc::new(std::cell::RefCell::new(
+        Box::new(NativeBackend::new(threads)) as Box<dyn Backend>
+    ))
+}
+
+/// Driver for one SGD step on the penalized L-step objective.
 pub struct TrainDriver {
-    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    backend: BackendHandle,
+    pub spec: ModelSpec,
     pub widths: Vec<usize>,
     pub batch: usize,
 }
 
 impl TrainDriver {
     pub fn new(rt: &mut Runtime, model: &str) -> Result<TrainDriver> {
-        let art = rt.manifest.model(model).map_err(anyhow::Error::msg)?.clone();
-        let exe = rt.executable(&art.train_file)?;
-        Ok(TrainDriver { exe, widths: art.widths, batch: art.batch })
+        let backend = rt.handle();
+        let spec = backend.borrow_mut().model_spec(model)?;
+        Ok(TrainDriver { widths: spec.widths.clone(), batch: spec.batch, spec, backend })
+    }
+
+    /// Native-backend driver for an arbitrary (possibly unregistered) model
+    /// spec — the native L step is not shape-static, so tests and library
+    /// callers can bring their own shapes.
+    pub fn native_for_spec(spec: &ModelSpec, threads: usize) -> TrainDriver {
+        TrainDriver {
+            backend: native_handle(threads),
+            widths: spec.widths.clone(),
+            batch: spec.batch,
+            spec: spec.clone(),
+        }
     }
 
     pub fn n_layers(&self) -> usize {
@@ -34,6 +54,7 @@ impl TrainDriver {
     /// `lambdas` are per-weight-matrix; `mu` is the per-layer penalty
     /// vector (0 entries disable the penalty); returns the penalized loss
     /// at the *start* of the step.
+    #[allow(clippy::too_many_arguments)]
     pub fn step(
         &self,
         state: &mut ParamState,
@@ -48,56 +69,16 @@ impl TrainDriver {
         ensure!(deltas.len() == nl && lambdas.len() == nl && mu.len() == nl);
         ensure!(x.len() == self.batch * self.widths[0], "bad x batch size");
         ensure!(y.len() == self.batch, "bad y batch size");
-
-        let mut inputs = Vec::with_capacity(4 * nl + 4 + 2 * nl);
-        // params
-        for l in 0..nl {
-            let w = &state.weights[l];
-            inputs.push(lit_f32(&w.data, &[w.rows, w.cols])?);
-            inputs.push(lit_f32(&state.biases[l], &[state.biases[l].len()])?);
-        }
-        // momenta
-        for l in 0..nl {
-            let m = &state.w_momenta[l];
-            inputs.push(lit_f32(&m.data, &[m.rows, m.cols])?);
-            inputs.push(lit_f32(&state.b_momenta[l], &[state.b_momenta[l].len()])?);
-        }
-        inputs.push(lit_f32(x, &[self.batch, self.widths[0]])?);
-        inputs.push(lit_i32(y, &[self.batch])?);
-        for d in deltas {
-            inputs.push(lit_f32(&d.data, &[d.rows, d.cols])?);
-        }
-        for lam in lambdas {
-            inputs.push(lit_f32(&lam.data, &[lam.rows, lam.cols])?);
-        }
-        inputs.push(lit_f32(mu, &[nl])?);
-        inputs.push(lit_scalar(lr));
-
-        let outs = Runtime::run(&self.exe, &inputs)?;
-        ensure!(outs.len() == 4 * nl + 1, "train artifact returned {} outputs", outs.len());
-
-        // unpack: new params, new momenta, loss
-        let mut it = outs.into_iter();
-        for l in 0..nl {
-            let w = it.next().unwrap();
-            state.weights[l].data.copy_from_slice(&lit_to_f32(&w)?);
-            let b = it.next().unwrap();
-            state.biases[l].copy_from_slice(&lit_to_f32(&b)?);
-        }
-        for l in 0..nl {
-            let m = it.next().unwrap();
-            state.w_momenta[l].data.copy_from_slice(&lit_to_f32(&m)?);
-            let bm = it.next().unwrap();
-            state.b_momenta[l].copy_from_slice(&lit_to_f32(&bm)?);
-        }
-        let loss = it.next().unwrap().get_first_element::<f32>().context("reading loss")?;
-        Ok(loss)
+        self.backend
+            .borrow_mut()
+            .train_step(&self.spec, state, x, y, deltas, lambdas, mu, lr)
     }
 }
 
-/// Driver for `<model>_eval.hlo.txt`: loss and error over a dataset.
+/// Driver for the eval pass: loss and error over a dataset.
 pub struct EvalDriver {
-    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    backend: BackendHandle,
+    pub spec: ModelSpec,
     pub widths: Vec<usize>,
     pub eval_batch: usize,
 }
@@ -113,26 +94,24 @@ pub struct EvalResult {
 
 impl EvalDriver {
     pub fn new(rt: &mut Runtime, model: &str) -> Result<EvalDriver> {
-        let art = rt.manifest.model(model).map_err(anyhow::Error::msg)?.clone();
-        let exe = rt.executable(&art.eval_file)?;
-        Ok(EvalDriver { exe, widths: art.widths, eval_batch: art.eval_batch })
+        let backend = rt.handle();
+        let spec = backend.borrow_mut().model_spec(model)?;
+        Ok(EvalDriver { widths: spec.widths.clone(), eval_batch: spec.eval_batch, spec, backend })
+    }
+
+    /// Native-backend driver for an arbitrary spec (see
+    /// [`TrainDriver::native_for_spec`]).
+    pub fn native_for_spec(spec: &ModelSpec, threads: usize) -> EvalDriver {
+        EvalDriver {
+            backend: native_handle(threads),
+            widths: spec.widths.clone(),
+            eval_batch: spec.eval_batch,
+            spec: spec.clone(),
+        }
     }
 
     fn run_chunk(&self, state: &ParamState, x: &[f32], y: &[i32]) -> Result<(f64, i64)> {
-        let nl = self.widths.len() - 1;
-        let mut inputs = Vec::with_capacity(2 * nl + 2);
-        for l in 0..nl {
-            let w = &state.weights[l];
-            inputs.push(lit_f32(&w.data, &[w.rows, w.cols])?);
-            inputs.push(lit_f32(&state.biases[l], &[state.biases[l].len()])?);
-        }
-        inputs.push(lit_f32(x, &[self.eval_batch, self.widths[0]])?);
-        inputs.push(lit_i32(y, &[self.eval_batch])?);
-        let outs = Runtime::run(&self.exe, &inputs)?;
-        ensure!(outs.len() == 2, "eval artifact returned {} outputs", outs.len());
-        let loss_sum = outs[0].get_first_element::<f32>()? as f64;
-        let correct = lit_to_i32(&outs[1])?[0] as i64;
-        Ok((loss_sum, correct))
+        self.backend.borrow_mut().eval_chunk(&self.spec, state, x, y)
     }
 
     /// Evaluate the model on a whole dataset.  The last partial chunk is
@@ -180,23 +159,35 @@ impl EvalDriver {
     }
 }
 
-/// Driver for `quant_assign_k<K>.hlo.txt`: the Pallas k-means E-step +
-/// sufficient statistics, used to run full Lloyd k-means with the M-step
-/// on the host (see python/compile/kernels/quant_assign.py).
+/// Driver for the quantization E-step kernel: k-means assignment +
+/// sufficient statistics over fixed-size padded buffers, used to run full
+/// Lloyd k-means with the M-step on the host (see
+/// python/compile/kernels/quant_assign.py).
 pub struct QuantDriver {
-    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    backend: BackendHandle,
     pub n: usize,
     pub k: usize,
 }
 
 impl QuantDriver {
-    /// Load the kernel for codebook size `k` able to hold `n_weights`.
+    /// Load the kernel for codebook size `k` able to hold `n_weights`
+    /// (`None` when this backend has no fitting kernel — only possible on
+    /// the artifact path).
     pub fn new(rt: &mut Runtime, n_weights: usize, k: usize) -> Result<Option<QuantDriver>> {
-        let Some(art) = rt.manifest.quant_for(n_weights, k).cloned() else {
-            return Ok(None);
-        };
-        let exe = rt.executable(&art.file)?;
-        Ok(Some(QuantDriver { exe, n: art.n, k: art.k }))
+        let backend = rt.handle();
+        let size = backend.borrow_mut().quant_kernel_size(n_weights, k)?;
+        Ok(size.map(|n| QuantDriver { backend, n, k }))
+    }
+
+    /// Native-backend kernel (always available).
+    pub fn native(n_weights: usize, k: usize, threads: usize) -> QuantDriver {
+        let backend = native_handle(threads);
+        let n = backend
+            .borrow_mut()
+            .quant_kernel_size(n_weights, k)
+            .expect("k >= 1")
+            .expect("native kernels are unconstrained");
+        QuantDriver { backend, n, k }
     }
 
     /// One E-step pass: returns (assignments, distortion, per-center sums,
@@ -210,30 +201,24 @@ impl QuantDriver {
         wp.extend_from_slice(w);
         wp.resize(self.n, codebook[0]);
 
-        let inputs = [lit_f32(&wp, &[self.n])?, lit_f32(codebook, &[self.k])?];
-        let outs = Runtime::run(&self.exe, &inputs)?;
-        ensure!(outs.len() == 4, "quant artifact returned {} outputs", outs.len());
-        let assign_raw = lit_to_i32(&outs[0])?;
-        let dist = outs[1].get_first_element::<f32>()? as f64;
-        let sums_raw = lit_to_f32(&outs[2])?;
-        let counts_raw = lit_to_f32(&outs[3])?;
+        let raw = self.backend.borrow_mut().quant_assign(&wp, codebook)?;
+        ensure!(raw.assignments.len() == self.n, "kernel returned wrong assignment count");
+        ensure!(raw.sums.len() == self.k && raw.counts.len() == self.k);
 
-        let assignments: Vec<u32> = assign_raw[..w.len()].iter().map(|&a| a as u32).collect();
-        let mut sums: Vec<f64> = sums_raw.iter().map(|&s| s as f64).collect();
-        let mut counts: Vec<u64> = counts_raw.iter().map(|&c| c as u64).collect();
-        // remove the padding's contribution (pad values == codebook[0] may
-        // tie with another center; the kernel breaks argmin ties toward the
-        // lowest index, so they land in the first center equal to c[0])
-        let pad_center = codebook
-            .iter()
-            .position(|&c| c == codebook[0])
-            .unwrap_or(0);
-        sums[pad_center] -= pad as f64 * codebook[0] as f64;
-        counts[pad_center] = counts[pad_center].saturating_sub(pad as u64);
-        Ok((assignments, dist, sums, counts))
+        let assignments: Vec<u32> = raw.assignments[..w.len()].to_vec();
+        let mut sums = raw.sums;
+        let mut counts = raw.counts;
+        // Remove the padding's contribution.  Padded entries equal
+        // codebook[0] exactly, so their distance to center 0 is zero — the
+        // minimum — and the kernels break argmin ties toward the *lowest*
+        // index, so even when another center duplicates codebook[0] every
+        // padded entry lands in center 0.
+        sums[0] -= pad as f64 * codebook[0] as f64;
+        counts[0] = counts[0].saturating_sub(pad as u64);
+        Ok((assignments, raw.distortion, sums, counts))
     }
 
-    /// Full Lloyd k-means through the PJRT kernel (host M-step).
+    /// Full Lloyd k-means through the E-step kernel (host M-step).
     /// Returns (codebook, assignments).
     pub fn kmeans(
         &self,
@@ -262,5 +247,52 @@ impl QuantDriver {
         let (assign, _, _, _) = self.assign(w, &centers)?;
         assignments.copy_from_slice(&assign);
         Ok((centers, assignments))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quant_padding_corrected_with_duplicate_centers() {
+        // Regression: padded entries equal codebook[0]; with a *duplicate*
+        // center value the tie must still resolve to index 0, and the
+        // correction must remove exactly the padding from center 0's stats.
+        let drv = QuantDriver::native(3, 3, 2);
+        assert!(drv.n > 3, "kernel must actually pad");
+        let codebook = vec![0.5f32, 0.5, -1.0];
+        let w = vec![0.5f32, -1.0, 0.6];
+        let (assign, dist, sums, counts) = drv.assign(&w, &codebook).unwrap();
+        assert_eq!(assign, vec![0, 2, 0]); // ties toward the lowest index
+        assert_eq!(counts, vec![2, 0, 1]);
+        assert!((sums[0] - 1.1).abs() < 1e-6, "sums={sums:?}");
+        assert_eq!(sums[1], 0.0);
+        assert!((sums[2] + 1.0).abs() < 1e-6);
+        // only the real weights contribute distortion: (0.6-0.5)^2
+        assert!((dist - 0.01).abs() < 1e-6, "dist={dist}");
+    }
+
+    #[test]
+    fn quant_padding_zero_weight_edge() {
+        // codebook[0] = 0 pads with zeros; counts must not underflow
+        let drv = QuantDriver::native(1, 2, 1);
+        let (assign, dist, sums, counts) = drv.assign(&[3.0], &[0.0, 3.0]).unwrap();
+        assert_eq!(assign, vec![1]);
+        assert_eq!(counts, vec![0, 1]);
+        assert_eq!(sums[0], 0.0);
+        assert!((sums[1] - 3.0).abs() < 1e-6);
+        assert_eq!(dist, 0.0);
+    }
+
+    #[test]
+    fn native_kmeans_converges_on_two_clusters() {
+        let w = vec![-1.1f32, -0.9, -1.0, 0.9, 1.0, 1.1];
+        let drv = QuantDriver::native(w.len(), 2, 2);
+        let (cb, asg) = drv.kmeans(&w, &[-0.1, 0.1], 50).unwrap();
+        assert!((cb[0] + 1.0).abs() < 1e-5, "cb={cb:?}");
+        assert!((cb[1] - 1.0).abs() < 1e-5);
+        assert_eq!(&asg[..3], &[0, 0, 0]);
+        assert_eq!(&asg[3..], &[1, 1, 1]);
     }
 }

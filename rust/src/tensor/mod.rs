@@ -87,6 +87,129 @@ impl Matrix {
         out
     }
 
+    /// `self * other` with row-block parallelism and K-tiling — the GEMM
+    /// behind the native backend's L step.  Each worker owns a contiguous
+    /// block of output rows; within a block the K dimension is tiled so the
+    /// touched rows of `other` stay cache-resident across the block's rows.
+    /// Accumulation order per output row is K-ascending, identical to the
+    /// serial [`Matrix::matmul`], so results match it exactly.
+    pub fn matmul_par(&self, other: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul_par shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        const ROW_BLOCK: usize = 32;
+        const K_TILE: usize = 256;
+        let blocks = (m + ROW_BLOCK - 1) / ROW_BLOCK;
+        if threads <= 1 || blocks <= 1 {
+            return self.matmul(other);
+        }
+        let block_rows: Vec<Vec<f32>> =
+            crate::util::threadpool::parallel_map(blocks, threads, |bi| {
+                let r0 = bi * ROW_BLOCK;
+                let r1 = (r0 + ROW_BLOCK).min(m);
+                let mut out = vec![0.0f32; (r1 - r0) * n];
+                let mut k0 = 0;
+                while k0 < k {
+                    let k1 = (k0 + K_TILE).min(k);
+                    for (ri, i) in (r0..r1).enumerate() {
+                        let a_row = &self.data[i * k..(i + 1) * k];
+                        let o_row = &mut out[ri * n..(ri + 1) * n];
+                        for kk in k0..k1 {
+                            let a = a_row[kk];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let b_row = &other.data[kk * n..(kk + 1) * n];
+                            for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
+                                *o += a * b;
+                            }
+                        }
+                    }
+                    k0 = k1;
+                }
+                out
+            });
+        let mut data = Vec::with_capacity(m * n);
+        for r in block_rows {
+            data.extend_from_slice(&r);
+        }
+        Matrix::from_vec(m, n, data)
+    }
+
+    /// `selfᵀ * other` without materializing the transpose (`self`: r×m,
+    /// `other`: r×n, result m×n).  Streams both operands' rows: for each
+    /// shared row r, the outer product `self[r, i0..i1]ᵀ · other[r, :]` is
+    /// accumulated into the worker's output block, so accumulation over r
+    /// is ascending per output element (deterministic, matching
+    /// `self.transpose().matmul(other)`).  Used for the backward pass
+    /// `dW = Hᵀ · dZ`.
+    pub fn matmul_tn_par(&self, other: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn_par shape mismatch");
+        let (r_dim, m, n) = (self.rows, self.cols, other.cols);
+        const ROW_BLOCK: usize = 32;
+        let blocks = ((m + ROW_BLOCK - 1) / ROW_BLOCK).max(1);
+        let block_rows: Vec<Vec<f32>> =
+            crate::util::threadpool::parallel_map(blocks, threads.max(1), |bi| {
+                let i0 = bi * ROW_BLOCK;
+                let i1 = (i0 + ROW_BLOCK).min(m);
+                let mut out = vec![0.0f32; (i1 - i0) * n];
+                for r in 0..r_dim {
+                    let a_row = &self.data[r * m..(r + 1) * m];
+                    let b_row = &other.data[r * n..(r + 1) * n];
+                    for (oi, i) in (i0..i1).enumerate() {
+                        let a = a_row[i];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let o_row = &mut out[oi * n..(oi + 1) * n];
+                        for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
+                            *o += a * b;
+                        }
+                    }
+                }
+                out
+            });
+        let mut data = Vec::with_capacity(m * n);
+        for r in block_rows {
+            data.extend_from_slice(&r);
+        }
+        Matrix::from_vec(m, n, data)
+    }
+
+    /// `self * otherᵀ` without materializing the transpose (both operands
+    /// row-major, so every inner product streams two contiguous rows).
+    /// Parallel over row blocks of `self`; used for the backward pass
+    /// `dH = dZ · Wᵀ`.
+    pub fn matmul_nt_par(&self, other: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt_par shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        const ROW_BLOCK: usize = 32;
+        let blocks = ((m + ROW_BLOCK - 1) / ROW_BLOCK).max(1);
+        let block_rows: Vec<Vec<f32>> =
+            crate::util::threadpool::parallel_map(blocks, threads.max(1), |bi| {
+                let r0 = bi * ROW_BLOCK;
+                let r1 = (r0 + ROW_BLOCK).min(m);
+                let mut out = vec![0.0f32; (r1 - r0) * n];
+                for (ri, i) in (r0..r1).enumerate() {
+                    let a_row = &self.data[i * k..(i + 1) * k];
+                    let o_row = &mut out[ri * n..(ri + 1) * n];
+                    for (j, o) in o_row.iter_mut().enumerate() {
+                        let b_row = &other.data[j * k..(j + 1) * k];
+                        let mut acc = 0.0f32;
+                        for (&a, &b) in a_row.iter().zip(b_row.iter()) {
+                            acc += a * b;
+                        }
+                        *o = acc;
+                    }
+                }
+                out
+            });
+        let mut data = Vec::with_capacity(m * n);
+        for r in block_rows {
+            data.extend_from_slice(&r);
+        }
+        Matrix::from_vec(m, n, data)
+    }
+
     /// Squared Frobenius norm.
     pub fn fro_norm_sq(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
@@ -305,5 +428,65 @@ mod tests {
     fn quickselect_handles_duplicates() {
         let mut xs = vec![2.0; 100];
         assert_eq!(quickselect(&mut xs, 50), 2.0);
+    }
+
+    fn rand_matrix(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = crate::util::rng::Xoshiro256::new(seed);
+        let mut a = Matrix::zeros(m, n);
+        rng.fill_normal(&mut a.data, 0.0, 1.0);
+        a
+    }
+
+    #[test]
+    fn matmul_par_matches_serial() {
+        // sizes straddle the row-block and K-tile boundaries
+        for &(m, k, n) in &[(1usize, 7usize, 5usize), (33, 300, 17), (70, 64, 9), (128, 257, 40)] {
+            let a = rand_matrix(m, k, 1);
+            let b = rand_matrix(k, n, 2);
+            let serial = a.matmul(&b);
+            for threads in [1usize, 2, 4, 7] {
+                let par = a.matmul_par(&b, threads);
+                assert_eq!(par.data, serial.data, "m={m} k={k} n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tn_par_matches_transpose() {
+        for &(r, m, n) in &[(4usize, 3usize, 5usize), (128, 70, 33), (31, 100, 10)] {
+            let a = rand_matrix(r, m, 7);
+            let b = rand_matrix(r, n, 8);
+            let want = a.transpose().matmul(&b);
+            let got = a.matmul_tn_par(&b, 4);
+            assert_eq!((got.rows, got.cols), (m, n));
+            for (x, y) in got.data.iter().zip(want.data.iter()) {
+                assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_nt_par_matches_transpose() {
+        for &(m, k, n) in &[(1usize, 4usize, 3usize), (40, 100, 33), (65, 10, 70)] {
+            let a = rand_matrix(m, k, 3);
+            let b = rand_matrix(n, k, 4); // interpreted as Bᵀ operand
+            let want = a.matmul(&b.transpose());
+            let got = a.matmul_nt_par(&b, 4);
+            assert_eq!((got.rows, got.cols), (m, n));
+            for (x, y) in got.data.iter().zip(want.data.iter()) {
+                assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_par_zero_rows_of_a_skip_consistently() {
+        // the a == 0.0 skip must not change results vs serial
+        let mut a = rand_matrix(40, 50, 5);
+        for v in a.data.iter_mut().step_by(3) {
+            *v = 0.0;
+        }
+        let b = rand_matrix(50, 20, 6);
+        assert_eq!(a.matmul_par(&b, 4).data, a.matmul(&b).data);
     }
 }

@@ -1,21 +1,20 @@
 //! End-to-end LC algorithm integration tests: small but *real* runs through
-//! the PJRT L step and the Rust C step.
+//! the L step (native backend by default, PJRT when artifacts exist) and
+//! the Rust C step.
 
+use lc::compress::lowrank::{RankCost, RankSelection};
 use lc::compress::prune::ConstraintL0;
 use lc::compress::quantize::AdaptiveQuant;
 use lc::compress::task::{TaskSet, TaskSpec};
 use lc::compress::view::View;
-use lc::harness::{artifact_dir, Env, Scale};
+use lc::harness::{Env, Scale};
+use lc::lc::monitor::Violation;
 use lc::lc::schedule::{LrSchedule, MuSchedule};
 use lc::lc::LcConfig;
 use lc::models::lookup;
 
-fn env_or_skip(scale: Scale) -> Option<Env> {
-    if !artifact_dir().join("manifest.txt").exists() {
-        eprintln!("SKIP: no artifacts (run `make artifacts`)");
-        return None;
-    }
-    Some(Env::new(scale).expect("env"))
+fn env(scale: Scale) -> Env {
+    Env::new(scale).expect("env (native backend needs no artifacts)")
 }
 
 fn tiny_lc_config() -> LcConfig {
@@ -34,7 +33,7 @@ fn tiny_lc_config() -> LcConfig {
 
 #[test]
 fn lc_quantize_end_to_end() {
-    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let mut env = env(Scale::tiny());
     let spec = lookup("mlp-small").unwrap();
     let reference = env.reference(&spec).unwrap();
     let ref_test = env.evaluate(&reference, true).unwrap();
@@ -92,7 +91,7 @@ fn lc_quantize_end_to_end() {
 
 #[test]
 fn lc_prune_end_to_end_sparsity_exact() {
-    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let mut env = env(Scale::tiny());
     let spec = lookup("mlp-small").unwrap();
     let reference = env.reference(&spec).unwrap();
     let kappa = spec.n_weights() / 20; // keep 5%
@@ -118,7 +117,7 @@ fn lc_prune_end_to_end_sparsity_exact() {
 
 #[test]
 fn lc_mixed_tasks_and_uncovered_layer() {
-    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let mut env = env(Scale::tiny());
     let spec = lookup("lenet300").unwrap();
     let reference = env.reference(&spec).unwrap();
     let ref_w1 = reference.weights[1].clone();
@@ -163,7 +162,7 @@ fn lc_mixed_tasks_and_uncovered_layer() {
 
 #[test]
 fn lc_qp_mode_also_converges() {
-    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let mut env = env(Scale::tiny());
     let spec = lookup("mlp-small").unwrap();
     let reference = env.reference(&spec).unwrap();
     let tasks = TaskSet::new(vec![TaskSpec {
@@ -183,7 +182,7 @@ fn lc_qp_mode_also_converges() {
 
 #[test]
 fn lc_monitor_clean_on_wellbehaved_run() {
-    let Some(mut env) = env_or_skip(Scale::tiny()) else { return };
+    let mut env = env(Scale::tiny());
     let spec = lookup("mlp-small").unwrap();
     let reference = env.reference(&spec).unwrap();
     let tasks = TaskSet::new(vec![TaskSpec {
@@ -200,4 +199,45 @@ fn lc_monitor_clean_on_wellbehaved_run() {
         "unexpected violations: {:?}",
         out.monitor.violations
     );
+}
+
+#[test]
+fn lc_rank_selection_growing_mu_records_no_cstep_violations() {
+    // Regression for the monitor gate: rank selection is penalty-form — its
+    // C step trades tail energy against λ·C(r) at exchange rate μ, so its
+    // distortion may legitimately move non-monotonically across steps.  A
+    // run over a strongly growing μ schedule must record zero
+    // CStepDistortionIncreased violations (before the
+    // `Compression::constraint_form` gate, this could flag healthy runs).
+    let mut env = env(Scale::tiny());
+    let spec = lookup("mlp-small").unwrap();
+    let reference = env.reference(&spec).unwrap();
+    // layer 1 (100x10) keeps the per-step SVD cheap
+    let tasks = TaskSet::new(vec![TaskSpec {
+        name: "rs1".into(),
+        layers: vec![1],
+        view: View::Matrix,
+        compression: Box::new(RankSelection {
+            lambda: 1e-3,
+            cost: RankCost::Storage,
+            max_rank: 0,
+        }),
+    }]);
+    let mut cfg = tiny_lc_config();
+    cfg.mu = MuSchedule { mu0: 1e-3, growth: 10.0, steps: 4 };
+    let out = env.run_lc(&spec, tasks, cfg, reference).unwrap();
+    let c_violations = out
+        .monitor
+        .violations
+        .iter()
+        .filter(|v| matches!(v, Violation::CStepDistortionIncreased { .. }))
+        .count();
+    assert_eq!(
+        c_violations, 0,
+        "penalty-form scheme must not be distortion-checked: {:?}",
+        out.monitor.violations
+    );
+    // the run itself must still behave: rank selection produced telemetry
+    assert_eq!(out.records.len(), 4);
+    assert_eq!(out.records.last().unwrap().task_distortions.len(), 1);
 }

@@ -1,0 +1,183 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the API surface the `lc` crate uses: an opaque
+//! [`Error`] carrying a message chain, [`Result`], the [`Context`]
+//! extension trait for `Result`/`Option`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros.  `{e}` prints the outermost message, `{e:#}` the full
+//! `a: b: c` chain (matching anyhow's alternate formatting).
+
+use std::fmt;
+
+/// An error message chain (outermost context first).
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The messages of the chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.cause.as_deref();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain().join(": "))
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cur {
+            write!(f, "\n    {}", e.msg)?;
+            cur = e.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, which
+// is what makes this blanket conversion coherent (same trick as the real
+// anyhow crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for m in msgs.into_iter().rev() {
+            err = Some(Error { msg: m, cause: err.map(Box::new) });
+        }
+        err.expect("at least one message")
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to fallible
+/// values, converting them into [`Error`] chains.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        let io: std::io::Result<()> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        io.context("outer")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing");
+        assert_eq!(Some(1u32).context("missing").unwrap(), 1);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            ensure!(x != 5);
+            if x == 3 {
+                bail!("three");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "too big: 12");
+        assert!(format!("{}", f(5).unwrap_err()).contains("x != 5"));
+        assert_eq!(format!("{}", f(3).unwrap_err()), "three");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(format!("{e}"), "code 7");
+    }
+}

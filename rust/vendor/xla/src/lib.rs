@@ -1,0 +1,216 @@
+//! Offline **stub** of the `xla` PJRT bindings.
+//!
+//! The real crate wraps the PJRT C API (CPU plugin) and executes AOT-lowered
+//! HLO artifacts.  This stand-in keeps the same API surface so the artifact
+//! path in `rust/src/runtime/` compiles, with two behaviors:
+//!
+//! * [`Literal`] is a **functional** host-side container — the marshalling
+//!   helpers (`lit_f32`/`lit_i32`/...) work and stay unit-tested;
+//! * everything that would touch a PJRT client ([`PjRtClient::cpu`],
+//!   compilation, execution) returns an error, which the runtime dispatch
+//!   treats as "PJRT unavailable" and falls back to the native backend.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type for all stubbed operations.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT/XLA runtime unavailable in this offline build (stub `xla` crate; \
+         the native backend is used instead)"
+    ))
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait ArrayElement: Copy {
+    const TY: PrimitiveType;
+    fn read(lit: &Literal) -> Result<Vec<Self>>;
+    fn write(lit: &mut Literal, data: &[Self]) -> Result<()>;
+}
+
+/// Host-side typed buffer with a shape — functional in the stub.
+#[derive(Clone, Debug, Default)]
+pub struct Literal {
+    ty: Option<PrimitiveType>,
+    dims: Vec<usize>,
+    f32s: Vec<f32>,
+    i32s: Vec<i32>,
+}
+
+impl ArrayElement for f32 {
+    const TY: PrimitiveType = PrimitiveType::F32;
+
+    fn read(lit: &Literal) -> Result<Vec<f32>> {
+        match lit.ty {
+            Some(PrimitiveType::F32) => Ok(lit.f32s.clone()),
+            other => Err(XlaError(format!("literal is {other:?}, not F32"))),
+        }
+    }
+
+    fn write(lit: &mut Literal, data: &[f32]) -> Result<()> {
+        match lit.ty {
+            Some(PrimitiveType::F32) if lit.f32s.len() == data.len() => {
+                lit.f32s.copy_from_slice(data);
+                Ok(())
+            }
+            _ => Err(XlaError("f32 write: shape/type mismatch".into())),
+        }
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: PrimitiveType = PrimitiveType::S32;
+
+    fn read(lit: &Literal) -> Result<Vec<i32>> {
+        match lit.ty {
+            Some(PrimitiveType::S32) => Ok(lit.i32s.clone()),
+            other => Err(XlaError(format!("literal is {other:?}, not S32"))),
+        }
+    }
+
+    fn write(lit: &mut Literal, data: &[i32]) -> Result<()> {
+        match lit.ty {
+            Some(PrimitiveType::S32) if lit.i32s.len() == data.len() => {
+                lit.i32s.copy_from_slice(data);
+                Ok(())
+            }
+            _ => Err(XlaError("i32 write: shape/type mismatch".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Zero-initialized literal of the given element type and shape.
+    pub fn create_from_shape(ty: PrimitiveType, dims: &[usize]) -> Literal {
+        let n: usize = dims.iter().product();
+        let mut lit = Literal { ty: Some(ty), dims: dims.to_vec(), ..Default::default() };
+        match ty {
+            PrimitiveType::F32 => lit.f32s = vec![0.0; n],
+            PrimitiveType::S32 => lit.i32s = vec![0; n],
+        }
+        lit
+    }
+
+    /// Rank-0 f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { ty: Some(PrimitiveType::F32), dims: Vec::new(), f32s: vec![v], ..Default::default() }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.f32s.len().max(self.i32s.len())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn copy_raw_from<T: ArrayElement>(&mut self, data: &[T]) -> Result<()> {
+        T::write(self, data)
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        T::read(self)
+    }
+
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        T::read(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| XlaError("empty literal".into()))
+    }
+
+    /// Untuple — stub literals are never tuples.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module handle (stub: never constructible from disk).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text {}", path.display())))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle (stub: creation always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let mut lit = Literal::create_from_shape(PrimitiveType::F32, &[2, 2]);
+        lit.copy_raw_from(&[1.0f32, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+        assert_eq!(Literal::scalar(2.5).get_first_element::<f32>().unwrap(), 2.5);
+    }
+
+    #[test]
+    fn client_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file(Path::new("/nope")).is_err());
+    }
+}

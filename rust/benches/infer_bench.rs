@@ -1,0 +1,264 @@
+//! Dense vs compressed execution per scheme (`cargo bench --bench
+//! infer_bench`) — the measurement behind the compressed-execution
+//! engine's claim that a 10x-FLOPs-ratio model really runs ~10x less
+//! work per example instead of decompressing to a dense GEMM.
+//!
+//! For each scheme x compression-ratio point the harness builds a
+//! lenet300-shaped model (784-300-100-10), materializes the equivalent
+//! dense weights, verifies the two forwards agree within 1e-5 relative,
+//! and times both paths on a fixed batch.  Results go to stdout and to
+//! `BENCH_infer.json` (one record per scenario) so CI can track the perf
+//! trajectory per PR.  `LCC_BENCH_QUICK=1` bounds the iteration budget
+//! for smoke runs.
+
+use std::io::Write;
+
+use lc::bench::Bencher;
+use lc::compress::Theta;
+use lc::infer::{CompressedLayer, CompressedModel};
+use lc::tensor::Matrix;
+use lc::util::rng::Xoshiro256;
+
+const WIDTHS: [usize; 4] = [784, 300, 100, 10];
+const BATCH: usize = 512;
+const THREADS: usize = 4;
+
+struct Scenario {
+    scheme: &'static str,
+    config: String,
+    /// Per-layer Θ (one single-layer task per weight matrix).
+    thetas: Vec<Theta>,
+}
+
+fn rand_matrix(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    rng.fill_normal(&mut m.data, 0.0, 0.5);
+    m
+}
+
+fn lowrank_theta(m: usize, n: usize, rank: usize, rng: &mut Xoshiro256) -> Theta {
+    let u = rand_matrix(m, rank, rng);
+    let v = rand_matrix(n, rank, rng);
+    let s: Vec<f32> = (0..rank).map(|i| 1.0 + (rank - i) as f32 / rank as f32).collect();
+    Theta::LowRank { u, s, v }
+}
+
+fn sparse_theta(m: usize, n: usize, keep_frac: f64, rng: &mut Xoshiro256) -> Theta {
+    let total = m * n;
+    let keep = ((total as f64 * keep_frac) as usize).max(1);
+    let mut idx = rng.sample_indices(total, keep);
+    idx.sort_unstable();
+    let values: Vec<f32> = idx.iter().map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    Theta::Sparse { len: total, indices: idx.iter().map(|&i| i as u32).collect(), values }
+}
+
+fn quantized_theta(m: usize, n: usize, k: usize, rng: &mut Xoshiro256) -> Theta {
+    let codebook: Vec<f32> = (0..k).map(|i| (i as f32 + 0.5) / k as f32 - 0.5).collect();
+    let assignments: Vec<u32> = (0..m * n).map(|_| rng.below(k) as u32).collect();
+    Theta::Quantized { codebook, assignments }
+}
+
+fn signs_theta(m: usize, n: usize, rng: &mut Xoshiro256) -> Theta {
+    let values: Vec<i8> = (0..m * n).map(|_| rng.below(3) as i8 - 1).collect();
+    Theta::Signs { scale: 0.25, values, ternary: true }
+}
+
+fn scenarios() -> Vec<Scenario> {
+    let mut rng = Xoshiro256::new(2020);
+    let shapes: Vec<(usize, usize)> =
+        (0..WIDTHS.len() - 1).map(|l| (WIDTHS[l], WIDTHS[l + 1])).collect();
+    let mut out = Vec::new();
+
+    // low-rank: rank as a fraction of the min dimension (1/4 is the
+    // acceptance point; smaller ranks show the trajectory)
+    for denom in [4usize, 8, 16] {
+        out.push(Scenario {
+            scheme: "low_rank",
+            config: format!("rank=min/{denom}"),
+            thetas: shapes
+                .iter()
+                .map(|&(m, n)| lowrank_theta(m, n, (m.min(n) / denom).max(1), &mut rng))
+                .collect(),
+        });
+    }
+    // pruning: survivors as a fraction of the weights (10% = the 90%-pruned
+    // acceptance point)
+    for keep in [0.10f64, 0.05, 0.01] {
+        out.push(Scenario {
+            scheme: "sparse",
+            config: format!("keep={:.0}%", keep * 100.0),
+            thetas: shapes.iter().map(|&(m, n)| sparse_theta(m, n, keep, &mut rng)).collect(),
+        });
+    }
+    // quantization: codebook sizes
+    for k in [2usize, 16] {
+        out.push(Scenario {
+            scheme: "quantized",
+            config: format!("k={k}"),
+            thetas: shapes.iter().map(|&(m, n)| quantized_theta(m, n, k, &mut rng)).collect(),
+        });
+    }
+    // ternarization
+    out.push(Scenario {
+        scheme: "signs",
+        config: "ternary".into(),
+        thetas: shapes.iter().map(|&(m, n)| signs_theta(m, n, &mut rng)).collect(),
+    });
+    // additive: the classic low-rank + sparse decomposition, where the
+    // summed kernels stay far below dense cost
+    out.push(Scenario {
+        scheme: "additive",
+        config: "lowrank min/8 + sparse 5%".into(),
+        thetas: shapes
+            .iter()
+            .map(|&(m, n)| {
+                Theta::Additive(vec![
+                    lowrank_theta(m, n, (m.min(n) / 8).max(1), &mut rng),
+                    sparse_theta(m, n, 0.05, &mut rng),
+                ])
+            })
+            .collect(),
+    });
+    out
+}
+
+fn build_models(sc: &Scenario) -> (CompressedModel, CompressedModel) {
+    let mut rng = Xoshiro256::new(7);
+    let nl = WIDTHS.len() - 1;
+    let biases: Vec<Vec<f32>> = (0..nl)
+        .map(|l| (0..WIDTHS[l + 1]).map(|_| rng.normal_f32(0.0, 0.1)).collect())
+        .collect();
+    let compressed_layers: Vec<CompressedLayer> = sc
+        .thetas
+        .iter()
+        .enumerate()
+        .map(|(l, t)| CompressedLayer::from_theta(t, WIDTHS[l], WIDTHS[l + 1]))
+        .collect();
+    // the dense twin always runs the tiled dense GEMM (no auto-CSR): this
+    // is exactly the decompress-then-matmul path being replaced
+    let dense_layers: Vec<CompressedLayer> = sc
+        .thetas
+        .iter()
+        .enumerate()
+        .map(|(l, t)| {
+            CompressedLayer::Dense(Matrix::from_vec(WIDTHS[l], WIDTHS[l + 1], t.decompress()))
+        })
+        .collect();
+    let mk = |layers| CompressedModel {
+        name: format!("{}-{}", sc.scheme, sc.config),
+        widths: WIDTHS.to_vec(),
+        eval_batch: BATCH,
+        layers,
+        biases: biases.clone(),
+    };
+    (mk(compressed_layers), mk(dense_layers))
+}
+
+struct Record {
+    scheme: &'static str,
+    config: String,
+    storage_ratio: f64,
+    flops_ratio: f64,
+    dense_ms: f64,
+    compressed_ms: f64,
+    max_rel_diff: f64,
+}
+
+fn main() {
+    let quick = std::env::var("LCC_BENCH_QUICK").is_ok();
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    if !quick {
+        b.budget = std::time::Duration::from_secs(4);
+    }
+
+    let mut rng = Xoshiro256::new(1);
+    let mut x = vec![0.0f32; BATCH * WIDTHS[0]];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+
+    let dense_macs: u64 =
+        (0..WIDTHS.len() - 1).map(|l| (WIDTHS[l] * WIDTHS[l + 1]) as u64).sum();
+    let mut records: Vec<Record> = Vec::new();
+
+    Bencher::header(&format!(
+        "compressed vs dense execution (784-300-100-10, batch {BATCH}, {THREADS} threads)"
+    ));
+
+    for sc in scenarios() {
+        let (comp, dense) = build_models(&sc);
+        comp.validate().expect("compressed model");
+        dense.validate().expect("dense model");
+
+        // equivalence first: identical inputs, 1e-5 relative
+        let zc = comp.forward(&x, BATCH, THREADS).expect("compressed forward");
+        let zd = dense.forward(&x, BATCH, THREADS).expect("dense forward");
+        let mut max_rel = 0.0f64;
+        for (c, d) in zc.data.iter().zip(zd.data.iter()) {
+            let rel = (c - d).abs() as f64 / (d.abs().max(1.0)) as f64;
+            if rel > max_rel {
+                max_rel = rel;
+            }
+        }
+        assert!(
+            max_rel <= 1e-5,
+            "{} {}: compressed/dense outputs diverge (max rel {max_rel:.3e})",
+            sc.scheme,
+            sc.config
+        );
+
+        let label = format!("{} {}", sc.scheme, sc.config);
+        let dense_ms =
+            b.bench(&format!("{label:<28} dense"), || dense.forward(&x, BATCH, THREADS)).mean_ns
+                / 1e6;
+        let compressed_ms = b
+            .bench(&format!("{label:<28} compressed"), || comp.forward(&x, BATCH, THREADS))
+            .mean_ns
+            / 1e6;
+
+        let storage_bits: u64 = sc.thetas.iter().map(|t| t.storage_bits()).sum();
+        records.push(Record {
+            scheme: sc.scheme,
+            config: sc.config.clone(),
+            storage_ratio: (32 * dense_macs) as f64 / storage_bits.max(1) as f64,
+            flops_ratio: dense_macs as f64 / comp.flops_per_example().max(1) as f64,
+            dense_ms,
+            compressed_ms,
+            max_rel_diff: max_rel,
+        });
+    }
+
+    println!("\n{:<34} {:>9} {:>9} {:>9} {:>10}", "scenario", "FLOPsx", "storagex", "wallx", "maxrel");
+    for r in &records {
+        println!(
+            "{:<34} {:>8.1}x {:>8.1}x {:>8.2}x {:>10.2e}",
+            format!("{} {}", r.scheme, r.config),
+            r.flops_ratio,
+            r.storage_ratio,
+            r.dense_ms / r.compressed_ms.max(1e-12),
+            r.max_rel_diff
+        );
+    }
+
+    // BENCH_infer.json: the per-PR perf trajectory artifact
+    let mut json = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"scheme\": \"{}\", \"config\": \"{}\", \"batch\": {BATCH}, \
+             \"threads\": {THREADS}, \"flops_ratio\": {:.3}, \"storage_ratio\": {:.3}, \
+             \"dense_ms\": {:.4}, \"compressed_ms\": {:.4}, \"speedup\": {:.3}, \
+             \"max_rel_diff\": {:.3e}}}{}\n",
+            r.scheme,
+            r.config,
+            r.flops_ratio,
+            r.storage_ratio,
+            r.dense_ms,
+            r.compressed_ms,
+            r.dense_ms / r.compressed_ms.max(1e-12),
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("]\n");
+    let path = "BENCH_infer.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_infer.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_infer.json");
+    println!("\nwrote {path} ({} scenarios)", records.len());
+}

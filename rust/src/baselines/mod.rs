@@ -47,8 +47,7 @@ pub fn direct_compression(
 ) -> Result<BaselineOutcome> {
     tasks.validate(spec.n_layers()).map_err(anyhow::Error::msg)?;
     let (snap, thetas) = project_state(spec, tasks, state, mu_for_c);
-    let deltas: Vec<Matrix> = snap.weights.clone();
-    let metrics = account(spec, tasks, &thetas, &deltas);
+    let metrics = account(spec, tasks, &thetas, &snap.weights);
     Ok(BaselineOutcome {
         train: eval.eval(&snap, train_data)?,
         test: eval.eval(&snap, test_data)?,
@@ -104,8 +103,7 @@ pub fn compress_retrain(
         thetas = th;
     }
 
-    let deltas: Vec<Matrix> = state.weights.clone();
-    let metrics = account(spec, tasks, &thetas, &deltas);
+    let metrics = account(spec, tasks, &thetas, &state.weights);
     Ok(BaselineOutcome {
         train: eval.eval(&state, train_data)?,
         test: eval.eval(&state, test_data)?,

@@ -106,12 +106,17 @@ impl Theta {
                 32 + per * values.len() as u64
             }
             Theta::Sparse { len, indices, values } => {
+                // equal lengths are a constructor invariant — a mismatch is
+                // a C-step bug, not something storage accounting papers over
+                debug_assert_eq!(indices.len(), values.len(), "sparse index/value mismatch");
                 let idx_bits = (64 - ((*len).max(2) as u64 - 1).leading_zeros() as u64).max(1);
-                (32 + idx_bits) * values.len().max(indices.len()) as u64
+                (32 + idx_bits) * values.len() as u64
             }
-            Theta::LowRank { u, s, v } => {
-                // store U*diag(S) and V
-                32 * (u.rows * u.cols + v.rows * v.cols) as u64 + 0 * s.len() as u64
+            Theta::LowRank { u, v, .. } => {
+                // Stored as the two factors U·diag(S) and V: diag(S) is
+                // folded into U, so the singular values are not charged
+                // separately (and `s` costs nothing here by convention).
+                32 * (u.rows * u.cols + v.rows * v.cols) as u64
             }
             Theta::Additive(parts) => parts.iter().map(|p| p.storage_bits()).sum(),
         }
@@ -127,6 +132,101 @@ impl Theta {
             Theta::Sparse { values, .. } => 2 * values.len() as u64,
             Theta::LowRank { u, v, .. } => (u.rows * u.cols + v.rows * v.cols) as u64,
             Theta::Additive(parts) => parts.iter().map(|p| p.n_params()).sum(),
+        }
+    }
+
+    /// Number of scalar weights Δ(Θ) reconstructs.
+    pub fn decompressed_len(&self) -> usize {
+        match self {
+            Theta::Quantized { assignments, .. } => assignments.len(),
+            Theta::Signs { values, .. } => values.len(),
+            Theta::Sparse { len, .. } => *len,
+            Theta::LowRank { u, v, .. } => u.rows * v.rows,
+            Theta::Additive(parts) => parts.first().map_or(0, |p| p.decompressed_len()),
+        }
+    }
+
+    /// Split a Θ that covers the concatenation of several layers' weights
+    /// (a multi-layer `AsVector` task) into per-layer Θs of lengths `lens`,
+    /// such that the concatenation of the parts' `decompress()` equals this
+    /// Θ's.  Required by the compressed-execution engine ([`crate::infer`]),
+    /// which runs scheme-specific kernels per layer.
+    ///
+    /// Panics when the lengths do not add up, or on a multi-segment split
+    /// of `LowRank` (task validation restricts matrix views to one layer).
+    pub fn split(&self, lens: &[usize]) -> Vec<Theta> {
+        let total: usize = lens.iter().sum();
+        assert_eq!(
+            total,
+            self.decompressed_len(),
+            "theta split lengths do not cover the decompressed buffer"
+        );
+        if lens.len() == 1 {
+            return vec![self.clone()];
+        }
+        match self {
+            Theta::Quantized { codebook, assignments } => {
+                let mut off = 0;
+                lens.iter()
+                    .map(|&n| {
+                        let part = Theta::Quantized {
+                            codebook: codebook.clone(),
+                            assignments: assignments[off..off + n].to_vec(),
+                        };
+                        off += n;
+                        part
+                    })
+                    .collect()
+            }
+            Theta::Signs { scale, values, ternary } => {
+                let mut off = 0;
+                lens.iter()
+                    .map(|&n| {
+                        let part = Theta::Signs {
+                            scale: *scale,
+                            values: values[off..off + n].to_vec(),
+                            ternary: *ternary,
+                        };
+                        off += n;
+                        part
+                    })
+                    .collect()
+            }
+            Theta::Sparse { indices, values, .. } => {
+                // segment boundaries in the flat index space
+                let mut starts = Vec::with_capacity(lens.len() + 1);
+                let mut acc = 0usize;
+                starts.push(0);
+                for &n in lens {
+                    acc += n;
+                    starts.push(acc);
+                }
+                let mut parts: Vec<(Vec<u32>, Vec<f32>)> =
+                    lens.iter().map(|_| (Vec::new(), Vec::new())).collect();
+                for (&i, &v) in indices.iter().zip(values.iter()) {
+                    let seg = starts.partition_point(|&s| s <= i as usize) - 1;
+                    parts[seg].0.push(i - starts[seg] as u32);
+                    parts[seg].1.push(v);
+                }
+                parts
+                    .into_iter()
+                    .zip(lens.iter())
+                    .map(|((idx, vals), &n)| Theta::Sparse { len: n, indices: idx, values: vals })
+                    .collect()
+            }
+            Theta::LowRank { .. } => {
+                panic!("low-rank thetas cover exactly one layer and cannot be split")
+            }
+            Theta::Additive(components) => {
+                // split every component, then regroup per segment
+                let split_comps: Vec<Vec<Theta>> =
+                    components.iter().map(|c| c.split(lens)).collect();
+                (0..lens.len())
+                    .map(|seg| {
+                        Theta::Additive(split_comps.iter().map(|c| c[seg].clone()).collect())
+                    })
+                    .collect()
+            }
         }
     }
 }
@@ -207,6 +307,64 @@ mod tests {
         let b = Theta::Quantized { codebook: vec![0.25], assignments: vec![0, 0, 0] };
         let t = Theta::Additive(vec![a, b]);
         assert_eq!(t.decompress(), vec![1.25, 0.25, 0.25]);
+    }
+
+    #[test]
+    fn split_matches_concatenated_decompress() {
+        let lens = [4usize, 3, 5];
+        let cases = vec![
+            Theta::Quantized {
+                codebook: vec![-1.0, 0.5],
+                assignments: vec![0, 1, 1, 0, 1, 0, 0, 1, 1, 1, 0, 0],
+            },
+            Theta::Signs {
+                scale: 0.25,
+                values: vec![1, -1, 0, 1, -1, 0, 1, 1, -1, 0, 0, 1],
+                ternary: true,
+            },
+            Theta::Sparse { len: 12, indices: vec![1, 4, 6, 11], values: vec![1.0, 2.0, 3.0, 4.0] },
+            Theta::Additive(vec![
+                Theta::Sparse { len: 12, indices: vec![3, 7], values: vec![-1.0, 9.0] },
+                Theta::Quantized { codebook: vec![0.1], assignments: vec![0; 12] },
+            ]),
+        ];
+        for theta in cases {
+            assert_eq!(theta.decompressed_len(), 12);
+            let parts = theta.split(&lens);
+            assert_eq!(parts.len(), 3);
+            let mut cat = Vec::new();
+            for p in &parts {
+                cat.extend(p.decompress());
+            }
+            assert_eq!(cat, theta.decompress(), "{theta:?}");
+        }
+    }
+
+    #[test]
+    fn split_single_segment_is_identity_even_for_lowrank() {
+        let u = Matrix::from_vec(2, 1, vec![1.0, 2.0]);
+        let v = Matrix::from_vec(3, 1, vec![1.0, 0.0, -1.0]);
+        let t = Theta::LowRank { u, s: vec![2.0], v };
+        let parts = t.split(&[6]);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].decompress(), t.decompress());
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be split")]
+    fn split_lowrank_multi_segment_panics() {
+        let u = Matrix::from_vec(2, 1, vec![1.0, 2.0]);
+        let v = Matrix::from_vec(3, 1, vec![1.0, 0.0, -1.0]);
+        Theta::LowRank { u, s: vec![2.0], v }.split(&[3, 3]);
+    }
+
+    #[test]
+    fn lowrank_storage_bits_charge_factors_only() {
+        let u = Matrix::zeros(4, 2);
+        let v = Matrix::zeros(3, 2);
+        let t = Theta::LowRank { u, s: vec![1.0, 2.0], v };
+        // U·diag(S) and V at f32; diag(S) folded into U, not charged
+        assert_eq!(t.storage_bits(), 32 * (8 + 6));
     }
 
     #[test]

@@ -1,0 +1,591 @@
+//! Compressed-execution engine: run Δ(Θ) natively in compressed form.
+//!
+//! The rest of the framework treats a compressed model as "decompress Θ to
+//! a dense matrix, then run the dense GEMM" — which realizes the *storage*
+//! side of the paper's error–compression trade-off but none of the FLOPs
+//! side.  This module closes that gap: every [`crate::compress::Theta`]
+//! variant maps to a scheme-specific execution kernel that computes the
+//! layer product `x · Δ(Θ)` without materializing the dense weights:
+//!
+//! | Θ variant   | kernel ([`CompressedLayer`])            | MACs/example    |
+//! |-------------|------------------------------------------|-----------------|
+//! | `Sparse`    | CSR matmul ([`Csr::left_matmul`])        | `nnz`           |
+//! | `LowRank`   | two tiled GEMMs `(x·U·diag(S))·Vᵀ`       | `r·(m+n)`       |
+//! | `Quantized` | codebook-gather GEMM ([`matmul_gather`]) | nonzero centers |
+//! | `Signs`     | ±accumulate + one scale ([`matmul_signs`])| `nnz`          |
+//! | `Additive`  | sum of component kernels                 | sum             |
+//! | dense       | tiled GEMM ([`Matrix::matmul_par`]), auto-CSR below 50% density | `m·n` / `nnz` |
+//!
+//! [`ExecKernel::flops_per_example`] reports the MACs each kernel actually
+//! executes, and [`crate::metrics::account`] derives its FLOPs numbers from
+//! these same kernels — one accounting source of truth instead of two.
+//!
+//! A [`CompressedModel`] bundles per-layer kernels with biases and runs the
+//! standard MLP forward (ReLU hidden layers, identity head), bit-compatible
+//! in structure with the native backend's dense path.  The runtime exposes
+//! it through `Backend::eval_chunk_compressed` /
+//! [`crate::runtime::trainer::EvalDriver::eval_compressed`], and
+//! `lcc infer` serves it from compressed checkpoints
+//! ([`crate::models::checkpoint::save_compressed`]).
+
+use anyhow::{ensure, Result};
+
+use crate::compress::task::TaskSet;
+use crate::compress::Theta;
+use crate::models::{ModelSpec, ParamState};
+use crate::tensor::kernels::{matmul_gather, matmul_signs};
+use crate::tensor::sparse::Csr;
+use crate::tensor::Matrix;
+
+/// Dense layers at or below this nonzero density execute as CSR: at 50%
+/// the gather-scatter sparse kernel already does no more work than the
+/// dense triple loop, and pruned layers arriving as dense buffers (e.g.
+/// from a dense checkpoint) still get their FLOPs reduction.
+pub const SPARSE_DENSITY_THRESHOLD: f64 = 0.5;
+
+/// A scheme-specific execution kernel for one layer product `x · W`.
+pub trait ExecKernel {
+    /// Kernel identifier for reports ("dense", "csr", "factored", ...).
+    fn kernel_name(&self) -> &'static str;
+
+    /// Input dimension (rows of the virtual weight matrix).
+    fn in_dim(&self) -> usize;
+
+    /// Output dimension (cols of the virtual weight matrix).
+    fn out_dim(&self) -> usize;
+
+    /// Compute `x · W` (x: b × in_dim) without materializing dense `W`.
+    fn forward(&self, x: &Matrix, threads: usize) -> Matrix;
+
+    /// Multiply-accumulates this kernel executes per example — the single
+    /// source of truth for FLOPs accounting ([`crate::metrics::account`]).
+    fn flops_per_example(&self) -> u64;
+}
+
+/// One layer of a compressed model, holding exactly the data its kernel
+/// streams at execution time.
+#[derive(Clone, Debug)]
+pub enum CompressedLayer {
+    /// Uncompressed fallback: the tiled dense GEMM.
+    Dense(Matrix),
+    /// Pruned weights in compressed-sparse-row form.
+    Sparse(Csr),
+    /// Low-rank factors with `diag(S)` folded into the left factor:
+    /// `W = a · bt`, `a: m × r`, `bt: r × n` (zero singular values dropped
+    /// at construction).
+    Factored { a: Matrix, bt: Matrix },
+    /// Quantized weights: per-weight center indices into a shared codebook.
+    Codebook { rows: usize, cols: usize, codebook: Vec<f32>, assignments: Vec<u32> },
+    /// Binarized/ternarized weights: shared scale times {-1, 0, +1}.
+    Signs { rows: usize, cols: usize, scale: f32, values: Vec<i8> },
+    /// Additive combination: sum of component kernels over the same shape.
+    Sum(Vec<CompressedLayer>),
+}
+
+impl CompressedLayer {
+    /// Build the kernel for one layer's Θ (`rows × cols` = the layer's
+    /// weight shape; Θ must decompress to exactly `rows * cols` scalars).
+    ///
+    /// Cost-based plan selection: when the scheme-specific kernel would
+    /// execute *more* MACs than the dense GEMM — an additive stack with a
+    /// dense-cost component (quantized + low-rank), or a "low-rank" Θ
+    /// whose rank exceeds `m·n/(m+n)` — the layer is decompressed once at
+    /// build time and executed dense (or auto-CSR), so compressed
+    /// execution never executes more MACs than the path it replaces.
+    /// Ties (e.g. an all-nonzero codebook, whose gather GEMM runs exactly
+    /// `m·n` MACs plus a per-element index load) deliberately keep the
+    /// compressed form: equal arithmetic, but the dense Δ(Θ) is never
+    /// materialized in memory.
+    pub fn from_theta(theta: &Theta, rows: usize, cols: usize) -> CompressedLayer {
+        let kernel = Self::scheme_kernel(theta, rows, cols);
+        if kernel.flops_per_example() > (rows * cols) as u64 {
+            CompressedLayer::from_dense(Matrix::from_vec(rows, cols, theta.decompress()))
+        } else {
+            kernel
+        }
+    }
+
+    /// The scheme-native kernel for Θ, before cost-based plan selection.
+    fn scheme_kernel(theta: &Theta, rows: usize, cols: usize) -> CompressedLayer {
+        assert_eq!(
+            theta.decompressed_len(),
+            rows * cols,
+            "theta does not cover a {rows}x{cols} layer"
+        );
+        match theta {
+            Theta::Quantized { codebook, assignments } => CompressedLayer::Codebook {
+                rows,
+                cols,
+                codebook: codebook.clone(),
+                assignments: assignments.clone(),
+            },
+            Theta::Signs { scale, values, .. } => {
+                CompressedLayer::Signs { rows, cols, scale: *scale, values: values.clone() }
+            }
+            Theta::Sparse { indices, values, .. } => {
+                CompressedLayer::Sparse(Csr::from_flat_entries(rows, cols, indices, values))
+            }
+            Theta::LowRank { u, s, v } => {
+                assert_eq!((u.rows, v.rows), (rows, cols), "low-rank factor shape mismatch");
+                // fold diag(S) into U and drop zero singular values: the
+                // kernel then executes exactly r_eff·(m+n) MACs
+                let keep: Vec<usize> =
+                    (0..s.len()).filter(|&j| s[j] != 0.0).collect();
+                let r = keep.len();
+                let mut a = Matrix::zeros(rows, r);
+                for i in 0..rows {
+                    for (jj, &j) in keep.iter().enumerate() {
+                        a.data[i * r + jj] = u.data[i * u.cols + j] * s[j];
+                    }
+                }
+                let mut bt = Matrix::zeros(r, cols);
+                for (jj, &j) in keep.iter().enumerate() {
+                    for c in 0..cols {
+                        bt.data[jj * cols + c] = v.data[c * v.cols + j];
+                    }
+                }
+                CompressedLayer::Factored { a, bt }
+            }
+            Theta::Additive(parts) => CompressedLayer::Sum(
+                parts.iter().map(|p| CompressedLayer::from_theta(p, rows, cols)).collect(),
+            ),
+        }
+    }
+
+    /// Wrap a dense weight matrix, auto-selecting the CSR kernel when the
+    /// density is at or below [`SPARSE_DENSITY_THRESHOLD`].
+    pub fn from_dense(w: Matrix) -> CompressedLayer {
+        let total = w.data.len();
+        if total == 0 {
+            return CompressedLayer::Dense(w);
+        }
+        let nnz = w.data.iter().filter(|&&v| v != 0.0).count();
+        if (nnz as f64) <= SPARSE_DENSITY_THRESHOLD * total as f64 {
+            CompressedLayer::Sparse(Csr::from_dense(&w))
+        } else {
+            CompressedLayer::Dense(w)
+        }
+    }
+}
+
+impl ExecKernel for CompressedLayer {
+    fn kernel_name(&self) -> &'static str {
+        match self {
+            CompressedLayer::Dense(_) => "dense",
+            CompressedLayer::Sparse(_) => "csr",
+            CompressedLayer::Factored { .. } => "factored",
+            CompressedLayer::Codebook { .. } => "codebook",
+            CompressedLayer::Signs { .. } => "signs",
+            CompressedLayer::Sum(_) => "sum",
+        }
+    }
+
+    fn in_dim(&self) -> usize {
+        match self {
+            CompressedLayer::Dense(w) => w.rows,
+            CompressedLayer::Sparse(c) => c.rows,
+            CompressedLayer::Factored { a, .. } => a.rows,
+            CompressedLayer::Codebook { rows, .. } => *rows,
+            CompressedLayer::Signs { rows, .. } => *rows,
+            CompressedLayer::Sum(parts) => parts[0].in_dim(),
+        }
+    }
+
+    fn out_dim(&self) -> usize {
+        match self {
+            CompressedLayer::Dense(w) => w.cols,
+            CompressedLayer::Sparse(c) => c.cols,
+            CompressedLayer::Factored { bt, .. } => bt.cols,
+            CompressedLayer::Codebook { cols, .. } => *cols,
+            CompressedLayer::Signs { cols, .. } => *cols,
+            CompressedLayer::Sum(parts) => parts[0].out_dim(),
+        }
+    }
+
+    fn forward(&self, x: &Matrix, threads: usize) -> Matrix {
+        match self {
+            CompressedLayer::Dense(w) => x.matmul_par(w, threads),
+            CompressedLayer::Sparse(c) => c.left_matmul(x, threads),
+            CompressedLayer::Factored { a, bt } => {
+                x.matmul_par(a, threads).matmul_par(bt, threads)
+            }
+            CompressedLayer::Codebook { rows, cols, codebook, assignments } => {
+                matmul_gather(x, *rows, *cols, codebook, assignments, threads)
+            }
+            CompressedLayer::Signs { rows, cols, scale, values } => {
+                matmul_signs(x, *rows, *cols, *scale, values, threads)
+            }
+            CompressedLayer::Sum(parts) => {
+                let mut z = parts[0].forward(x, threads);
+                for p in &parts[1..] {
+                    z.add_assign(&p.forward(x, threads));
+                }
+                z
+            }
+        }
+    }
+
+    fn flops_per_example(&self) -> u64 {
+        match self {
+            CompressedLayer::Dense(w) => (w.rows * w.cols) as u64,
+            CompressedLayer::Sparse(c) => c.nnz() as u64,
+            CompressedLayer::Factored { a, bt } => {
+                (a.rows * a.cols + bt.rows * bt.cols) as u64
+            }
+            CompressedLayer::Codebook { codebook, assignments, .. } => assignments
+                .iter()
+                .filter(|&&a| codebook[a as usize] != 0.0)
+                .count() as u64,
+            CompressedLayer::Signs { values, .. } => {
+                values.iter().filter(|&&v| v != 0).count() as u64
+            }
+            CompressedLayer::Sum(parts) => parts.iter().map(|p| p.flops_per_example()).sum(),
+        }
+    }
+}
+
+/// Build per-layer kernels for a compressed model: covered layers execute
+/// their task's Θ (multi-layer vector tasks are split per layer via
+/// [`Theta::split`]), uncovered layers fall back to the dense weights in
+/// `weights` (auto-CSR when sparse enough).
+pub fn build_layers(
+    spec: &ModelSpec,
+    tasks: &TaskSet,
+    thetas: &[Theta],
+    weights: &[Matrix],
+) -> Vec<CompressedLayer> {
+    let nl = spec.n_layers();
+    assert_eq!(thetas.len(), tasks.tasks.len(), "theta/task count mismatch");
+    assert_eq!(weights.len(), nl, "weights/layer count mismatch");
+    let mut layers: Vec<Option<CompressedLayer>> = (0..nl).map(|_| None).collect();
+    for (t, theta) in tasks.tasks.iter().zip(thetas.iter()) {
+        let lens: Vec<usize> = t
+            .layers
+            .iter()
+            .map(|&l| {
+                let (m, n) = spec.layer_shape(l);
+                m * n
+            })
+            .collect();
+        for (&l, part) in t.layers.iter().zip(theta.split(&lens).iter()) {
+            let (m, n) = spec.layer_shape(l);
+            layers[l] = Some(CompressedLayer::from_theta(part, m, n));
+        }
+    }
+    layers
+        .into_iter()
+        .enumerate()
+        .map(|(l, k)| k.unwrap_or_else(|| CompressedLayer::from_dense(weights[l].clone())))
+        .collect()
+}
+
+/// A model held entirely in compressed form: per-layer execution kernels
+/// plus dense biases (biases are never compressed).
+#[derive(Clone, Debug)]
+pub struct CompressedModel {
+    pub name: String,
+    /// Layer widths including input and output, as in [`ModelSpec`].
+    pub widths: Vec<usize>,
+    pub eval_batch: usize,
+    pub layers: Vec<CompressedLayer>,
+    pub biases: Vec<Vec<f32>>,
+}
+
+impl CompressedModel {
+    /// Assemble from an LC outcome: the tasks' Θs drive covered layers,
+    /// `state` supplies uncovered weights and all biases.
+    pub fn from_lc(
+        spec: &ModelSpec,
+        tasks: &TaskSet,
+        thetas: &[Theta],
+        state: &ParamState,
+    ) -> CompressedModel {
+        CompressedModel {
+            name: spec.name.clone(),
+            widths: spec.widths.clone(),
+            eval_batch: spec.eval_batch,
+            layers: build_layers(spec, tasks, thetas, &state.weights),
+            biases: state.biases.clone(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.widths.len() - 1
+    }
+
+    /// An equivalent [`ModelSpec`] (for driver plumbing; the name may not
+    /// be in the registry).
+    pub fn spec(&self) -> ModelSpec {
+        ModelSpec {
+            name: self.name.clone(),
+            widths: self.widths.clone(),
+            batch: 128,
+            eval_batch: self.eval_batch,
+        }
+    }
+
+    /// Total MACs per example over the kernels actually executed.
+    pub fn flops_per_example(&self) -> u64 {
+        self.layers.iter().map(|l| l.flops_per_example()).sum()
+    }
+
+    /// Validate layer/bias shapes against `widths` (done once up front so
+    /// the hot forward path can assume consistency).
+    pub fn validate(&self) -> Result<()> {
+        let nl = self.n_layers();
+        ensure!(self.widths.len() >= 2, "model needs at least one layer");
+        ensure!(self.layers.len() == nl, "layer count != widths");
+        ensure!(self.biases.len() == nl, "bias count != widths");
+        for l in 0..nl {
+            ensure!(
+                self.layers[l].in_dim() == self.widths[l]
+                    && self.layers[l].out_dim() == self.widths[l + 1],
+                "layer {l}: kernel {}x{} != widths {}x{}",
+                self.layers[l].in_dim(),
+                self.layers[l].out_dim(),
+                self.widths[l],
+                self.widths[l + 1]
+            );
+            ensure!(self.biases[l].len() == self.widths[l + 1], "layer {l}: bias length");
+        }
+        Ok(())
+    }
+
+    /// MLP forward in compressed form: ReLU hidden layers, identity logits
+    /// head — the same semantics as the native backend's dense forward.
+    /// Returns the `b × classes` logits.
+    pub fn forward(&self, x: &[f32], b: usize, threads: usize) -> Result<Matrix> {
+        let nl = self.n_layers();
+        ensure!(b > 0, "empty batch");
+        ensure!(
+            x.len() == b * self.widths[0],
+            "x has {} elements for batch {b} x dim {}",
+            x.len(),
+            self.widths[0]
+        );
+        let mut h = Matrix::from_vec(b, self.widths[0], x.to_vec());
+        for l in 0..nl {
+            let mut z = self.layers[l].forward(&h, threads);
+            let relu = l < nl - 1;
+            let bias = &self.biases[l];
+            for r in 0..b {
+                let row = z.row_mut(r);
+                for (v, &bi) in row.iter_mut().zip(bias.iter()) {
+                    *v += bi;
+                    if relu && *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            h = z;
+        }
+        Ok(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quantize::AdaptiveQuant;
+    use crate::compress::task::TaskSpec;
+    use crate::compress::view::View;
+    use crate::compress::Compression;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.0, 1.0);
+        m
+    }
+
+    fn assert_forward_matches_dense(layer: &CompressedLayer, w: &Matrix, seed: u64) {
+        let x = rand_matrix(9, w.rows, seed);
+        let want = x.matmul(w);
+        let got = layer.forward(&x, 2);
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        for (g, e) in got.data.iter().zip(want.data.iter()) {
+            assert!(
+                (g - e).abs() <= 1e-5 * e.abs().max(1.0),
+                "{} kernel: {g} vs {e}",
+                layer.kernel_name()
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_kernel_matches_decompressed_dense() {
+        let theta = Theta::Sparse {
+            len: 12,
+            indices: vec![0, 5, 7, 11],
+            values: vec![1.5, -2.0, 0.25, 3.0],
+        };
+        let layer = CompressedLayer::from_theta(&theta, 3, 4);
+        assert_eq!(layer.kernel_name(), "csr");
+        assert_eq!(layer.flops_per_example(), 4);
+        let w = Matrix::from_vec(3, 4, theta.decompress());
+        assert_forward_matches_dense(&layer, &w, 1);
+    }
+
+    #[test]
+    fn factored_kernel_matches_and_drops_zero_singulars() {
+        let u = rand_matrix(6, 3, 2);
+        let v = rand_matrix(4, 3, 3);
+        let s = vec![2.0f32, 0.0, 0.5]; // middle component dead
+        let theta = Theta::LowRank { u, s, v };
+        let layer = CompressedLayer::from_theta(&theta, 6, 4);
+        assert_eq!(layer.kernel_name(), "factored");
+        assert_eq!(layer.flops_per_example(), 2 * (6 + 4));
+        let w = Matrix::from_vec(6, 4, theta.decompress());
+        assert_forward_matches_dense(&layer, &w, 4);
+    }
+
+    #[test]
+    fn codebook_kernel_matches_and_skips_zero_centers() {
+        let theta = Theta::Quantized {
+            codebook: vec![-0.5, 0.0, 1.25],
+            assignments: vec![0, 1, 2, 2, 1, 0, 0, 1, 2, 1, 1, 0],
+        };
+        let layer = CompressedLayer::from_theta(&theta, 4, 3);
+        assert_eq!(layer.kernel_name(), "codebook");
+        // 8 of 12 assignments hit a nonzero center
+        assert_eq!(layer.flops_per_example(), 8);
+        let w = Matrix::from_vec(4, 3, theta.decompress());
+        assert_forward_matches_dense(&layer, &w, 5);
+    }
+
+    #[test]
+    fn signs_kernel_matches() {
+        let theta = Theta::Signs {
+            scale: 0.75,
+            values: vec![1, -1, 0, 0, 1, 1, -1, 0, 1, -1, -1, 1],
+            ternary: true,
+        };
+        let layer = CompressedLayer::from_theta(&theta, 3, 4);
+        assert_eq!(layer.kernel_name(), "signs");
+        assert_eq!(layer.flops_per_example(), 9);
+        let w = Matrix::from_vec(3, 4, theta.decompress());
+        assert_forward_matches_dense(&layer, &w, 6);
+    }
+
+    #[test]
+    fn additive_kernel_sums_components() {
+        let theta = Theta::Additive(vec![
+            Theta::Sparse { len: 6, indices: vec![2], values: vec![5.0] },
+            Theta::Signs { scale: 0.5, values: vec![1, 0, 0, -1, 0, 0], ternary: true },
+        ]);
+        let layer = CompressedLayer::from_theta(&theta, 2, 3);
+        assert_eq!(layer.kernel_name(), "sum");
+        assert_eq!(layer.flops_per_example(), 1 + 2);
+        let w = Matrix::from_vec(2, 3, theta.decompress());
+        assert_forward_matches_dense(&layer, &w, 7);
+    }
+
+    #[test]
+    fn cost_planner_falls_back_to_dense_when_kernels_cost_more() {
+        // quantized (dense-cost) + low-rank correction: the summed kernels
+        // would exceed the dense GEMM, so the planner decompresses once
+        let theta = Theta::Additive(vec![
+            Theta::Quantized {
+                codebook: vec![0.5, -0.5],
+                assignments: vec![0, 1, 0, 1, 0, 1, 1, 0, 1, 0, 1, 0],
+            },
+            Theta::LowRank {
+                u: Matrix::from_vec(3, 1, vec![1.0, 2.0, 3.0]),
+                s: vec![1.0],
+                v: Matrix::from_vec(4, 1, vec![1.0, -1.0, 1.0, -1.0]),
+            },
+        ]);
+        let layer = CompressedLayer::from_theta(&theta, 3, 4);
+        assert_eq!(layer.kernel_name(), "dense");
+        assert_eq!(layer.flops_per_example(), 12);
+        let w = Matrix::from_vec(3, 4, theta.decompress());
+        assert_forward_matches_dense(&layer, &w, 13);
+
+        // an over-ranked "low-rank" theta also executes dense
+        let fat = Theta::LowRank {
+            u: Matrix::from_vec(2, 2, vec![1.0, 0.5, -0.5, 2.0]),
+            s: vec![1.0, 2.0],
+            v: Matrix::from_vec(2, 2, vec![0.25, 1.0, -1.0, 0.75]),
+        };
+        let fat_layer = CompressedLayer::from_theta(&fat, 2, 2);
+        // r(m+n) = 2*4 = 8 > m*n = 4
+        assert_eq!(fat_layer.kernel_name(), "dense");
+    }
+
+    #[test]
+    fn dense_auto_sparsifies_below_threshold() {
+        let mut w = rand_matrix(10, 10, 8);
+        for (i, v) in w.data.iter_mut().enumerate() {
+            if i % 10 != 0 {
+                *v = 0.0; // 10% density
+            }
+        }
+        let layer = CompressedLayer::from_dense(w.clone());
+        assert_eq!(layer.kernel_name(), "csr");
+        assert_eq!(layer.flops_per_example(), 10);
+        assert_forward_matches_dense(&layer, &w, 9);
+
+        let dense = CompressedLayer::from_dense(rand_matrix(10, 10, 10));
+        assert_eq!(dense.kernel_name(), "dense");
+        assert_eq!(dense.flops_per_example(), 100);
+    }
+
+    #[test]
+    fn model_forward_matches_dense_decompress_path() {
+        // two-layer model, layer 0 quantized via a multi-layer-less task,
+        // layer 1 dense fallback
+        let spec = ModelSpec { name: "t".into(), widths: vec![6, 5, 4], batch: 8, eval_batch: 8 };
+        let mut state = ParamState::init(&spec, 11);
+        let tasks = TaskSet::new(vec![TaskSpec {
+            name: "q".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(4)),
+        }]);
+        let view = tasks.tasks[0].gather(&state.weights);
+        let theta = tasks.tasks[0]
+            .compression
+            .compress(&view, &crate::compress::CContext::default());
+        // dense path: scatter Δ(Θ) into the weights
+        let mut deltas = state.weights.clone();
+        tasks.tasks[0].scatter(&theta.decompress(), &mut deltas);
+        state.weights = deltas.clone();
+
+        let model = CompressedModel::from_lc(&spec, &tasks, &[theta], &state);
+        model.validate().unwrap();
+        let x = rand_matrix(7, 6, 12).data;
+        let logits = model.forward(&x, 7, 2).unwrap();
+
+        // reference: dense forward through the same weights
+        let mut h = Matrix::from_vec(7, 6, x);
+        for l in 0..2 {
+            let mut z = h.matmul(&deltas[l]);
+            for r in 0..7 {
+                let row = z.row_mut(r);
+                for (v, &bi) in row.iter_mut().zip(state.biases[l].iter()) {
+                    *v += bi;
+                    if l == 0 && *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+            }
+            h = z;
+        }
+        for (g, e) in logits.data.iter().zip(h.data.iter()) {
+            assert!((g - e).abs() <= 1e-5 * e.abs().max(1.0), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_shape_mismatch() {
+        let model = CompressedModel {
+            name: "bad".into(),
+            widths: vec![4, 3],
+            eval_batch: 8,
+            layers: vec![CompressedLayer::Dense(Matrix::zeros(4, 2))], // wrong out dim
+            biases: vec![vec![0.0; 3]],
+        };
+        assert!(model.validate().is_err());
+    }
+}

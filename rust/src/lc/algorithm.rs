@@ -291,7 +291,10 @@ impl LcAlgorithm {
         let final_train = self.eval.eval(&compressed_state, train_data)?;
         let final_test = self.eval.eval(&compressed_state, test_data)?;
         let thetas: Vec<Theta> = thetas.into_iter().map(|t| t.unwrap()).collect();
-        let metrics = account(&self.spec, &self.tasks, &thetas, &deltas);
+        // account against the final model's weights: Δ(Θ) on covered
+        // layers, *trained* weights on uncovered ones (whose deltas stay
+        // zero and must still be charged their dense FLOPs)
+        let metrics = account(&self.spec, &self.tasks, &thetas, &compressed_state.weights);
 
         Ok(LcOutcome {
             records,
@@ -337,25 +340,31 @@ impl LcAlgorithm {
         monitor: &mut Monitor,
     ) -> Vec<f64> {
         let nl = self.spec.n_layers();
-        // effective weights for the C step
-        let w_eff: Vec<Matrix> = (0..nl)
-            .map(|l| {
-                let mut w = state.weights[l].clone();
-                if mu_for_lambda > 0.0 {
-                    let inv_mu = (1.0 / mu_for_lambda) as f32;
+        // Effective weights for the C step.  Only the AL path shifts by
+        // λ/μ; in QP mode and at the direct-compression init the effective
+        // weights *are* the current weights, so borrow them instead of
+        // cloning every layer's matrix per step.
+        let w_eff_shifted: Vec<Matrix>;
+        let w_eff_ref: &[Matrix] = if mu_for_lambda > 0.0 {
+            let inv_mu = (1.0 / mu_for_lambda) as f32;
+            w_eff_shifted = (0..nl)
+                .map(|l| {
+                    let mut w = state.weights[l].clone();
                     for (wi, &li) in w.data.iter_mut().zip(lambdas[l].data.iter()) {
                         *wi -= inv_mu * li;
                     }
-                }
-                w
-            })
-            .collect();
+                    w
+                })
+                .collect();
+            &w_eff_shifted
+        } else {
+            &state.weights
+        };
 
         let ctx = CContext { mu: mu_for_c };
         let n_tasks = self.tasks.tasks.len();
         // capture only Sync data (avoid `self`, whose PJRT handles are !Sync)
         let task_list = &self.tasks.tasks;
-        let w_eff_ref = &w_eff;
         let results: Vec<(Theta, ViewData, f64)> =
             parallel_map(n_tasks, self.cfg.threads.max(1), move |ti| {
                 let task = &task_list[ti];

@@ -40,6 +40,24 @@
 //! the LC coordinator is backend-agnostic — the paper's L/C decoupling,
 //! carried into the execution substrate.
 //!
+//! ## Compressed execution
+//!
+//! Compression is only half the deliverable; the other half is *running*
+//! the compressed model at compressed cost.  The [`infer`] module executes
+//! each compression scheme with a dedicated kernel instead of dense
+//! reconstruction — CSR sparse matmul for pruning, factored two-GEMM
+//! `(x·U·diag(S))·Vᵀ` for low-rank, codebook-gather GEMM for quantization,
+//! ±accumulation for binarization/ternarization, and summed component
+//! execution for additive combinations — so a 10× FLOPs-ratio model really
+//! does ~10× less work per example.  [`metrics::account`] derives its FLOPs
+//! numbers from those same kernels (one source of truth), the native
+//! backend evaluates [`infer::CompressedModel`]s through
+//! `Backend::eval_chunk_compressed` /
+//! [`runtime::trainer::EvalDriver::eval_compressed`], and
+//! [`models::checkpoint`] persists models in compressed form (serialized
+//! Θ, not dense Δ(Θ)) for `lcc infer`.  `cargo bench --bench infer_bench`
+//! measures dense vs compressed execution per scheme.
+//!
 //! See DESIGN.md for the complete system inventory and the per-experiment
 //! index, and EXPERIMENTS.md for paper-vs-measured results.
 
@@ -48,6 +66,7 @@ pub mod bench;
 pub mod harness;
 pub mod compress;
 pub mod data;
+pub mod infer;
 pub mod lc;
 pub mod linalg;
 pub mod metrics;

@@ -5,7 +5,13 @@
 //! lcc train    --model lenet300 --epochs 20 --out ref.lcck
 //! lcc eval     --checkpoint ref.lcck
 //! lcc compress --config examples/configs/quantize_all.lcc [--checkpoint ref.lcck]
+//!              [--out-compressed model.lccz]
+//! lcc infer    --checkpoint model.lccz         # compressed-form execution
 //! ```
+//!
+//! `lcc infer` runs the model natively in compressed form (CSR / factored /
+//! codebook kernels — see `lc::infer`) and, unless `--no-compare`, times the
+//! dense decompress-then-GEMM path next to it and checks the outputs agree.
 //!
 //! All randomness is seeded; runs are reproducible bit-for-bit.
 
@@ -17,16 +23,19 @@ use lc::data::synth;
 use lc::lc::builder::Experiment;
 use lc::lc::schedule::LrSchedule;
 use lc::lc::LcAlgorithm;
+use lc::models::checkpoint::CompressedCheckpoint;
 use lc::models::{checkpoint, lookup, ParamState};
 use lc::report::{pct, Table};
+use lc::runtime::trainer::EvalDriver;
 use lc::runtime::{BackendChoice, Runtime};
+use lc::tensor::Matrix;
 use lc::util::cli::Args;
 use lc::util::config::Config;
 use lc::util::log::{set_level, Level};
 
 const VALUE_OPTS: &[&str] = &[
-    "model", "epochs", "out", "checkpoint", "config", "artifacts", "seed", "n-train", "n-test",
-    "lr0", "threads", "backend",
+    "model", "epochs", "out", "out-compressed", "checkpoint", "config", "artifacts", "seed",
+    "n-train", "n-test", "lr0", "threads", "backend",
 ];
 
 fn main() {
@@ -48,6 +57,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("compress") => cmd_compress(&args),
+        Some("infer") => cmd_infer(&args),
         Some(other) => {
             eprintln!("unknown command {other:?}");
             usage();
@@ -71,7 +81,8 @@ fn usage() {
          info                                     list models, artifacts, compression catalogue\n  \
          train    --model NAME [--epochs N] [--seed S] --out FILE.lcck\n  \
          eval     --checkpoint FILE.lcck [--n-test N]\n  \
-         compress --config EXP.lcc [--checkpoint REF.lcck]\n\
+         compress --config EXP.lcc [--checkpoint REF.lcck] [--out-compressed FILE.lccz]\n  \
+         infer    --checkpoint FILE.lccz|FILE.lcck [--n-test N] [--no-compare]\n\
          common options: --artifacts DIR (default ./artifacts),\n                 \
          --backend auto|native|pjrt (default auto), --quiet, --verbose"
     );
@@ -278,7 +289,128 @@ fn cmd_compress(args: &Args) -> Result<()> {
     );
     if let Some(outp) = args.get("out") {
         checkpoint::save(&out.compressed_state, Path::new(outp))?;
-        println!("saved compressed model to {outp}");
+        println!("saved dense snapshot of the compressed model to {outp}");
+    }
+    if let Some(outp) = args.get("out-compressed") {
+        let ck = CompressedCheckpoint::from_lc(
+            &alg.spec,
+            &alg.tasks,
+            &out.thetas,
+            &out.compressed_state,
+        );
+        checkpoint::save_compressed(&ck, Path::new(outp))?;
+        println!("saved compressed checkpoint (serialized thetas) to {outp}");
+    }
+    Ok(())
+}
+
+/// Run a checkpoint natively in compressed form and (by default) compare
+/// against the dense decompress-then-GEMM path.
+fn cmd_infer(args: &Args) -> Result<()> {
+    let ckpt = args.get("checkpoint").context("--checkpoint required")?;
+    let n_test: usize = args.get_parse("n-test", 2048).map_err(anyhow::Error::msg)?;
+    let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
+
+    let path = Path::new(ckpt);
+    let magic = {
+        let mut f = std::fs::File::open(path).with_context(|| format!("opening {ckpt}"))?;
+        let mut m = [0u8; 4];
+        std::io::Read::read_exact(&mut f, &mut m)?;
+        m
+    };
+    let ck = if &magic == checkpoint::MAGIC_COMPRESSED {
+        checkpoint::load_compressed(path)?
+    } else {
+        lc::info!("{ckpt} is a dense checkpoint; layers execute dense (or auto-CSR)");
+        CompressedCheckpoint::from_dense_state(&checkpoint::load(path)?)
+    };
+    let eval_batch = lookup(&ck.name).map(|s| s.eval_batch).unwrap_or(512);
+    let model = ck.to_model(eval_batch)?;
+    let eval = EvalDriver::native_for_model(&model, threads);
+    let (_, test_data) = load_data(0, n_test, 1, threads);
+
+    use lc::infer::ExecKernel;
+    println!("{}: compressed execution plan", ck.name);
+    let mut t = Table::new(&["layer", "kernel", "MACs/example", "dense MACs"]);
+    for (l, k) in model.layers.iter().enumerate() {
+        t.row(&[
+            format!("{l} ({}x{})", k.in_dim(), k.out_dim()),
+            k.kernel_name().into(),
+            k.flops_per_example().to_string(),
+            (k.in_dim() * k.out_dim()).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let t0 = std::time::Instant::now();
+    let rc = eval.eval_compressed(&model, &test_data)?;
+    let compressed_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "compressed: test_err={} mean_loss={:.4} ({:.3}s, n={})",
+        pct(rc.error),
+        rc.mean_loss,
+        compressed_secs,
+        rc.n
+    );
+
+    if !args.has("no-compare") {
+        // dense path, decompress included (that is the path being replaced)
+        let t1 = std::time::Instant::now();
+        let weights = ck.to_dense_weights()?;
+        let biases = ck.biases.clone();
+        let spec = model.spec();
+        let w_momenta: Vec<Matrix> =
+            weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect();
+        let b_momenta: Vec<Vec<f32>> = biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        let state = ParamState { spec, weights, biases, w_momenta, b_momenta };
+        let rd = eval.eval(&state, &test_data)?;
+        let dense_secs = t1.elapsed().as_secs_f64();
+        let loss_rel = (rc.mean_loss - rd.mean_loss).abs() / rd.mean_loss.abs().max(1.0);
+
+        // elementwise logits gate on one batch: aggregate means can hide
+        // per-example divergences that cancel
+        let dense_model = lc::infer::CompressedModel {
+            name: model.name.clone(),
+            widths: model.widths.clone(),
+            eval_batch: model.eval_batch,
+            layers: state
+                .weights
+                .iter()
+                .map(|w| lc::infer::CompressedLayer::Dense(w.clone()))
+                .collect(),
+            biases: state.biases.clone(),
+        };
+        let bsz = test_data.len().min(model.eval_batch);
+        let (mut xb, mut yb) = (Vec::new(), Vec::new());
+        test_data.gather(&(0..bsz).collect::<Vec<_>>(), &mut xb, &mut yb);
+        let zc = model.forward(&xb, bsz, threads)?;
+        let zd = dense_model.forward(&xb, bsz, threads)?;
+        let mut max_rel = 0.0f64;
+        for (c, d) in zc.data.iter().zip(zd.data.iter()) {
+            max_rel = max_rel.max((c - d).abs() as f64 / d.abs().max(1.0) as f64);
+        }
+
+        println!(
+            "dense:      test_err={} mean_loss={:.4} ({:.3}s)",
+            pct(rd.error),
+            rd.mean_loss,
+            dense_secs
+        );
+        println!(
+            "speedup: {:.2}x wall, {:.2}x MACs; outputs: logit max-rel {:.2e} (batch of {bsz}), \
+             loss rel-diff {:.2e}, err diff {:+.4}",
+            dense_secs / compressed_secs.max(1e-12),
+            model.spec().flops_dense() as f64 / model.flops_per_example().max(1) as f64,
+            max_rel,
+            loss_rel,
+            rc.error - rd.error
+        );
+        if max_rel > 1e-5 {
+            bail!("compressed/dense outputs diverge: logit max-rel {max_rel:.3e} > 1e-5");
+        }
+        if loss_rel > 1e-5 {
+            bail!("compressed/dense outputs diverge: loss rel-diff {loss_rel:.3e} > 1e-5");
+        }
     }
     Ok(())
 }

@@ -1,8 +1,18 @@
 //! Compression accounting: storage bits, parameter counts, inference FLOPs
 //! — the axes of the paper's error–compression trade-off plots.
+//!
+//! FLOPs come from the execution kernels actually run by the compressed
+//! inference engine: [`account`] builds the same per-layer
+//! [`crate::infer::CompressedLayer`] kernels that
+//! [`crate::infer::CompressedModel`] executes and sums their
+//! [`crate::infer::ExecKernel::flops_per_example`], so the reported FLOPs
+//! ratio and the runtime's executed work share one source of truth (a CSR
+//! layer charges its `nnz`, a factored low-rank layer `r·(m+n)`, a
+//! codebook layer its nonzero-center MACs, a dense fallback `m·n`).
 
 use crate::compress::task::TaskSet;
 use crate::compress::Theta;
+use crate::infer::{build_layers, ExecKernel};
 use crate::models::ModelSpec;
 use crate::tensor::Matrix;
 
@@ -34,13 +44,15 @@ impl Compressed {
 }
 
 /// Account a compressed model: `thetas[i]` is task i's compressed form,
-/// `deltas` the decompressed per-layer weights (for nnz-based FLOPs of
-/// schemes that do not change the layer structure).
+/// `weights` the per-layer weight matrices of the final model (Δ(Θ) on
+/// covered layers, trained weights on uncovered ones — e.g.
+/// `LcOutcome::compressed_state.weights`).  Storage/params come from the
+/// Θs; FLOPs from the execution kernels the inference engine would run.
 pub fn account(
     spec: &ModelSpec,
     tasks: &TaskSet,
     thetas: &[Theta],
-    deltas: &[Matrix],
+    weights: &[Matrix],
 ) -> Compressed {
     assert_eq!(thetas.len(), tasks.tasks.len());
     let nl = spec.n_layers();
@@ -64,24 +76,13 @@ pub fn account(
         params += t.n_params();
     }
 
-    // FLOPs: per layer — low-rank layers cost r(m+n); other layers cost
-    // their nonzero count in the decompressed weights (pruning reduces
-    // MACs; quantization does not).
-    let mut flops: u64 = 0;
-    let mut lowrank_rank = vec![None::<usize>; nl];
-    for (ti, t) in tasks.tasks.iter().enumerate() {
-        if let Theta::LowRank { s, .. } = &thetas[ti] {
-            let r = s.iter().filter(|&&x| x != 0.0).count();
-            lowrank_rank[t.layers[0]] = Some(r);
-        }
-    }
-    for l in 0..nl {
-        let (m, n) = spec.layer_shape(l);
-        flops += match lowrank_rank[l] {
-            Some(r) => (r * (m + n)) as u64,
-            None => deltas[l].data.iter().filter(|&&x| x != 0.0).count() as u64,
-        };
-    }
+    // FLOPs: build the per-layer execution kernels and charge exactly the
+    // MACs they execute — the single accounting source of truth shared
+    // with `infer::CompressedModel`.
+    let flops: u64 = build_layers(spec, tasks, thetas, weights)
+        .iter()
+        .map(|k| k.flops_per_example())
+        .sum();
     Compressed { storage_bits, dense_bits, flops, dense_flops, params }
 }
 

@@ -21,6 +21,7 @@ pub mod pjrt;
 
 use anyhow::Result;
 
+use crate::infer::CompressedModel;
 use crate::models::{ModelSpec, ParamState};
 use crate::tensor::Matrix;
 
@@ -100,6 +101,21 @@ pub trait Backend {
         x: &[f32],
         y: &[i32],
     ) -> Result<(f64, i64)>;
+
+    /// Like [`Backend::eval_chunk`], but executing a [`CompressedModel`]
+    /// natively in compressed form (scheme-specific kernels, no dense
+    /// Δ(Θ) materialization).  Backends without compressed kernels (the
+    /// shape-static PJRT artifact path) report unsupported; callers can
+    /// fall back to decompress + [`Backend::eval_chunk`].
+    fn eval_chunk_compressed(
+        &mut self,
+        model: &CompressedModel,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f64, i64)> {
+        let _ = (model, x, y);
+        anyhow::bail!("backend {:?} does not support compressed execution", self.name())
+    }
 
     /// Padded kernel size able to hold an E-step over `n` weights with `k`
     /// centers, or `None` if this backend has no such kernel.

@@ -93,6 +93,29 @@ impl NativeBackend {
     }
 }
 
+/// Summed per-example CE loss and argmax-correct count over a logits
+/// matrix (first index on ties, matching `jnp.argmax`) — shared by the
+/// dense and compressed eval paths.
+fn ce_and_correct(logits: &Matrix, y: &[i32]) -> (f64, i64) {
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0i64;
+    for (i, &yi) in y.iter().enumerate() {
+        let row = logits.row(i);
+        let lz = logsumexp_row(row);
+        loss_sum += (lz - row[yi as usize]) as f64;
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == yi as usize {
+            correct += 1;
+        }
+    }
+    (loss_sum, correct)
+}
+
 /// Row-stable log-sum-exp of one logits row (max-subtraction, f32 like the
 /// lowered artifact).
 fn logsumexp_row(row: &[f32]) -> f32 {
@@ -249,25 +272,22 @@ impl Backend for NativeBackend {
             ensure!((0..classes as i32).contains(&yi), "label {yi} out of range [0,{classes})");
         }
         let acts = self.forward(spec, state, x, b)?;
-        let logits = &acts[spec.n_layers()];
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0i64;
-        for i in 0..b {
-            let row = logits.row(i);
-            let lz = logsumexp_row(row);
-            loss_sum += (lz - row[y[i] as usize]) as f64;
-            // argmax with first-index tie-breaking (jnp.argmax)
-            let mut best = 0usize;
-            for (j, &v) in row.iter().enumerate() {
-                if v > row[best] {
-                    best = j;
-                }
-            }
-            if best == y[i] as usize {
-                correct += 1;
-            }
+        Ok(ce_and_correct(&acts[spec.n_layers()], y))
+    }
+
+    fn eval_chunk_compressed(
+        &mut self,
+        model: &crate::infer::CompressedModel,
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f64, i64)> {
+        let b = y.len();
+        let classes = *model.widths.last().unwrap();
+        for &yi in y {
+            ensure!((0..classes as i32).contains(&yi), "label {yi} out of range [0,{classes})");
         }
-        Ok((loss_sum, correct))
+        let logits = model.forward(x, b, self.threads)?;
+        Ok(ce_and_correct(&logits, y))
     }
 
     fn quant_kernel_size(&mut self, n: usize, k: usize) -> Result<Option<usize>> {

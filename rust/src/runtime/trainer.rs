@@ -10,6 +10,7 @@ use anyhow::{ensure, Result};
 use super::backend::native::NativeBackend;
 use super::{Backend, BackendHandle, Runtime};
 use crate::data::Dataset;
+use crate::infer::CompressedModel;
 use crate::models::{ModelSpec, ParamState};
 use crate::tensor::Matrix;
 
@@ -110,14 +111,44 @@ impl EvalDriver {
         }
     }
 
-    fn run_chunk(&self, state: &ParamState, x: &[f32], y: &[i32]) -> Result<(f64, i64)> {
-        self.backend.borrow_mut().eval_chunk(&self.spec, state, x, y)
+    /// Native-backend driver sized for a compressed model (whose name need
+    /// not be in the registry).
+    pub fn native_for_model(model: &CompressedModel, threads: usize) -> EvalDriver {
+        Self::native_for_spec(&model.spec(), threads)
     }
 
-    /// Evaluate the model on a whole dataset.  The last partial chunk is
-    /// padded with copies of example 0 and its contribution subtracted
-    /// exactly (one extra all-example-0 chunk evaluation, cached per call).
+    /// Evaluate the model on a whole dataset (dense-weight path).
     pub fn eval(&self, state: &ParamState, data: &Dataset) -> Result<EvalResult> {
+        self.eval_loop(data, |x, y| {
+            self.backend.borrow_mut().eval_chunk(&self.spec, state, x, y)
+        })
+    }
+
+    /// Evaluate a [`CompressedModel`] on a whole dataset, executing every
+    /// layer in compressed form (scheme-specific kernels; dense Δ(Θ) is
+    /// never materialized).  Fails on backends without compressed kernels
+    /// (the PJRT artifact path).
+    pub fn eval_compressed(&self, model: &CompressedModel, data: &Dataset) -> Result<EvalResult> {
+        ensure!(
+            model.widths == self.widths,
+            "compressed model widths {:?} != driver widths {:?}",
+            model.widths,
+            self.widths
+        );
+        model.validate()?;
+        self.eval_loop(data, |x, y| {
+            self.backend.borrow_mut().eval_chunk_compressed(model, x, y)
+        })
+    }
+
+    /// Shared chunking/padding driver: the last partial chunk is padded
+    /// with copies of example 0 and its contribution subtracted exactly
+    /// (one extra all-example-0 chunk evaluation, cached per call).
+    fn eval_loop(
+        &self,
+        data: &Dataset,
+        mut run: impl FnMut(&[f32], &[i32]) -> Result<(f64, i64)>,
+    ) -> Result<EvalResult> {
         let b = self.eval_batch;
         let dim = self.widths[0];
         ensure!(data.dim == dim, "dataset dim {} != model dim {dim}", data.dim);
@@ -132,7 +163,7 @@ impl EvalDriver {
         for c in 0..full_chunks {
             let idx: Vec<usize> = (c * b..(c + 1) * b).collect();
             data.gather(&idx, &mut x, &mut y);
-            let (l, k) = self.run_chunk(state, &x, &y)?;
+            let (l, k) = run(&x, &y)?;
             total_loss += l;
             total_correct += k;
         }
@@ -142,11 +173,11 @@ impl EvalDriver {
             let mut idx: Vec<usize> = (full_chunks * b..n).collect();
             idx.resize(b, 0); // pad with example 0
             data.gather(&idx, &mut x, &mut y);
-            let (l_pad, k_pad) = self.run_chunk(state, &x, &y)?;
+            let (l_pad, k_pad) = run(&x, &y)?;
             // one pure-example-0 chunk gives the exact per-example values
             let idx0 = vec![0usize; b];
             data.gather(&idx0, &mut x, &mut y);
-            let (l0, k0) = self.run_chunk(state, &x, &y)?;
+            let (l0, k0) = run(&x, &y)?;
             let pad = (b - rem) as f64;
             total_loss += l_pad - l0 / b as f64 * pad;
             total_correct += k_pad - ((k0 as f64 / b as f64) * pad).round() as i64;

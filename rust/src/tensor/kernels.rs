@@ -1,0 +1,166 @@
+//! Specialized GEMM kernels for compressed weight representations
+//! ([`crate::infer`]): codebook-gather for quantized layers and sign
+//! accumulation for binarized/ternarized layers.
+//!
+//! Both compute `x · W` (x: b x rows, W: rows x cols) without ever
+//! materializing the dense `W`, streaming the compressed encoding instead:
+//! the codebook kernel reads per-weight center indices and gathers values
+//! from a k-entry codebook; the sign kernel adds/subtracts activations and
+//! applies the shared scale once per output.  Parallelism mirrors the tiled
+//! GEMM in [`Matrix::matmul_par`]: batch-row blocks over the threadpool,
+//! K-ascending accumulation per output element.
+
+use super::Matrix;
+use crate::util::threadpool::parallel_map;
+
+/// `x · W` where `W[r, c] = codebook[assignments[r * cols + c]]`.
+///
+/// Zero codebook entries are skipped — a ternary or pruned-then-quantized
+/// codebook executes only its nonzero MACs, which is what
+/// [`crate::infer::ExecKernel::flops_per_example`] charges for.
+pub fn matmul_gather(
+    x: &Matrix,
+    rows: usize,
+    cols: usize,
+    codebook: &[f32],
+    assignments: &[u32],
+    threads: usize,
+) -> Matrix {
+    assert_eq!(x.cols, rows, "matmul_gather shape mismatch");
+    assert_eq!(assignments.len(), rows * cols, "assignment count mismatch");
+    let (b, n) = (x.rows, cols);
+    const ROW_BLOCK: usize = 32;
+    let blocks = ((b + ROW_BLOCK - 1) / ROW_BLOCK).max(1);
+    let block_rows: Vec<Vec<f32>> = parallel_map(blocks, threads.max(1), |bi| {
+        let r0 = bi * ROW_BLOCK;
+        let r1 = (r0 + ROW_BLOCK).min(b);
+        let mut out = vec![0.0f32; (r1 - r0) * n];
+        for (ri, i) in (r0..r1).enumerate() {
+            let x_row = &x.data[i * rows..(i + 1) * rows];
+            let o_row = &mut out[ri * n..(ri + 1) * n];
+            for (kk, &a) in x_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let a_row = &assignments[kk * cols..(kk + 1) * cols];
+                for (o, &asg) in o_row.iter_mut().zip(a_row.iter()) {
+                    let c = codebook[asg as usize];
+                    if c != 0.0 {
+                        *o += a * c;
+                    }
+                }
+            }
+        }
+        out
+    });
+    let mut data = Vec::with_capacity(b * n);
+    for r in block_rows {
+        data.extend_from_slice(&r);
+    }
+    Matrix::from_vec(b, n, data)
+}
+
+/// `x · (scale * S)` where `S[r, c] = values[r * cols + c] ∈ {-1, 0, +1}`.
+///
+/// Accumulates `±x` per output and multiplies by the shared scale once at
+/// the end, so the per-weight work is an add/subtract, not a MAC.
+pub fn matmul_signs(
+    x: &Matrix,
+    rows: usize,
+    cols: usize,
+    scale: f32,
+    values: &[i8],
+    threads: usize,
+) -> Matrix {
+    assert_eq!(x.cols, rows, "matmul_signs shape mismatch");
+    assert_eq!(values.len(), rows * cols, "sign count mismatch");
+    let (b, n) = (x.rows, cols);
+    const ROW_BLOCK: usize = 32;
+    let blocks = ((b + ROW_BLOCK - 1) / ROW_BLOCK).max(1);
+    let block_rows: Vec<Vec<f32>> = parallel_map(blocks, threads.max(1), |bi| {
+        let r0 = bi * ROW_BLOCK;
+        let r1 = (r0 + ROW_BLOCK).min(b);
+        let mut out = vec![0.0f32; (r1 - r0) * n];
+        for (ri, i) in (r0..r1).enumerate() {
+            let x_row = &x.data[i * rows..(i + 1) * rows];
+            let o_row = &mut out[ri * n..(ri + 1) * n];
+            for (kk, &a) in x_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let v_row = &values[kk * cols..(kk + 1) * cols];
+                for (o, &s) in o_row.iter_mut().zip(v_row.iter()) {
+                    match s {
+                        1 => *o += a,
+                        -1 => *o -= a,
+                        _ => {}
+                    }
+                }
+            }
+        }
+        for o in out.iter_mut() {
+            *o *= scale;
+        }
+        out
+    });
+    let mut data = Vec::with_capacity(b * n);
+    for r in block_rows {
+        data.extend_from_slice(&r);
+    }
+    Matrix::from_vec(b, n, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_x(b: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut x = Matrix::zeros(b, k);
+        rng.fill_normal(&mut x.data, 0.0, 1.0);
+        x
+    }
+
+    #[test]
+    fn gather_matches_dense_reconstruction() {
+        let (rows, cols) = (17, 9);
+        let codebook = vec![-0.5f32, 0.0, 0.25, 1.5];
+        let mut rng = Xoshiro256::new(3);
+        let assignments: Vec<u32> =
+            (0..rows * cols).map(|_| rng.below(codebook.len()) as u32).collect();
+        let w = Matrix::from_vec(
+            rows,
+            cols,
+            assignments.iter().map(|&a| codebook[a as usize]).collect(),
+        );
+        let x = rand_x(5, rows, 4);
+        let want = x.matmul(&w);
+        for threads in [1usize, 3] {
+            let got = matmul_gather(&x, rows, cols, &codebook, &assignments, threads);
+            assert_eq!(got.data, want.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn signs_match_dense_reconstruction() {
+        let (rows, cols) = (40, 6);
+        let mut rng = Xoshiro256::new(5);
+        let values: Vec<i8> = (0..rows * cols).map(|_| rng.below(3) as i8 - 1).collect();
+        let scale = 0.37f32;
+        let w = Matrix::from_vec(
+            rows,
+            cols,
+            values.iter().map(|&v| scale * v as f32).collect(),
+        );
+        let x = rand_x(33, rows, 6);
+        let want = x.matmul(&w);
+        let got = matmul_signs(&x, rows, cols, scale, &values, 2);
+        assert_eq!((got.rows, got.cols), (33, 6));
+        for (g, w) in got.data.iter().zip(want.data.iter()) {
+            // the sign kernel reorders the scale multiply (accumulate ±x,
+            // scale once), so results differ by accumulated rounding
+            assert!((g - w).abs() <= 1e-5 * w.abs().max(1.0), "{g} vs {w}");
+        }
+    }
+}

@@ -5,6 +5,9 @@
 //! library works on views of those buffers.  We implement exactly the dense
 //! linear algebra the compressions require — no general ndarray dependency.
 
+pub mod kernels;
+pub mod sparse;
+
 /// A dense row-major matrix owning its data.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {

@@ -1,0 +1,191 @@
+//! Compressed-sparse-row matrices and the sparse GEMM kernel behind the
+//! compressed execution engine ([`crate::infer`]).
+//!
+//! A pruned layer's weights `W: rows x cols` are stored as CSR over the
+//! *input* dimension (row-major like [`Matrix`]), so the forward product
+//! `x · W` streams each batch row of `x` once and touches only the `nnz`
+//! surviving weights — `b * nnz` multiply-accumulates instead of the dense
+//! `b * rows * cols`.
+
+use super::Matrix;
+use crate::util::threadpool::parallel_map;
+
+/// A sparse `rows x cols` matrix in compressed-sparse-row form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// `rows + 1` offsets into `col_idx` / `values`.
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a dense matrix, keeping every nonzero.
+    pub fn from_dense(m: &Matrix) -> Csr {
+        let mut row_ptr = Vec::with_capacity(m.rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0);
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    col_idx.push(c as u32);
+                    values.push(v);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        Csr { rows: m.rows, cols: m.cols, row_ptr, col_idx, values }
+    }
+
+    /// Build from flat row-major positions into a `rows x cols` matrix
+    /// (the [`crate::compress::Theta::Sparse`] layout).  Entries need not
+    /// be sorted; duplicates are rejected by debug assertion.
+    pub fn from_flat_entries(rows: usize, cols: usize, indices: &[u32], values: &[f32]) -> Csr {
+        debug_assert_eq!(indices.len(), values.len(), "CSR entry length mismatch");
+        let mut entries: Vec<(u32, f32)> =
+            indices.iter().copied().zip(values.iter().copied()).collect();
+        entries.sort_unstable_by_key(|&(i, _)| i);
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::with_capacity(entries.len());
+        let mut vals = Vec::with_capacity(entries.len());
+        row_ptr.push(0);
+        let mut e = 0usize;
+        for r in 0..rows {
+            let row_end = ((r + 1) * cols) as u32;
+            while e < entries.len() && entries[e].0 < row_end {
+                debug_assert!(
+                    e == 0 || entries[e].0 != entries[e - 1].0,
+                    "duplicate sparse index {}",
+                    entries[e].0
+                );
+                col_idx.push(entries[e].0 % cols as u32);
+                vals.push(entries[e].1);
+                e += 1;
+            }
+            row_ptr.push(col_idx.len());
+        }
+        assert_eq!(e, entries.len(), "sparse index out of range for {rows}x{cols}");
+        Csr { rows, cols, row_ptr, col_idx, values: vals }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for e in self.row_ptr[r]..self.row_ptr[r + 1] {
+                m.data[r * self.cols + self.col_idx[e] as usize] = self.values[e];
+            }
+        }
+        m
+    }
+
+    /// `x · self` (x: b x rows, result b x cols), parallel over batch-row
+    /// blocks.  Per output row the accumulation runs over `self`'s rows in
+    /// ascending order, matching the dense [`Matrix::matmul`] order, so
+    /// results agree with `x.matmul(&self.to_dense())` exactly.
+    pub fn left_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols, self.rows, "sparse left_matmul shape mismatch");
+        let (b, k, n) = (x.rows, self.rows, self.cols);
+        const ROW_BLOCK: usize = 32;
+        let blocks = ((b + ROW_BLOCK - 1) / ROW_BLOCK).max(1);
+        let block_rows: Vec<Vec<f32>> = parallel_map(blocks, threads.max(1), |bi| {
+            let r0 = bi * ROW_BLOCK;
+            let r1 = (r0 + ROW_BLOCK).min(b);
+            let mut out = vec![0.0f32; (r1 - r0) * n];
+            for (ri, i) in (r0..r1).enumerate() {
+                let x_row = &x.data[i * k..(i + 1) * k];
+                let o_row = &mut out[ri * n..(ri + 1) * n];
+                for (kk, &a) in x_row.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let (e0, e1) = (self.row_ptr[kk], self.row_ptr[kk + 1]);
+                    for e in e0..e1 {
+                        o_row[self.col_idx[e] as usize] += a * self.values[e];
+                    }
+                }
+            }
+            out
+        });
+        let mut data = Vec::with_capacity(b * n);
+        for r in block_rows {
+            data.extend_from_slice(&r);
+        }
+        Matrix::from_vec(b, n, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_sparse(rows: usize, cols: usize, keep_every: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.0, 1.0);
+        for (i, v) in m.data.iter_mut().enumerate() {
+            if i % keep_every != 0 {
+                *v = 0.0;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = rand_sparse(13, 7, 3, 1);
+        let csr = Csr::from_dense(&m);
+        assert_eq!(csr.to_dense(), m);
+        assert_eq!(csr.nnz(), m.data.iter().filter(|&&v| v != 0.0).count());
+    }
+
+    #[test]
+    fn flat_entries_match_from_dense() {
+        let m = rand_sparse(9, 11, 4, 2);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &v) in m.data.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                values.push(v);
+            }
+        }
+        // shuffle to exercise the unsorted path
+        indices.reverse();
+        values.reverse();
+        let csr = Csr::from_flat_entries(9, 11, &indices, &values);
+        assert_eq!(csr, Csr::from_dense(&m));
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let csr = Csr::from_flat_entries(4, 5, &[], &[]);
+        assert_eq!(csr.nnz(), 0);
+        let x = Matrix::from_vec(2, 4, vec![1.0; 8]);
+        let z = csr.left_matmul(&x, 2);
+        assert!(z.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn left_matmul_matches_dense() {
+        for &(b, k, n) in &[(1usize, 5usize, 4usize), (33, 70, 20), (64, 128, 17)] {
+            let mut rng = Xoshiro256::new(7);
+            let mut x = Matrix::zeros(b, k);
+            rng.fill_normal(&mut x.data, 0.0, 1.0);
+            let w = rand_sparse(k, n, 5, b as u64);
+            let csr = Csr::from_dense(&w);
+            let want = x.matmul(&w);
+            for threads in [1usize, 3] {
+                let got = csr.left_matmul(&x, threads);
+                assert_eq!(got.data, want.data, "b={b} k={k} n={n} threads={threads}");
+            }
+        }
+    }
+}

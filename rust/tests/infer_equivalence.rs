@@ -1,0 +1,220 @@
+//! Dense/compressed execution equivalence: for every `Theta` variant
+//! (including `Additive` nests) the compressed forward must match the
+//! dense-Δ(Θ) forward within 1e-5 relative, across odd shapes and
+//! degenerate cases (rank 1, kappa 0 survivors, single-center codebooks,
+//! all-zero sign patterns).
+
+use lc::compress::quantize::AdaptiveQuant;
+use lc::compress::task::{TaskSet, TaskSpec};
+use lc::compress::view::View;
+use lc::compress::{CContext, Compression, Theta};
+use lc::infer::{CompressedLayer, CompressedModel, ExecKernel};
+use lc::models::{ModelSpec, ParamState};
+use lc::runtime::trainer::EvalDriver;
+use lc::tensor::Matrix;
+use lc::util::rng::Xoshiro256;
+
+fn rand_x(b: usize, k: usize, rng: &mut Xoshiro256) -> Matrix {
+    let mut x = Matrix::zeros(b, k);
+    rng.fill_normal(&mut x.data, 0.0, 1.0);
+    x
+}
+
+fn sparse_theta(m: usize, n: usize, keep: usize, rng: &mut Xoshiro256) -> Theta {
+    let idx = rng.sample_indices(m * n, keep);
+    Theta::Sparse {
+        len: m * n,
+        indices: idx.iter().map(|&i| i as u32).collect(),
+        values: idx.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+    }
+}
+
+fn quantized_theta(m: usize, n: usize, k: usize, rng: &mut Xoshiro256) -> Theta {
+    Theta::Quantized {
+        codebook: (0..k).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        assignments: (0..m * n).map(|_| rng.below(k) as u32).collect(),
+    }
+}
+
+fn signs_theta(m: usize, n: usize, all_zero: bool, rng: &mut Xoshiro256) -> Theta {
+    Theta::Signs {
+        scale: 0.4,
+        values: (0..m * n)
+            .map(|_| if all_zero { 0 } else { rng.below(3) as i8 - 1 })
+            .collect(),
+        ternary: true,
+    }
+}
+
+fn lowrank_theta(m: usize, n: usize, rank: usize, rng: &mut Xoshiro256) -> Theta {
+    Theta::LowRank {
+        u: rand_x(m, rank, rng),
+        s: (0..rank).map(|i| (i + 1) as f32 * 0.5).collect(),
+        v: rand_x(n, rank, rng),
+    }
+}
+
+/// All variant/degenerate cases for one layer shape.
+fn theta_zoo(m: usize, n: usize, rng: &mut Xoshiro256) -> Vec<(&'static str, Theta)> {
+    let total = m * n;
+    let mut zoo = vec![
+        ("sparse", sparse_theta(m, n, (total / 3).max(1), rng)),
+        ("sparse kappa=0", Theta::Sparse { len: total, indices: vec![], values: vec![] }),
+        ("quantized k=4", quantized_theta(m, n, 4.min(total.max(2)), rng)),
+        (
+            "quantized single-center",
+            Theta::Quantized { codebook: vec![0.37], assignments: vec![0; total] },
+        ),
+        (
+            "quantized zero-center",
+            Theta::Quantized { codebook: vec![0.0, 1.5], assignments: (0..total).map(|i| (i % 2) as u32).collect() },
+        ),
+        ("signs ternary", signs_theta(m, n, false, rng)),
+        ("signs all-zero", signs_theta(m, n, true, rng)),
+        ("lowrank rank=1", lowrank_theta(m, n, 1, rng)),
+        (
+            "additive nested",
+            Theta::Additive(vec![
+                Theta::Additive(vec![
+                    sparse_theta(m, n, (total / 4).max(1), rng),
+                    quantized_theta(m, n, 2, rng),
+                ]),
+                signs_theta(m, n, false, rng),
+            ]),
+        ),
+    ];
+    let r = m.min(n);
+    if r >= 2 {
+        zoo.push(("lowrank", lowrank_theta(m, n, (r / 2).max(1), rng)));
+        // dead singular directions must not change the output
+        let mut s: Vec<f32> = (0..r).map(|i| (i + 1) as f32).collect();
+        s[r / 2] = 0.0;
+        zoo.push((
+            "lowrank zero-singular",
+            Theta::LowRank { u: rand_x(m, r, rng), s, v: rand_x(n, r, rng) },
+        ));
+    }
+    zoo
+}
+
+#[test]
+fn every_variant_matches_dense_forward_within_1e5() {
+    let shapes = [(1usize, 1usize), (3, 7), (17, 5), (8, 8), (5, 23), (40, 31)];
+    let mut rng = Xoshiro256::new(99);
+    for &(m, n) in &shapes {
+        for (name, theta) in theta_zoo(m, n, &mut rng) {
+            let layer = CompressedLayer::from_theta(&theta, m, n);
+            let w = Matrix::from_vec(m, n, theta.decompress());
+            let x = rand_x(7, m, &mut rng);
+            let want = x.matmul(&w);
+            for threads in [1usize, 3] {
+                let got = layer.forward(&x, threads);
+                assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+                for (g, e) in got.data.iter().zip(want.data.iter()) {
+                    assert!(
+                        (g - e).abs() <= 1e-5 * e.abs().max(1.0),
+                        "{name} {m}x{n} threads={threads}: {g} vs {e}"
+                    );
+                }
+            }
+            // the kernel never executes more MACs than the dense layer
+            assert!(
+                layer.flops_per_example() <= (m * n) as u64
+                    || matches!(theta, Theta::LowRank { .. } | Theta::Additive(_)),
+                "{name}: {} MACs for a {m}x{n} layer",
+                layer.flops_per_example()
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_layer_vector_task_splits_equivalently() {
+    // one task covering both layers as a flat vector: the per-layer split
+    // inside CompressedModel must reproduce the scattered Δ(Θ) exactly
+    let spec = ModelSpec { name: "t".into(), widths: vec![9, 6, 4], batch: 8, eval_batch: 8 };
+    let state = ParamState::init(&spec, 21);
+    let tasks = TaskSet::new(vec![TaskSpec {
+        name: "q-all".into(),
+        layers: vec![0, 1],
+        view: View::Vector,
+        compression: Box::new(AdaptiveQuant::new(3)),
+    }]);
+    let view = tasks.tasks[0].gather(&state.weights);
+    let theta = tasks.tasks[0].compression.compress(&view, &CContext::default());
+
+    let mut deltas = vec![Matrix::zeros(9, 6), Matrix::zeros(6, 4)];
+    tasks.tasks[0].scatter(&theta.decompress(), &mut deltas);
+
+    let model = CompressedModel::from_lc(&spec, &tasks, &[theta], &state);
+    model.validate().unwrap();
+    let mut rng = Xoshiro256::new(5);
+    let x = rand_x(11, 9, &mut rng);
+    let logits = model.forward(&x.data, 11, 2).unwrap();
+
+    let mut h = x;
+    for (l, d) in deltas.iter().enumerate() {
+        let mut z = h.matmul(d);
+        for r in 0..z.rows {
+            let row = z.row_mut(r);
+            for (v, &bi) in row.iter_mut().zip(state.biases[l].iter()) {
+                *v += bi;
+                if l == 0 && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        h = z;
+    }
+    for (g, e) in logits.data.iter().zip(h.data.iter()) {
+        assert!((g - e).abs() <= 1e-5 * e.abs().max(1.0), "{g} vs {e}");
+    }
+}
+
+#[test]
+fn eval_compressed_matches_dense_eval_on_dataset() {
+    // Full-driver equivalence on a real dataset, exact-accumulation-order
+    // kernels (CSR + codebook): the compressed eval must agree with the
+    // dense-Δ(Θ) eval to float identity.
+    let (_, test_data) = lc::data::synth::train_test(0, 300, 3, 2);
+    let spec = ModelSpec {
+        name: "eq-test".into(),
+        widths: vec![784, 32, 10],
+        batch: 64,
+        eval_batch: 128,
+    };
+    let mut state = ParamState::init(&spec, 17);
+
+    // prune layer 0 to 10%, quantize layer 1 to k=4
+    let mut rng = Xoshiro256::new(31);
+    let t0 = sparse_theta(784, 32, 784 * 32 / 10, &mut rng);
+    let t1 = quantized_theta(32, 10, 4, &mut rng);
+    state.weights[0] = Matrix::from_vec(784, 32, t0.decompress());
+    state.weights[1] = Matrix::from_vec(32, 10, t1.decompress());
+
+    let model = CompressedModel {
+        name: spec.name.clone(),
+        widths: spec.widths.clone(),
+        eval_batch: spec.eval_batch,
+        layers: vec![
+            CompressedLayer::from_theta(&t0, 784, 32),
+            CompressedLayer::from_theta(&t1, 32, 10),
+        ],
+        biases: state.biases.clone(),
+    };
+
+    let eval = EvalDriver::native_for_spec(&spec, 2);
+    let dense = eval.eval(&state, &test_data).unwrap();
+    let compressed = eval.eval_compressed(&model, &test_data).unwrap();
+    assert_eq!(dense.n, compressed.n);
+    assert_eq!(dense.error, compressed.error, "argmax decisions must agree");
+    assert!(
+        (dense.mean_loss - compressed.mean_loss).abs()
+            <= 1e-5 * dense.mean_loss.abs().max(1.0),
+        "loss {} vs {}",
+        dense.mean_loss,
+        compressed.mean_loss
+    );
+    // and the kernels really are compressed, not dense fallbacks
+    assert!(model.flops_per_example() < spec.flops_dense() / 2);
+}

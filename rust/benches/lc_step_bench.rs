@@ -1,0 +1,396 @@
+//! Steady-state LC C-step benchmark (`cargo bench --bench lc_step_bench`):
+//! the measurement behind the zero-allocation workspace refactor.
+//!
+//! Two claims, both recorded in `BENCH_lc_step.json`:
+//!
+//! 1. **Allocation-free C phase.** After one warm-up step, the C phase's
+//!    data motion — task gather, Θ decompression, delta scatter,
+//!    distortion read-back, and the fused multiplier/feasibility pass —
+//!    performs zero heap allocations (counted by a wrapping global
+//!    allocator).  The only remaining allocations in a full C step are
+//!    the Θ vectors the schemes return and O(#tasks) telemetry.
+//! 2. **≥ 20% faster C step.** A faithful replica of the pre-refactor
+//!    path (per-step weight clone for `w − λ/μ`, allocating gather, two
+//!    decompressions per task, separate scalar multiplier and feasibility
+//!    loops) is timed against the production `AuxState` path on the same
+//!    schedule; the JSON records both and the speedup.
+//!
+//! Bench config: lenet300-wide shapes (784-500-300-10, 545k weights) with
+//! cheap projection C steps (binary, ternary, ℓ0-constraint) so the
+//! measured delta is the memory traffic, not the scheme's argmin.
+//! `LCC_BENCH_QUICK=1` bounds the iteration budget for CI smoke runs.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use lc::bench::Bencher;
+use lc::compress::prune::ConstraintL0;
+use lc::compress::quantize::{BinaryQuant, TernaryQuant};
+use lc::compress::task::{TaskSet, TaskSpec};
+use lc::compress::view::View;
+use lc::compress::{distortion, distortion_ws, CContext, Theta, ViewData};
+use lc::lc::aux::AuxState;
+use lc::lc::monitor::Monitor;
+use lc::models::{ModelSpec, ParamState};
+use lc::tensor::{Matrix, Workspace};
+
+// --- counting allocator ----------------------------------------------------
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_counts() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+// --- bench scenario --------------------------------------------------------
+
+const WIDTHS: [usize; 4] = [784, 500, 300, 10];
+
+fn spec() -> ModelSpec {
+    ModelSpec {
+        name: "lenet300-wide".into(),
+        widths: WIDTHS.to_vec(),
+        batch: 128,
+        eval_batch: 512,
+    }
+}
+
+fn tasks() -> TaskSet {
+    // cheap (O(n)-ish) projections on the big layers so the bench measures
+    // data motion, not the scheme's argmin; the sort-heavy ternary C step
+    // runs on the small head layer only
+    TaskSet::new(vec![
+        TaskSpec {
+            name: "bin-l0".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(BinaryQuant { scaled: true }),
+        },
+        TaskSpec {
+            name: "l0-l1".into(),
+            layers: vec![1],
+            view: View::Vector,
+            compression: Box::new(ConstraintL0 { kappa: 7_500 }),
+        },
+        TaskSpec {
+            name: "tern-l2".into(),
+            layers: vec![2],
+            view: View::Vector,
+            compression: Box::new(TernaryQuant),
+        },
+    ])
+}
+
+/// Faithful replica of the pre-refactor C step + multiplier + feasibility:
+/// clones every weight matrix for the λ/μ shift, gathers each task's view
+/// into a fresh `Vec` (inside `parallel_map`, like the old coordinator),
+/// decompresses each Θ twice (distortion + scatter), then runs the scalar
+/// multiplier loop and a separate feasibility pass.
+#[allow(clippy::too_many_arguments)]
+fn baseline_c_step(
+    tasks: &TaskSet,
+    state: &ParamState,
+    mu: f64,
+    deltas: &mut [Matrix],
+    lambdas: &mut [Matrix],
+    thetas: &mut [Option<Theta>],
+    covered: &[bool],
+    threads: usize,
+) -> f64 {
+    let nl = state.weights.len();
+    let inv_mu = (1.0 / mu) as f32;
+    let w_eff: Vec<Matrix> = (0..nl)
+        .map(|l| {
+            let mut w = state.weights[l].clone();
+            for (wi, &li) in w.data.iter_mut().zip(lambdas[l].data.iter()) {
+                *wi -= inv_mu * li;
+            }
+            w
+        })
+        .collect();
+    let ctx = CContext { mu };
+    let task_list = &tasks.tasks;
+    let w_eff_ref: &[Matrix] = &w_eff;
+    let results: Vec<(Theta, ViewData, f64)> =
+        lc::util::threadpool::parallel_map(task_list.len(), threads, move |ti| {
+            let task = &task_list[ti];
+            let view = task.gather(w_eff_ref);
+            let theta = task.compression.compress(&view, &ctx);
+            let dist = distortion(&view, &theta);
+            (theta, view, dist)
+        });
+    for (ti, (theta, _view, dist)) in results.into_iter().enumerate() {
+        std::hint::black_box(dist);
+        let flat = theta.decompress();
+        task_list[ti].scatter(&flat, deltas);
+        thetas[ti] = Some(theta);
+    }
+    for l in 0..nl {
+        if covered[l] {
+            for i in 0..lambdas[l].data.len() {
+                lambdas[l].data[i] -=
+                    (mu as f32) * (state.weights[l].data[i] - deltas[l].data[i]);
+            }
+        }
+    }
+    (0..nl)
+        .filter(|&l| covered[l])
+        .map(|l| state.weights[l].dist_sq(&deltas[l]))
+        .sum()
+}
+
+struct Record {
+    bench: String,
+    fields: Vec<(String, String)>,
+}
+
+fn main() {
+    let quick = std::env::var("LCC_BENCH_QUICK").is_ok();
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+
+    let spec = spec();
+    let tasks = tasks();
+    let state = ParamState::init(&spec, 42);
+    let covered = tasks.covered_layers(spec.n_layers());
+    let n_weights = spec.n_weights();
+    let mu = 1e-2f64;
+    let mut records: Vec<Record> = Vec::new();
+
+    // --- equivalence: workspace path == baseline path ----------------------
+    {
+        let mut base_deltas: Vec<Matrix> =
+            state.weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect();
+        let mut base_lambdas = base_deltas.clone();
+        let mut base_thetas: Vec<Option<Theta>> = tasks.tasks.iter().map(|_| None).collect();
+        let mut aux = AuxState::new(&spec, &tasks);
+        let mut aux_thetas: Vec<Option<Theta>> = tasks.tasks.iter().map(|_| None).collect();
+        let mut monitor = Monitor::new(true);
+        let mut max_delta_diff = 0.0f64;
+        let mut max_feas_rel = 0.0f64;
+        for step in 0..5 {
+            let base_feas = baseline_c_step(
+                &tasks,
+                &state,
+                mu,
+                &mut base_deltas,
+                &mut base_lambdas,
+                &mut base_thetas,
+                &covered,
+                1,
+            );
+            aux.c_step(&tasks, step, mu, &state, mu, &mut aux_thetas, &mut monitor, 1);
+            let ws_feas = aux.dual_update(&state, mu, true, 1);
+            for (a, bm) in aux.deltas.iter().zip(base_deltas.iter()) {
+                for (x, y) in a.data.iter().zip(bm.data.iter()) {
+                    max_delta_diff = max_delta_diff.max((x - y).abs() as f64);
+                }
+            }
+            max_feas_rel =
+                max_feas_rel.max((ws_feas - base_feas).abs() / base_feas.abs().max(1e-12));
+        }
+        assert!(
+            max_delta_diff <= 1e-6,
+            "workspace deltas diverge from baseline: {max_delta_diff:.3e}"
+        );
+        assert!(max_feas_rel <= 1e-6, "feasibility diverges: {max_feas_rel:.3e}");
+        println!(
+            "equivalence over 5 AL steps: max |Δdelta| = {max_delta_diff:.3e}, \
+             max rel feasibility diff = {max_feas_rel:.3e}"
+        );
+        records.push(Record {
+            bench: "equivalence".into(),
+            fields: vec![
+                ("steps".into(), "5".into()),
+                ("max_delta_diff".into(), format!("{max_delta_diff:.3e}")),
+                ("max_feas_rel_diff".into(), format!("{max_feas_rel:.3e}")),
+            ],
+        });
+    }
+
+    // --- allocation audit of the steady-state C-phase data motion ----------
+    {
+        let mut aux = AuxState::new(&spec, &tasks);
+        let mut thetas: Vec<Option<Theta>> = tasks.tasks.iter().map(|_| None).collect();
+        let mut monitor = Monitor::new(true);
+        // produce Θs and warm every buffer (two steps: pool + capacities)
+        for step in 0..2 {
+            aux.c_step(&tasks, step, mu, &state, mu, &mut thetas, &mut monitor, 1);
+            aux.dual_update(&state, mu, true, 1);
+        }
+        // persistent data-motion buffers, warmed once
+        let mut views: Vec<ViewData> =
+            tasks.tasks.iter().map(|_| ViewData::Vector(Vec::new())).collect();
+        let mut deltas: Vec<Matrix> =
+            state.weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect();
+        let mut ws = Workspace::new();
+        let motion = |views: &mut Vec<ViewData>,
+                          deltas: &mut Vec<Matrix>,
+                          ws: &mut Workspace,
+                          aux: &mut AuxState| {
+            let mut dist_acc = 0.0f64;
+            for (ti, task) in tasks.tasks.iter().enumerate() {
+                let theta = thetas[ti].as_ref().unwrap();
+                task.gather_into(&state.weights, &mut views[ti]);
+                dist_acc += distortion_ws(&views[ti], theta, ws);
+                task.scatter_from(theta, deltas, ws);
+                dist_acc += task.scattered_distortion(&views[ti], deltas);
+            }
+            dist_acc += aux.dual_update(&state, mu, true, 1);
+            dist_acc
+        };
+        std::hint::black_box(motion(&mut views, &mut deltas, &mut ws, &mut aux));
+        std::hint::black_box(motion(&mut views, &mut deltas, &mut ws, &mut aux));
+        let iters = if quick { 20u64 } else { 200 };
+        let (a0, b0) = alloc_counts();
+        for _ in 0..iters {
+            std::hint::black_box(motion(&mut views, &mut deltas, &mut ws, &mut aux));
+        }
+        let (a1, b1) = alloc_counts();
+        let allocs_per_step = (a1 - a0) as f64 / iters as f64;
+        let bytes_per_step = (b1 - b0) as f64 / iters as f64;
+        println!(
+            "C-phase data motion ({iters} steps): {allocs_per_step:.2} allocs/step, \
+             {bytes_per_step:.1} bytes/step"
+        );
+        assert_eq!(
+            a1 - a0,
+            0,
+            "steady-state C-phase data motion must be allocation-free"
+        );
+        records.push(Record {
+            bench: "c_phase_data_motion".into(),
+            fields: vec![
+                ("iters".into(), iters.to_string()),
+                ("allocs_per_step".into(), format!("{allocs_per_step:.3}")),
+                ("bytes_per_step".into(), format!("{bytes_per_step:.1}")),
+                ("allocation_free".into(), (a1 - a0 == 0).to_string()),
+            ],
+        });
+    }
+
+    // --- wall time: baseline vs workspace C step ---------------------------
+    for &threads in &[1usize, 4] {
+        Bencher::header(&format!(
+            "LC C step, {n_weights} weights, binary/ternary/l0, threads={threads}"
+        ));
+        let mut base_deltas: Vec<Matrix> =
+            state.weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect();
+        let mut base_lambdas = base_deltas.clone();
+        let mut base_thetas: Vec<Option<Theta>> = tasks.tasks.iter().map(|_| None).collect();
+        let baseline_ms = b
+            .bench(&format!("baseline (allocating) t={threads}"), || {
+                baseline_c_step(
+                    &tasks,
+                    &state,
+                    mu,
+                    &mut base_deltas,
+                    &mut base_lambdas,
+                    &mut base_thetas,
+                    &covered,
+                    threads,
+                )
+            })
+            .mean_ns
+            / 1e6;
+
+        let mut aux = AuxState::new(&spec, &tasks);
+        let mut thetas: Vec<Option<Theta>> = tasks.tasks.iter().map(|_| None).collect();
+        let mut monitor = Monitor::new(true);
+        let mut step = 0usize;
+        let workspace_ms = b
+            .bench(&format!("workspace (AuxState)   t={threads}"), || {
+                let d = aux.c_step(
+                    &tasks,
+                    step,
+                    mu,
+                    &state,
+                    mu,
+                    &mut thetas,
+                    &mut monitor,
+                    threads,
+                );
+                step += 1;
+                (d, aux.dual_update(&state, mu, true, threads))
+            })
+            .mean_ns
+            / 1e6;
+
+        let speedup = baseline_ms / workspace_ms.max(1e-12);
+        println!("speedup: {speedup:.2}x (baseline {baseline_ms:.3}ms -> {workspace_ms:.3}ms)");
+        // regression gate: the workspace path must never lose to the
+        // allocating baseline (the ≥1.2x acceptance target is read off the
+        // JSON; quick/CI runners get headroom for scheduler noise)
+        let floor = if quick { 0.85 } else { 1.0 };
+        assert!(
+            speedup >= floor,
+            "workspace C step regressed below the allocating baseline at \
+             threads={threads}: {speedup:.2}x (floor {floor})"
+        );
+        records.push(Record {
+            bench: "c_step_total".into(),
+            fields: vec![
+                ("config".into(), "\"784-500-300-10 binary/ternary/l0\"".into()),
+                ("threads".into(), threads.to_string()),
+                ("n_weights".into(), n_weights.to_string()),
+                ("baseline_ms".into(), format!("{baseline_ms:.4}")),
+                ("workspace_ms".into(), format!("{workspace_ms:.4}")),
+                ("speedup".into(), format!("{speedup:.3}")),
+            ],
+        });
+    }
+
+    // --- BENCH_lc_step.json ------------------------------------------------
+    let mut json = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        json.push_str(&format!("  {{\"bench\": \"{}\"", r.bench));
+        for (k, v) in &r.fields {
+            // bare numbers/bools stay unquoted; pre-quoted strings pass through
+            let quoted = v.parse::<f64>().is_err()
+                && v != "true"
+                && v != "false"
+                && !v.starts_with('"');
+            if quoted {
+                json.push_str(&format!(", \"{k}\": \"{v}\""));
+            } else {
+                json.push_str(&format!(", \"{k}\": {v}"));
+            }
+        }
+        json.push_str(&format!("}}{}\n", if i + 1 < records.len() { "," } else { "" }));
+    }
+    json.push_str("]\n");
+    let path = "BENCH_lc_step.json";
+    let mut f = std::fs::File::create(path).expect("create BENCH_lc_step.json");
+    f.write_all(json.as_bytes()).expect("write BENCH_lc_step.json");
+    println!("\nwrote {path} ({} records)", records.len());
+}

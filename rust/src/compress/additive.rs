@@ -12,6 +12,7 @@
 //! with additive pruning" (Table 2).
 
 use super::{CContext, Compression, Theta, ViewData};
+use crate::tensor::Workspace;
 
 pub struct AdditiveCombination {
     pub components: Vec<Box<dyn Compression>>,
@@ -56,17 +57,20 @@ impl Compression for AdditiveCombination {
         let w = view.as_flat();
         let n = w.len();
         let j_count = self.components.len();
+        let mut ws = Workspace::new();
 
-        // current decompressed value of each component
+        // current decompressed value of each component (allocated once,
+        // refilled in place every pass via `decompress_into`)
         let mut parts: Vec<Vec<f32>> = vec![vec![0.0; n]; j_count];
         let mut thetas: Vec<Option<Theta>> = (0..j_count).map(|_| None).collect();
 
-        let rebuild_view = |residual: Vec<f32>| -> ViewData {
-            match view {
-                ViewData::Vector(_) => ViewData::Vector(residual),
-                ViewData::Matrix(m) => ViewData::Matrix(crate::tensor::Matrix::from_vec(
-                    m.rows, m.cols, residual,
-                )),
+        // one reusable view carries every residual subproblem: the inner
+        // C steps only read it, so refilling its flat data per (pass, j)
+        // replaces the old per-subproblem Vec + ViewData allocations
+        let mut sub = match view {
+            ViewData::Vector(_) => ViewData::Vector(vec![0.0; n]),
+            ViewData::Matrix(m) => {
+                ViewData::Matrix(crate::tensor::Matrix::zeros(m.rows, m.cols))
             }
         };
 
@@ -79,27 +83,32 @@ impl Compression for AdditiveCombination {
         let mut last_dist = f64::INFINITY;
         for _pass in 0..self.max_passes {
             for j in 0..j_count {
-                // residual = w - sum_{i != j} parts[i]
-                let mut residual = w.to_vec();
-                for (i, p) in parts.iter().enumerate() {
-                    if i != j {
-                        for (r, &x) in residual.iter_mut().zip(p.iter()) {
-                            *r -= x;
+                {
+                    // residual = w - sum_{i != j} parts[i], written in place
+                    let residual = sub.as_flat_mut();
+                    residual.copy_from_slice(w);
+                    for (i, p) in parts.iter().enumerate() {
+                        if i != j {
+                            for (r, &x) in residual.iter_mut().zip(p.iter()) {
+                                *r -= x;
+                            }
                         }
                     }
                 }
-                let theta = self.components[j].compress(&rebuild_view(residual), ctx);
-                parts[j] = theta.decompress();
+                let theta = self.components[j].compress(&sub, ctx);
+                theta.decompress_into(&mut parts[j], &mut ws);
                 thetas[j] = Some(theta);
             }
-            // total distortion
-            let mut recon = vec![0.0f32; n];
+            // total distortion via a workspace-borrowed reconstruction
+            let mut recon = ws.take(n);
+            recon.fill(0.0);
             for p in &parts {
                 for (r, &x) in recon.iter_mut().zip(p.iter()) {
                     *r += x;
                 }
             }
             let dist = crate::tensor::dist_sq(w, &recon);
+            ws.put(recon);
             if best.as_ref().map_or(true, |(d, _)| dist < *d) {
                 best = Some((dist, thetas.iter().map(|t| t.clone().unwrap()).collect()));
             }

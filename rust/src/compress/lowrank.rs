@@ -14,6 +14,13 @@
 //!   energy, so the objective is λ·C(r) + μ/2·Σ_{i>r} σᵢ².  `C(r)` is the
 //!   chosen cost model: storage floats or inference FLOPs, both
 //!   `r·(m+n)` per layer for a dense layer (scaled by `alpha` weights).
+//!
+//! Decompression of a `Theta::LowRank` honors the crate's in-place
+//! contract (`compress` module docs): `decompress_into` runs a fused
+//! `U·diag(S)·Vᵀ` triple loop straight into the caller's buffer — no
+//! transposed factor, no intermediate matrix — with the same per-element
+//! accumulation order as the allocating `linalg::reconstruct` path, so
+//! both produce identical bits.
 
 use super::{CContext, Compression, Theta, ViewData};
 use crate::linalg::{svd, tail_energy, truncate};

@@ -16,6 +16,25 @@
 //! constraint and penalty pruning; low-rank to a fixed rank and with
 //! automatic rank selection (FLOPs or storage cost); and additive
 //! combinations of any of the above.
+//!
+//! # In-place decompression contract
+//!
+//! The steady-state LC loop decompresses every task's Θ once per step;
+//! doing that through fresh `Vec`s dominates the C phase's memory traffic.
+//! [`Theta::decompress_into`] is the allocation-free path:
+//!
+//! * it **fully overwrites** `out` (callers need not zero it) and requires
+//!   `out.len() == decompressed_len()`;
+//! * nested [`Theta::Additive`] components accumulate through scratch
+//!   buffers borrowed from the caller's [`Workspace`], so arbitrarily deep
+//!   nests stay allocation-free once the workspace is warm;
+//! * the result is element-for-element identical to [`Theta::decompress`]
+//!   (which is itself implemented on top of `decompress_into`) — pinned by
+//!   the `prop_decompress_into` suite.
+//!
+//! [`distortion_ws`] is the matching allocation-free form of
+//! [`distortion`]; `TaskSpec::gather_into` / `TaskSpec::scatter_from`
+//! (see [`task`]) extend the same contract to whole compression tasks.
 
 pub mod additive;
 pub mod lowrank;
@@ -24,7 +43,7 @@ pub mod quantize;
 pub mod task;
 pub mod view;
 
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 pub use view::{View, ViewData};
 
 /// Context the C step may depend on.  Penalty-form schemes (ℓ0/ℓ1 penalty,
@@ -62,32 +81,77 @@ pub enum Theta {
 }
 
 impl Theta {
-    /// Δ(Θ): reconstruct the (flat) weight view.
+    /// Δ(Θ): reconstruct the (flat) weight view.  Allocating convenience
+    /// wrapper over [`Theta::decompress_into`].
     pub fn decompress(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.decompressed_len()];
+        self.decompress_into(&mut out, &mut Workspace::new());
+        out
+    }
+
+    /// Δ(Θ) written into `out` without heap allocation (module docs:
+    /// *In-place decompression contract*).  `out` is fully overwritten;
+    /// nested [`Theta::Additive`] components borrow scratch from `ws`, so
+    /// a warm workspace makes the whole call allocation-free.
+    ///
+    /// Panics when `out.len() != self.decompressed_len()`.
+    pub fn decompress_into(&self, out: &mut [f32], ws: &mut Workspace) {
+        assert_eq!(
+            out.len(),
+            self.decompressed_len(),
+            "decompress_into buffer length mismatch"
+        );
         match self {
-            Theta::Quantized { codebook, assignments } => assignments
-                .iter()
-                .map(|&a| codebook[a as usize])
-                .collect(),
-            Theta::Signs { scale, values, .. } => {
-                values.iter().map(|&s| scale * s as f32).collect()
+            Theta::Quantized { codebook, assignments } => {
+                for (o, &a) in out.iter_mut().zip(assignments.iter()) {
+                    *o = codebook[a as usize];
+                }
             }
-            Theta::Sparse { len, indices, values } => {
-                let mut out = vec![0.0f32; *len];
+            Theta::Signs { scale, values, .. } => {
+                for (o, &s) in out.iter_mut().zip(values.iter()) {
+                    *o = scale * s as f32;
+                }
+            }
+            Theta::Sparse { indices, values, .. } => {
+                out.fill(0.0);
                 for (&i, &v) in indices.iter().zip(values.iter()) {
                     out[i as usize] = v;
                 }
-                out
             }
-            Theta::LowRank { u, s, v } => crate::linalg::reconstruct(u, s, v).data,
+            Theta::LowRank { u, s, v } => {
+                // fused U·diag(S)·Vᵀ: same per-element accumulation order
+                // (and zero-term skip) as linalg::reconstruct's GEMM, so
+                // results are identical to the allocating path
+                let (m, n, r) = (u.rows, v.rows, s.len());
+                debug_assert_eq!(u.cols, r, "low-rank U/S rank mismatch");
+                debug_assert_eq!(v.cols, r, "low-rank V/S rank mismatch");
+                for i in 0..m {
+                    let u_row = &u.data[i * r..(i + 1) * r];
+                    let o_row = &mut out[i * n..(i + 1) * n];
+                    for (j, o) in o_row.iter_mut().enumerate() {
+                        let v_row = &v.data[j * r..(j + 1) * r];
+                        let mut acc = 0.0f32;
+                        for k in 0..r {
+                            let a = u_row[k] * s[k];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            acc += a * v_row[k];
+                        }
+                        *o = acc;
+                    }
+                }
+            }
             Theta::Additive(parts) => {
-                let mut out = parts[0].decompress();
+                parts[0].decompress_into(out, ws);
+                let mut tmp = ws.take(out.len());
                 for p in &parts[1..] {
-                    for (o, x) in out.iter_mut().zip(p.decompress()) {
+                    p.decompress_into(&mut tmp, ws);
+                    for (o, &x) in out.iter_mut().zip(tmp.iter()) {
                         *o += x;
                     }
                 }
-                out
+                ws.put(tmp);
             }
         }
     }
@@ -265,9 +329,18 @@ pub trait Compression: Send + Sync {
 
 /// Distortion ‖w − Δ(Θ)‖² of a proposed Θ against the view it came from.
 pub fn distortion(view: &ViewData, theta: &Theta) -> f64 {
+    distortion_ws(view, theta, &mut Workspace::new())
+}
+
+/// [`distortion`] without heap allocation: Δ(Θ) is materialized into a
+/// scratch buffer borrowed from `ws` (allocation-free once warm).
+pub fn distortion_ws(view: &ViewData, theta: &Theta, ws: &mut Workspace) -> f64 {
     let w = view.as_flat();
-    let d = theta.decompress();
-    crate::tensor::dist_sq(w, &d)
+    let mut buf = ws.take(w.len());
+    theta.decompress_into(&mut buf, ws);
+    let d = crate::tensor::dist_sq(w, &buf);
+    ws.put(buf);
+    d
 }
 
 #[cfg(test)]

@@ -96,8 +96,10 @@ impl Compression for PenaltyL0 {
     fn compress(&self, view: &ViewData, ctx: &CContext) -> Theta {
         let w = view.as_flat();
         let thr = (2.0 * self.alpha / ctx.mu).sqrt() as f32;
-        let mut indices = Vec::new();
-        let mut values = Vec::new();
+        // count first: the survivor vectors allocate exactly once
+        let nnz = w.iter().filter(|x| x.abs() > thr).count();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
         for (i, &x) in w.iter().enumerate() {
             if x.abs() > thr {
                 indices.push(i as u32);
@@ -127,8 +129,9 @@ impl Compression for PenaltyL1 {
     fn compress(&self, view: &ViewData, ctx: &CContext) -> Theta {
         let w = view.as_flat();
         let thr = (self.alpha / ctx.mu) as f32;
-        let mut indices = Vec::new();
-        let mut values = Vec::new();
+        let nnz = w.iter().filter(|x| x.abs() - thr > 0.0).count();
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
         for (i, &x) in w.iter().enumerate() {
             let mag = x.abs() - thr;
             if mag > 0.0 {
@@ -177,8 +180,9 @@ pub fn project_l1_ball(w: &[f32], z: f64) -> Vec<f32> {
 }
 
 fn sparse_from_dense(theta: &[f32]) -> Theta {
-    let mut indices = Vec::new();
-    let mut values = Vec::new();
+    let nnz = theta.iter().filter(|&&x| x != 0.0).count();
+    let mut indices = Vec::with_capacity(nnz);
+    let mut values = Vec::with_capacity(nnz);
     for (i, &x) in theta.iter().enumerate() {
         if x != 0.0 {
             indices.push(i as u32);

@@ -94,14 +94,20 @@ pub fn lloyd_with_init(w: &[f32], init: &[f32], max_iters: usize) -> (Vec<f32>, 
     let mut centers = init.to_vec();
     centers.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
+    // every buffer the E/M iteration touches is allocated once up front —
+    // the loop itself is allocation-free
     let mut assign = vec![0u32; w.len()];
+    let mut mids = vec![0.0f32; k.saturating_sub(1)];
+    let mut sums = vec![0.0f64; k];
+    let mut counts = vec![0u64; k];
     let mut last_dist = f64::INFINITY;
     for _ in 0..max_iters.max(1) {
         // E-step: nearest center (centers sorted -> binary search by midpoints)
-        assign_nearest_sorted(w, &centers, &mut assign);
+        fill_midpoints(&centers, &mut mids);
+        assign_nearest_sorted(w, &centers, &mids, &mut assign);
         // M-step
-        let mut sums = vec![0.0f64; k];
-        let mut counts = vec![0u64; k];
+        sums.fill(0.0);
+        counts.fill(0);
         for (&wi, &a) in w.iter().zip(assign.iter()) {
             sums[a as usize] += wi as f64;
             counts[a as usize] += 1;
@@ -128,13 +134,20 @@ pub fn lloyd_with_init(w: &[f32], init: &[f32], max_iters: usize) -> (Vec<f32>, 
         }
         last_dist = dist;
     }
-    assign_nearest_sorted(w, &centers, &mut assign);
+    fill_midpoints(&centers, &mut mids);
+    assign_nearest_sorted(w, &centers, &mids, &mut assign);
     (centers, assign)
 }
 
-fn assign_nearest_sorted(w: &[f32], centers: &[f32], assign: &mut [u32]) {
-    // midpoints between consecutive sorted centers partition the line
-    let mids: Vec<f32> = centers.windows(2).map(|p| 0.5 * (p[0] + p[1])).collect();
+/// Midpoints between consecutive sorted centers (they partition the line);
+/// `mids.len() == centers.len() - 1`.
+fn fill_midpoints(centers: &[f32], mids: &mut [f32]) {
+    for (m, p) in mids.iter_mut().zip(centers.windows(2)) {
+        *m = 0.5 * (p[0] + p[1]);
+    }
+}
+
+fn assign_nearest_sorted(w: &[f32], centers: &[f32], mids: &[f32], assign: &mut [u32]) {
     for (ai, &wi) in assign.iter_mut().zip(w.iter()) {
         let mut j = mids.partition_point(|&m| m < wi);
         // resolve exact-midpoint ties toward the nearer center

@@ -9,7 +9,7 @@
 
 use super::view::{View, ViewData};
 use super::{CContext, Compression, Theta};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 /// One compression task.
 pub struct TaskSpec {
@@ -41,6 +41,88 @@ impl TaskSpec {
                 ViewData::Matrix(weights[self.layers[0]].clone())
             }
         }
+    }
+
+    /// Gather the covered layers' weights into a caller-owned reusable
+    /// view (the allocation-free form of [`TaskSpec::gather`]): `out` is
+    /// reshaped on first use and only refilled afterwards.  Produces
+    /// exactly the same view data as `gather`.
+    pub fn gather_into(&self, weights: &[Matrix], out: &mut ViewData) {
+        match self.view {
+            View::Vector => {
+                let total: usize = self.layers.iter().map(|&l| weights[l].data.len()).sum();
+                if !matches!(out, ViewData::Vector(_)) {
+                    *out = ViewData::Vector(Vec::new());
+                }
+                let buf = match out {
+                    ViewData::Vector(v) => v,
+                    ViewData::Matrix(_) => unreachable!(),
+                };
+                buf.resize(total, 0.0);
+                let mut off = 0usize;
+                for &l in &self.layers {
+                    let n = weights[l].data.len();
+                    buf[off..off + n].copy_from_slice(&weights[l].data);
+                    off += n;
+                }
+            }
+            View::Matrix => {
+                assert_eq!(
+                    self.layers.len(),
+                    1,
+                    "matrix view requires exactly one layer (task {})",
+                    self.name
+                );
+                let src = &weights[self.layers[0]];
+                match out {
+                    ViewData::Matrix(m) if (m.rows, m.cols) == (src.rows, src.cols) => {
+                        m.data.copy_from_slice(&src.data);
+                    }
+                    _ => *out = ViewData::Matrix(src.clone()),
+                }
+            }
+        }
+    }
+
+    /// Decompress `theta` and scatter it into the per-layer deltas without
+    /// materializing an intermediate dense buffer where possible: tasks
+    /// covering a single layer decompress straight into that layer's delta
+    /// matrix; multi-layer vector tasks stage through `ws` scratch.
+    /// Equivalent to `self.scatter(&theta.decompress(), deltas)`.
+    pub fn scatter_from(&self, theta: &Theta, deltas: &mut [Matrix], ws: &mut Workspace) {
+        if self.layers.len() == 1 {
+            let l = self.layers[0];
+            theta.decompress_into(&mut deltas[l].data, ws);
+            return;
+        }
+        let total: usize = self.layers.iter().map(|&l| deltas[l].data.len()).sum();
+        let mut flat = ws.take(total);
+        theta.decompress_into(&mut flat, ws);
+        let mut off = 0usize;
+        for &l in &self.layers {
+            let n = deltas[l].data.len();
+            deltas[l].data.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        ws.put(flat);
+    }
+
+    /// Distortion of the already-scattered Δ(Θ) against this task's view:
+    /// ‖view − Δ(Θ)‖² read back from the delta matrices, avoiding a second
+    /// decompression.  Summation runs per layer segment (f64 partial sums),
+    /// so the result may differ from [`crate::compress::distortion`] by
+    /// f64 rounding only.
+    pub fn scattered_distortion(&self, view: &ViewData, deltas: &[Matrix]) -> f64 {
+        let w = view.as_flat();
+        let mut off = 0usize;
+        let mut total = 0.0f64;
+        for &l in &self.layers {
+            let n = deltas[l].data.len();
+            total += crate::tensor::dist_sq(&w[off..off + n], &deltas[l].data);
+            off += n;
+        }
+        debug_assert_eq!(off, w.len(), "view/delta length mismatch (task {})", self.name);
+        total
     }
 
     /// Scatter a decompressed flat buffer back into the per-layer deltas.

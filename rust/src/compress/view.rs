@@ -42,6 +42,16 @@ impl ViewData {
         }
     }
 
+    /// Mutable flat access — lets in-place writers (task gathers, the
+    /// additive solver's residual subproblems) refill a view without
+    /// reallocating it.
+    pub fn as_flat_mut(&mut self) -> &mut [f32] {
+        match self {
+            ViewData::Vector(v) => v,
+            ViewData::Matrix(m) => &mut m.data,
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.as_flat().len()
     }

@@ -35,7 +35,7 @@ use crate::compress::Theta;
 use crate::models::{ModelSpec, ParamState};
 use crate::tensor::kernels::{matmul_gather, matmul_signs};
 use crate::tensor::sparse::Csr;
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 /// Dense layers at or below this nonzero density execute as CSR: at 50%
 /// the gather-scatter sparse kernel already does no more work than the
@@ -97,16 +97,36 @@ impl CompressedLayer {
     /// compressed form: equal arithmetic, but the dense Δ(Θ) is never
     /// materialized in memory.
     pub fn from_theta(theta: &Theta, rows: usize, cols: usize) -> CompressedLayer {
-        let kernel = Self::scheme_kernel(theta, rows, cols);
+        Self::from_theta_ws(theta, rows, cols, &mut Workspace::new())
+    }
+
+    /// [`CompressedLayer::from_theta`] with a caller-provided [`Workspace`]:
+    /// builders planning many layers ([`build_layers`],
+    /// `CompressedCheckpoint::to_model`) share one workspace so the dense
+    /// fallback's Δ(Θ) materialization reuses scratch across layers.
+    pub fn from_theta_ws(
+        theta: &Theta,
+        rows: usize,
+        cols: usize,
+        ws: &mut Workspace,
+    ) -> CompressedLayer {
+        let kernel = Self::scheme_kernel(theta, rows, cols, ws);
         if kernel.flops_per_example() > (rows * cols) as u64 {
-            CompressedLayer::from_dense(Matrix::from_vec(rows, cols, theta.decompress()))
+            let mut data = vec![0.0f32; rows * cols];
+            theta.decompress_into(&mut data, ws);
+            CompressedLayer::from_dense(Matrix::from_vec(rows, cols, data))
         } else {
             kernel
         }
     }
 
     /// The scheme-native kernel for Θ, before cost-based plan selection.
-    fn scheme_kernel(theta: &Theta, rows: usize, cols: usize) -> CompressedLayer {
+    fn scheme_kernel(
+        theta: &Theta,
+        rows: usize,
+        cols: usize,
+        ws: &mut Workspace,
+    ) -> CompressedLayer {
         assert_eq!(
             theta.decompressed_len(),
             rows * cols,
@@ -147,7 +167,7 @@ impl CompressedLayer {
                 CompressedLayer::Factored { a, bt }
             }
             Theta::Additive(parts) => CompressedLayer::Sum(
-                parts.iter().map(|p| CompressedLayer::from_theta(p, rows, cols)).collect(),
+                parts.iter().map(|p| CompressedLayer::from_theta_ws(p, rows, cols, ws)).collect(),
             ),
         }
     }
@@ -258,6 +278,7 @@ pub fn build_layers(
     assert_eq!(thetas.len(), tasks.tasks.len(), "theta/task count mismatch");
     assert_eq!(weights.len(), nl, "weights/layer count mismatch");
     let mut layers: Vec<Option<CompressedLayer>> = (0..nl).map(|_| None).collect();
+    let mut ws = Workspace::new();
     for (t, theta) in tasks.tasks.iter().zip(thetas.iter()) {
         let lens: Vec<usize> = t
             .layers
@@ -269,7 +290,7 @@ pub fn build_layers(
             .collect();
         for (&l, part) in t.layers.iter().zip(theta.split(&lens).iter()) {
             let (m, n) = spec.layer_shape(l);
-            layers[l] = Some(CompressedLayer::from_theta(part, m, n));
+            layers[l] = Some(CompressedLayer::from_theta_ws(part, m, n, &mut ws));
         }
     }
     layers

@@ -17,17 +17,17 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::aux::AuxState;
 use super::monitor::Monitor;
 use super::schedule::{LrSchedule, MuSchedule};
 use crate::compress::task::TaskSet;
-use crate::compress::{distortion, CContext, Theta, ViewData};
+use crate::compress::Theta;
 use crate::data::{BatchIter, Dataset};
 use crate::metrics::{account, Compressed};
 use crate::models::{ModelSpec, ParamState};
 use crate::runtime::trainer::{EvalDriver, EvalResult, TrainDriver};
 use crate::tensor::Matrix;
 use crate::util::rng::Xoshiro256;
-use crate::util::threadpool::parallel_map;
 
 /// Configuration of one LC run.
 #[derive(Clone, Debug)]
@@ -78,6 +78,11 @@ pub struct StepRecord {
     pub feasibility: f64,
     /// Per-task distortions after the C step.
     pub task_distortions: Vec<f64>,
+    /// Wall-clock seconds spent in this step's L phase (SGD epochs).
+    pub l_secs: f64,
+    /// Wall-clock seconds spent in this step's C phase (all task C steps
+    /// plus the fused multiplier/feasibility pass).
+    pub c_secs: f64,
     pub test_eval: Option<EvalResult>,
 }
 
@@ -161,36 +166,33 @@ impl LcAlgorithm {
     ) -> Result<LcOutcome> {
         let t0 = Instant::now();
         let nl = self.spec.n_layers();
-        let covered = self.tasks.covered_layers(nl);
         let mu_floor = self.cfg.mu.mu0.max(1e-12);
+        let threads = self.cfg.threads.max(1);
 
-        // Δ(Θ) and λ buffers, per weight matrix
-        let mut deltas: Vec<Matrix> = (0..nl)
-            .map(|l| {
-                let (m, n) = self.spec.layer_shape(l);
-                Matrix::zeros(m, n)
-            })
-            .collect();
-        let mut lambdas: Vec<Matrix> = deltas.clone();
+        // Persistent auxiliary state: Δ(Θ), λ, the w − λ/μ shift buffers,
+        // per-task gather views, and workspace scratch.  All per-step data
+        // motion below reuses these buffers (see lc/aux.rs).
+        let mut aux = AuxState::new(&self.spec, &self.tasks);
         let mut thetas: Vec<Option<Theta>> = self.tasks.tasks.iter().map(|_| None).collect();
         let mut monitor = Monitor::new(self.cfg.quiet);
         let mut records = Vec::new();
 
         // --- direct-compression init: Θ ← Π(w), λ = 0 ---------------------
-        self.c_step(
+        aux.c_step(
+            &self.tasks,
             usize::MAX,
             mu_floor,
             &state,
-            &lambdas,
             0.0, // λ not yet active
-            &mut deltas,
             &mut thetas,
             &mut monitor,
+            threads,
         );
 
         // --- main loop -----------------------------------------------------
         let mut rng = Xoshiro256::new(self.cfg.seed);
         let (mut x, mut y) = (Vec::new(), Vec::new());
+        let mut mu_vec = vec![0.0f32; nl];
         for (step, mu) in self.cfg.mu.iter() {
             let lr = self.cfg.lr.lr_at(step);
             let epochs = if step == 0 {
@@ -200,11 +202,11 @@ impl LcAlgorithm {
             };
 
             // L step: fresh optimizer per step (paper Listing 2)
+            let t_l = Instant::now();
             state.reset_momenta();
-            let mu_vec: Vec<f32> = covered
-                .iter()
-                .map(|&c| if c { mu as f32 } else { 0.0 })
-                .collect();
+            for (m, &c) in mu_vec.iter_mut().zip(aux.covered().iter()) {
+                *m = if c { mu as f32 } else { 0.0 };
+            }
             let mut first_epoch_loss = 0.0f64;
             let mut last_epoch_loss = 0.0f64;
             for e in 0..epochs.max(1) {
@@ -212,8 +214,15 @@ impl LcAlgorithm {
                 let mut sum = 0.0f64;
                 let mut count = 0usize;
                 while it.next_into(&mut x, &mut y) {
-                    let loss =
-                        self.train.step(&mut state, &x, &y, &deltas, &lambdas, &mu_vec, lr)?;
+                    let loss = self.train.step(
+                        &mut state,
+                        &x,
+                        &y,
+                        &aux.deltas,
+                        &aux.lambdas,
+                        &mu_vec,
+                        lr,
+                    )?;
                     sum += loss as f64;
                     count += 1;
                 }
@@ -226,47 +235,33 @@ impl LcAlgorithm {
             if epochs > 1 {
                 monitor.check_l_step(step, first_epoch_loss, last_epoch_loss);
             }
+            let l_secs = t_l.elapsed().as_secs_f64();
 
-            // C step on w − λ/μ
-            let dists = self.c_step(
+            // C step on w − λ/μ, then the fused multiplier/feasibility pass
+            let t_c = Instant::now();
+            let dists = aux.c_step(
+                &self.tasks,
                 step,
                 mu.max(mu_floor),
                 &state,
-                &lambdas,
                 if self.cfg.use_al { mu } else { 0.0 },
-                &mut deltas,
                 &mut thetas,
                 &mut monitor,
+                threads,
             );
-
-            // multipliers step (AL only)
-            if self.cfg.use_al {
-                for l in 0..nl {
-                    if covered[l] {
-                        for i in 0..lambdas[l].data.len() {
-                            lambdas[l].data[i] -=
-                                (mu as f32) * (state.weights[l].data[i] - deltas[l].data[i]);
-                        }
-                    }
-                }
-            }
-
-            // feasibility ‖w − Δ(Θ)‖² over covered layers
-            let feasibility: f64 = (0..nl)
-                .filter(|&l| covered[l])
-                .map(|l| state.weights[l].dist_sq(&deltas[l]))
-                .sum();
+            let feasibility = aux.dual_update(&state, mu, self.cfg.use_al, threads);
+            let c_secs = t_c.elapsed().as_secs_f64();
 
             let test_eval = if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
-                let snap = self.compressed_snapshot(&state, &deltas, &covered);
-                Some(self.eval.eval(&snap, test_data)?)
+                let snap = aux.refresh_snapshot(&state);
+                Some(self.eval.eval(snap, test_data)?)
             } else {
                 None
             };
 
             if !self.cfg.quiet {
                 crate::info!(
-                    "LC step {step:3} mu={mu:.3e} lr={lr:.4} L:{first_epoch_loss:.4}->{last_epoch_loss:.4} feas={feasibility:.3e}{}",
+                    "LC step {step:3} mu={mu:.3e} lr={lr:.4} L:{first_epoch_loss:.4}->{last_epoch_loss:.4} feas={feasibility:.3e} lt={l_secs:.2}s ct={c_secs:.3}s{}",
                     match &test_eval {
                         Some(e) => format!(" test_err={:.2}%", e.error * 100.0),
                         None => String::new(),
@@ -282,12 +277,14 @@ impl LcAlgorithm {
                 l_loss_end: last_epoch_loss,
                 feasibility,
                 task_distortions: dists,
+                l_secs,
+                c_secs,
                 test_eval,
             });
         }
 
         // --- finalize: the compressed model is Δ(Θ) -------------------------
-        let compressed_state = self.compressed_snapshot(&state, &deltas, &covered);
+        let compressed_state = aux.into_compressed_state(&state);
         let final_train = self.eval.eval(&compressed_state, train_data)?;
         let final_test = self.eval.eval(&compressed_state, test_data)?;
         let thetas: Vec<Theta> = thetas.into_iter().map(|t| t.unwrap()).collect();
@@ -306,94 +303,6 @@ impl LcAlgorithm {
             wall_secs: t0.elapsed().as_secs_f64(),
             compressed_state,
         })
-    }
-
-    /// Build the compressed model: covered layers take Δ(Θ), uncovered
-    /// layers keep the trained weights; biases always keep trained values.
-    fn compressed_snapshot(
-        &self,
-        state: &ParamState,
-        deltas: &[Matrix],
-        covered: &[bool],
-    ) -> ParamState {
-        let mut snap = state.clone();
-        for l in 0..deltas.len() {
-            if covered[l] {
-                snap.weights[l].data.copy_from_slice(&deltas[l].data);
-            }
-        }
-        snap
-    }
-
-    /// Run all tasks' C steps (in parallel) on w_eff = w − λ/μ and scatter
-    /// the decompressed results into `deltas`.  Returns per-task distortions.
-    #[allow(clippy::too_many_arguments)]
-    fn c_step(
-        &self,
-        step: usize,
-        mu_for_c: f64,
-        state: &ParamState,
-        lambdas: &[Matrix],
-        mu_for_lambda: f64, // 0 disables the λ/μ shift (QP mode or init)
-        deltas: &mut [Matrix],
-        thetas: &mut [Option<Theta>],
-        monitor: &mut Monitor,
-    ) -> Vec<f64> {
-        let nl = self.spec.n_layers();
-        // Effective weights for the C step.  Only the AL path shifts by
-        // λ/μ; in QP mode and at the direct-compression init the effective
-        // weights *are* the current weights, so borrow them instead of
-        // cloning every layer's matrix per step.
-        let w_eff_shifted: Vec<Matrix>;
-        let w_eff_ref: &[Matrix] = if mu_for_lambda > 0.0 {
-            let inv_mu = (1.0 / mu_for_lambda) as f32;
-            w_eff_shifted = (0..nl)
-                .map(|l| {
-                    let mut w = state.weights[l].clone();
-                    for (wi, &li) in w.data.iter_mut().zip(lambdas[l].data.iter()) {
-                        *wi -= inv_mu * li;
-                    }
-                    w
-                })
-                .collect();
-            &w_eff_shifted
-        } else {
-            &state.weights
-        };
-
-        let ctx = CContext { mu: mu_for_c };
-        let n_tasks = self.tasks.tasks.len();
-        // capture only Sync data (avoid `self`, whose PJRT handles are !Sync)
-        let task_list = &self.tasks.tasks;
-        let results: Vec<(Theta, ViewData, f64)> =
-            parallel_map(n_tasks, self.cfg.threads.max(1), move |ti| {
-                let task = &task_list[ti];
-                let view = task.gather(w_eff_ref);
-                let theta = task.compression.compress(&view, &ctx);
-                let dist = distortion(&view, &theta);
-                (theta, view, dist)
-            });
-
-        let mut dists = Vec::with_capacity(n_tasks);
-        for (ti, (theta, view, dist)) in results.into_iter().enumerate() {
-            // §7 invariant: new projection at least as good as stale Θ.
-            // It only holds for constraint-form schemes (exact l2
-            // projections); penalty-form schemes (ℓ0/ℓ1 penalty, rank
-            // selection) legitimately trade distortion against the
-            // compression cost as μ changes, so checking them would record
-            // false positives — gated on `Compression::constraint_form`.
-            if let Some(old) = &thetas[ti] {
-                if step != usize::MAX && self.tasks.tasks[ti].compression.constraint_form() {
-                    let old_dist = distortion(&view, old);
-                    monitor.check_c_step(step, &self.tasks.tasks[ti].name, old_dist, dist);
-                }
-            }
-            let flat = theta.decompress();
-            self.tasks.tasks[ti].scatter(&flat, deltas);
-            thetas[ti] = Some(theta);
-            dists.push(dist);
-        }
-        dists
     }
 }
 

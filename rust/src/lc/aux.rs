@@ -1,0 +1,376 @@
+//! Auxiliary state of the LC loop, owned as persistent buffers.
+//!
+//! The coordinator's per-step data motion used to be scattered across
+//! parallel `Vec<Matrix>`s in `lc/algorithm.rs` and reallocated freely:
+//! every C step cloned all weight matrices to form `w − λ/μ`, gathered
+//! each task's view into a fresh `Vec`, decompressed every Θ twice (once
+//! for the distortion, once for the scatter), and every `eval_every`
+//! evaluation cloned the whole `ParamState` — SGD momenta included.
+//!
+//! [`AuxState`] owns that entire triple — per-layer `deltas` Δ(Θ),
+//! multipliers `lambdas`, and the shifted weights `w_eff` — plus per-task
+//! gather views and scratch [`Workspace`]s, and fuses the update passes:
+//!
+//! * the AL shift `w − λ/μ` writes into the persistent `w_eff` buffers in
+//!   one parallel pass (no clone);
+//! * each task's C step gathers into its reusable view, decompresses Θ
+//!   *once* directly into the delta matrices, and reads the distortion
+//!   back from them;
+//! * the multiplier update `λ ← λ − μ(w − Δ(Θ))` and the feasibility
+//!   reduction `‖w − Δ(Θ)‖²` run as a single fused pass per layer
+//!   ([`AuxState::dual_update`]);
+//! * compressed-model snapshots refresh a persistent `ParamState` whose
+//!   momenta are allocated zero once and never cloned again
+//!   ([`AuxState::refresh_snapshot`]).
+//!
+//! After the first LC step warms the buffers, the C phase's gather /
+//! decompress / scatter / dual-update data motion performs no heap
+//! allocation (measured by `benches/lc_step_bench.rs`); the remaining
+//! allocations are the Θs the schemes return and O(#tasks) telemetry.
+
+use crate::compress::task::TaskSet;
+use crate::compress::{distortion_ws, CContext, Theta, ViewData};
+use crate::models::{ModelSpec, ParamState};
+use crate::tensor::{Matrix, Workspace};
+use crate::util::threadpool::parallel_map_mut;
+
+use super::monitor::Monitor;
+
+/// Per-task reusable buffers: the gathered view and a worker-private
+/// workspace (parallel C steps must not share one pool).
+struct TaskScratch {
+    view: ViewData,
+    ws: Workspace,
+}
+
+/// Persistent auxiliary state of one LC run.
+pub struct AuxState {
+    /// Δ(Θ) per weight matrix (zeros on uncovered layers).
+    pub deltas: Vec<Matrix>,
+    /// Lagrange multipliers λ per weight matrix (zeros in QP mode).
+    pub lambdas: Vec<Matrix>,
+    /// Persistent buffers for the shifted weights `w − λ/μ`.
+    w_eff: Vec<Matrix>,
+    covered: Vec<bool>,
+    scratch: Vec<TaskScratch>,
+    /// Serial-phase workspace (multi-layer scatter staging).
+    ws: Workspace,
+    /// Persistent compressed-model snapshot (weights/biases refreshed per
+    /// eval; momenta zero-allocated once, never cloned).
+    snapshot: Option<ParamState>,
+}
+
+impl AuxState {
+    pub fn new(spec: &ModelSpec, tasks: &TaskSet) -> Self {
+        let nl = spec.n_layers();
+        let zeros: Vec<Matrix> = (0..nl)
+            .map(|l| {
+                let (m, n) = spec.layer_shape(l);
+                Matrix::zeros(m, n)
+            })
+            .collect();
+        AuxState {
+            deltas: zeros.clone(),
+            lambdas: zeros.clone(),
+            w_eff: zeros,
+            covered: tasks.covered_layers(nl),
+            scratch: tasks
+                .tasks
+                .iter()
+                .map(|_| TaskScratch { view: ViewData::Vector(Vec::new()), ws: Workspace::new() })
+                .collect(),
+            ws: Workspace::new(),
+            snapshot: None,
+        }
+    }
+
+    /// Which layers some task covers (the L step's μ mask).
+    pub fn covered(&self) -> &[bool] {
+        &self.covered
+    }
+
+    /// Run all tasks' C steps on `w_eff = w − λ/μ` (λ shift only when
+    /// `mu_for_lambda > 0`), scatter the decompressed results into the
+    /// persistent deltas, and return per-task distortions.  Gathers,
+    /// decompressions, and scatters reuse this state's buffers; `step ==
+    /// usize::MAX` marks the direct-compression init (no monitor checks).
+    #[allow(clippy::too_many_arguments)]
+    pub fn c_step(
+        &mut self,
+        tasks: &TaskSet,
+        step: usize,
+        mu_for_c: f64,
+        state: &ParamState,
+        mu_for_lambda: f64,
+        thetas: &mut [Option<Theta>],
+        monitor: &mut Monitor,
+        threads: usize,
+    ) -> Vec<f64> {
+        let threads = threads.max(1);
+        let AuxState { deltas, lambdas, w_eff, covered, scratch, ws, .. } = self;
+        let covered_ref: &[bool] = covered;
+        let lambdas_ref: &[Matrix] = lambdas;
+
+        // AL shift, fused into the persistent w_eff buffers (one parallel
+        // pass; the QP / init path borrows the weights directly instead)
+        if mu_for_lambda > 0.0 {
+            let inv_mu = (1.0 / mu_for_lambda) as f32;
+            parallel_map_mut(w_eff, threads, |l, we| {
+                if covered_ref[l] {
+                    let w = &state.weights[l].data;
+                    let lam = &lambdas_ref[l].data;
+                    for ((o, &wi), &li) in we.data.iter_mut().zip(w.iter()).zip(lam.iter()) {
+                        *o = wi - inv_mu * li;
+                    }
+                }
+            });
+        }
+        let w_src: &[Matrix] =
+            if mu_for_lambda > 0.0 { &w_eff[..] } else { &state.weights };
+
+        let ctx = CContext { mu: mu_for_c };
+        let task_list = &tasks.tasks;
+        // parallel phase: gather + compress + stale-Θ distortion (for the
+        // §7 monitor), each worker on its own scratch
+        let results: Vec<(Theta, Option<f64>)> = {
+            let thetas_ro: &[Option<Theta>] = thetas;
+            parallel_map_mut(scratch, threads, |ti, sc| {
+                let task = &task_list[ti];
+                task.gather_into(w_src, &mut sc.view);
+                let theta = task.compression.compress(&sc.view, &ctx);
+                let old_dist = match &thetas_ro[ti] {
+                    Some(old) if step != usize::MAX && task.compression.constraint_form() => {
+                        Some(distortion_ws(&sc.view, old, &mut sc.ws))
+                    }
+                    _ => None,
+                };
+                (theta, old_dist)
+            })
+        };
+
+        // serial phase: single decompression straight into the deltas,
+        // distortion read back from them, monitor bookkeeping
+        let mut dists = Vec::with_capacity(task_list.len());
+        for (ti, (theta, old_dist)) in results.into_iter().enumerate() {
+            let task = &task_list[ti];
+            task.scatter_from(&theta, deltas, ws);
+            let dist = task.scattered_distortion(&scratch[ti].view, deltas);
+            if let Some(od) = old_dist {
+                monitor.check_c_step(step, &task.name, od, dist);
+            }
+            thetas[ti] = Some(theta);
+            dists.push(dist);
+        }
+        dists
+    }
+
+    /// Fused multiplier update and feasibility reduction: one pass per
+    /// covered layer computes `r = w − Δ(Θ)`, accumulates `Σ r²`, and (AL
+    /// mode) applies `λ ← λ − μ·r` in place.  Returns the total
+    /// feasibility ‖w − Δ(Θ)‖² over covered layers.
+    pub fn dual_update(
+        &mut self,
+        state: &ParamState,
+        mu: f64,
+        use_al: bool,
+        threads: usize,
+    ) -> f64 {
+        let AuxState { deltas, lambdas, covered, .. } = self;
+        let deltas_ref: &[Matrix] = deltas;
+        let covered_ref: &[bool] = covered;
+        let mu32 = mu as f32;
+        let layer_pass = |l: usize, lam: &mut Matrix| -> f64 {
+            if !covered_ref[l] {
+                return 0.0f64;
+            }
+            let w = &state.weights[l].data;
+            let d = &deltas_ref[l].data;
+            if use_al {
+                let mut feas = 0.0f64;
+                for ((&wi, &di), li) in w.iter().zip(d.iter()).zip(lam.data.iter_mut()) {
+                    let r = wi - di;
+                    feas += (r as f64) * (r as f64);
+                    *li -= mu32 * r;
+                }
+                feas
+            } else {
+                crate::tensor::dist_sq(w, d)
+            }
+        };
+        if threads <= 1 {
+            // serial accumulate: zero allocations in steady state
+            let mut feas = 0.0f64;
+            for (l, lam) in lambdas.iter_mut().enumerate() {
+                feas += layer_pass(l, lam);
+            }
+            feas
+        } else {
+            parallel_map_mut(lambdas, threads, layer_pass).into_iter().sum()
+        }
+    }
+
+    /// Refresh and return the persistent compressed-model snapshot:
+    /// covered layers take Δ(Θ), uncovered layers keep the trained
+    /// weights, biases always track the trained values.  Momenta are
+    /// zero-allocated once on first use and never copied from `state` —
+    /// evals don't read them, and cloning them per `eval_every` step was
+    /// pure overhead.
+    pub fn refresh_snapshot(&mut self, state: &ParamState) -> &ParamState {
+        if self.snapshot.is_none() {
+            self.snapshot = Some(ParamState {
+                spec: state.spec.clone(),
+                weights: state.weights.clone(),
+                biases: state.biases.clone(),
+                w_momenta: state
+                    .weights
+                    .iter()
+                    .map(|w| Matrix::zeros(w.rows, w.cols))
+                    .collect(),
+                b_momenta: state.biases.iter().map(|b| vec![0.0; b.len()]).collect(),
+            });
+        }
+        let snap = self.snapshot.as_mut().unwrap();
+        for l in 0..self.deltas.len() {
+            let src =
+                if self.covered[l] { &self.deltas[l].data } else { &state.weights[l].data };
+            snap.weights[l].data.copy_from_slice(src);
+            snap.biases[l].copy_from_slice(&state.biases[l]);
+        }
+        self.snapshot.as_ref().unwrap()
+    }
+
+    /// Finish the run: hand out the compressed model state (weights =
+    /// Δ(Θ) on covered layers) without an extra full-state clone.
+    pub fn into_compressed_state(mut self, state: &ParamState) -> ParamState {
+        self.refresh_snapshot(state);
+        self.snapshot.unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::distortion;
+    use crate::compress::quantize::BinaryQuant;
+    use crate::compress::task::TaskSpec;
+    use crate::compress::view::View;
+
+    fn spec() -> ModelSpec {
+        ModelSpec { name: "aux-test".into(), widths: vec![4, 3, 2], batch: 8, eval_batch: 8 }
+    }
+
+    fn tasks() -> TaskSet {
+        TaskSet::new(vec![TaskSpec {
+            name: "bin0".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(BinaryQuant { scaled: true }),
+        }])
+    }
+
+    #[test]
+    fn c_step_matches_allocating_path() {
+        let spec = spec();
+        let tasks = tasks();
+        let state = ParamState::init(&spec, 3);
+        let mut aux = AuxState::new(&spec, &tasks);
+        let mut thetas: Vec<Option<Theta>> = vec![None];
+        let mut monitor = Monitor::new(true);
+        for threads in [1usize, 3] {
+            let dists =
+                aux.c_step(&tasks, 0, 1.0, &state, 0.0, &mut thetas, &mut monitor, threads);
+            // reference: the old allocating path
+            let view = tasks.tasks[0].gather(&state.weights);
+            let want_theta =
+                tasks.tasks[0].compression.compress(&view, &CContext { mu: 1.0 });
+            let want_dist = distortion(&view, &want_theta);
+            assert!((dists[0] - want_dist).abs() <= 1e-12 * want_dist.max(1.0));
+            let mut want_deltas =
+                vec![Matrix::zeros(4, 3), Matrix::zeros(3, 2)];
+            tasks.tasks[0].scatter(&want_theta.decompress(), &mut want_deltas);
+            assert_eq!(aux.deltas[0], want_deltas[0], "threads={threads}");
+            assert_eq!(aux.deltas[1].data, vec![0.0; 6], "uncovered layer untouched");
+        }
+        assert!(monitor.ok());
+    }
+
+    #[test]
+    fn dual_update_matches_scalar_loops() {
+        let spec = spec();
+        let tasks = tasks();
+        let state = ParamState::init(&spec, 5);
+        let mut aux = AuxState::new(&spec, &tasks);
+        let mut thetas: Vec<Option<Theta>> = vec![None];
+        let mut monitor = Monitor::new(true);
+        aux.c_step(&tasks, usize::MAX, 1.0, &state, 0.0, &mut thetas, &mut monitor, 1);
+        let mu = 0.25f64;
+        // reference scalar path on copies
+        let mut want_lambda = Matrix::zeros(4, 3);
+        let mut want_feas = 0.0f64;
+        for i in 0..12 {
+            let r = state.weights[0].data[i] - aux.deltas[0].data[i];
+            want_feas += (r as f64) * (r as f64);
+            want_lambda.data[i] -= (mu as f32) * r;
+        }
+        let feas = aux.dual_update(&state, mu, true, 2);
+        assert!((feas - want_feas).abs() <= 1e-12 * want_feas.max(1.0));
+        assert_eq!(aux.lambdas[0], want_lambda);
+        assert_eq!(aux.lambdas[1].data, vec![0.0; 6], "uncovered λ untouched");
+        // QP mode: feasibility only, λ unchanged
+        let before = aux.lambdas[0].clone();
+        let feas_qp = aux.dual_update(&state, mu, false, 1);
+        assert!(feas_qp >= 0.0);
+        assert_eq!(aux.lambdas[0], before);
+    }
+
+    #[test]
+    fn snapshot_reuses_buffers_and_skips_momenta() {
+        let spec = spec();
+        let tasks = tasks();
+        let mut state = ParamState::init(&spec, 7);
+        state.w_momenta[0].data[0] = 42.0; // must NOT leak into snapshots
+        let mut aux = AuxState::new(&spec, &tasks);
+        let mut thetas: Vec<Option<Theta>> = vec![None];
+        let mut monitor = Monitor::new(true);
+        aux.c_step(&tasks, usize::MAX, 1.0, &state, 0.0, &mut thetas, &mut monitor, 1);
+        let first_ptr = {
+            let snap = aux.refresh_snapshot(&state);
+            assert_eq!(snap.weights[0], aux.deltas[0], "covered layer takes deltas");
+            assert_eq!(snap.weights[1], state.weights[1], "uncovered keeps trained");
+            assert_eq!(snap.w_momenta[0].data[0], 0.0, "momenta not cloned");
+            snap.weights[0].data.as_ptr()
+        };
+        // second refresh reuses the same allocation
+        state.weights[1].data[0] += 1.0;
+        let snap2 = aux.refresh_snapshot(&state);
+        assert_eq!(snap2.weights[0].data.as_ptr(), first_ptr);
+        assert_eq!(snap2.weights[1], state.weights[1]);
+        let fin = aux.into_compressed_state(&state);
+        assert_eq!(fin.weights[0].data.as_ptr(), first_ptr);
+    }
+
+    #[test]
+    fn al_shift_matches_clone_path() {
+        let spec = spec();
+        let tasks = tasks();
+        let state = ParamState::init(&spec, 9);
+        let mut aux = AuxState::new(&spec, &tasks);
+        // seed nonzero multipliers
+        for v in aux.lambdas[0].data.iter_mut() {
+            *v = 0.5;
+        }
+        let mu = 2.0f64;
+        let mut thetas: Vec<Option<Theta>> = vec![None];
+        let mut monitor = Monitor::new(true);
+        aux.c_step(&tasks, 0, mu, &state, mu, &mut thetas, &mut monitor, 1);
+        // reference: clone-and-shift then compress
+        let inv_mu = (1.0 / mu) as f32;
+        let mut w_shift = state.weights[0].clone();
+        for (wi, &li) in w_shift.data.iter_mut().zip(aux.lambdas[0].data.iter()) {
+            *wi -= inv_mu * li;
+        }
+        let view = ViewData::Vector(w_shift.data.clone());
+        let want = tasks.tasks[0].compression.compress(&view, &CContext { mu });
+        assert_eq!(want.decompress(), thetas[0].as_ref().unwrap().decompress());
+    }
+}

@@ -8,9 +8,11 @@
 //! §7 monitoring diagnostics ([`monitor`]).
 
 pub mod algorithm;
+pub mod aux;
 pub mod builder;
 pub mod monitor;
 pub mod schedule;
 
 pub use algorithm::{LcAlgorithm, LcConfig, LcOutcome, StepRecord};
+pub use aux::AuxState;
 pub use schedule::MuSchedule;

@@ -26,7 +26,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::compress::task::TaskSet;
 use crate::compress::Theta;
 use crate::infer::{CompressedLayer, CompressedModel};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 use super::{lookup, ModelSpec, ParamState};
 
@@ -176,6 +176,8 @@ impl CompressedCheckpoint {
     pub fn to_model(&self, eval_batch: usize) -> Result<CompressedModel> {
         ensure!(self.widths.len() >= 2, "checkpoint has no layers");
         let mut layers = Vec::with_capacity(self.n_layers());
+        // one workspace across every layer's plan/materialization
+        let mut ws = Workspace::new();
         for (l, p) in self.layers.iter().enumerate() {
             let (m, n) = (self.widths[l], self.widths[l + 1]);
             layers.push(match p {
@@ -195,7 +197,7 @@ impl CompressedCheckpoint {
                         t.decompressed_len(),
                         m * n
                     );
-                    CompressedLayer::from_theta(t, m, n)
+                    CompressedLayer::from_theta_ws(t, m, n, &mut ws)
                 }
             });
         }
@@ -211,16 +213,20 @@ impl CompressedCheckpoint {
     }
 
     /// Materialize dense per-layer weights (the decompress-everything
-    /// comparison path for `lcc infer`).
+    /// comparison path for `lcc infer`).  Decompresses straight into each
+    /// layer's destination matrix through the in-place workspace API.
     pub fn to_dense_weights(&self) -> Result<Vec<Matrix>> {
         let mut out = Vec::with_capacity(self.n_layers());
+        let mut ws = Workspace::new();
         for (l, p) in self.layers.iter().enumerate() {
             let (m, n) = (self.widths[l], self.widths[l + 1]);
             out.push(match p {
                 LayerPayload::Dense(w) => w.clone(),
                 LayerPayload::Compressed(t) => {
                     ensure!(t.decompressed_len() == m * n, "layer {l}: theta/shape mismatch");
-                    Matrix::from_vec(m, n, t.decompress())
+                    let mut dense = Matrix::zeros(m, n);
+                    t.decompress_into(&mut dense.data, &mut ws);
+                    dense
                 }
             });
         }

@@ -160,8 +160,12 @@ impl EvalDriver {
         let full_chunks = n / b;
         let mut x = Vec::with_capacity(b * dim);
         let mut y: Vec<i32> = Vec::with_capacity(b);
+        // one index buffer reused across every chunk (steady-state eval
+        // loops allocate nothing per chunk)
+        let mut idx: Vec<usize> = Vec::with_capacity(b);
         for c in 0..full_chunks {
-            let idx: Vec<usize> = (c * b..(c + 1) * b).collect();
+            idx.clear();
+            idx.extend(c * b..(c + 1) * b);
             data.gather(&idx, &mut x, &mut y);
             let (l, k) = run(&x, &y)?;
             total_loss += l;
@@ -170,13 +174,15 @@ impl EvalDriver {
         let rem = n - full_chunks * b;
         if rem > 0 {
             // padded final chunk
-            let mut idx: Vec<usize> = (full_chunks * b..n).collect();
+            idx.clear();
+            idx.extend(full_chunks * b..n);
             idx.resize(b, 0); // pad with example 0
             data.gather(&idx, &mut x, &mut y);
             let (l_pad, k_pad) = run(&x, &y)?;
             // one pure-example-0 chunk gives the exact per-example values
-            let idx0 = vec![0usize; b];
-            data.gather(&idx0, &mut x, &mut y);
+            idx.clear();
+            idx.resize(b, 0);
+            data.gather(&idx, &mut x, &mut y);
             let (l0, k0) = run(&x, &y)?;
             let pad = (b - rem) as f64;
             total_loss += l_pad - l0 / b as f64 * pad;

@@ -7,6 +7,9 @@
 
 pub mod kernels;
 pub mod sparse;
+pub mod workspace;
+
+pub use workspace::Workspace;
 
 /// A dense row-major matrix owning its data.
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,144 @@
+//! Reusable scratch-buffer arena for the zero-allocation LC hot paths.
+//!
+//! The steady-state LC loop runs the same gather → compress → decompress →
+//! scatter data motion every step over buffers whose sizes never change
+//! after the first iteration.  A [`Workspace`] turns those per-step `Vec`
+//! allocations into pool reuse: [`Workspace::take`] hands out an owned
+//! buffer (recycled when the pool has one, freshly grown otherwise) and
+//! [`Workspace::put`] returns it.  Because `take` transfers ownership, a
+//! caller can hold several buffers at once — which is exactly what nested
+//! `Additive` decompression needs: each nesting level takes a scratch
+//! buffer for its component's Δ(Θ) and returns it when the component has
+//! been accumulated.
+//!
+//! Contract:
+//! * buffers come back with `len()` exactly as requested and
+//!   **unspecified contents** (no zeroing pass beyond what `Vec::resize`
+//!   does for newly grown tails) — consumers must fully overwrite them;
+//! * after a warm-up iteration in which every concurrently-live buffer
+//!   size has been seen once, `take`/`put` perform no heap allocation
+//!   ([`Workspace::grow_events`] stops advancing — asserted by the
+//!   property suite and measured by `benches/lc_step_bench.rs`);
+//! * the pool is not thread-safe by design: parallel C steps give each
+//!   worker its own `Workspace` (see `lc::aux::AuxState`).
+
+/// A LIFO pool of reusable `Vec<f32>` scratch buffers.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+    grow_events: u64,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Borrow a buffer of exactly `len` elements (contents unspecified).
+    /// Picks the best-fitting pooled buffer (smallest capacity that already
+    /// holds `len`, else the largest one, grown); capacities only ever
+    /// grow, so repeated steady-state cycles stop allocating regardless of
+    /// the order buffers were returned in.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        if self.pool.is_empty() {
+            self.grow_events += 1;
+            return vec![0.0; len];
+        }
+        let mut best: Option<(usize, usize)> = None; // (index, capacity) fitting len
+        let mut largest = (0usize, 0usize);
+        for (i, b) in self.pool.iter().enumerate() {
+            let c = b.capacity();
+            if c >= len && best.map_or(true, |(_, bc)| c < bc) {
+                best = Some((i, c));
+            }
+            if c >= largest.1 {
+                largest = (i, c);
+            }
+        }
+        let idx = best.map_or(largest.0, |(i, _)| i);
+        let mut buf = self.pool.swap_remove(idx);
+        if buf.capacity() < len {
+            self.grow_events += 1;
+        }
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer taken with [`Workspace::take`] to the pool.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        self.pool.push(buf);
+    }
+
+    /// How many times `take` had to touch the heap (pool miss or capacity
+    /// growth).  Flat across iterations ⇔ the caller's steady state is
+    /// allocation-free through this workspace.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_returns_requested_len() {
+        let mut ws = Workspace::new();
+        let b = ws.take(7);
+        assert_eq!(b.len(), 7);
+        ws.put(b);
+        let b2 = ws.take(3);
+        assert_eq!(b2.len(), 3);
+    }
+
+    #[test]
+    fn steady_state_stops_growing() {
+        let mut ws = Workspace::new();
+        // warm-up: two concurrently-live buffers
+        let a = ws.take(100);
+        let b = ws.take(50);
+        ws.put(a);
+        ws.put(b);
+        let warm = ws.grow_events();
+        assert!(warm >= 2);
+        for _ in 0..10 {
+            let a = ws.take(100);
+            let b = ws.take(50);
+            ws.put(a);
+            ws.put(b);
+        }
+        assert_eq!(ws.grow_events(), warm, "steady state must not allocate");
+    }
+
+    #[test]
+    fn growth_is_counted() {
+        let mut ws = Workspace::new();
+        let b = ws.take(10);
+        ws.put(b);
+        let g = ws.grow_events();
+        let b = ws.take(10_000); // forces capacity growth
+        ws.put(b);
+        assert_eq!(ws.grow_events(), g + 1);
+        // shrinking reuses capacity: no growth
+        let b = ws.take(10);
+        ws.put(b);
+        assert_eq!(ws.grow_events(), g + 1);
+    }
+
+    #[test]
+    fn nested_takes_supported() {
+        let mut ws = Workspace::new();
+        let outer = ws.take(4);
+        let inner = ws.take(4);
+        assert_eq!(outer.len(), 4);
+        assert_eq!(inner.len(), 4);
+        ws.put(inner);
+        ws.put(outer);
+        assert_eq!(ws.pooled(), 2);
+    }
+}

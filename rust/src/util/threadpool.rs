@@ -55,23 +55,31 @@ impl Drop for ThreadPool {
 
 /// Run `f(i)` for `i in 0..n` across up to `threads` scoped threads and
 /// collect results in order.  Panics propagate.  Uses `std::thread::scope`,
-/// so `f` may borrow from the caller.
+/// so `f` may borrow from the caller.  `threads <= 1` runs inline with no
+/// spawn or slot bookkeeping (and no allocation beyond the result vector).
 ///
-/// Each call spawns and joins fresh OS threads (~tens of µs); fine for
-/// C-step-sized work items, but a measurable tax on the native backend's
-/// per-train-step GEMMs.  A persistent scoped pool (crossbeam-style) would
-/// remove the churn — tracked as a future optimization since borrowing
-/// jobs can't ride the channel-fed [`ThreadPool`] above ('static bound).
+/// With `threads > 1` each call spawns and joins fresh OS threads (~tens
+/// of µs); fine for C-step-sized work items, but a measurable tax on the
+/// native backend's per-train-step GEMMs.  A persistent scoped pool
+/// (crossbeam-style) would remove the churn — tracked as a future
+/// optimization since borrowing jobs can't ride the channel-fed
+/// [`ThreadPool`] above ('static bound).
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     if n == 0 {
         return Vec::new();
     }
+    if threads == 1 {
+        // inline: no spawn/join churn, no slot bookkeeping, and the
+        // steady-state single-thread path stays allocation-free beyond
+        // the result vector itself
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
     let out_slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
     thread::scope(|scope| {
@@ -87,6 +95,49 @@ where
         }
     });
     drop(out_slots);
+    out.into_iter().map(|v| v.unwrap()).collect()
+}
+
+/// Like [`parallel_map`], but each work item gets exclusive `&mut` access
+/// to its slot of `items` (every index is visited exactly once, so the
+/// per-slot mutexes never contend).  Used for fused in-place passes over
+/// per-layer state — e.g. the LC coordinator's multiplier update, which
+/// mutates each layer's λ while reducing that layer's feasibility — and
+/// for handing each parallel C-step worker its own scratch workspace.
+pub fn parallel_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let item_slots: Vec<Mutex<&mut T>> = items.iter_mut().map(Mutex::new).collect();
+    let out_slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
+    thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let mut item = item_slots[i].lock().unwrap();
+                let v = f(i, &mut **item);
+                drop(item);
+                **out_slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    drop(out_slots);
+    drop(item_slots);
     out.into_iter().map(|v| v.unwrap()).collect()
 }
 
@@ -126,6 +177,24 @@ mod tests {
         let data: Vec<f32> = (0..32).map(|i| i as f32).collect();
         let out = parallel_map(32, 4, |i| data[i] * 2.0);
         assert_eq!(out[31], 62.0);
+    }
+
+    #[test]
+    fn parallel_map_mut_mutates_every_slot_once() {
+        for threads in [1usize, 4] {
+            let mut items: Vec<u64> = (0..33).collect();
+            let out = parallel_map_mut(&mut items, threads, |i, v| {
+                *v += 100;
+                i as u64 + *v
+            });
+            assert_eq!(items, (100..133).collect::<Vec<_>>(), "threads={threads}");
+            assert_eq!(
+                out,
+                (0..33).map(|i| 2 * i + 100).collect::<Vec<u64>>(),
+                "threads={threads}"
+            );
+        }
+        assert_eq!(parallel_map_mut::<u64, u64, _>(&mut [], 4, |_, v| *v), Vec::<u64>::new());
     }
 
     #[test]

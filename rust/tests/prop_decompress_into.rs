@@ -1,0 +1,292 @@
+//! Property suite for the in-place decompression contract: for every
+//! `Theta` variant — including nested `Additive` stacks and degenerate
+//! shapes — `decompress_into` must produce exactly the same bytes as the
+//! allocating `decompress`, fully overwriting its output buffer, and the
+//! task-level `gather_into` / `scatter_from` must match `gather` /
+//! `scatter`.  Also pins the workspace reuse guarantee (no heap growth
+//! after warm-up) and the rank-0 validation rejection.
+
+use lc::compress::lowrank::LowRank;
+use lc::compress::quantize::AdaptiveQuant;
+use lc::compress::task::{TaskSet, TaskSpec};
+use lc::compress::view::View;
+use lc::compress::{distortion, distortion_ws, Compression, Theta, ViewData};
+use lc::tensor::{Matrix, Workspace};
+use lc::util::rng::Xoshiro256;
+
+fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Xoshiro256::new(seed);
+    let mut m = Matrix::zeros(rows, cols);
+    rng.fill_normal(&mut m.data, 0.0, 1.0);
+    m
+}
+
+/// Every Θ shape the framework produces, plus the degenerate corners:
+/// single-entry codebooks, empty supports, zero singular values, empty
+/// views, and `Additive` nests two levels deep.
+fn theta_zoo() -> Vec<(&'static str, Theta)> {
+    vec![
+        (
+            "quantized",
+            Theta::Quantized {
+                codebook: vec![-1.0, -0.25, 0.5, 2.0],
+                assignments: vec![0, 3, 2, 1, 1, 0, 2, 3, 3, 0, 1, 2],
+            },
+        ),
+        (
+            "quantized single-entry codebook",
+            Theta::Quantized { codebook: vec![0.75], assignments: vec![0; 12] },
+        ),
+        (
+            "quantized empty",
+            Theta::Quantized { codebook: vec![1.0, 2.0], assignments: vec![] },
+        ),
+        (
+            "signs binary",
+            Theta::Signs {
+                scale: 0.5,
+                values: vec![1, -1, 1, 1, -1, -1, 1, -1, 1, -1, 1, 1],
+                ternary: false,
+            },
+        ),
+        (
+            "signs ternary with zeros",
+            Theta::Signs {
+                scale: 1.25,
+                values: vec![1, 0, -1, 0, 0, 1, -1, 0, 1, 0, 0, -1],
+                ternary: true,
+            },
+        ),
+        ("signs empty", Theta::Signs { scale: 2.0, values: vec![], ternary: true }),
+        (
+            "sparse",
+            Theta::Sparse { len: 12, indices: vec![1, 5, 9, 11], values: vec![4.0, -3.0, 2.0, 1.0] },
+        ),
+        ("sparse empty support", Theta::Sparse { len: 12, indices: vec![], values: vec![] }),
+        ("sparse zero length", Theta::Sparse { len: 0, indices: vec![], values: vec![] }),
+        (
+            "lowrank rank1",
+            Theta::LowRank {
+                u: rand_matrix(4, 1, 1),
+                s: vec![1.5],
+                v: rand_matrix(3, 1, 2),
+            },
+        ),
+        (
+            "lowrank rank3 with dead singular value",
+            Theta::LowRank {
+                u: rand_matrix(4, 3, 3),
+                s: vec![2.0, 0.0, 0.5],
+                v: rand_matrix(3, 3, 4),
+            },
+        ),
+        (
+            "additive flat",
+            Theta::Additive(vec![
+                Theta::Quantized { codebook: vec![0.25, -0.5], assignments: vec![0, 1, 0, 1, 1, 0, 0, 1, 1, 1, 0, 0] },
+                Theta::Sparse { len: 12, indices: vec![2, 7], values: vec![1.0, -9.0] },
+            ]),
+        ),
+        (
+            "additive nested two levels",
+            Theta::Additive(vec![
+                Theta::Additive(vec![
+                    Theta::Sparse { len: 12, indices: vec![0, 6], values: vec![2.0, 3.0] },
+                    Theta::Signs {
+                        scale: 0.1,
+                        values: vec![1, 1, -1, 0, 0, 1, -1, -1, 0, 1, 0, 1],
+                        ternary: true,
+                    },
+                ]),
+                Theta::Additive(vec![
+                    Theta::Quantized { codebook: vec![0.33], assignments: vec![0; 12] },
+                    Theta::LowRank {
+                        u: rand_matrix(4, 2, 5),
+                        s: vec![1.0, 0.25],
+                        v: rand_matrix(3, 2, 6),
+                    },
+                ]),
+            ]),
+        ),
+    ]
+}
+
+#[test]
+fn decompress_into_matches_decompress_exactly() {
+    let mut ws = Workspace::new();
+    for (name, theta) in theta_zoo() {
+        let want = theta.decompress();
+        // poison the buffer: decompress_into must fully overwrite
+        let mut got = vec![7.5f32; want.len()];
+        theta.decompress_into(&mut got, &mut ws);
+        assert_eq!(got, want, "{name}");
+    }
+}
+
+#[test]
+fn decompress_into_is_allocation_free_once_warm() {
+    let mut ws = Workspace::new();
+    let zoo = theta_zoo();
+    let mut bufs: Vec<Vec<f32>> =
+        zoo.iter().map(|(_, t)| vec![0.0; t.decompressed_len()]).collect();
+    // warm-up pass sizes the pool
+    for ((_, t), buf) in zoo.iter().zip(bufs.iter_mut()) {
+        t.decompress_into(buf, &mut ws);
+    }
+    let warm = ws.grow_events();
+    for _ in 0..5 {
+        for ((_, t), buf) in zoo.iter().zip(bufs.iter_mut()) {
+            t.decompress_into(buf, &mut ws);
+        }
+    }
+    assert_eq!(ws.grow_events(), warm, "steady-state decompression must not touch the heap");
+}
+
+#[test]
+fn lowrank_decompress_into_matches_linalg_reconstruct() {
+    // independent reference: linalg::reconstruct (scale-then-GEMM) is not
+    // built on decompress_into, so this pins the fused triple loop against
+    // genuinely separate code — `decompress_into == decompress` alone would
+    // be tautological now that decompress wraps decompress_into
+    let mut ws = Workspace::new();
+    for &(m, n, r, seed) in &[(4usize, 3usize, 1usize, 20u64), (6, 5, 3, 21), (7, 2, 2, 22)] {
+        let u = rand_matrix(m, r, seed);
+        let v = rand_matrix(n, r, seed + 100);
+        let mut s: Vec<f32> = (0..r).map(|i| 1.5 - 0.5 * i as f32).collect();
+        if r > 1 {
+            s[1] = 0.0; // exercise the zero-singular-value skip
+        }
+        let theta = Theta::LowRank { u: u.clone(), s: s.clone(), v: v.clone() };
+        let mut got = vec![9.0f32; m * n];
+        theta.decompress_into(&mut got, &mut ws);
+        let want = lc::linalg::reconstruct(&u, &s, &v);
+        assert_eq!(got, want.data, "{m}x{n} rank {r}");
+    }
+}
+
+#[test]
+fn distortion_ws_matches_distortion() {
+    let mut rng = Xoshiro256::new(9);
+    let mut ws = Workspace::new();
+    for (name, theta) in theta_zoo() {
+        let w: Vec<f32> = (0..theta.decompressed_len()).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let view = ViewData::Vector(w);
+        let a = distortion(&view, &theta);
+        let b = distortion_ws(&view, &theta, &mut ws);
+        assert_eq!(a.to_bits(), b.to_bits(), "{name}");
+    }
+}
+
+#[test]
+#[should_panic(expected = "length mismatch")]
+fn decompress_into_rejects_wrong_length() {
+    let t = Theta::Signs { scale: 1.0, values: vec![1, -1], ternary: false };
+    let mut out = vec![0.0f32; 3];
+    t.decompress_into(&mut out, &mut Workspace::new());
+}
+
+#[test]
+fn rank_zero_still_rejected_at_validation() {
+    assert!(LowRank { target_rank: 0 }.validate().is_err());
+    let ts = TaskSet::new(vec![TaskSpec {
+        name: "lr0".into(),
+        layers: vec![0],
+        view: View::Matrix,
+        compression: Box::new(LowRank { target_rank: 0 }),
+    }]);
+    assert!(ts.validate(1).is_err());
+}
+
+fn weights() -> Vec<Matrix> {
+    vec![rand_matrix(4, 3, 10), rand_matrix(3, 5, 11), rand_matrix(5, 2, 12)]
+}
+
+fn vector_task(layers: Vec<usize>) -> TaskSpec {
+    TaskSpec {
+        name: format!("v{layers:?}"),
+        layers,
+        view: View::Vector,
+        compression: Box::new(AdaptiveQuant::new(2)),
+    }
+}
+
+#[test]
+fn gather_into_matches_gather() {
+    let w = weights();
+    let cases = vec![
+        vector_task(vec![0]),
+        vector_task(vec![0, 2]),
+        vector_task(vec![2, 0, 1]),
+        TaskSpec {
+            name: "m".into(),
+            layers: vec![1],
+            view: View::Matrix,
+            compression: Box::new(LowRank { target_rank: 1 }),
+        },
+    ];
+    for task in cases {
+        let want = task.gather(&w);
+        let mut got = ViewData::Vector(Vec::new());
+        task.gather_into(&w, &mut got);
+        assert_eq!(got.as_flat(), want.as_flat(), "task {}", task.name);
+        assert_eq!(got.kind(), want.kind(), "task {}", task.name);
+        // refill (steady state) must also match
+        task.gather_into(&w, &mut got);
+        assert_eq!(got.as_flat(), want.as_flat(), "task {} refill", task.name);
+    }
+}
+
+#[test]
+fn scatter_from_matches_scatter() {
+    let w = weights();
+    let mut ws = Workspace::new();
+    for task in [vector_task(vec![0]), vector_task(vec![0, 2]), vector_task(vec![1, 2])] {
+        let view = task.gather(&w);
+        let theta = task
+            .compression
+            .compress(&view, &lc::compress::CContext::default());
+        let zeros = || vec![Matrix::zeros(4, 3), Matrix::zeros(3, 5), Matrix::zeros(5, 2)];
+        let mut want = zeros();
+        task.scatter(&theta.decompress(), &mut want);
+        let mut got = zeros();
+        task.scatter_from(&theta, &mut got, &mut ws);
+        assert_eq!(got, want, "task {}", task.name);
+        // distortion read back from the scattered deltas agrees with the
+        // classic decompress-based distortion up to f64 summation order
+        let a = task.scattered_distortion(&view, &got);
+        let b = distortion(&view, &theta);
+        assert!((a - b).abs() <= 1e-12 * b.max(1.0), "task {}: {a} vs {b}", task.name);
+    }
+    // matrix-view task decompresses straight into the target layer
+    let mt = TaskSpec {
+        name: "m".into(),
+        layers: vec![1],
+        view: View::Matrix,
+        compression: Box::new(LowRank { target_rank: 2 }),
+    };
+    let view = mt.gather(&w);
+    let theta = mt.compression.compress(&view, &lc::compress::CContext::default());
+    let mut want = vec![Matrix::zeros(4, 3), Matrix::zeros(3, 5), Matrix::zeros(5, 2)];
+    mt.scatter(&theta.decompress(), &mut want);
+    let mut got = vec![Matrix::zeros(4, 3), Matrix::zeros(3, 5), Matrix::zeros(5, 2)];
+    mt.scatter_from(&theta, &mut got, &mut ws);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn scatter_from_steady_state_is_allocation_free() {
+    let w = weights();
+    let task = vector_task(vec![0, 2]); // multi-layer: stages through ws
+    let view = task.gather(&w);
+    let theta = task
+        .compression
+        .compress(&view, &lc::compress::CContext::default());
+    let mut deltas = vec![Matrix::zeros(4, 3), Matrix::zeros(3, 5), Matrix::zeros(5, 2)];
+    let mut ws = Workspace::new();
+    task.scatter_from(&theta, &mut deltas, &mut ws);
+    let warm = ws.grow_events();
+    for _ in 0..5 {
+        task.scatter_from(&theta, &mut deltas, &mut ws);
+    }
+    assert_eq!(ws.grow_events(), warm);
+}

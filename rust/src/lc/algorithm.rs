@@ -80,6 +80,9 @@ pub struct StepRecord {
     pub task_distortions: Vec<f64>,
     /// Wall-clock seconds spent in this step's L phase (SGD epochs).
     pub l_secs: f64,
+    /// L-phase training throughput: examples consumed per wall-clock
+    /// second across this step's SGD epochs.
+    pub l_samples_per_sec: f64,
     /// Wall-clock seconds spent in this step's C phase (all task C steps
     /// plus the fused multiplier/feasibility pass).
     pub c_secs: f64,
@@ -140,6 +143,7 @@ impl LcAlgorithm {
             })
             .collect();
         let mu = vec![0.0f32; nl];
+        self.train.validate_dataset(data)?;
         let mut rng = Xoshiro256::new(self.cfg.seed ^ 0xBEEF);
         let (mut x, mut y) = (Vec::new(), Vec::new());
         for e in 0..epochs {
@@ -168,6 +172,8 @@ impl LcAlgorithm {
         let nl = self.spec.n_layers();
         let mu_floor = self.cfg.mu.mu0.max(1e-12);
         let threads = self.cfg.threads.max(1);
+        // labels checked once up front; the per-step path only debug-asserts
+        self.train.validate_dataset(train_data)?;
 
         // Persistent auxiliary state: Δ(Θ), λ, the w − λ/μ shift buffers,
         // per-task gather views, and workspace scratch.  All per-step data
@@ -209,6 +215,7 @@ impl LcAlgorithm {
             }
             let mut first_epoch_loss = 0.0f64;
             let mut last_epoch_loss = 0.0f64;
+            let mut samples = 0u64;
             for e in 0..epochs.max(1) {
                 let mut it = BatchIter::new(train_data, self.train.batch, &mut rng);
                 let mut sum = 0.0f64;
@@ -226,6 +233,7 @@ impl LcAlgorithm {
                     sum += loss as f64;
                     count += 1;
                 }
+                samples += (count * self.train.batch) as u64;
                 let mean = sum / count.max(1) as f64;
                 if e == 0 {
                     first_epoch_loss = mean;
@@ -236,6 +244,7 @@ impl LcAlgorithm {
                 monitor.check_l_step(step, first_epoch_loss, last_epoch_loss);
             }
             let l_secs = t_l.elapsed().as_secs_f64();
+            let l_samples_per_sec = samples as f64 / l_secs.max(1e-9);
 
             // C step on w − λ/μ, then the fused multiplier/feasibility pass
             let t_c = Instant::now();
@@ -261,7 +270,8 @@ impl LcAlgorithm {
 
             if !self.cfg.quiet {
                 crate::info!(
-                    "LC step {step:3} mu={mu:.3e} lr={lr:.4} L:{first_epoch_loss:.4}->{last_epoch_loss:.4} feas={feasibility:.3e} lt={l_secs:.2}s ct={c_secs:.3}s{}",
+                    "LC step {step:3} mu={mu:.3e} lr={lr:.4} L:{first_epoch_loss:.4}->{last_epoch_loss:.4} feas={feasibility:.3e} lt={l_secs:.2}s thr={:.1}k/s ct={c_secs:.3}s{}",
+                    l_samples_per_sec / 1e3,
                     match &test_eval {
                         Some(e) => format!(" test_err={:.2}%", e.error * 100.0),
                         None => String::new(),
@@ -278,6 +288,7 @@ impl LcAlgorithm {
                 feasibility,
                 task_distortions: dists,
                 l_secs,
+                l_samples_per_sec,
                 c_secs,
                 test_eval,
             });

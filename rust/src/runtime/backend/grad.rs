@@ -1,0 +1,176 @@
+//! Persistent gradient workspace of the data-parallel L step.
+//!
+//! The native backend's train step used to allocate fresh `dz`/`dw`/`db`
+//! buffers (plus every retained activation) on **every** SGD step.  A
+//! [`GradWorkspace`] owns all of that state across steps, sharded into
+//! per-microbatch [`ShardGrad`]s so the forward/backward stages can run
+//! data-parallel with no shared mutable state:
+//!
+//! * each shard covers a fixed row range `[lo, hi)` of the minibatch and
+//!   owns its activations, backprop ping-pong buffers (`dz`/`dh`), and a
+//!   full per-layer gradient shard (`dw`/`db`) plus a local CE partial;
+//! * the shard layout is a function of the **batch size only**
+//!   ([`MICROBATCH`] rows per shard) — never of the thread count — so the
+//!   per-shard arithmetic and the fixed-shape tree reduce
+//!   ([`crate::util::threadpool::tree_reduce_mut`]) produce bit-identical
+//!   parameters for any `threads` (pinned by `benches/l_step_bench.rs`);
+//! * buffers are recycled through a [`Workspace`] arena when the driver
+//!   switches model or batch shape, and [`GradWorkspace::prepare`] is a
+//!   no-op on a shape match, so the steady-state L step performs zero
+//!   heap allocations (measured by the counting allocator in
+//!   `benches/l_step_bench.rs`).
+//!
+//! [`crate::runtime::trainer::TrainDriver`] owns one `GradWorkspace` for
+//! its lifetime and threads it through [`super::Backend::train_step_ws`];
+//! backends that manage their own device buffers (PJRT) simply ignore it.
+
+use crate::models::ModelSpec;
+use crate::tensor::{Matrix, Workspace};
+
+/// Rows per gradient shard.  Matches the GEMM row-block granularity in
+/// [`crate::tensor`]; with the registry batch of 128 this yields 4 shards.
+pub const MICROBATCH: usize = 32;
+
+/// One microbatch's private slice of the L step: activations, backprop
+/// scratch, and a full gradient accumulator.
+pub(crate) struct ShardGrad {
+    /// Covered row range `[lo, hi)` of the minibatch.
+    pub(crate) lo: usize,
+    pub(crate) hi: usize,
+    /// Retained activations: `acts[0]` = input rows, `acts[l+1]` = layer
+    /// `l` output (`hi - lo` rows each).
+    pub(crate) acts: Vec<Matrix>,
+    /// Backprop ping-pong buffers, capacity `rows × max(widths[1..])`.
+    pub(crate) dz: Matrix,
+    pub(crate) dh: Matrix,
+    /// Per-layer weight-gradient shard (summed into shard 0 by the tree
+    /// reduce).
+    pub(crate) dw: Vec<Matrix>,
+    /// Per-layer bias-gradient shard.
+    pub(crate) db: Vec<Vec<f32>>,
+    /// Shard-local summed CE (f64 partial; reduced with the gradients).
+    pub(crate) ce_sum: f64,
+}
+
+impl ShardGrad {
+    fn recycle(self, pool: &mut Workspace) {
+        for m in self.acts {
+            pool.put(m.data);
+        }
+        pool.put(self.dz.data);
+        pool.put(self.dh.data);
+        for m in self.dw {
+            pool.put(m.data);
+        }
+        for b in self.db {
+            pool.put(b);
+        }
+    }
+}
+
+fn take_matrix(pool: &mut Workspace, rows: usize, cols: usize) -> Matrix {
+    Matrix { rows, cols, data: pool.take(rows * cols) }
+}
+
+/// Persistent, shard-structured scratch state for the native L step.
+#[derive(Default)]
+pub struct GradWorkspace {
+    pub(crate) shards: Vec<ShardGrad>,
+    /// `(batch, widths)` the shards are currently shaped for.
+    shape: Option<(usize, Vec<usize>)>,
+    /// Arena the buffers are recycled through on shape changes.
+    pool: Workspace,
+}
+
+impl GradWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of gradient shards currently laid out.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// (Re)shape the shard buffers for `spec` at batch size `b`.  No-op —
+    /// and allocation-free — when the shape already matches; otherwise old
+    /// buffers are recycled through the arena and new ones taken from it.
+    pub(crate) fn prepare(&mut self, spec: &ModelSpec, b: usize) {
+        if self.shape.as_ref().is_some_and(|(pb, pw)| *pb == b && *pw == spec.widths) {
+            return;
+        }
+        let pool = &mut self.pool;
+        for sh in self.shards.drain(..) {
+            sh.recycle(pool);
+        }
+        let nl = spec.n_layers();
+        let max_w = spec.widths[1..].iter().copied().max().unwrap_or(1);
+        let n_shards = (b + MICROBATCH - 1) / MICROBATCH;
+        for s in 0..n_shards.max(1) {
+            let lo = (s * MICROBATCH).min(b);
+            let hi = ((s + 1) * MICROBATCH).min(b);
+            let rows = hi - lo;
+            self.shards.push(ShardGrad {
+                lo,
+                hi,
+                acts: (0..=nl).map(|l| take_matrix(pool, rows, spec.widths[l])).collect(),
+                dz: take_matrix(pool, rows, max_w),
+                dh: take_matrix(pool, rows, max_w),
+                dw: (0..nl)
+                    .map(|l| {
+                        let (m, n) = spec.layer_shape(l);
+                        take_matrix(pool, m, n)
+                    })
+                    .collect(),
+                db: (0..nl).map(|l| pool.take(spec.layer_shape(l).1)).collect(),
+                ce_sum: 0.0,
+            });
+        }
+        self.shape = Some((b, spec.widths.clone()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(widths: &[usize], batch: usize) -> ModelSpec {
+        ModelSpec { name: "gw".into(), widths: widths.to_vec(), batch, eval_batch: batch }
+    }
+
+    #[test]
+    fn shard_layout_is_a_function_of_batch_only() {
+        let mut ws = GradWorkspace::new();
+        ws.prepare(&spec(&[6, 5, 4], 128), 128);
+        assert_eq!(ws.shard_count(), 4);
+        let ranges: Vec<(usize, usize)> = ws.shards.iter().map(|s| (s.lo, s.hi)).collect();
+        assert_eq!(ranges, vec![(0, 32), (32, 64), (64, 96), (96, 128)]);
+        // ragged tail
+        ws.prepare(&spec(&[6, 5, 4], 70), 70);
+        let ranges: Vec<(usize, usize)> = ws.shards.iter().map(|s| (s.lo, s.hi)).collect();
+        assert_eq!(ranges, vec![(0, 32), (32, 64), (64, 70)]);
+        // batch smaller than one microbatch: one shard
+        ws.prepare(&spec(&[6, 5, 4], 8), 8);
+        assert_eq!(ws.shard_count(), 1);
+    }
+
+    #[test]
+    fn prepare_is_idempotent_and_recycles_on_shape_change() {
+        let mut ws = GradWorkspace::new();
+        let s = spec(&[8, 6, 5], 64);
+        ws.prepare(&s, 64);
+        let grow = ws.pool.grow_events();
+        let ptr = ws.shards[0].dw[0].data.as_ptr();
+        ws.prepare(&s, 64); // same shape: no-op
+        assert_eq!(ws.shards[0].dw[0].data.as_ptr(), ptr);
+        assert_eq!(ws.pool.grow_events(), grow);
+        // shape change recycles through the arena; flipping back to the
+        // original shape must not grow the pool again
+        ws.prepare(&spec(&[8, 6, 5], 32), 32);
+        ws.prepare(&s, 64);
+        assert_eq!(ws.shard_count(), 2);
+        for sh in &ws.shards {
+            assert_eq!(sh.acts[0].data.len(), (sh.hi - sh.lo) * 8);
+        }
+    }
+}

@@ -16,10 +16,13 @@
 //! created, and falls back to native otherwise.  The typed drivers in
 //! [`crate::runtime::trainer`] are thin dispatchers over this trait.
 
+pub mod grad;
 pub mod native;
 pub mod pjrt;
 
 use anyhow::Result;
+
+pub use grad::GradWorkspace;
 
 use crate::infer::CompressedModel;
 use crate::models::{ModelSpec, ParamState};
@@ -91,6 +94,29 @@ pub trait Backend {
         mu: &[f32],
         lr: f32,
     ) -> Result<f32>;
+
+    /// [`Backend::train_step`] with a caller-owned persistent
+    /// [`GradWorkspace`] threaded through — the hot-path entry point the
+    /// drivers use.  The native backend shards the minibatch across the
+    /// workspace and reuses its buffers across steps (zero steady-state
+    /// allocations); backends that manage their own device buffers (PJRT)
+    /// ignore the workspace and fall through to [`Backend::train_step`].
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_ws(
+        &mut self,
+        spec: &ModelSpec,
+        state: &mut ParamState,
+        x: &[f32],
+        y: &[i32],
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+        ws: &mut GradWorkspace,
+    ) -> Result<f32> {
+        let _ = ws;
+        self.train_step(spec, state, x, y, deltas, lambdas, mu, lr)
+    }
 
     /// Sum of per-example CE loss and count of correct predictions over one
     /// fixed-size chunk (`python/compile/model.py::eval_step`).

@@ -18,15 +18,27 @@
 //!   center index, over fixed-size padded buffers mirroring the lowered
 //!   Pallas kernel's block structure.
 //!
-//! All GEMMs go through the tiled, threadpool-parallel kernels in
-//! [`crate::tensor`] ([`Matrix::matmul_par`] / [`Matrix::matmul_nt_par`]).
+//! The train step is **data-parallel and workspace-backed**: the minibatch
+//! is sharded into fixed [`super::grad::MICROBATCH`]-row microbatches
+//! (layout a function of the batch size only), each shard runs forward +
+//! local backward on its own persistent buffers ([`shard_forward_backward`]),
+//! the gradient shards are tree-reduced in a fixed pair order
+//! ([`crate::util::threadpool::tree_reduce_mut`]), and one fused pass per
+//! layer adds the penalty gradient, accumulates the penalty value, and
+//! applies the Nesterov update ([`fused_layer_update`]).  Consequences:
+//! parameters after a step are **bit-identical for every thread count**,
+//! and with a persistent [`GradWorkspace`] the steady-state step performs
+//! **zero heap allocations** at `threads = 1` (both measured by
+//! `benches/l_step_bench.rs`).  The eval pass still uses the tiled
+//! threadpool-parallel GEMMs in [`crate::tensor`] ([`Matrix::matmul_par`]).
 
 use anyhow::{ensure, Result};
 
+use super::grad::{GradWorkspace, ShardGrad};
 use super::{Backend, QuantAssignRaw};
 use crate::models::{ModelSpec, ParamState};
 use crate::tensor::Matrix;
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{parallel_map, parallel_map_mut, tree_reduce_mut};
 
 /// SGD momentum, mirroring `MOMENTUM` in `python/compile/model.py`.
 pub const MOMENTUM: f32 = 0.9;
@@ -34,6 +46,14 @@ pub const MOMENTUM: f32 = 0.9;
 /// Padded block granularity of the quant-assign kernel, mirroring the
 /// `block 4096` records the AOT path lowers (`python/compile/aot.py`).
 pub const QUANT_BLOCK: usize = 4096;
+
+/// Fixed work-item granularity of [`NativeBackend::quant_assign`].  The
+/// chunk layout — and therefore the f64 accumulation order of the
+/// distortion and per-center sums — depends only on the weight count,
+/// never on the thread count, so quantization C steps are bit-identical
+/// for any `threads` (extending the L step's determinism guarantee to the
+/// whole LC loop).
+const ASSIGN_CHUNK: usize = 16_384;
 
 /// Pure-Rust CPU backend; `threads` bounds the GEMM/assign parallelism.
 pub struct NativeBackend {
@@ -132,6 +152,148 @@ fn logsumexp_row(row: &[f32]) -> f32 {
     m + s.ln()
 }
 
+/// Stage 1+2 of the L step for one gradient shard: forward through every
+/// layer over the shard's row range, softmax/CE + `dZ_L`, then local
+/// backprop producing the shard's raw data gradients `dw`/`db` and CE
+/// partial.  Reads only shared immutable state (`state`, `x`, `y`); writes
+/// only shard-owned buffers — shards run data-parallel with no locks.  The
+/// penalty gradient is *not* added here: it is layer-global and fused into
+/// the update pass exactly once.
+fn shard_forward_backward(
+    sh: &mut ShardGrad,
+    spec: &ModelSpec,
+    state: &ParamState,
+    x: &[f32],
+    y: &[i32],
+    b: usize,
+) {
+    let ShardGrad { lo, hi, acts, dz, dh, dw, db, ce_sum } = sh;
+    let (lo, hi) = (*lo, *hi);
+    let nl = spec.n_layers();
+    let rows = hi - lo;
+    let dim = spec.widths[0];
+
+    // ---- forward (retaining activations) -------------------------------
+    acts[0].reset(rows, dim);
+    acts[0].data.copy_from_slice(&x[lo * dim..hi * dim]);
+    for l in 0..nl {
+        let relu = l < nl - 1;
+        let bias = &state.biases[l];
+        let (prev, rest) = acts.split_at_mut(l + 1);
+        let z = &mut rest[0];
+        prev[l].matmul_into(&state.weights[l], z);
+        for r in 0..rows {
+            let row = z.row_mut(r);
+            for (v, &bi) in row.iter_mut().zip(bias.iter()) {
+                *v += bi;
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+
+    // ---- dZ_L = (softmax(logits) − onehot(y)) / B, CE partial ----------
+    let classes = spec.widths[nl];
+    dz.reset(rows, classes);
+    let mut ce = 0.0f64;
+    for r in 0..rows {
+        let lrow = acts[nl].row(r);
+        let lz = logsumexp_row(lrow);
+        let yi = y[lo + r] as usize;
+        ce += (lz - lrow[yi]) as f64;
+        for (j, (d, &v)) in dz.row_mut(r).iter_mut().zip(lrow.iter()).enumerate() {
+            let p = (v - lz).exp();
+            let one = if yi == j { 1.0 } else { 0.0 };
+            *d = (p - one) / b as f32;
+        }
+    }
+    *ce_sum = ce;
+
+    // ---- local backprop ------------------------------------------------
+    for l in (0..nl).rev() {
+        acts[l].matmul_tn_into(dz, &mut dw[l]);
+        let dbl = &mut db[l];
+        dbl.clear();
+        dbl.resize(dz.cols, 0.0);
+        for r in 0..rows {
+            for (s, &v) in dbl.iter_mut().zip(dz.row(r).iter()) {
+                *s += v;
+            }
+        }
+        if l > 0 {
+            // hidden ReLU mask is `h > 0` (equivalent to pre-act > 0,
+            // matching the Pallas VJP's `y > 0` mask)
+            dz.matmul_nt_into(&state.weights[l], dh);
+            for (g, &h) in dh.data.iter_mut().zip(acts[l].data.iter()) {
+                if h <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+            std::mem::swap(dz, dh);
+        }
+    }
+}
+
+/// Stage 4 of the L step for one layer: a **single** traversal of
+/// `(w, Δ, λ, dw, v)` that accumulates the penalty value from the
+/// pre-update weights, adds the penalty gradient `μ(w−Δ) − λ` to the raw
+/// data gradient, and applies the Nesterov update — one pass where the
+/// monolithic step did three (penalty-value pass, gradient fuse, update).
+/// Layers with `μ = 0` and `λ ≡ 0` (uncovered layers, reference training)
+/// skip the penalty math entirely, the L-step analogue of the C step's
+/// `mu_for_lambda == 0` shortcut.  Returns the layer's penalty value.
+#[allow(clippy::too_many_arguments)]
+fn fused_layer_update(
+    w: &mut Matrix,
+    v: &mut Matrix,
+    bias: &mut [f32],
+    bv: &mut [f32],
+    dw: &Matrix,
+    db: &[f32],
+    delta: &Matrix,
+    lambda: &Matrix,
+    mu: f32,
+    lr: f32,
+) -> f64 {
+    let penalized = mu != 0.0 || lambda.data.iter().any(|&li| li != 0.0);
+    let mut penalty = 0.0f64;
+    if penalized {
+        let mut quad = 0.0f64;
+        let mut lin = 0.0f64;
+        for (((wi, vi), &graw), (&di, &li)) in w
+            .data
+            .iter_mut()
+            .zip(v.data.iter_mut())
+            .zip(dw.data.iter())
+            .zip(delta.data.iter().zip(lambda.data.iter()))
+        {
+            let diff = *wi - di;
+            let d64 = diff as f64;
+            quad += d64 * d64;
+            lin += li as f64 * d64;
+            // same association as the monolithic path: g + (μ·diff − λ)
+            let g = graw + (mu * diff - li);
+            let v2 = MOMENTUM * *vi + g;
+            *wi -= lr * (g + MOMENTUM * v2);
+            *vi = v2;
+        }
+        penalty = 0.5 * mu as f64 * quad - lin;
+    } else {
+        for ((wi, vi), &g) in w.data.iter_mut().zip(v.data.iter_mut()).zip(dw.data.iter()) {
+            let v2 = MOMENTUM * *vi + g;
+            *wi -= lr * (g + MOMENTUM * v2);
+            *vi = v2;
+        }
+    }
+    for ((bi, vi), &g) in bias.iter_mut().zip(bv.iter_mut()).zip(db.iter()) {
+        let v2 = MOMENTUM * *vi + g;
+        *bi -= lr * (g + MOMENTUM * v2);
+        *vi = v2;
+    }
+    penalty
+}
+
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
@@ -157,106 +319,148 @@ impl Backend for NativeBackend {
         mu: &[f32],
         lr: f32,
     ) -> Result<f32> {
+        // stateless compatibility entry: one throwaway workspace per call.
+        // Steady-state callers (the drivers) hold a persistent workspace
+        // and go through `train_step_ws` directly.
+        let mut ws = GradWorkspace::new();
+        self.train_step_ws(spec, state, x, y, deltas, lambdas, mu, lr, &mut ws)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_ws(
+        &mut self,
+        spec: &ModelSpec,
+        state: &mut ParamState,
+        x: &[f32],
+        y: &[i32],
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+        ws: &mut GradWorkspace,
+    ) -> Result<f32> {
         let nl = spec.n_layers();
         let b = y.len();
+        ensure!(b > 0, "empty batch");
         ensure!(
             deltas.len() == nl && lambdas.len() == nl && mu.len() == nl,
             "penalty input count mismatch"
         );
-        let classes = *spec.widths.last().unwrap();
-        for &yi in y {
-            ensure!((0..classes as i32).contains(&yi), "label {yi} out of range [0,{classes})");
-        }
-
-        // ---- forward + loss ------------------------------------------------
-        let acts = self.forward(spec, state, x, b)?;
-        let logits = &acts[nl];
-        let mut logz = vec![0.0f32; b];
-        let mut ce_sum = 0.0f64;
-        for i in 0..b {
-            let row = logits.row(i);
-            let lz = logsumexp_row(row);
-            logz[i] = lz;
-            ce_sum += (lz - row[y[i] as usize]) as f64;
-        }
-        let ce = ce_sum / b as f64;
-        let mut penalty = 0.0f64;
+        ensure!(
+            x.len() == b * spec.widths[0],
+            "x has {} elements for batch {b} x dim {}",
+            x.len(),
+            spec.widths[0]
+        );
+        ensure!(state.weights.len() == nl, "state/spec layer count mismatch");
         for l in 0..nl {
-            let (w, d, lam) = (&state.weights[l], &deltas[l], &lambdas[l]);
-            ensure!((d.rows, d.cols) == (w.rows, w.cols), "delta {l} shape mismatch");
-            ensure!((lam.rows, lam.cols) == (w.rows, w.cols), "lambda {l} shape mismatch");
-            let mut quad = 0.0f64;
-            let mut lin = 0.0f64;
-            for ((&wi, &di), &li) in w.data.iter().zip(d.data.iter()).zip(lam.data.iter()) {
-                let diff = (wi - di) as f64;
-                quad += diff * diff;
-                lin += li as f64 * diff;
-            }
-            penalty += 0.5 * mu[l] as f64 * quad - lin;
+            let (rows, cols) = spec.layer_shape(l);
+            let w = &state.weights[l];
+            ensure!(
+                (w.rows, w.cols) == (rows, cols),
+                "layer {l}: weight shape {}x{} != spec {rows}x{cols}",
+                w.rows,
+                w.cols
+            );
+            ensure!(state.biases[l].len() == cols, "layer {l}: bias length mismatch");
+            ensure!(
+                (deltas[l].rows, deltas[l].cols) == (rows, cols),
+                "delta {l} shape mismatch"
+            );
+            ensure!(
+                (lambdas[l].rows, lambdas[l].cols) == (rows, cols),
+                "lambda {l} shape mismatch"
+            );
         }
-        let loss = (ce + penalty) as f32;
+        let classes = spec.widths[nl];
+        // labels are validated once per dataset by
+        // `TrainDriver::validate_dataset`, not rescanned every step
+        debug_assert!(
+            y.iter().all(|&yi| (0..classes as i32).contains(&yi)),
+            "label out of range [0,{classes})"
+        );
 
-        // ---- backward ------------------------------------------------------
-        // dZ_L = (softmax(logits) − onehot(y)) / B
-        let mut dz = Matrix::zeros(b, classes);
-        for i in 0..b {
-            let lrow = logits.row(i);
-            let drow = dz.row_mut(i);
-            for j in 0..classes {
-                let p = (lrow[j] - logz[i]).exp();
-                let one = if y[i] as usize == j { 1.0 } else { 0.0 };
-                drow[j] = (p - one) / b as f32;
+        let threads = self.threads;
+        ws.prepare(spec, b);
+
+        // ---- stages 1+2: sharded forward + local backward ------------------
+        // Shard layout is a function of the batch size only, so per-shard
+        // arithmetic is identical for every thread count.
+        let state_ro: &ParamState = state;
+        parallel_map_mut(&mut ws.shards, threads, |_, sh| {
+            shard_forward_backward(sh, spec, state_ro, x, y, b);
+        });
+
+        // ---- stage 3: deterministic tree reduce of the gradient shards -----
+        // Fixed pair order (stride doubling over shard indices): bit-identical
+        // totals in shards[0] regardless of `threads`.
+        tree_reduce_mut(&mut ws.shards, threads, |dst, src| {
+            for (d, s) in dst.dw.iter_mut().zip(src.dw.iter()) {
+                for (a, &v) in d.data.iter_mut().zip(s.data.iter()) {
+                    *a += v;
+                }
             }
-        }
+            for (d, s) in dst.db.iter_mut().zip(src.db.iter()) {
+                for (a, &v) in d.iter_mut().zip(s.iter()) {
+                    *a += v;
+                }
+            }
+            dst.ce_sum += src.ce_sum;
+        });
+        let shard0 = &ws.shards[0];
+        let ce = shard0.ce_sum / b as f64;
 
-        for l in (0..nl).rev() {
-            // gradients for layer l (computed before any parameter update)
-            let mut dw = acts[l].matmul_tn_par(&dz, self.threads);
-            let (d, lam) = (&deltas[l], &lambdas[l]);
-            for ((g, (&wi, &di)), &li) in dw
-                .data
+        // ---- stage 4: fused penalty + Nesterov update, parallel over layers
+        let penalty: f64 = if threads <= 1 || nl <= 1 {
+            // serial accumulate: zero allocations in steady state
+            let mut p = 0.0f64;
+            for l in 0..nl {
+                p += fused_layer_update(
+                    &mut state.weights[l],
+                    &mut state.w_momenta[l],
+                    &mut state.biases[l],
+                    &mut state.b_momenta[l],
+                    &shard0.dw[l],
+                    &shard0.db[l],
+                    &deltas[l],
+                    &lambdas[l],
+                    mu[l],
+                    lr,
+                );
+            }
+            p
+        } else {
+            struct LayerMut<'a> {
+                w: &'a mut Matrix,
+                v: &'a mut Matrix,
+                bias: &'a mut Vec<f32>,
+                bv: &'a mut Vec<f32>,
+            }
+            let mut layers: Vec<LayerMut<'_>> = state
+                .weights
                 .iter_mut()
-                .zip(state.weights[l].data.iter().zip(d.data.iter()))
-                .zip(lam.data.iter())
-            {
-                *g += mu[l] * (wi - di) - li;
-            }
-            let cols = dw.cols;
-            let mut db = vec![0.0f32; cols];
-            for r in 0..b {
-                for (s, &v) in db.iter_mut().zip(dz.row(r).iter()) {
-                    *s += v;
-                }
-            }
-
-            // propagate through the layer input before updating W_l; the
-            // hidden ReLU mask is `h > 0` (equivalent to pre-act > 0, and
-            // matching the Pallas VJP's `y > 0` mask)
-            if l > 0 {
-                let mut dh = dz.matmul_nt_par(&state.weights[l], self.threads);
-                for (g, &h) in dh.data.iter_mut().zip(acts[l].data.iter()) {
-                    if h <= 0.0 {
-                        *g = 0.0;
-                    }
-                }
-                dz = dh;
-            }
-
-            // Nesterov update: v ← m·v + g; p ← p − lr·(g + m·v)
-            let (w, v) = (&mut state.weights[l], &mut state.w_momenta[l]);
-            for ((wi, vi), &g) in w.data.iter_mut().zip(v.data.iter_mut()).zip(dw.data.iter()) {
-                let v2 = MOMENTUM * *vi + g;
-                *wi -= lr * (g + MOMENTUM * v2);
-                *vi = v2;
-            }
-            let (bias, bv) = (&mut state.biases[l], &mut state.b_momenta[l]);
-            for ((bi, vi), &g) in bias.iter_mut().zip(bv.iter_mut()).zip(db.iter()) {
-                let v2 = MOMENTUM * *vi + g;
-                *bi -= lr * (g + MOMENTUM * v2);
-                *vi = v2;
-            }
-        }
-        Ok(loss)
+                .zip(state.w_momenta.iter_mut())
+                .zip(state.biases.iter_mut().zip(state.b_momenta.iter_mut()))
+                .map(|((w, v), (bias, bv))| LayerMut { w, v, bias, bv })
+                .collect();
+            parallel_map_mut(&mut layers, threads, |l, lm| {
+                fused_layer_update(
+                    lm.w,
+                    lm.v,
+                    lm.bias,
+                    lm.bv,
+                    &shard0.dw[l],
+                    &shard0.db[l],
+                    &deltas[l],
+                    &lambdas[l],
+                    mu[l],
+                    lr,
+                )
+            })
+            .into_iter()
+            .sum()
+        };
+        Ok((ce + penalty) as f32)
     }
 
     fn eval_chunk(
@@ -300,7 +504,9 @@ impl Backend for NativeBackend {
         let k = codebook.len();
         ensure!(k >= 1, "empty codebook");
         let n = w.len();
-        let chunk = ((n + self.threads - 1) / self.threads).max(1);
+        // fixed chunk size (not n/threads): the accumulation grouping is
+        // thread-count independent, see ASSIGN_CHUNK
+        let chunk = ASSIGN_CHUNK;
         let n_chunks = (n + chunk - 1) / chunk;
         let parts = parallel_map(n_chunks.max(1), self.threads, |ci| {
             let lo = ci * chunk;

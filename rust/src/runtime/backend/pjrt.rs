@@ -145,6 +145,12 @@ impl Backend for PjrtBackend {
         Ok(loss)
     }
 
+    // `train_step_ws` deliberately stays on the trait default: the AOT
+    // artifact path owns its buffers device-side (XLA manages temp
+    // allocation inside the compiled executable), so the host gradient
+    // workspace carries nothing here and the default forward-to-train_step
+    // is exactly right.
+
     fn eval_chunk(
         &mut self,
         spec: &ModelSpec,

@@ -20,7 +20,7 @@ use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-pub use backend::{Backend, BackendChoice};
+pub use backend::{Backend, BackendChoice, GradWorkspace};
 pub use manifest::Manifest;
 
 /// Shared backend handle the drivers clone.  `Rc<RefCell<...>>` because

@@ -5,9 +5,12 @@
 //! batching/padding conventions live here, the math lives in the backend
 //! (`backend/native.rs` pure-Rust, `backend/pjrt.rs` AOT artifacts).
 
+use std::cell::RefCell;
+
 use anyhow::{ensure, Result};
 
 use super::backend::native::NativeBackend;
+use super::backend::GradWorkspace;
 use super::{Backend, BackendHandle, Runtime};
 use crate::data::Dataset;
 use crate::infer::CompressedModel;
@@ -21,18 +24,30 @@ fn native_handle(threads: usize) -> BackendHandle {
 }
 
 /// Driver for one SGD step on the penalized L-step objective.
+///
+/// Owns the persistent [`GradWorkspace`] for its whole lifetime: every
+/// step reuses the sharded activations, backprop scratch, and gradient
+/// shards, so the steady-state native L step allocates nothing (a
+/// `RefCell` because the LC coordinator drives steps through `&self`).
 pub struct TrainDriver {
     backend: BackendHandle,
     pub spec: ModelSpec,
     pub widths: Vec<usize>,
     pub batch: usize,
+    ws: RefCell<GradWorkspace>,
 }
 
 impl TrainDriver {
     pub fn new(rt: &mut Runtime, model: &str) -> Result<TrainDriver> {
         let backend = rt.handle();
         let spec = backend.borrow_mut().model_spec(model)?;
-        Ok(TrainDriver { widths: spec.widths.clone(), batch: spec.batch, spec, backend })
+        Ok(TrainDriver {
+            widths: spec.widths.clone(),
+            batch: spec.batch,
+            spec,
+            backend,
+            ws: RefCell::new(GradWorkspace::new()),
+        })
     }
 
     /// Native-backend driver for an arbitrary (possibly unregistered) model
@@ -44,11 +59,34 @@ impl TrainDriver {
             widths: spec.widths.clone(),
             batch: spec.batch,
             spec: spec.clone(),
+            ws: RefCell::new(GradWorkspace::new()),
         }
     }
 
     pub fn n_layers(&self) -> usize {
         self.widths.len() - 1
+    }
+
+    /// Validate a whole dataset against this driver once, up front: input
+    /// dimension and label range.  The per-step label rescan the backend
+    /// used to do (O(batch) per call, every step of every epoch) is now a
+    /// debug assertion — callers feeding untrusted data run this once
+    /// instead.
+    pub fn validate_dataset(&self, data: &Dataset) -> Result<()> {
+        ensure!(
+            data.dim == self.widths[0],
+            "dataset dim {} != model input dim {}",
+            data.dim,
+            self.widths[0]
+        );
+        let classes = *self.widths.last().unwrap() as i32;
+        for (i, &yi) in data.labels.iter().enumerate() {
+            ensure!(
+                (0..classes).contains(&yi),
+                "label {yi} at dataset index {i} out of range [0,{classes})"
+            );
+        }
+        Ok(())
     }
 
     /// Execute one train step, updating `state` in place.  `deltas` and
@@ -67,12 +105,27 @@ impl TrainDriver {
         lr: f32,
     ) -> Result<f32> {
         let nl = self.n_layers();
-        ensure!(deltas.len() == nl && lambdas.len() == nl && mu.len() == nl);
+        ensure!(
+            deltas.len() == nl && lambdas.len() == nl && mu.len() == nl,
+            "per-layer penalty inputs mismatch: {} deltas / {} lambdas / {} mu entries for \
+             {nl} layers",
+            deltas.len(),
+            lambdas.len(),
+            mu.len()
+        );
         ensure!(x.len() == self.batch * self.widths[0], "bad x batch size");
         ensure!(y.len() == self.batch, "bad y batch size");
-        self.backend
-            .borrow_mut()
-            .train_step(&self.spec, state, x, y, deltas, lambdas, mu, lr)
+        self.backend.borrow_mut().train_step_ws(
+            &self.spec,
+            state,
+            x,
+            y,
+            deltas,
+            lambdas,
+            mu,
+            lr,
+            &mut self.ws.borrow_mut(),
+        )
     }
 }
 

@@ -216,6 +216,86 @@ impl Matrix {
         Matrix::from_vec(m, n, data)
     }
 
+    /// Reshape in place to `rows × cols`, reusing the existing allocation
+    /// whenever capacity suffices.  Contents are **unspecified** after the
+    /// call (only newly grown tails are zeroed, per `Vec::resize`) —
+    /// callers must fully overwrite, mirroring the [`Workspace`] contract.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// `self * other` written into `out` (fully overwritten; same
+    /// k-ascending accumulation order as [`Matrix::matmul`], so results are
+    /// bit-identical to it).  Serial: the sharded L step parallelizes over
+    /// microbatches above this kernel, not inside it.
+    pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.rows, "matmul_into shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        out.reset(m, n);
+        out.data.fill(0.0);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[kk * n..(kk + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+
+    /// `selfᵀ * other` written into `out` (`self`: r×m, `other`: r×n, out
+    /// m×n, fully overwritten).  Accumulates the shared dimension r in
+    /// ascending order per output element — deterministic and identical to
+    /// [`Matrix::matmul_tn_par`]'s per-element order.  Used for the
+    /// per-shard weight gradient `dW = Hᵀ · dZ`.
+    pub fn matmul_tn_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.rows, other.rows, "matmul_tn_into shape mismatch");
+        let (r_dim, m, n) = (self.rows, self.cols, other.cols);
+        out.reset(m, n);
+        out.data.fill(0.0);
+        for r in 0..r_dim {
+            let a_row = &self.data[r * m..(r + 1) * m];
+            let b_row = &other.data[r * n..(r + 1) * n];
+            for (i, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let o_row = &mut out.data[i * n..(i + 1) * n];
+                for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+    }
+
+    /// `self * otherᵀ` written into `out` (both operands row-major; every
+    /// inner product streams two contiguous rows, k-ascending).  Used for
+    /// the per-shard backprop `dH = dZ · Wᵀ`.
+    pub fn matmul_nt_into(&self, other: &Matrix, out: &mut Matrix) {
+        assert_eq!(self.cols, other.cols, "matmul_nt_into shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        out.reset(m, n);
+        for i in 0..m {
+            let a_row = &self.data[i * k..(i + 1) * k];
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in o_row.iter_mut().enumerate() {
+                let b_row = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&a, &b) in a_row.iter().zip(b_row.iter()) {
+                    acc += a * b;
+                }
+                *o = acc;
+            }
+        }
+    }
+
     /// Squared Frobenius norm.
     pub fn fro_norm_sq(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
@@ -483,6 +563,35 @@ mod tests {
                 assert!((x - y).abs() <= 1e-5 * y.abs().max(1.0));
             }
         }
+    }
+
+    #[test]
+    fn matmul_into_variants_match_allocating_paths() {
+        let a = rand_matrix(13, 17, 21);
+        let b = rand_matrix(17, 9, 22);
+        // reused output buffer with stale shape/contents: must be overwritten
+        let mut out = rand_matrix(40, 3, 23);
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, a.matmul(&b));
+
+        let at = rand_matrix(17, 13, 24); // shared dim 17 rows
+        at.matmul_tn_into(&b, &mut out);
+        assert_eq!(out.data, at.matmul_tn_par(&b, 1).data);
+
+        let bt = rand_matrix(9, 17, 25); // interpreted as Bᵀ operand
+        a.matmul_nt_into(&bt, &mut out);
+        assert_eq!(out.data, a.matmul_nt_par(&bt, 1).data);
+    }
+
+    #[test]
+    fn reset_reuses_capacity() {
+        let mut m = Matrix::zeros(10, 10);
+        let ptr = m.data.as_ptr();
+        m.reset(5, 4);
+        assert_eq!((m.rows, m.cols, m.data.len()), (5, 4, 20));
+        assert_eq!(m.data.as_ptr(), ptr, "shrinking must not reallocate");
+        m.reset(10, 10);
+        assert_eq!(m.data.as_ptr(), ptr, "regrowing within capacity must not reallocate");
     }
 
     #[test]

@@ -141,6 +141,48 @@ where
     out.into_iter().map(|v| v.unwrap()).collect()
 }
 
+/// Deterministic pairwise tree reduction: folds `items[i + stride]` into
+/// `items[i]` with stride doubling (pairs `(0,1) (2,3) …`, then `(0,2)
+/// (4,6) …`, …) until `items[0]` holds the reduction of the whole slice.
+/// The tree shape depends only on `items.len()`, **never** on `threads`,
+/// so floating-point reductions are bit-identical for every thread count —
+/// the invariant the sharded L step's gradient reduce is built on.  Pairs
+/// within one level are disjoint and run in parallel (via
+/// [`parallel_map_mut`] over disjoint chunks); `threads <= 1` reduces the
+/// same pairs inline with zero heap allocation.
+pub fn tree_reduce_mut<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut T, &mut T) + Sync,
+{
+    let n = items.len();
+    if n <= 1 {
+        return;
+    }
+    let mut stride = 1;
+    while stride < n {
+        let span = 2 * stride;
+        // a level with a single pair gains nothing from spawning
+        if threads <= 1 || n <= span {
+            let mut i = 0;
+            while i + stride < n {
+                let (lo, hi) = items.split_at_mut(i + stride);
+                f(&mut lo[i], &mut hi[0]);
+                i += span;
+            }
+        } else {
+            let mut chunks: Vec<&mut [T]> = items.chunks_mut(span).collect();
+            parallel_map_mut(&mut chunks, threads, |_, chunk| {
+                if chunk.len() > stride {
+                    let (lo, hi) = chunk.split_at_mut(stride);
+                    f(&mut lo[0], &mut hi[0]);
+                }
+            });
+        }
+        stride = span;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +237,43 @@ mod tests {
             );
         }
         assert_eq!(parallel_map_mut::<u64, u64, _>(&mut [], 4, |_, v| *v), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn tree_reduce_sums_every_item_once() {
+        for threads in [1usize, 2, 4] {
+            for n in [0usize, 1, 2, 3, 4, 5, 8, 13, 16, 33] {
+                let mut items: Vec<u64> = (1..=n as u64).collect();
+                tree_reduce_mut(&mut items, threads, |dst, src| *dst += *src);
+                if n > 0 {
+                    let want = (n as u64) * (n as u64 + 1) / 2;
+                    assert_eq!(items[0], want, "n={n} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_shape_is_thread_count_independent() {
+        // a non-commutative fold records the exact pair order; every thread
+        // count must produce the identical tree
+        let build = |threads: usize, n: usize| {
+            let mut items: Vec<String> =
+                (0..n).map(|i| i.to_string()).collect();
+            tree_reduce_mut(&mut items, threads, |dst, src| {
+                let joined = format!("({dst}+{src})");
+                *dst = joined;
+            });
+            items.swap_remove(0)
+        };
+        for n in [2usize, 3, 5, 7, 8, 11] {
+            let serial = build(1, n);
+            for threads in [2usize, 3, 4, 8] {
+                assert_eq!(build(threads, n), serial, "n={n} threads={threads}");
+            }
+        }
+        assert_eq!(build(1, 4), "((0+1)+(2+3))");
+        assert_eq!(build(1, 5), "(((0+1)+(2+3))+4)");
     }
 
     #[test]

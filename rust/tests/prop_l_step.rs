@@ -1,0 +1,310 @@
+//! Property tests of the data-parallel L step.
+//!
+//! * `gradients_match_finite_differences` — central-difference check of
+//!   the full penalized gradient (weights, biases, quadratic penalty +
+//!   multiplier term) against the analytic gradient recovered from one
+//!   Nesterov step with fresh momenta (`w' = w − lr·(1+m)·g`).
+//! * `relu_mask_*` — pins the `h > 0` mask convention at and below the
+//!   boundary: dead units (pre-act < 0) and exactly-zero pre-activations
+//!   contribute exactly zero gradient.
+//! * `train_steps_bit_identical_across_thread_counts` /
+//!   `lc_outcome_bit_identical_across_thread_counts` — the sharded
+//!   forward/backward + fixed-shape tree reduce make parameters a function
+//!   of the inputs only, never of the thread count; asserted bitwise on a
+//!   ragged-shard batch and end-to-end through a whole LC run.
+
+use lc::compress::prune::ConstraintL0;
+use lc::compress::quantize::AdaptiveQuant;
+use lc::compress::task::{TaskSet, TaskSpec};
+use lc::compress::view::View;
+use lc::data::synth;
+use lc::lc::{LcAlgorithm, LcConfig, MuSchedule};
+use lc::lc::schedule::LrSchedule;
+use lc::models::{ModelSpec, ParamState};
+use lc::runtime::backend::native::MOMENTUM;
+use lc::runtime::trainer::TrainDriver;
+use lc::runtime::Runtime;
+use lc::tensor::Matrix;
+use lc::util::rng::Xoshiro256;
+
+fn spec(widths: &[usize], batch: usize) -> ModelSpec {
+    ModelSpec { name: "prop-l".into(), widths: widths.to_vec(), batch, eval_batch: batch }
+}
+
+fn batch_for(spec: &ModelSpec, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut x = vec![0.0f32; spec.batch * spec.widths[0]];
+    rng.fill_normal(&mut x, 0.0, 1.0);
+    let classes = *spec.widths.last().unwrap();
+    let y = (0..spec.batch).map(|_| rng.below(classes) as i32).collect();
+    (x, y)
+}
+
+fn rand_like(spec: &ModelSpec, seed: u64, sigma: f32) -> Vec<Matrix> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..spec.n_layers())
+        .map(|l| {
+            let (m, n) = spec.layer_shape(l);
+            let mut mat = Matrix::zeros(m, n);
+            rng.fill_normal(&mut mat.data, 0.0, sigma);
+            mat
+        })
+        .collect()
+}
+
+/// Penalized loss at `state` (lr = 0 leaves parameters untouched; the
+/// returned loss is evaluated at the *start* of the step).
+#[allow(clippy::too_many_arguments)]
+fn loss_at(
+    driver: &TrainDriver,
+    state: &ParamState,
+    x: &[f32],
+    y: &[i32],
+    deltas: &[Matrix],
+    lambdas: &[Matrix],
+    mu: &[f32],
+) -> f64 {
+    let mut s = state.clone();
+    driver.step(&mut s, x, y, deltas, lambdas, mu, 0.0).unwrap() as f64
+}
+
+#[test]
+fn gradients_match_finite_differences() {
+    let spec = spec(&[6, 5, 4], 8);
+    let driver = TrainDriver::native_for_spec(&spec, 2);
+
+    // Kink-safe construction: hidden pre-activations are |Σ x·w + b| ≥
+    // 2 − 6·1·0.05 = 1.7, far beyond any ±eps probe (eps·max|x| = 1e-2),
+    // so every finite difference stays on one smooth piece of the ReLU.
+    // Units with b = −2 are saturated dead: fd and analytic both vanish
+    // there, which checks the mask consistently; the kink itself is pinned
+    // by the relu_mask_* tests below.
+    let mut rng = Xoshiro256::new(11);
+    let mut state0 = ParamState::init(&spec, 11);
+    for v in state0.weights[0].data.iter_mut() {
+        *v = rng.uniform_in(-0.05, 0.05);
+    }
+    for (j, v) in state0.biases[0].iter_mut().enumerate() {
+        *v = if j % 2 == 0 { 2.0 } else { -2.0 };
+    }
+    for v in state0.weights[1].data.iter_mut() {
+        *v = rng.uniform_in(-0.5, 0.5);
+    }
+    for v in state0.biases[1].iter_mut() {
+        *v = rng.uniform_in(-0.1, 0.1);
+    }
+    let mut x = vec![0.0f32; spec.batch * spec.widths[0]];
+    for v in x.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    let y: Vec<i32> = (0..spec.batch).map(|i| (i % 4) as i32).collect();
+    // nonzero penalty couplings so the μ(w−Δ) − λ terms are exercised
+    let deltas = rand_like(&spec, 13, 0.2);
+    let lambdas = rand_like(&spec, 14, 0.1);
+    let mu = vec![2.0f32, 0.5];
+
+    // analytic gradient from one Nesterov step with fresh momenta:
+    // v' = g, w' = w − lr·(g + m·g) ⇒ g = (w − w') / (lr·(1 + m))
+    let lr = 0.5f32;
+    let mut stepped = state0.clone();
+    driver.step(&mut stepped, &x, &y, &deltas, &lambdas, &mu, lr).unwrap();
+    let scale = (lr * (1.0 + MOMENTUM)) as f64;
+
+    let eps = 1e-2f32;
+    for l in 0..spec.n_layers() {
+        let (m, n) = spec.layer_shape(l);
+        let gmax: f64 = state0.weights[l]
+            .data
+            .iter()
+            .zip(stepped.weights[l].data.iter())
+            .map(|(&w, &w2)| ((w - w2) as f64 / scale).abs())
+            .fold(0.0, f64::max);
+        for i in 0..m * n {
+            let analytic =
+                (state0.weights[l].data[i] - stepped.weights[l].data[i]) as f64 / scale;
+            let mut plus = state0.clone();
+            plus.weights[l].data[i] += eps;
+            let mut minus = state0.clone();
+            minus.weights[l].data[i] -= eps;
+            let fd = (loss_at(&driver, &plus, &x, &y, &deltas, &lambdas, &mu)
+                - loss_at(&driver, &minus, &x, &y, &deltas, &lambdas, &mu))
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - analytic).abs() <= 2e-2 * gmax.max(1e-2),
+                "w{l}[{i}]: fd {fd:.6e} vs analytic {analytic:.6e} (gmax {gmax:.3e})"
+            );
+        }
+        for i in 0..n {
+            let analytic = (state0.biases[l][i] - stepped.biases[l][i]) as f64 / scale;
+            let mut plus = state0.clone();
+            plus.biases[l][i] += eps;
+            let mut minus = state0.clone();
+            minus.biases[l][i] -= eps;
+            let fd = (loss_at(&driver, &plus, &x, &y, &deltas, &lambdas, &mu)
+                - loss_at(&driver, &minus, &x, &y, &deltas, &lambdas, &mu))
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - analytic).abs() <= 2e-2 * gmax.max(1e-2),
+                "b{l}[{i}]: fd {fd:.6e} vs analytic {analytic:.6e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn relu_mask_dead_unit_gets_zero_gradient() {
+    // hidden unit 1 is driven permanently negative: its column of W0 and
+    // its bias must receive exactly zero gradient (no penalty: μ=0, λ=0)
+    let spec = spec(&[5, 4, 3], 8);
+    let driver = TrainDriver::native_for_spec(&spec, 2);
+    let mut state = ParamState::init(&spec, 21);
+    state.biases[0][1] = -100.0; // inputs are N(0,1): pre-act < 0 for all rows
+    let (x, y) = batch_for(&spec, 22);
+    let zeros: Vec<Matrix> = (0..spec.n_layers())
+        .map(|l| {
+            let (m, n) = spec.layer_shape(l);
+            Matrix::zeros(m, n)
+        })
+        .collect();
+    let mu = vec![0.0f32; spec.n_layers()];
+    let before = state.clone();
+    driver.step(&mut state, &x, &y, &zeros, &zeros, &mu, 0.1).unwrap();
+    for r in 0..5 {
+        assert_eq!(
+            state.weights[0].at(r, 1),
+            before.weights[0].at(r, 1),
+            "dead unit's incoming weight ({r},1) must not move"
+        );
+    }
+    assert_eq!(state.biases[0][1], before.biases[0][1], "dead unit's bias must not move");
+    assert_eq!(state.w_momenta[0].at(0, 1), 0.0, "dead unit's momentum stays zero");
+}
+
+#[test]
+fn relu_mask_boundary_zero_preactivation_is_masked() {
+    // all-zero inputs + zero biases ⇒ every hidden pre-activation is
+    // exactly 0 ⇒ h = 0 ⇒ the `h > 0` mask zeroes the backpropagated
+    // gradient: hidden biases must not move even though dz ≠ 0 upstream
+    let spec = spec(&[5, 4, 3], 8);
+    let driver = TrainDriver::native_for_spec(&spec, 1);
+    let mut state = ParamState::init(&spec, 31);
+    let x = vec![0.0f32; 8 * 5];
+    let y: Vec<i32> = (0..8).map(|i| (i % 3) as i32).collect();
+    let zeros: Vec<Matrix> = (0..spec.n_layers())
+        .map(|l| {
+            let (m, n) = spec.layer_shape(l);
+            Matrix::zeros(m, n)
+        })
+        .collect();
+    let mu = vec![0.0f32; spec.n_layers()];
+    let before = state.clone();
+    driver.step(&mut state, &x, &y, &zeros, &zeros, &mu, 0.1).unwrap();
+    assert_eq!(state.biases[0], before.biases[0], "boundary (h = 0) must be masked out");
+    // the head still trains: its bias gradient is softmax − onehot ≠ 0
+    assert_ne!(state.biases[1], before.biases[1], "output layer must still receive gradient");
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn train_steps_bit_identical_across_thread_counts() {
+    // batch 70 ⇒ ragged shard layout (32, 32, 6); penalty active
+    let spec = spec(&[20, 16, 10], 70);
+    let state0 = ParamState::init(&spec, 41);
+    let (x, y) = batch_for(&spec, 42);
+    let deltas = rand_like(&spec, 43, 0.2);
+    let lambdas = rand_like(&spec, 44, 0.05);
+    let mu = vec![0.3f32; spec.n_layers()];
+
+    let run = |threads: usize| {
+        let driver = TrainDriver::native_for_spec(&spec, threads);
+        let mut s = state0.clone();
+        for _ in 0..5 {
+            driver.step(&mut s, &x, &y, &deltas, &lambdas, &mu, 0.05).unwrap();
+        }
+        s
+    };
+    let want = run(1);
+    for threads in [2usize, 4, 8] {
+        let got = run(threads);
+        for l in 0..spec.n_layers() {
+            assert_eq!(
+                bits(&got.weights[l].data),
+                bits(&want.weights[l].data),
+                "weights[{l}] diverge at threads={threads}"
+            );
+            assert_eq!(bits(&got.biases[l]), bits(&want.biases[l]), "biases[{l}] t={threads}");
+            assert_eq!(
+                bits(&got.w_momenta[l].data),
+                bits(&want.w_momenta[l].data),
+                "w_momenta[{l}] t={threads}"
+            );
+            assert_eq!(
+                bits(&got.b_momenta[l]),
+                bits(&want.b_momenta[l]),
+                "b_momenta[{l}] t={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lc_outcome_bit_identical_across_thread_counts() {
+    // end-to-end: a short LC run (adaptive quant + ℓ0 prune) must produce
+    // bit-identical compressed weights for threads = 1, 2, 4
+    let data = synth::generate(384, 5, 2);
+    let (train, test) = data.split(256);
+    let tasks = || {
+        TaskSet::new(vec![
+            TaskSpec {
+                name: "quant0".into(),
+                layers: vec![0],
+                view: View::Vector,
+                compression: Box::new(AdaptiveQuant::new(4)),
+            },
+            TaskSpec {
+                name: "prune1".into(),
+                layers: vec![1],
+                view: View::Vector,
+                compression: Box::new(ConstraintL0 { kappa: 200 }),
+            },
+        ])
+    };
+    let run = |threads: usize| {
+        let mut rt = Runtime::native_with_threads(threads);
+        let spec = lc::models::lookup("mlp-small").unwrap();
+        let cfg = LcConfig {
+            mu: MuSchedule { mu0: 1e-3, growth: 1.6, steps: 3 },
+            lr: LrSchedule { lr0: 0.05, decay: 0.95 },
+            epochs_per_step: 1,
+            first_step_epochs: None,
+            use_al: true,
+            seed: 7,
+            threads,
+            eval_every: 0,
+            quiet: true,
+        };
+        let alg = LcAlgorithm::new(&mut rt, spec.clone(), tasks(), cfg).unwrap();
+        let state = ParamState::init(&spec, 9);
+        alg.run(state, &train, &test).unwrap()
+    };
+    let want = run(1);
+    for threads in [2usize, 4] {
+        let got = run(threads);
+        for l in 0..want.compressed_state.weights.len() {
+            assert_eq!(
+                bits(&got.compressed_state.weights[l].data),
+                bits(&want.compressed_state.weights[l].data),
+                "compressed weights[{l}] diverge at threads={threads}"
+            );
+            assert_eq!(
+                bits(&got.compressed_state.biases[l]),
+                bits(&want.compressed_state.biases[l]),
+                "biases[{l}] t={threads}"
+            );
+        }
+        assert_eq!(got.final_test.error, want.final_test.error, "t={threads}");
+    }
+}

@@ -20,11 +20,7 @@
 //! measured delta is the memory traffic, not the scheme's argmin.
 //! `LCC_BENCH_QUICK=1` bounds the iteration budget for CI smoke runs.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::io::Write;
-use std::sync::atomic::{AtomicU64, Ordering};
-
-use lc::bench::Bencher;
+use lc::bench::{alloc_counts, write_bench_json, Bencher, CountingAlloc, Record};
 use lc::compress::prune::ConstraintL0;
 use lc::compress::quantize::{BinaryQuant, TernaryQuant};
 use lc::compress::task::{TaskSet, TaskSpec};
@@ -35,43 +31,10 @@ use lc::lc::monitor::Monitor;
 use lc::models::{ModelSpec, ParamState};
 use lc::tensor::{Matrix, Workspace};
 
-// --- counting allocator ----------------------------------------------------
-
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-}
-
+// counting allocator (shared impl in lc::bench; the attribute must live in
+// the binary)
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
-
-fn alloc_counts() -> (u64, u64) {
-    (ALLOCS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
-}
 
 // --- bench scenario --------------------------------------------------------
 
@@ -168,11 +131,6 @@ fn baseline_c_step(
         .filter(|&l| covered[l])
         .map(|l| state.weights[l].dist_sq(&deltas[l]))
         .sum()
-}
-
-struct Record {
-    bench: String,
-    fields: Vec<(String, String)>,
 }
 
 fn main() {
@@ -371,26 +329,5 @@ fn main() {
     }
 
     // --- BENCH_lc_step.json ------------------------------------------------
-    let mut json = String::from("[\n");
-    for (i, r) in records.iter().enumerate() {
-        json.push_str(&format!("  {{\"bench\": \"{}\"", r.bench));
-        for (k, v) in &r.fields {
-            // bare numbers/bools stay unquoted; pre-quoted strings pass through
-            let quoted = v.parse::<f64>().is_err()
-                && v != "true"
-                && v != "false"
-                && !v.starts_with('"');
-            if quoted {
-                json.push_str(&format!(", \"{k}\": \"{v}\""));
-            } else {
-                json.push_str(&format!(", \"{k}\": {v}"));
-            }
-        }
-        json.push_str(&format!("}}{}\n", if i + 1 < records.len() { "," } else { "" }));
-    }
-    json.push_str("]\n");
-    let path = "BENCH_lc_step.json";
-    let mut f = std::fs::File::create(path).expect("create BENCH_lc_step.json");
-    f.write_all(json.as_bytes()).expect("write BENCH_lc_step.json");
-    println!("\nwrote {path} ({} records)", records.len());
+    write_bench_json("BENCH_lc_step.json", &records);
 }

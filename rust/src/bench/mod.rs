@@ -4,6 +4,8 @@
 //! and robust statistics (median, mean, stddev, min).  Used by the
 //! `rust/benches/*.rs` binaries (`cargo bench`, `harness = false`).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Statistics of one benchmark.
@@ -149,6 +151,83 @@ impl Bencher {
     }
 }
 
+/// Counting global allocator behind the bench binaries' zero-allocation
+/// asserts.  `#[global_allocator]` must be declared in the binary itself,
+/// so each bench installs the shared implementation with
+/// `#[global_allocator] static GLOBAL: CountingAlloc = CountingAlloc;`
+/// and reads [`alloc_counts`] — the counting logic lives in one place.
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// `(allocation count, allocated bytes)` since process start, counted by
+/// [`CountingAlloc`] when a binary has installed it.
+pub fn alloc_counts() -> (u64, u64) {
+    (ALLOCS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+/// One row of a `BENCH_*.json` trajectory artifact: a bench id plus
+/// ordered `(key, value)` fields.  Values are pre-rendered strings —
+/// [`write_bench_json`] emits bare numbers and `true`/`false` unquoted
+/// and quotes everything else (a value arriving already quoted passes
+/// through verbatim).  Shared by the bench binaries so the format and its
+/// quoting heuristic live in exactly one place.
+pub struct Record {
+    pub bench: String,
+    pub fields: Vec<(String, String)>,
+}
+
+/// Serialize `records` to `path` as the flat JSON array CI's bench-smoke
+/// job uploads (`BENCH_lc_step.json`, `BENCH_l_step.json`,
+/// `BENCH_gemm.json`), and print the confirmation line.
+pub fn write_bench_json(path: &str, records: &[Record]) {
+    let mut json = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        json.push_str(&format!("  {{\"bench\": \"{}\"", r.bench));
+        for (k, v) in &r.fields {
+            // bare numbers/bools stay unquoted; pre-quoted strings pass through
+            let quoted = v.parse::<f64>().is_err()
+                && v != "true"
+                && v != "false"
+                && !v.starts_with('"');
+            if quoted {
+                json.push_str(&format!(", \"{k}\": \"{v}\""));
+            } else {
+                json.push_str(&format!(", \"{k}\": {v}"));
+            }
+        }
+        json.push_str(&format!("}}{}\n", if i + 1 < records.len() { "," } else { "" }));
+    }
+    json.push_str("]\n");
+    std::fs::write(path, &json).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("\nwrote {path} ({} records)", records.len());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,5 +272,29 @@ mod tests {
         assert_eq!(fmt_ns(1500.0), "1.50µs");
         assert_eq!(fmt_ns(2.5e6), "2.50ms");
         assert_eq!(fmt_ns(1.25e9), "1.250s");
+    }
+
+    #[test]
+    fn bench_json_quoting() {
+        let recs = vec![Record {
+            bench: "b".into(),
+            fields: vec![
+                ("num".into(), "1.5".into()),
+                ("flag".into(), "true".into()),
+                ("name".into(), "abc".into()),
+                ("pre".into(), "\"x\"".into()),
+            ],
+        }];
+        let path = std::env::temp_dir().join("lc_bench_json_test.json");
+        let path = path.to_str().unwrap();
+        write_bench_json(path, &recs);
+        let got = std::fs::read_to_string(path).unwrap();
+        let want = concat!(
+            "[\n",
+            "  {\"bench\": \"b\", \"num\": 1.5, \"flag\": true, ",
+            "\"name\": \"abc\", \"pre\": \"x\"}\n",
+            "]\n"
+        );
+        assert_eq!(got, want);
     }
 }

@@ -119,9 +119,10 @@ impl Theta {
                 }
             }
             Theta::LowRank { u, s, v } => {
-                // fused U·diag(S)·Vᵀ: same per-element accumulation order
-                // (and zero-term skip) as linalg::reconstruct's GEMM, so
-                // results are identical to the allocating path
+                // fused U·diag(S)·Vᵀ: same ascending-k per-element
+                // accumulation order as linalg::reconstruct's packed GEMM
+                // (the a == 0 skip below only ever drops exact ±0.0
+                // addends), so results equal the allocating path
                 let (m, n, r) = (u.rows, v.rows, s.len());
                 debug_assert_eq!(u.cols, r, "low-rank U/S rank mismatch");
                 debug_assert_eq!(v.cols, r, "low-rank V/S rank mismatch");

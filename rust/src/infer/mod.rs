@@ -10,11 +10,16 @@
 //! | Θ variant   | kernel ([`CompressedLayer`])            | MACs/example    |
 //! |-------------|------------------------------------------|-----------------|
 //! | `Sparse`    | CSR matmul ([`Csr::left_matmul`])        | `nnz`           |
-//! | `LowRank`   | two tiled GEMMs `(x·U·diag(S))·Vᵀ`       | `r·(m+n)`       |
+//! | `LowRank`   | two packed GEMMs `(x·U·diag(S))·Vᵀ`      | `r·(m+n)`       |
 //! | `Quantized` | codebook-gather GEMM ([`matmul_gather`]) | nonzero centers |
 //! | `Signs`     | ±accumulate + one scale ([`matmul_signs`])| `nnz`          |
 //! | `Additive`  | sum of component kernels                 | sum             |
-//! | dense       | tiled GEMM ([`Matrix::matmul_par`]), auto-CSR below 50% density | `m·n` / `nnz` |
+//! | dense       | packed GEMM ([`Matrix::matmul_par`]), auto-CSR below 50% density | `m·n` / `nnz` |
+//!
+//! The dense, factored, and all-nonzero-codebook kernels execute on the
+//! packed SIMD GEMM microkernel ([`crate::linalg::gemm`]); the gather
+//! variant feeds the codebook lookup into the kernel's pack stage, so the
+//! dense `W` is still never materialized.
 //!
 //! [`ExecKernel::flops_per_example`] reports the MACs each kernel actually
 //! executes, and [`crate::metrics::account`] derives its FLOPs numbers from

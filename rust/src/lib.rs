@@ -23,8 +23,9 @@
 //!   implementation of the reference semantics documented in
 //!   `python/compile/model.py` and `python/compile/kernels/ref.py`
 //!   (penalized momentum-SGD, softmax cross-entropy, argmax error counts,
-//!   k-means assignment with low-index tie-breaking), built on the tiled
-//!   threadpool-parallel GEMM in [`tensor`].  Needs no artifacts, no
+//!   k-means assignment with low-index tie-breaking), built on the packed
+//!   SIMD GEMM microkernel in [`linalg::gemm`] and the persistent worker
+//!   pool in [`util::threadpool`].  Needs no artifacts, no
 //!   Python, no PJRT: `cargo build --release && cargo test -q` and every
 //!   example run hermetically on this path.
 //! * **pjrt** ([`runtime::backend::pjrt`]) — executes the AOT-lowered

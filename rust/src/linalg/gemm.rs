@@ -1,0 +1,394 @@
+//! Packed, cache-blocked GEMM microkernel — the one compute kernel behind
+//! every dense matrix product in the codebase.
+//!
+//! ## Why packing
+//!
+//! The previous kernels were scalar ikj triple loops: correct and
+//! deterministic, but they stream the right-hand operand with a stride of
+//! `n` floats per k step, reload the output row once per k, and (for the
+//! `A·Bᵀ` variant) reduce each inner product serially, which blocks
+//! autovectorization entirely.  This module instead copies both operands
+//! into contiguous, register-tile-shaped **panels** once per call and runs
+//! an [`MR`]`×`[`NR`] accumulator microkernel over them:
+//!
+//! * **B panel**: strips of [`NR`] columns, each strip laid out `k × NR`
+//!   row-major, so the microkernel loads one contiguous 8-float line per k
+//!   step — packed once per call and shared read-only by every worker;
+//! * **A panel**: strips of [`MR`] rows, each strip laid out `k × MR`
+//!   (column-major within the strip), packed per [`ROW_BLOCK`] of output
+//!   rows by the worker that owns the block;
+//! * **microkernel**: an `MR × NR` f32 accumulator tile held in registers
+//!   across the *entire* k loop; the per-lane update `acc[r][c] += a·b[c]`
+//!   is written so rustc autovectorizes it to 8-wide SIMD.  Ragged edges
+//!   are zero-padded at pack time, so the microkernel has no tail branches
+//!   and padded lanes are simply not stored.
+//!
+//! ## Determinism contract
+//!
+//! For every output element `(i, j)` the accumulator folds the products
+//! `a(i, k) · b(k, j)` in ascending-`k` order into a single f32 chain that
+//! starts at `0.0` — exactly the operation sequence of the scalar ikj
+//! loops this module replaces (SIMD lanes hold *different* output elements,
+//! so vectorization never reassociates a chain, and rustc does not contract
+//! `mul + add` to FMA).  Consequences:
+//!
+//! * results are **bit-identical for every thread count** (the row-block
+//!   partition decides who computes a chain, never how it associates), the
+//!   invariant the sharded L step's determinism pin rests on;
+//! * all entry points routed through this kernel agree **exactly** with
+//!   each other and with a naive ascending-k triple loop
+//!   (`rust/tests/prop_gemm.rs` pins both properties).
+//!
+//! ## Memory
+//!
+//! Pack buffers are thread-local and recycled across calls ([`Workspace`]'s
+//! take/put discipline, scoped per thread): steady-state same-shape calls
+//! perform zero heap allocations ([`pack_grow_events`] observes this, and
+//! `benches/gemm_bench.rs` re-checks it with a counting global allocator).
+//! Persistent pool workers keep their pack buffers warm across train steps.
+//!
+//! [`Workspace`]: crate::tensor::Workspace
+
+use std::cell::Cell;
+use std::thread::LocalKey;
+
+use crate::tensor::Matrix;
+use crate::util::threadpool::parallel_map_mut;
+
+/// Rows of the register accumulator tile.
+pub const MR: usize = 8;
+/// Columns of the register accumulator tile (one 8-wide f32 SIMD line).
+pub const NR: usize = 8;
+/// Output rows per parallel work item (a multiple of [`MR`]; fixed, so the
+/// block layout — like everything else here — is thread-count independent).
+pub const ROW_BLOCK: usize = 32;
+
+/// Left operand view: how the kernel reads the logical `m × k` matrix A.
+#[derive(Clone, Copy)]
+pub enum AOp<'a> {
+    /// Row-major `m × k`, used as-is.
+    N(&'a Matrix),
+    /// Row-major `k × m`, used transposed (no materialized transpose).
+    T(&'a Matrix),
+}
+
+/// Right operand view: how the kernel reads the logical `k × n` matrix B.
+#[derive(Clone, Copy)]
+pub enum BOp<'a> {
+    /// Row-major `k × n`, used as-is.
+    N(&'a Matrix),
+    /// Row-major `n × k`, used transposed (no materialized transpose).
+    T(&'a Matrix),
+    /// Virtual dense view of a quantized layer:
+    /// `B[kk][j] = codebook[assignments[kk * cols + j]]`.  The gather
+    /// happens at pack time; the microkernel never sees the indices, so a
+    /// quantized layer's GEMM runs at packed-dense speed without ever
+    /// materializing the dense weights.
+    Gather { rows: usize, cols: usize, codebook: &'a [f32], assignments: &'a [u32] },
+}
+
+impl AOp<'_> {
+    /// Logical `(m, k)` of op(A).
+    fn dims(self) -> (usize, usize) {
+        match self {
+            AOp::N(a) => (a.rows, a.cols),
+            AOp::T(a) => (a.cols, a.rows),
+        }
+    }
+}
+
+impl BOp<'_> {
+    /// Logical `(k, n)` of op(B).
+    fn dims(self) -> (usize, usize) {
+        match self {
+            BOp::N(b) => (b.rows, b.cols),
+            BOp::T(b) => (b.cols, b.rows),
+            BOp::Gather { rows, cols, .. } => (rows, cols),
+        }
+    }
+}
+
+thread_local! {
+    static PACK_A: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+    static PACK_B: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
+    static PACK_GROWS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// How many times this thread's pack buffers grew (analogous to
+/// [`crate::tensor::Workspace::grow_events`]): steady-state same-shape
+/// calls must not move this counter — the property `rust/tests/prop_gemm.rs`
+/// pins.
+pub fn pack_grow_events() -> u64 {
+    PACK_GROWS.with(|c| c.get())
+}
+
+/// Run `f` with a thread-local recycled buffer (take/put, never dropped).
+/// Re-entrant calls see an empty buffer and fall back to a transient
+/// allocation, so nesting is correct, just not free.
+fn with_buf<R>(slot: &'static LocalKey<Cell<Vec<f32>>>, f: impl FnOnce(&mut Vec<f32>) -> R) -> R {
+    let mut buf = slot.with(Cell::take);
+    let r = f(&mut buf);
+    slot.with(|c| c.set(buf));
+    r
+}
+
+/// Grow `buf` to at least `len` elements (counted as a grow event when the
+/// capacity actually moves).
+fn ensure_len(buf: &mut Vec<f32>, len: usize) {
+    if buf.len() < len {
+        if buf.capacity() < len {
+            PACK_GROWS.with(|c| c.set(c.get() + 1));
+        }
+        buf.resize(len, 0.0);
+    }
+}
+
+/// Pack op(B) (`k × n` logical) into NR-column strips: strip `s` holds
+/// columns `s*NR ..`, laid out `k × NR` row-major at offset `s*k*NR`.
+/// Columns past `n` are zero-padded.
+fn pack_b(b: BOp<'_>, k: usize, n: usize, buf: &mut [f32]) {
+    let nstrips = n.div_ceil(NR);
+    for s in 0..nstrips {
+        let j0 = s * NR;
+        let w = NR.min(n - j0);
+        let dst = &mut buf[s * k * NR..(s + 1) * k * NR];
+        match b {
+            BOp::N(mat) => {
+                for kk in 0..k {
+                    let src = &mat.data[kk * n + j0..kk * n + j0 + w];
+                    let d = &mut dst[kk * NR..kk * NR + NR];
+                    d[..w].copy_from_slice(src);
+                    d[w..].fill(0.0);
+                }
+            }
+            BOp::T(mat) => {
+                // mat is n × k row-major; logical B(kk, j) = mat[j, kk],
+                // so each packed column c streams one contiguous mat row
+                if w < NR {
+                    dst.fill(0.0);
+                }
+                for c in 0..w {
+                    let src = &mat.data[(j0 + c) * k..(j0 + c + 1) * k];
+                    for (kk, &v) in src.iter().enumerate() {
+                        dst[kk * NR + c] = v;
+                    }
+                }
+            }
+            BOp::Gather { cols, codebook, assignments, .. } => {
+                for kk in 0..k {
+                    let src = &assignments[kk * cols + j0..kk * cols + j0 + w];
+                    let d = &mut dst[kk * NR..kk * NR + NR];
+                    for (dc, &a) in d[..w].iter_mut().zip(src.iter()) {
+                        *dc = codebook[a as usize];
+                    }
+                    d[w..].fill(0.0);
+                }
+            }
+        }
+    }
+}
+
+/// Pack rows `i0 .. i0+mb` of op(A) into MR-row strips: strip `s` holds
+/// rows `i0 + s*MR ..`, laid out `k × MR` (column-major within the strip)
+/// at offset `s*k*MR`.  Rows past the block are zero-padded.
+fn pack_a(a: AOp<'_>, i0: usize, mb: usize, k: usize, buf: &mut [f32]) {
+    let mstrips = mb.div_ceil(MR);
+    for s in 0..mstrips {
+        let r0 = i0 + s * MR;
+        let h = MR.min(i0 + mb - r0);
+        let dst = &mut buf[s * k * MR..(s + 1) * k * MR];
+        match a {
+            AOp::N(mat) => {
+                if h < MR {
+                    dst.fill(0.0);
+                }
+                for r in 0..h {
+                    let src = &mat.data[(r0 + r) * k..(r0 + r + 1) * k];
+                    for (kk, &v) in src.iter().enumerate() {
+                        dst[kk * MR + r] = v;
+                    }
+                }
+            }
+            AOp::T(mat) => {
+                // mat is k × m row-major; logical A(i, kk) = mat[kk, i]
+                let m_ld = mat.cols;
+                for kk in 0..k {
+                    let src = &mat.data[kk * m_ld + r0..kk * m_ld + r0 + h];
+                    let d = &mut dst[kk * MR..kk * MR + MR];
+                    d[..h].copy_from_slice(src);
+                    d[h..].fill(0.0);
+                }
+            }
+        }
+    }
+}
+
+/// The register-tile microkernel: full-k accumulation of one `MR × NR`
+/// tile.  `ap` is one packed A strip (`k × MR`), `bp` one packed B strip
+/// (`k × NR`).  Each `acc[r][c]` is a single ascending-k f32 chain — the
+/// determinism contract — and the `c` loop is the 8-wide SIMD lane.
+#[inline]
+fn microkernel(ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (a8, b8) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        let b: [f32; NR] = b8.try_into().unwrap();
+        for (&ar, accr) in a8.iter().zip(acc.iter_mut()) {
+            for (av, &bv) in accr.iter_mut().zip(b.iter()) {
+                *av += ar * bv;
+            }
+        }
+    }
+    acc
+}
+
+/// Compute one `mb × n` block of output rows from packed panels.
+fn block_rows(ap: &[f32], bp: &[f32], k: usize, mb: usize, n: usize, out: &mut [f32]) {
+    let mstrips = mb.div_ceil(MR);
+    let nstrips = n.div_ceil(NR);
+    for ms in 0..mstrips {
+        let a_strip = &ap[ms * k * MR..(ms + 1) * k * MR];
+        let r0 = ms * MR;
+        let h = MR.min(mb - r0);
+        for ns in 0..nstrips {
+            let b_strip = &bp[ns * k * NR..(ns + 1) * k * NR];
+            let j0 = ns * NR;
+            let w = NR.min(n - j0);
+            let acc = microkernel(a_strip, b_strip);
+            for (r, accr) in acc.iter().enumerate().take(h) {
+                let dst = &mut out[(r0 + r) * n + j0..(r0 + r) * n + j0 + w];
+                dst.copy_from_slice(&accr[..w]);
+            }
+        }
+    }
+}
+
+/// `out = op(A) · op(B)`, fully overwritten (`out` is reshaped to `m × n`;
+/// prior contents are irrelevant).  B is packed once on the calling thread
+/// and shared read-only; output rows are computed in fixed
+/// [`ROW_BLOCK`]-row work items, inline at `threads <= 1` or over the
+/// persistent thread pool otherwise.  Per-element accumulation order is
+/// identical in every case — see the module docs for the contract.
+pub fn gemm(a: AOp<'_>, b: BOp<'_>, out: &mut Matrix, threads: usize) {
+    let (m, ka) = a.dims();
+    let (kb, n) = b.dims();
+    assert_eq!(ka, kb, "gemm inner-dimension mismatch: {ka} vs {kb}");
+    let k = ka;
+    out.reset(m, n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.data.fill(0.0);
+        return;
+    }
+    let np = n.div_ceil(NR) * NR;
+    with_buf(&PACK_B, |bbuf| {
+        ensure_len(bbuf, k * np);
+        pack_b(b, k, n, &mut bbuf[..k * np]);
+        let bp: &[f32] = &bbuf[..k * np];
+        let blocks = m.div_ceil(ROW_BLOCK);
+        let run_block = |i0: usize, mb: usize, chunk: &mut [f32]| {
+            with_buf(&PACK_A, |abuf| {
+                let mbp = mb.div_ceil(MR) * MR;
+                ensure_len(abuf, k * mbp);
+                pack_a(a, i0, mb, k, &mut abuf[..k * mbp]);
+                block_rows(&abuf[..k * mbp], bp, k, mb, n, chunk);
+            });
+        };
+        if threads <= 1 || blocks <= 1 {
+            for (bi, chunk) in out.data.chunks_mut(ROW_BLOCK * n).enumerate() {
+                run_block(bi * ROW_BLOCK, chunk.len() / n, chunk);
+            }
+        } else {
+            let mut chunks: Vec<&mut [f32]> = out.data.chunks_mut(ROW_BLOCK * n).collect();
+            parallel_map_mut(&mut chunks, threads, |bi, chunk| {
+                run_block(bi * ROW_BLOCK, chunk.len() / n, &mut **chunk);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.0, 1.0);
+        m
+    }
+
+    /// Ascending-k single-accumulator triple loop — the chain the packed
+    /// kernel must reproduce exactly.
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += a.at(i, kk) * b.at(kk, j);
+                }
+                out.data[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn packed_matches_naive_exactly_all_views() {
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (2, 3, 5),
+            (8, 8, 8),
+            (9, 8, 7),
+            (33, 17, 40),
+            (5, 9, 1),
+            (40, 1, 40),
+            (70, 64, 9),
+        ] {
+            let a = rand_matrix(m, k, 1000 + m as u64);
+            let b = rand_matrix(k, n, 2000 + n as u64);
+            let want = naive(&a, &b);
+            let mut out = Matrix::zeros(0, 0);
+            gemm(AOp::N(&a), BOp::N(&b), &mut out, 1);
+            assert_eq!(out.data, want.data, "nn {m}x{k}x{n}");
+
+            let at = a.transpose();
+            gemm(AOp::T(&at), BOp::N(&b), &mut out, 1);
+            assert_eq!(out.data, want.data, "tn {m}x{k}x{n}");
+
+            let bt = b.transpose();
+            gemm(AOp::N(&a), BOp::T(&bt), &mut out, 1);
+            assert_eq!(out.data, want.data, "nt {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gather_view_matches_dense_exactly() {
+        let (k, n) = (17, 11);
+        let codebook = vec![-1.5f32, 0.25, 0.75, 2.0];
+        let mut rng = Xoshiro256::new(5);
+        let kcb = codebook.len();
+        let assignments: Vec<u32> = (0..k * n).map(|_| rng.below(kcb) as u32).collect();
+        let gathered: Vec<f32> = assignments.iter().map(|&a| codebook[a as usize]).collect();
+        let dense = Matrix::from_vec(k, n, gathered);
+        let x = rand_matrix(9, k, 6);
+        let want = naive(&x, &dense);
+        let mut out = Matrix::zeros(0, 0);
+        let b = BOp::Gather { rows: k, cols: n, codebook: &codebook, assignments: &assignments };
+        gemm(AOp::N(&x), b, &mut out, 1);
+        assert_eq!(out.data, want.data);
+    }
+
+    #[test]
+    fn degenerate_inner_dim_zero_yields_zeros() {
+        let a = Matrix::zeros(3, 0);
+        let b = Matrix::zeros(0, 4);
+        let mut out = rand_matrix(3, 4, 9);
+        gemm(AOp::N(&a), BOp::N(&b), &mut out, 1);
+        assert_eq!(out.data, vec![0.0; 12]);
+    }
+}

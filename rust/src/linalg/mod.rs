@@ -1,294 +1,17 @@
-//! Dense linear algebra for the low-rank C steps (substrate).
+//! Dense linear algebra substrate.
 //!
-//! The low-rank compression and the automatic rank-selection C step both
-//! need a full singular value decomposition of each layer's weight matrix.
-//! No LAPACK binding is available offline, so we implement a **one-sided
-//! Jacobi SVD** (Hestenes rotations on columns of A), which is simple,
-//! numerically robust, and plenty fast for layer-sized matrices
-//! (<= ~800 x 800 in the experiment suite).
+//! Two pieces live here:
 //!
-//! `svd(A)` returns `(U, S, V)` with `A = U * diag(S) * V^T`, singular
-//! values sorted descending, `U: m x r`, `V: n x r`, `r = min(m, n)`.
+//! * [`gemm`] — the packed, cache-blocked GEMM microkernel that executes
+//!   **every** dense matrix product in the codebase (the `Matrix::matmul*`
+//!   family, the sharded L step's per-shard GEMMs, the compressed-execution
+//!   factored and codebook-gather kernels);
+//! * [`svd`] — the one-sided Jacobi SVD used by the low-rank C steps.
+//!
+//! The SVD items are re-exported at this level (`linalg::svd(a)`,
+//! `linalg::truncate`, ...) so existing call sites keep working.
 
-use crate::tensor::Matrix;
+pub mod gemm;
+pub mod svd;
 
-/// Result of a thin SVD: `a = u * diag(s) * v^T`.
-#[derive(Clone, Debug)]
-pub struct Svd {
-    pub u: Matrix, // m x r
-    pub s: Vec<f32>, // r, descending
-    pub v: Matrix, // n x r
-}
-
-/// One-sided Jacobi SVD (Hestenes).  Operates on a working copy in f64 for
-/// accuracy; converges when all column pairs are numerically orthogonal.
-pub fn svd(a: &Matrix) -> Svd {
-    // Work on A (m x n) if m >= n, else on A^T and swap U/V at the end.
-    if a.rows >= a.cols {
-        svd_tall(a)
-    } else {
-        let t = a.transpose();
-        let Svd { u, s, v } = svd_tall(&t);
-        Svd { u: v, s, v: u }
-    }
-}
-
-fn svd_tall(a: &Matrix) -> Svd {
-    let m = a.rows;
-    let n = a.cols;
-    debug_assert!(m >= n);
-    // Column-major f64 working copy of A; V accumulates rotations.
-    let mut cols: Vec<Vec<f64>> = (0..n)
-        .map(|j| (0..m).map(|i| a.at(i, j) as f64).collect())
-        .collect();
-    let mut v: Vec<Vec<f64>> = (0..n)
-        .map(|j| {
-            let mut e = vec![0.0; n];
-            e[j] = 1.0;
-            e
-        })
-        .collect();
-
-    // Convergence threshold: the input data is f32 (resolution ~1e-7), so
-    // driving the Jacobi off-diagonal below 1e-9 relative is already two
-    // orders tighter than representable — tightening further only buys
-    // extra sweeps (measured: 1e-12 costs ~35% more wall time for zero
-    // accuracy gain at f32; EXPERIMENTS.md section Perf, iteration 8).
-    let eps = 1e-9_f64;
-    let max_sweeps = 60;
-    // Cache squared column norms (the app/aqq dot products) and update them
-    // analytically after each rotation; only the cross product apq needs an
-    // O(m) pass per pair.  This cuts the per-pair cost from 3m to m mults
-    // (+ fused apq during the rotation itself) — measured ~2.5-3x on the
-    // 784x300 layer (EXPERIMENTS.md section Perf, iteration 7).
-    let mut norms_sq: Vec<f64> = cols
-        .iter()
-        .map(|col| col.iter().map(|x| x * x).sum())
-        .collect();
-    for _sweep in 0..max_sweeps {
-        let mut off = 0.0_f64;
-        for p in 0..n {
-            for q in (p + 1)..n {
-                let app = norms_sq[p];
-                let aqq = norms_sq[q];
-                let mut apq = 0.0_f64;
-                for i in 0..m {
-                    apq += cols[p][i] * cols[q][i];
-                }
-                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
-                    continue;
-                }
-                off += apq.abs();
-                // Jacobi rotation zeroing the (p,q) entry of A^T A.
-                let tau = (aqq - app) / (2.0 * apq);
-                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = c * t;
-                for i in 0..m {
-                    let xp = cols[p][i];
-                    let xq = cols[q][i];
-                    cols[p][i] = c * xp - s * xq;
-                    cols[q][i] = s * xp + c * xq;
-                }
-                for i in 0..n {
-                    let vp = v[p][i];
-                    let vq = v[q][i];
-                    v[p][i] = c * vp - s * vq;
-                    v[q][i] = s * vp + c * vq;
-                }
-                // rotated norms, updated in O(1)
-                norms_sq[p] = c * c * app - 2.0 * c * s * apq + s * s * aqq;
-                norms_sq[q] = s * s * app + 2.0 * c * s * apq + c * c * aqq;
-            }
-        }
-        if off < eps {
-            break;
-        }
-    }
-
-    // Singular values are column norms; U columns are normalized A columns.
-    // (Recompute exactly here — the cached norms drift by O(eps) per sweep.)
-    let mut order: Vec<usize> = (0..n).collect();
-    let norms: Vec<f64> = cols
-        .iter()
-        .map(|col| col.iter().map(|x| x * x).sum::<f64>().sqrt())
-        .collect();
-    order.sort_by(|&i, &j| norms[j].partial_cmp(&norms[i]).unwrap());
-
-    let mut u = Matrix::zeros(m, n);
-    let mut vt = Matrix::zeros(n, n);
-    let mut s = vec![0.0f32; n];
-    for (new_j, &old_j) in order.iter().enumerate() {
-        let norm = norms[old_j];
-        s[new_j] = norm as f32;
-        if norm > 0.0 {
-            for i in 0..m {
-                u.data[i * n + new_j] = (cols[old_j][i] / norm) as f32;
-            }
-        }
-        for i in 0..n {
-            vt.data[i * n + new_j] = v[old_j][i] as f32;
-        }
-    }
-    Svd { u, s, v: vt }
-}
-
-/// Truncate an SVD to rank `r`, returning factors `(ur, sr, vr)` such that
-/// `ur * diag(sr) * vr^T` is the best rank-`r` approximation (Eckart–Young).
-pub fn truncate(svd: &Svd, r: usize) -> (Matrix, Vec<f32>, Matrix) {
-    let r = r.min(svd.s.len());
-    let m = svd.u.rows;
-    let n = svd.v.rows;
-    let mut ur = Matrix::zeros(m, r);
-    let mut vr = Matrix::zeros(n, r);
-    for i in 0..m {
-        for j in 0..r {
-            ur.data[i * r + j] = svd.u.at(i, j);
-        }
-    }
-    for i in 0..n {
-        for j in 0..r {
-            vr.data[i * r + j] = svd.v.at(i, j);
-        }
-    }
-    (ur, svd.s[..r].to_vec(), vr)
-}
-
-/// Reconstruct `u * diag(s) * v^T`.
-pub fn reconstruct(u: &Matrix, s: &[f32], v: &Matrix) -> Matrix {
-    let r = s.len();
-    assert_eq!(u.cols, r);
-    assert_eq!(v.cols, r);
-    let mut us = u.clone();
-    for i in 0..u.rows {
-        for j in 0..r {
-            us.data[i * r + j] *= s[j];
-        }
-    }
-    us.matmul(&v.transpose())
-}
-
-/// Tail energy `sum_{i >= r} s_i^2` — the optimal rank-`r` approximation
-/// error by Eckart–Young; used by the rank-selection C step.
-pub fn tail_energy(s: &[f32], r: usize) -> f64 {
-    s.iter().skip(r).map(|&x| (x as f64) * (x as f64)).sum()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::util::rng::Xoshiro256;
-
-    fn rand_matrix(m: usize, n: usize, seed: u64) -> Matrix {
-        let mut rng = Xoshiro256::new(seed);
-        let mut mat = Matrix::zeros(m, n);
-        rng.fill_normal(&mut mat.data, 0.0, 1.0);
-        mat
-    }
-
-    fn assert_reconstructs(a: &Matrix, tol: f64) {
-        let d = svd(a);
-        let rec = reconstruct(&d.u, &d.s, &d.v);
-        let err = a.dist_sq(&rec).sqrt();
-        let scale = a.fro_norm().max(1.0);
-        assert!(err / scale < tol, "rel err {} for {}x{}", err / scale, a.rows, a.cols);
-    }
-
-    #[test]
-    fn svd_reconstructs_random_matrices() {
-        for &(m, n, seed) in &[(5, 5, 1u64), (10, 4, 2), (4, 10, 3), (30, 17, 4), (17, 30, 5)] {
-            assert_reconstructs(&rand_matrix(m, n, seed), 1e-5);
-        }
-    }
-
-    #[test]
-    fn svd_diag_known_values() {
-        let mut a = Matrix::zeros(3, 3);
-        a.data[0] = 3.0;
-        a.data[4] = -2.0; // singular value is |.| = 2
-        a.data[8] = 1.0;
-        let d = svd(&a);
-        assert!((d.s[0] - 3.0).abs() < 1e-5);
-        assert!((d.s[1] - 2.0).abs() < 1e-5);
-        assert!((d.s[2] - 1.0).abs() < 1e-5);
-    }
-
-    #[test]
-    fn singular_values_sorted_and_nonnegative() {
-        let a = rand_matrix(20, 12, 7);
-        let d = svd(&a);
-        for w in d.s.windows(2) {
-            assert!(w[0] >= w[1] - 1e-6);
-        }
-        for &s in &d.s {
-            assert!(s >= 0.0);
-        }
-    }
-
-    #[test]
-    fn u_and_v_orthonormal() {
-        let a = rand_matrix(15, 9, 9);
-        let d = svd(&a);
-        let utu = d.u.transpose().matmul(&d.u);
-        let vtv = d.v.transpose().matmul(&d.v);
-        for i in 0..utu.rows {
-            for j in 0..utu.cols {
-                let want = if i == j { 1.0 } else { 0.0 };
-                assert!((utu.at(i, j) - want).abs() < 1e-4, "UtU[{i},{j}]={}", utu.at(i, j));
-                assert!((vtv.at(i, j) - want).abs() < 1e-4, "VtV[{i},{j}]={}", vtv.at(i, j));
-            }
-        }
-    }
-
-    #[test]
-    fn truncation_is_eckart_young_optimal() {
-        // For a matrix with known singular values, the rank-r error must be
-        // exactly the tail energy.
-        let a = rand_matrix(12, 8, 11);
-        let d = svd(&a);
-        for r in 0..=8 {
-            let (ur, sr, vr) = truncate(&d, r);
-            let rec = reconstruct(&ur, &sr, &vr);
-            let err = a.dist_sq(&rec);
-            let want = tail_energy(&d.s, r);
-            assert!(
-                (err - want).abs() < 1e-3 * want.max(1e-6),
-                "r={r} err={err} tail={want}"
-            );
-        }
-    }
-
-    #[test]
-    fn rank_deficient_matrix() {
-        // rank-1 outer product
-        let u = vec![1.0f32, 2.0, 3.0];
-        let v = vec![4.0f32, 5.0];
-        let mut a = Matrix::zeros(3, 2);
-        for i in 0..3 {
-            for j in 0..2 {
-                a.data[i * 2 + j] = u[i] * v[j];
-            }
-        }
-        let d = svd(&a);
-        assert!(d.s[0] > 1.0);
-        assert!(d.s[1].abs() < 1e-5, "s1={}", d.s[1]);
-    }
-
-    #[test]
-    fn zero_matrix() {
-        let a = Matrix::zeros(4, 3);
-        let d = svd(&a);
-        assert!(d.s.iter().all(|&s| s == 0.0));
-        let rec = reconstruct(&d.u, &d.s, &d.v);
-        assert_eq!(rec.data, vec![0.0; 12]);
-    }
-
-    #[test]
-    fn tail_energy_decreasing() {
-        let s = vec![4.0f32, 2.0, 1.0];
-        assert!((tail_energy(&s, 0) - 21.0).abs() < 1e-9);
-        assert!((tail_energy(&s, 1) - 5.0).abs() < 1e-9);
-        assert!((tail_energy(&s, 2) - 1.0).abs() < 1e-9);
-        assert_eq!(tail_energy(&s, 3), 0.0);
-    }
-}
+pub use svd::{reconstruct, svd, tail_energy, truncate, Svd};

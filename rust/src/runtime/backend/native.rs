@@ -29,8 +29,14 @@
 //! parameters after a step are **bit-identical for every thread count**,
 //! and with a persistent [`GradWorkspace`] the steady-state step performs
 //! **zero heap allocations** at `threads = 1` (both measured by
-//! `benches/l_step_bench.rs`).  The eval pass still uses the tiled
-//! threadpool-parallel GEMMs in [`crate::tensor`] ([`Matrix::matmul_par`]).
+//! `benches/l_step_bench.rs`).
+//!
+//! Every GEMM here — the per-shard serial `matmul_*_into` calls and the
+//! eval pass's parallel [`Matrix::matmul_par`] — executes on the packed
+//! SIMD microkernel ([`crate::linalg::gemm`]), and shards are dispatched
+//! to the persistent worker pool rather than freshly spawned threads;
+//! neither changes any accumulation chain (see the gemm module's
+//! determinism contract), so the bit-identity pins hold unchanged.
 
 use anyhow::{ensure, Result};
 

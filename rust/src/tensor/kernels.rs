@@ -6,18 +6,29 @@
 //! materializing the dense `W`, streaming the compressed encoding instead:
 //! the codebook kernel reads per-weight center indices and gathers values
 //! from a k-entry codebook; the sign kernel adds/subtracts activations and
-//! applies the shared scale once per output.  Parallelism mirrors the tiled
-//! GEMM in [`Matrix::matmul_par`]: batch-row blocks over the threadpool,
-//! K-ascending accumulation per output element.
+//! applies the shared scale once per output.  Accumulation is K-ascending
+//! per output element, matching [`Matrix::matmul`] exactly.
+//!
+//! A codebook with **no zero centers** executes every MAC regardless of
+//! path, so that case runs through the packed GEMM microkernel
+//! ([`crate::linalg::gemm`]) with a gather-at-pack-time operand view — the
+//! dense `W` is still never materialized (only NR-column panels of it),
+//! and the FLOPs accounting is unchanged (`nonzero == rows · cols`).  A
+//! codebook *with* zero centers keeps the scalar zero-skipping loop: it
+//! executes exactly the nonzero MACs that
+//! [`crate::infer::ExecKernel::flops_per_example`] charges for.
 
 use super::Matrix;
+use crate::linalg::gemm::{gemm, AOp, BOp};
 use crate::util::threadpool::parallel_map;
 
 /// `x · W` where `W[r, c] = codebook[assignments[r * cols + c]]`.
 ///
 /// Zero codebook entries are skipped — a ternary or pruned-then-quantized
 /// codebook executes only its nonzero MACs, which is what
-/// [`crate::infer::ExecKernel::flops_per_example`] charges for.
+/// [`crate::infer::ExecKernel::flops_per_example`] charges for.  All-dense
+/// codebooks take the packed-GEMM gather path instead (same results: both
+/// paths accumulate k-ascending per output element).
 pub fn matmul_gather(
     x: &Matrix,
     rows: usize,
@@ -28,6 +39,12 @@ pub fn matmul_gather(
 ) -> Matrix {
     assert_eq!(x.cols, rows, "matmul_gather shape mismatch");
     assert_eq!(assignments.len(), rows * cols, "assignment count mismatch");
+    if !codebook.is_empty() && codebook.iter().all(|&c| c != 0.0) {
+        let mut out = Matrix::zeros(0, 0);
+        let b = BOp::Gather { rows, cols, codebook, assignments };
+        gemm(AOp::N(x), b, &mut out, threads);
+        return out;
+    }
     let (b, n) = (x.rows, cols);
     const ROW_BLOCK: usize = 32;
     let blocks = ((b + ROW_BLOCK - 1) / ROW_BLOCK).max(1);
@@ -137,6 +154,28 @@ mod tests {
         let x = rand_x(5, rows, 4);
         let want = x.matmul(&w);
         for threads in [1usize, 3] {
+            let got = matmul_gather(&x, rows, cols, &codebook, &assignments, threads);
+            assert_eq!(got.data, want.data, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn gather_dense_codebook_takes_packed_path_and_matches() {
+        // no zero centers: the packed-GEMM gather view runs; results must
+        // still equal the dense product exactly (same accumulation chains)
+        let (rows, cols) = (23, 14);
+        let codebook = vec![-0.75f32, 0.125, 0.5, 1.25];
+        let mut rng = Xoshiro256::new(11);
+        let assignments: Vec<u32> =
+            (0..rows * cols).map(|_| rng.below(codebook.len()) as u32).collect();
+        let w = Matrix::from_vec(
+            rows,
+            cols,
+            assignments.iter().map(|&a| codebook[a as usize]).collect(),
+        );
+        let x = rand_x(37, rows, 12);
+        let want = x.matmul(&w);
+        for threads in [1usize, 4] {
             let got = matmul_gather(&x, rows, cols, &codebook, &assignments, threads);
             assert_eq!(got.data, want.data, "threads={threads}");
         }

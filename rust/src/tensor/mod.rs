@@ -11,6 +11,8 @@ pub mod workspace;
 
 pub use workspace::Workspace;
 
+use crate::linalg::gemm;
+
 /// A dense row-major matrix owning its data.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
@@ -71,149 +73,53 @@ impl Matrix {
         t
     }
 
-    /// `self * other`, straightforward ikj-ordered triple loop (cache
-    /// friendly for row-major operands).
+    /// `self * other` through the packed GEMM microkernel
+    /// ([`crate::linalg::gemm`]), serial.  Per output element the products
+    /// accumulate in ascending-k order into a single f32 chain, so results
+    /// are identical to a naive ascending-k triple loop and to every other
+    /// `matmul*` entry point.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let o_row = &mut out.data[i * n..(i + 1) * n];
-            for (kk, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        let mut out = Matrix::zeros(0, 0);
+        gemm::gemm(gemm::AOp::N(self), gemm::BOp::N(other), &mut out, 1);
         out
     }
 
-    /// `self * other` with row-block parallelism and K-tiling — the GEMM
-    /// behind the native backend's L step.  Each worker owns a contiguous
-    /// block of output rows; within a block the K dimension is tiled so the
-    /// touched rows of `other` stay cache-resident across the block's rows.
-    /// Accumulation order per output row is K-ascending, identical to the
-    /// serial [`Matrix::matmul`], so results match it exactly.
+    /// `self * other`, parallel over fixed-size output-row blocks of the
+    /// packed GEMM microkernel — the eval-path GEMM of the native backend.
+    /// Bit-identical to [`Matrix::matmul`] for every thread count.
     pub fn matmul_par(&self, other: &Matrix, threads: usize) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul_par shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        const ROW_BLOCK: usize = 32;
-        const K_TILE: usize = 256;
-        let blocks = (m + ROW_BLOCK - 1) / ROW_BLOCK;
-        if threads <= 1 || blocks <= 1 {
-            return self.matmul(other);
-        }
-        let block_rows: Vec<Vec<f32>> =
-            crate::util::threadpool::parallel_map(blocks, threads, |bi| {
-                let r0 = bi * ROW_BLOCK;
-                let r1 = (r0 + ROW_BLOCK).min(m);
-                let mut out = vec![0.0f32; (r1 - r0) * n];
-                let mut k0 = 0;
-                while k0 < k {
-                    let k1 = (k0 + K_TILE).min(k);
-                    for (ri, i) in (r0..r1).enumerate() {
-                        let a_row = &self.data[i * k..(i + 1) * k];
-                        let o_row = &mut out[ri * n..(ri + 1) * n];
-                        for kk in k0..k1 {
-                            let a = a_row[kk];
-                            if a == 0.0 {
-                                continue;
-                            }
-                            let b_row = &other.data[kk * n..(kk + 1) * n];
-                            for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
-                                *o += a * b;
-                            }
-                        }
-                    }
-                    k0 = k1;
-                }
-                out
-            });
-        let mut data = Vec::with_capacity(m * n);
-        for r in block_rows {
-            data.extend_from_slice(&r);
-        }
-        Matrix::from_vec(m, n, data)
+        let mut out = Matrix::zeros(0, 0);
+        gemm::gemm(gemm::AOp::N(self), gemm::BOp::N(other), &mut out, threads);
+        out
     }
 
     /// `selfᵀ * other` without materializing the transpose (`self`: r×m,
-    /// `other`: r×n, result m×n).  Streams both operands' rows: for each
-    /// shared row r, the outer product `self[r, i0..i1]ᵀ · other[r, :]` is
-    /// accumulated into the worker's output block, so accumulation over r
-    /// is ascending per output element (deterministic, matching
-    /// `self.transpose().matmul(other)`).  Used for the backward pass
-    /// `dW = Hᵀ · dZ`.
+    /// `other`: r×n, result m×n): the packed kernel reads `self` through
+    /// its transposed view at pack time.  Accumulation over the shared
+    /// dimension r is ascending per output element, matching
+    /// `self.transpose().matmul(other)` exactly.  The backward pass uses
+    /// the serial [`Matrix::matmul_tn_into`] per shard; this allocating
+    /// parallel form serves callers outside the workspace-backed train
+    /// loop (and the property suite's parallel T-view coverage).
     pub fn matmul_tn_par(&self, other: &Matrix, threads: usize) -> Matrix {
         assert_eq!(self.rows, other.rows, "matmul_tn_par shape mismatch");
-        let (r_dim, m, n) = (self.rows, self.cols, other.cols);
-        const ROW_BLOCK: usize = 32;
-        let blocks = ((m + ROW_BLOCK - 1) / ROW_BLOCK).max(1);
-        let block_rows: Vec<Vec<f32>> =
-            crate::util::threadpool::parallel_map(blocks, threads.max(1), |bi| {
-                let i0 = bi * ROW_BLOCK;
-                let i1 = (i0 + ROW_BLOCK).min(m);
-                let mut out = vec![0.0f32; (i1 - i0) * n];
-                for r in 0..r_dim {
-                    let a_row = &self.data[r * m..(r + 1) * m];
-                    let b_row = &other.data[r * n..(r + 1) * n];
-                    for (oi, i) in (i0..i1).enumerate() {
-                        let a = a_row[i];
-                        if a == 0.0 {
-                            continue;
-                        }
-                        let o_row = &mut out[oi * n..(oi + 1) * n];
-                        for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
-                            *o += a * b;
-                        }
-                    }
-                }
-                out
-            });
-        let mut data = Vec::with_capacity(m * n);
-        for r in block_rows {
-            data.extend_from_slice(&r);
-        }
-        Matrix::from_vec(m, n, data)
+        let mut out = Matrix::zeros(0, 0);
+        gemm::gemm(gemm::AOp::T(self), gemm::BOp::N(other), &mut out, threads);
+        out
     }
 
-    /// `self * otherᵀ` without materializing the transpose (both operands
-    /// row-major, so every inner product streams two contiguous rows).
-    /// Parallel over row blocks of `self`; used for the backward pass
-    /// `dH = dZ · Wᵀ`.
+    /// `self * otherᵀ` without materializing the transpose (`other` is
+    /// n×k; the packed kernel reads it through its transposed view at pack
+    /// time).  Allocating parallel counterpart of the backward pass's
+    /// serial [`Matrix::matmul_nt_into`], same status as
+    /// [`Matrix::matmul_tn_par`].
     pub fn matmul_nt_par(&self, other: &Matrix, threads: usize) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_nt_par shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.rows);
-        const ROW_BLOCK: usize = 32;
-        let blocks = ((m + ROW_BLOCK - 1) / ROW_BLOCK).max(1);
-        let block_rows: Vec<Vec<f32>> =
-            crate::util::threadpool::parallel_map(blocks, threads.max(1), |bi| {
-                let r0 = bi * ROW_BLOCK;
-                let r1 = (r0 + ROW_BLOCK).min(m);
-                let mut out = vec![0.0f32; (r1 - r0) * n];
-                for (ri, i) in (r0..r1).enumerate() {
-                    let a_row = &self.data[i * k..(i + 1) * k];
-                    let o_row = &mut out[ri * n..(ri + 1) * n];
-                    for (j, o) in o_row.iter_mut().enumerate() {
-                        let b_row = &other.data[j * k..(j + 1) * k];
-                        let mut acc = 0.0f32;
-                        for (&a, &b) in a_row.iter().zip(b_row.iter()) {
-                            acc += a * b;
-                        }
-                        *o = acc;
-                    }
-                }
-                out
-            });
-        let mut data = Vec::with_capacity(m * n);
-        for r in block_rows {
-            data.extend_from_slice(&r);
-        }
-        Matrix::from_vec(m, n, data)
+        let mut out = Matrix::zeros(0, 0);
+        gemm::gemm(gemm::AOp::N(self), gemm::BOp::T(other), &mut out, threads);
+        out
     }
 
     /// Reshape in place to `rows × cols`, reusing the existing allocation
@@ -226,74 +132,31 @@ impl Matrix {
         self.data.resize(rows * cols, 0.0);
     }
 
-    /// `self * other` written into `out` (fully overwritten; same
-    /// k-ascending accumulation order as [`Matrix::matmul`], so results are
-    /// bit-identical to it).  Serial: the sharded L step parallelizes over
-    /// microbatches above this kernel, not inside it.
+    /// `self * other` written into `out` (fully overwritten; packed GEMM
+    /// microkernel, bit-identical to [`Matrix::matmul`]).  Serial: the
+    /// sharded L step parallelizes over microbatches above this kernel,
+    /// not inside it, and the persistent pool workers keep their packing
+    /// buffers warm across steps (zero steady-state allocations).
     pub fn matmul_into(&self, other: &Matrix, out: &mut Matrix) {
         assert_eq!(self.cols, other.rows, "matmul_into shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        out.reset(m, n);
-        out.data.fill(0.0);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let o_row = &mut out.data[i * n..(i + 1) * n];
-            for (kk, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[kk * n..(kk + 1) * n];
-                for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        gemm::gemm(gemm::AOp::N(self), gemm::BOp::N(other), out, 1);
     }
 
     /// `selfᵀ * other` written into `out` (`self`: r×m, `other`: r×n, out
     /// m×n, fully overwritten).  Accumulates the shared dimension r in
     /// ascending order per output element — deterministic and identical to
-    /// [`Matrix::matmul_tn_par`]'s per-element order.  Used for the
-    /// per-shard weight gradient `dW = Hᵀ · dZ`.
+    /// [`Matrix::matmul_tn_par`].  Used for the per-shard weight gradient
+    /// `dW = Hᵀ · dZ`.
     pub fn matmul_tn_into(&self, other: &Matrix, out: &mut Matrix) {
         assert_eq!(self.rows, other.rows, "matmul_tn_into shape mismatch");
-        let (r_dim, m, n) = (self.rows, self.cols, other.cols);
-        out.reset(m, n);
-        out.data.fill(0.0);
-        for r in 0..r_dim {
-            let a_row = &self.data[r * m..(r + 1) * m];
-            let b_row = &other.data[r * n..(r + 1) * n];
-            for (i, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let o_row = &mut out.data[i * n..(i + 1) * n];
-                for (o, &b) in o_row.iter_mut().zip(b_row.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        gemm::gemm(gemm::AOp::T(self), gemm::BOp::N(other), out, 1);
     }
 
-    /// `self * otherᵀ` written into `out` (both operands row-major; every
-    /// inner product streams two contiguous rows, k-ascending).  Used for
-    /// the per-shard backprop `dH = dZ · Wᵀ`.
+    /// `self * otherᵀ` written into `out` (`other`: n×k, fully
+    /// overwritten).  Used for the per-shard backprop `dH = dZ · Wᵀ`.
     pub fn matmul_nt_into(&self, other: &Matrix, out: &mut Matrix) {
         assert_eq!(self.cols, other.cols, "matmul_nt_into shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, other.rows);
-        out.reset(m, n);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let o_row = &mut out.data[i * n..(i + 1) * n];
-            for (j, o) in o_row.iter_mut().enumerate() {
-                let b_row = &other.data[j * k..(j + 1) * k];
-                let mut acc = 0.0f32;
-                for (&a, &b) in a_row.iter().zip(b_row.iter()) {
-                    acc += a * b;
-                }
-                *o = acc;
-            }
-        }
+        gemm::gemm(gemm::AOp::N(self), gemm::BOp::T(other), out, 1);
     }
 
     /// Squared Frobenius norm.
@@ -595,8 +458,11 @@ mod tests {
     }
 
     #[test]
-    fn matmul_par_zero_rows_of_a_skip_consistently() {
-        // the a == 0.0 skip must not change results vs serial
+    fn matmul_par_zero_entries_in_a_still_bit_match_serial() {
+        // exact zeros in A (ReLU activations, pruned weights) must not
+        // perturb the parallel/serial bit equality — historically the
+        // kernels skipped zero-a terms, and the packed kernel's padded
+        // lanes multiply by zero; both are ±0.0-addend-neutral
         let mut a = rand_matrix(40, 50, 5);
         for v in a.data.iter_mut().step_by(3) {
             *v = 0.0;

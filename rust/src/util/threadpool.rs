@@ -1,15 +1,46 @@
-//! Fixed-size thread pool with scoped parallel-for (rayon stand-in,
-//! substrate).  Used to run independent C steps of different compression
-//! tasks in parallel (the paper notes every task's C step is independent)
-//! and to parallelize the dataset generator.
+//! Persistent scoped worker pool (rayon/crossbeam stand-in, substrate).
+//!
+//! [`parallel_map`] / [`parallel_map_mut`] / [`tree_reduce_mut`] are the
+//! parallelism primitives of the whole codebase: independent C steps, the
+//! sharded L step's forward/backward and gradient reduce, the packed GEMM's
+//! row blocks, the dataset generator.  Through PR 4 each call spawned and
+//! joined fresh OS threads (~tens of µs), which bounded the sharded L-step
+//! speedup at small batches.  They now dispatch **borrowed** closures to a
+//! lazily-initialized persistent pool of parked workers:
+//!
+//! * **scoped semantics without `thread::scope`** — the caller enqueues a
+//!   lifetime-erased reference to the closure, participates in the work
+//!   loop itself, and blocks until every enqueued helper has finished
+//!   before returning, so borrows of the caller's stack stay valid (the
+//!   crossbeam-scope discipline, with the spawn/join replaced by
+//!   park/unpark of persistent workers);
+//! * **identical observable semantics** — ordered results, first worker
+//!   panic re-raised on the caller after all workers quiesce, work items
+//!   claimed from a shared atomic counter, and the pool stays usable after
+//!   a panic (workers catch unwinds and live on);
+//! * **determinism unaffected** — which thread claims an item never
+//!   influences any result; every deterministic contract (fixed shard
+//!   layout, fixed tree shape, fixed GEMM chains) lives above this layer;
+//! * **nested calls serialize** — a `parallel_map` issued from inside a
+//!   pool worker runs inline on that worker (same results, no deadlock),
+//!   so kernels are free to be parallel without tracking call depth.
+//!
+//! `benches/gemm_bench.rs` measures the dispatch overhead against a
+//! spawn+join baseline and records it in `BENCH_gemm.json`.
 
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// A simple channel-fed pool of worker threads.
+/// A simple channel-fed pool of worker threads for `'static` fire-and-forget
+/// jobs (the dataset generator's seeding path).  Scoped borrowing work goes
+/// through [`parallel_map`] and the shared persistent pool instead.
 pub struct ThreadPool {
     sender: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
@@ -53,17 +84,229 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Run `f(i)` for `i in 0..n` across up to `threads` scoped threads and
-/// collect results in order.  Panics propagate.  Uses `std::thread::scope`,
-/// so `f` may borrow from the caller.  `threads <= 1` runs inline with no
-/// spawn or slot bookkeeping (and no allocation beyond the result vector).
+// ---------------------------------------------------------------------------
+// Persistent scoped pool
+// ---------------------------------------------------------------------------
+
+/// Upper bound on persistent workers; requests beyond it run with fewer
+/// helpers (the work-claiming loop makes any worker count correct).
+const POOL_MAX_WORKERS: usize = 128;
+
+/// One dispatched parallel call: a lifetime-erased borrowed closure plus
+/// the claim/completion state shared between the caller and its helpers.
 ///
-/// With `threads > 1` each call spawns and joins fresh OS threads (~tens
-/// of µs); fine for C-step-sized work items, but a measurable tax on the
-/// native backend's per-train-step GEMMs.  A persistent scoped pool
-/// (crossbeam-style) would remove the churn — tracked as a future
-/// optimization since borrowing jobs can't ride the channel-fed
-/// [`ThreadPool`] above ('static bound).
+/// # Safety invariant
+///
+/// `ctx` points at a `&(dyn Fn(usize) + Sync)` that lives on the
+/// dispatching caller's stack.  It is dereferenced only inside
+/// [`run_items`], and the caller does not return from [`dispatch`] until
+/// `finished == wanted` — i.e. until every helper that will ever touch
+/// this `Call` has left `run_items`.  That wait happens on both the normal
+/// and the panic path, which is exactly the guarantee `thread::scope`
+/// provides for scoped borrows.
+struct Call {
+    run: unsafe fn(*const (), usize),
+    ctx: *const (),
+    n: usize,
+    next: AtomicUsize,
+    /// Queue copies enqueued for this call; `finished` reaches this count
+    /// through helper completions plus caller-side reclamation of copies
+    /// no worker popped (each copy is accounted exactly once).
+    wanted: usize,
+    done: Mutex<CallDone>,
+    done_cv: Condvar,
+}
+
+struct CallDone {
+    finished: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+// SAFETY: `ctx` is only dereferenced through `run`, which reconstructs the
+// original `&(dyn Fn(usize) + Sync)` — a type that is safe to share across
+// threads by its `Sync` bound.  The dispatch protocol above keeps the
+// referent alive for every dereference.
+unsafe impl Send for Call {}
+unsafe impl Sync for Call {}
+
+struct Pool {
+    queue: Mutex<VecDeque<Arc<Call>>>,
+    work_cv: Condvar,
+    spawned: Mutex<usize>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+thread_local! {
+    /// Set once on pool workers: nested dispatches from inside a worker
+    /// run inline instead of re-entering the pool (no deadlock, same
+    /// results).
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        queue: Mutex::new(VecDeque::new()),
+        work_cv: Condvar::new(),
+        spawned: Mutex::new(0),
+    })
+}
+
+/// Grow the pool to at least `want` workers (capped); returns how many
+/// exist.  Workers are detached: they park on the queue condvar for the
+/// process lifetime, which is what keeps their thread-local GEMM packing
+/// buffers warm across train steps.
+fn ensure_workers(p: &'static Pool, want: usize) -> usize {
+    let want = want.min(POOL_MAX_WORKERS);
+    let mut spawned = p.spawned.lock().unwrap();
+    while *spawned < want {
+        let builder = thread::Builder::new().name(format!("lc-pool-{spawned}"));
+        match builder.spawn(move || worker_loop(p)) {
+            Ok(_) => *spawned += 1,
+            Err(_) => break, // resource limit: run with what we have
+        }
+    }
+    *spawned
+}
+
+fn worker_loop(p: &'static Pool) {
+    IS_POOL_WORKER.with(|w| w.set(true));
+    loop {
+        let call = {
+            let guard = p.queue.lock().unwrap();
+            let mut guard = p.work_cv.wait_while(guard, |q| q.is_empty()).unwrap();
+            // non-empty is re-checked under the lock by wait_while, so the
+            // pop cannot race with another worker draining the queue
+            guard.pop_front().unwrap()
+        };
+        run_items(&call);
+        let mut done = call.done.lock().unwrap();
+        done.finished += 1;
+        if done.finished == call.wanted {
+            call.done_cv.notify_all();
+        }
+    }
+}
+
+/// Claim and run items until the call's counter is exhausted.  A panicking
+/// item stops this thread's claiming loop and parks the payload for the
+/// caller; other threads keep draining the remaining items.
+fn run_items(call: &Call) {
+    let result = catch_unwind(AssertUnwindSafe(|| loop {
+        let i = call.next.fetch_add(1, Ordering::Relaxed);
+        if i >= call.n {
+            break;
+        }
+        // SAFETY: see the `Call` invariant — `ctx` outlives every
+        // `run_items` by the dispatch completion protocol.
+        unsafe { (call.run)(call.ctx, i) };
+    }));
+    if let Err(payload) = result {
+        let mut done = call.done.lock().unwrap();
+        if done.panic.is_none() {
+            done.panic = Some(payload);
+        }
+    }
+}
+
+/// Run `f(0..n)` across the caller plus up to `threads - 1` pool helpers.
+/// Blocks until all helpers quiesce; re-raises the first worker panic.
+fn dispatch(n: usize, threads: usize, f: &(dyn Fn(usize) + Sync)) {
+    let inline = IS_POOL_WORKER.with(|w| w.get());
+    let helpers = if inline { 0 } else { threads.saturating_sub(1).min(n.saturating_sub(1)) };
+    let helpers = if helpers == 0 { 0 } else { ensure_workers(pool(), helpers).min(helpers) };
+    if helpers == 0 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let p = pool();
+    // the fat reference itself is the pointee: keep it alive on this frame
+    let f_ref: &(dyn Fn(usize) + Sync) = f;
+    unsafe fn thunk(ctx: *const (), i: usize) {
+        // SAFETY: `ctx` was created from `&f_ref` below and `f_ref` lives
+        // until `dispatch` returns, which the completion wait guarantees
+        // happens only after the last dereference.
+        let f = unsafe { *(ctx as *const &(dyn Fn(usize) + Sync)) };
+        f(i);
+    }
+    let call = Arc::new(Call {
+        run: thunk,
+        ctx: (&raw const f_ref).cast(),
+        n,
+        next: AtomicUsize::new(0),
+        wanted: helpers,
+        done: Mutex::new(CallDone { finished: 0, panic: None }),
+        done_cv: Condvar::new(),
+    });
+    {
+        let mut q = p.queue.lock().unwrap();
+        for _ in 0..helpers {
+            q.push_back(Arc::clone(&call));
+        }
+    }
+    // one wakeup per enqueued copy — never rouse the whole parked pool for
+    // a small dispatch (a woken worker re-checks emptiness under the lock
+    // before re-parking, so no copy can be stranded by a missed wakeup)
+    for _ in 0..helpers {
+        p.work_cv.notify_one();
+    }
+
+    // the caller is a worker too (and usually claims most items)
+    run_items(&call);
+
+    // Reclaim queue copies no worker popped yet: the item counter is the
+    // real work bound, so an unpopped copy is a guaranteed no-op.  Counting
+    // it finished here means the wait below only covers helpers actually
+    // running items — not parked workers still waking up, and never other
+    // calls' long-running work queued ahead of ours.  A copy is either
+    // reclaimed here or popped by a worker, never both (each happens under
+    // the queue lock), so `finished` stays exact.
+    let reclaimed = {
+        let mut q = p.queue.lock().unwrap();
+        let before = q.len();
+        q.retain(|c| !Arc::ptr_eq(c, &call));
+        before - q.len()
+    };
+    let mut done = call.done.lock().unwrap();
+    done.finished += reclaimed;
+    let mut done = call.done_cv.wait_while(done, |d| d.finished < call.wanted).unwrap();
+    if let Some(payload) = done.panic.take() {
+        drop(done);
+        resume_unwind(payload);
+    }
+}
+
+/// Shared-slice writer for ordered results: each index is claimed by
+/// exactly one thread (the dispatch counter), so disjoint `&mut` access is
+/// race-free; the completion handshake publishes the writes to the caller.
+struct SendSlice<T> {
+    ptr: *mut T,
+    len: usize,
+}
+
+unsafe impl<T: Send> Send for SendSlice<T> {}
+unsafe impl<T: Send> Sync for SendSlice<T> {}
+
+impl<T> SendSlice<T> {
+    fn new(slice: &mut [T]) -> Self {
+        Self { ptr: slice.as_mut_ptr(), len: slice.len() }
+    }
+
+    /// Pointer to slot `i`; callers may form `&mut` only under the
+    /// one-writer-per-index dispatch protocol.
+    fn slot(&self, i: usize) -> *mut T {
+        debug_assert!(i < self.len);
+        self.ptr.wrapping_add(i)
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` across up to `threads` workers of the
+/// persistent pool (caller included) and collect results in order.  Panics
+/// propagate.  `f` may borrow from the caller: the call does not return
+/// until every helper touching it has finished (scope semantics on a
+/// persistent pool).  `threads <= 1` runs inline with no dispatch at all.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -74,36 +317,25 @@ where
         return Vec::new();
     }
     if threads == 1 {
-        // inline: no spawn/join churn, no slot bookkeeping, and the
-        // steady-state single-thread path stays allocation-free beyond
-        // the result vector itself
+        // inline: no dispatch, and the steady-state single-thread path
+        // stays allocation-free beyond the result vector itself
         return (0..n).map(f).collect();
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let out_slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
-    thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let v = f(i);
-                **out_slots[i].lock().unwrap() = Some(v);
-            });
-        }
+    let slots = SendSlice::new(&mut out);
+    dispatch(n, threads, &|i| {
+        let v = f(i);
+        // SAFETY: index `i` is claimed exactly once across all threads
+        unsafe { *slots.slot(i) = Some(v) };
     });
-    drop(out_slots);
     out.into_iter().map(|v| v.unwrap()).collect()
 }
 
 /// Like [`parallel_map`], but each work item gets exclusive `&mut` access
-/// to its slot of `items` (every index is visited exactly once, so the
-/// per-slot mutexes never contend).  Used for fused in-place passes over
-/// per-layer state — e.g. the LC coordinator's multiplier update, which
-/// mutates each layer's λ while reducing that layer's feasibility — and
-/// for handing each parallel C-step worker its own scratch workspace.
+/// to its slot of `items` (every index is visited exactly once).  Used for
+/// fused in-place passes over per-layer state — e.g. the LC coordinator's
+/// multiplier update, the sharded L step's forward/backward over gradient
+/// shards, and the packed GEMM's output row blocks.
 pub fn parallel_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -119,25 +351,15 @@ where
         return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
     }
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let item_slots: Vec<Mutex<&mut T>> = items.iter_mut().map(Mutex::new).collect();
-    let out_slots: Vec<Mutex<&mut Option<R>>> = out.iter_mut().map(Mutex::new).collect();
-    thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let mut item = item_slots[i].lock().unwrap();
-                let v = f(i, &mut **item);
-                drop(item);
-                **out_slots[i].lock().unwrap() = Some(v);
-            });
-        }
+    let item_slots = SendSlice::new(items);
+    let out_slots = SendSlice::new(&mut out);
+    dispatch(n, threads, &|i| {
+        // SAFETY: index `i` is claimed exactly once across all threads,
+        // giving this thread exclusive access to both slots
+        let item = unsafe { &mut *item_slots.slot(i) };
+        let v = f(i, item);
+        unsafe { *out_slots.slot(i) = Some(v) };
     });
-    drop(out_slots);
-    drop(item_slots);
     out.into_iter().map(|v| v.unwrap()).collect()
 }
 
@@ -162,7 +384,7 @@ where
     let mut stride = 1;
     while stride < n {
         let span = 2 * stride;
-        // a level with a single pair gains nothing from spawning
+        // a level with a single pair gains nothing from dispatching
         if threads <= 1 || n <= span {
             let mut i = 0;
             while i + stride < n {
@@ -258,8 +480,7 @@ mod tests {
         // a non-commutative fold records the exact pair order; every thread
         // count must produce the identical tree
         let build = |threads: usize, n: usize| {
-            let mut items: Vec<String> =
-                (0..n).map(|i| i.to_string()).collect();
+            let mut items: Vec<String> = (0..n).map(|i| i.to_string()).collect();
             tree_reduce_mut(&mut items, threads, |dst, src| {
                 let joined = format!("({dst}+{src})");
                 *dst = joined;
@@ -278,9 +499,9 @@ mod tests {
 
     #[test]
     fn parallel_map_propagates_worker_panics() {
-        // std::thread::scope re-raises panics from scoped workers when the
-        // scope exits, so a panicking closure must abort the whole map —
-        // never return a partial result vector.
+        // the caller must re-raise a worker panic — never return a partial
+        // result vector — and only after every helper has quiesced (the
+        // scoped-borrow guarantee)
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             parallel_map(16, 4, |i| {
                 if i == 7 {
@@ -290,7 +511,58 @@ mod tests {
             })
         }));
         assert!(result.is_err(), "worker panic must propagate to the caller");
-        // and the pool stays usable afterwards (fresh scope per call)
+        // and the pool stays usable afterwards (workers survive the unwind)
         assert_eq!(parallel_map(4, 4, |i| i), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn helpers_are_persistent_pool_threads() {
+        // every item runs either on the caller or on a named pool worker —
+        // never on an ad-hoc spawned thread
+        let caller = thread::current().id();
+        for _ in 0..8 {
+            let where_run = parallel_map(64, 4, |_| {
+                (thread::current().id(), thread::current().name().map(String::from))
+            });
+            for (id, name) in where_run {
+                assert!(
+                    id == caller || name.as_deref().is_some_and(|n| n.starts_with("lc-pool-")),
+                    "item ran on unexpected thread {name:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nested_dispatch_from_worker_runs_inline_and_correct() {
+        // a parallel_map issued inside a pool worker must serialize on that
+        // worker (no deadlock) and still produce correct, ordered results
+        let out = parallel_map(8, 4, |i| {
+            let inner = parallel_map(5, 4, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn repeated_dispatch_does_not_grow_the_pool() {
+        // warm at the highest thread count any test uses (8): the pool
+        // reaches its high-water mark, after which repeated dispatch must
+        // reuse the same parked workers — the spawn+join churn this pool
+        // exists to remove
+        for _ in 0..5 {
+            parallel_map(32, 8, |i| i);
+        }
+        let warm = *pool().spawned.lock().unwrap();
+        assert!(warm >= 1, "warm dispatch at 8 threads must have spawned helpers");
+        for _ in 0..50 {
+            parallel_map(32, 8, |i| i);
+        }
+        assert_eq!(
+            *pool().spawned.lock().unwrap(),
+            warm,
+            "dispatch must not spawn threads once the pool is warm"
+        );
     }
 }

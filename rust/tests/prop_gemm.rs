@@ -1,0 +1,165 @@
+//! Property suite for the packed GEMM microkernel (`lc::linalg::gemm`).
+//!
+//! Pins the three contracts every matmul in the codebase now rests on:
+//!
+//! 1. **Exactness** — the packed kernel reproduces a naive ascending-k
+//!    triple loop *bit for bit* on ragged shapes (1×1, prime dims, tall,
+//!    wide, inner-dim-1), for all three transpose variants and the
+//!    codebook-gather view.  Not a tolerance check: the kernel's register
+//!    tiles fold each output element's products in the same order as the
+//!    naive loop, so any deviation is a bug.
+//! 2. **Thread-count bit-determinism** — every parallel entry point is
+//!    bit-identical across threads 1/2/4/8 (the PR-4 L-step invariant,
+//!    now carried by the kernel's fixed row-block layout).
+//! 3. **Alloc-free steady state** — repeated same-shape calls stop
+//!    growing the thread-local pack buffers after the first call
+//!    (`pack_grow_events`, the `Workspace::grow_events` idiom).
+
+use lc::linalg::gemm::{self, pack_grow_events, AOp, BOp};
+use lc::tensor::kernels::matmul_gather;
+use lc::tensor::Matrix;
+use lc::util::rng::Xoshiro256;
+
+fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Xoshiro256::new(seed);
+    let mut m = Matrix::zeros(rows, cols);
+    rng.fill_normal(&mut m.data, 0.0, 1.0);
+    m
+}
+
+/// Naive ascending-k single-accumulator triple loop — the reference chain.
+fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += a.at(i, kk) * b.at(kk, j);
+            }
+            out.data[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Shape zoo: 1×1, prime dims, exact-tile, one-off-tile, tall, wide,
+/// inner-dim-1, single-row, single-column, and a realistically sized case
+/// spanning several row blocks.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (3, 5, 7),
+    (8, 8, 8),
+    (9, 7, 9),
+    (257, 8, 3), // tall
+    (3, 8, 131), // wide
+    (17, 1, 9), // inner-dim-1
+    (1, 19, 11), // single output row
+    (11, 19, 1), // single output column
+    (70, 64, 9), // several row strips
+    (65, 300, 33), // several ROW_BLOCKs, ragged everywhere
+];
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn packed_equals_naive_bitwise_all_variants() {
+    for &(m, k, n) in SHAPES {
+        let a = rand_matrix(m, k, 31 * m as u64 + k as u64);
+        let b = rand_matrix(k, n, 77 * n as u64 + k as u64);
+        let want = naive(&a, &b);
+
+        assert_eq!(bits(&a.matmul(&b).data), bits(&want.data), "matmul {m}x{k}x{n}");
+
+        let at = a.transpose(); // stored k×m, logical A via transposed view
+        let got_tn = at.matmul_tn_par(&b, 1);
+        assert_eq!(bits(&got_tn.data), bits(&want.data), "tn {m}x{k}x{n}");
+
+        let bt = b.transpose(); // stored n×k, logical B via transposed view
+        let got_nt = a.matmul_nt_par(&bt, 1);
+        assert_eq!(bits(&got_nt.data), bits(&want.data), "nt {m}x{k}x{n}");
+
+        // the `_into` entry points write through the same kernel
+        let mut out = rand_matrix(3, 3, 999); // stale shape: must be reshaped
+        a.matmul_into(&b, &mut out);
+        assert_eq!(bits(&out.data), bits(&want.data), "into {m}x{k}x{n}");
+        at.matmul_tn_into(&b, &mut out);
+        assert_eq!(bits(&out.data), bits(&want.data), "tn_into {m}x{k}x{n}");
+        a.matmul_nt_into(&bt, &mut out);
+        assert_eq!(bits(&out.data), bits(&want.data), "nt_into {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn packed_is_bit_identical_across_thread_counts() {
+    for &(m, k, n) in SHAPES {
+        let a = rand_matrix(m, k, 5000 + m as u64);
+        let b = rand_matrix(k, n, 6000 + n as u64);
+        let at = a.transpose();
+        let bt = b.transpose();
+        let nn1 = a.matmul_par(&b, 1);
+        let tn1 = at.matmul_tn_par(&b, 1);
+        let nt1 = a.matmul_nt_par(&bt, 1);
+        for threads in [2usize, 4, 8] {
+            let ctx = format!("{m}x{k}x{n} threads={threads}");
+            assert_eq!(bits(&a.matmul_par(&b, threads).data), bits(&nn1.data), "nn {ctx}");
+            assert_eq!(bits(&at.matmul_tn_par(&b, threads).data), bits(&tn1.data), "tn {ctx}");
+            assert_eq!(bits(&a.matmul_nt_par(&bt, threads).data), bits(&nt1.data), "nt {ctx}");
+        }
+    }
+}
+
+#[test]
+fn gather_view_equals_naive_bitwise_and_across_threads() {
+    // all-nonzero codebook: matmul_gather routes through the packed kernel
+    let (k, n) = (29, 23);
+    let codebook = vec![-1.25f32, 0.5, 0.125, 2.0, -0.375];
+    let mut rng = Xoshiro256::new(17);
+    let assignments: Vec<u32> = (0..k * n).map(|_| rng.below(codebook.len()) as u32).collect();
+    let gathered: Vec<f32> = assignments.iter().map(|&a| codebook[a as usize]).collect();
+    let dense = Matrix::from_vec(k, n, gathered);
+    let x = rand_matrix(41, k, 18);
+    let want = naive(&x, &dense);
+    for threads in [1usize, 2, 4, 8] {
+        let got = matmul_gather(&x, k, n, &codebook, &assignments, threads);
+        assert_eq!(bits(&got.data), bits(&want.data), "threads={threads}");
+    }
+}
+
+#[test]
+fn raw_gemm_entry_matches_methods() {
+    // the AOp/BOp entry point used by the kernels module is the same code
+    // path as the Matrix methods — sanity-pin the plumbing
+    let a = rand_matrix(13, 17, 91);
+    let b = rand_matrix(17, 9, 92);
+    let mut out = Matrix::zeros(0, 0);
+    gemm::gemm(AOp::N(&a), BOp::N(&b), &mut out, 2);
+    assert_eq!(bits(&out.data), bits(&a.matmul(&b).data));
+}
+
+#[test]
+fn steady_state_same_shape_calls_do_not_grow_pack_buffers() {
+    let a = rand_matrix(33, 300, 1);
+    let b = rand_matrix(300, 100, 2);
+    let at = a.transpose();
+    let bt = b.transpose();
+    let mut out = Matrix::zeros(0, 0);
+    // serial path only: the steady-state contract is per-thread (pool
+    // workers hold their own recycled buffers)
+    a.matmul_into(&b, &mut out);
+    at.matmul_tn_into(&b, &mut out);
+    a.matmul_nt_into(&bt, &mut out);
+    let warm = pack_grow_events();
+    for _ in 0..10 {
+        a.matmul_into(&b, &mut out);
+        at.matmul_tn_into(&b, &mut out);
+        a.matmul_nt_into(&bt, &mut out);
+    }
+    assert_eq!(
+        pack_grow_events(),
+        warm,
+        "steady-state same-shape GEMMs must not grow the pack buffers"
+    );
+}

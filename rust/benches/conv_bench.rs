@@ -1,0 +1,300 @@
+//! Convolution + streaming benchmarks (`cargo bench --bench conv_bench`):
+//! the measurements behind the layer-op IR and the chunked data stream.
+//!
+//! Four claims, all recorded in `BENCH_conv.json`:
+//!
+//! 1. **im2col-GEMM throughput.** Each lenet5-conv conv layer lowered onto
+//!    the packed GEMM microkernel, reported in GFLOP/s at the registry
+//!    batch size.
+//! 2. **Streaming loader throughput.** Rows/sec through
+//!    `data::stream::for_each_batch`, with the observed chunk-residency
+//!    high-water mark asserted ≤ 2 (the double-buffer cap).
+//! 3. **Allocation-free conv L step.** The steady-state train step of the
+//!    lenet5-conv registry entry — im2col forward, col2im backward, shard
+//!    tree-reduce, fused penalty update — performs **zero** heap
+//!    allocations at `threads = 1` once the workspace is warm.
+//! 4. **Streaming LC e2e on a >10M-weight conv model.** vgg-small
+//!    (10.77M weights) runs one full LC step — streamed L epoch, C step,
+//!    multipliers, final evals — with training data residency capped at
+//!    two chunks, bit-identical across thread counts, and the saved LCCZ
+//!    checkpoint's compressed execution passes the infer equivalence gate
+//!    against the dense-Δ(Θ) eval.
+//!
+//! `LCC_BENCH_QUICK=1` bounds iteration counts and model scale for CI
+//! smoke runs.
+
+use std::time::Instant;
+
+use lc::bench::{alloc_counts, write_bench_json, Bencher, CountingAlloc, Record};
+use lc::compress::prune::ConstraintL0;
+use lc::compress::quantize::AdaptiveQuant;
+use lc::compress::task::{TaskSet, TaskSpec};
+use lc::compress::view::View;
+use lc::data::stream::{self, StreamConfig};
+use lc::data::synth;
+use lc::lc::schedule::{LrSchedule, MuSchedule};
+use lc::lc::{LcAlgorithm, LcConfig};
+use lc::linalg::conv;
+use lc::models::checkpoint::{load_compressed, save_compressed, CompressedCheckpoint};
+use lc::models::{lookup, OpKind, ParamState};
+use lc::runtime::trainer::{EvalDriver, TrainDriver};
+use lc::runtime::Runtime;
+use lc::tensor::Matrix;
+use lc::util::rng::Xoshiro256;
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn main() {
+    let quick = std::env::var("LCC_BENCH_QUICK").is_ok();
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut records: Vec<Record> = Vec::new();
+
+    // --- 1. im2col-GEMM GFLOP/s at lenet5-conv shapes -----------------------
+    {
+        let spec = lookup("lenet5-conv").unwrap();
+        Bencher::header(&format!("im2col + packed GEMM (batch {})", spec.batch));
+        let mut rng = Xoshiro256::new(3);
+        for (l, op) in spec.ops.iter().enumerate() {
+            let OpKind::Conv2d(cs) = op.kind else { continue };
+            let mut x = vec![0.0f32; spec.batch * cs.in_elems()];
+            rng.fill_normal(&mut x, 0.0, 1.0);
+            let mut w = Matrix::zeros(cs.patch_len(), cs.out_ch);
+            rng.fill_normal(&mut w.data, 0.0, 0.1);
+            let mut col = Matrix::zeros(0, 0);
+            let stats = b.bench(&format!("layer {l}: {}", op.describe()), || {
+                conv::im2col(&x, spec.batch, &cs, &mut col);
+                std::hint::black_box(col.matmul_par(&w, 4));
+            });
+            let macs = (spec.batch * cs.spatial() * cs.patch_len() * cs.out_ch) as f64;
+            let gflops = 2.0 * macs / stats.mean_ns;
+            println!("    -> {gflops:.2} GFLOP/s");
+            records.push(Record {
+                bench: "im2col_gemm".into(),
+                fields: vec![
+                    ("op".into(), format!("{:?}", op.describe())),
+                    ("batch".into(), spec.batch.to_string()),
+                    ("macs".into(), format!("{macs:.0}")),
+                    ("mean_ms".into(), format!("{:.3}", stats.mean_ns / 1e6)),
+                    ("gflops".into(), format!("{gflops:.3}")),
+                ],
+            });
+        }
+    }
+
+    // --- 2. streaming loader rows/sec + residency cap -----------------------
+    {
+        let total = if quick { 2048usize } else { 8192 };
+        let cfg = StreamConfig { total, chunk: 1024, seed: 17 };
+        let batch = 128usize;
+        let mut rng = Xoshiro256::new(5);
+        let mut checksum = 0.0f64;
+        let t0 = Instant::now();
+        let stats = stream::for_each_batch(&cfg, batch, &mut rng, |x, y| {
+            // touch the data so synthesis can't be optimized away
+            checksum += x[0] as f64 + y[0] as f64;
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        std::hint::black_box(checksum);
+        assert!(
+            stats.max_resident_chunks <= 2,
+            "streaming loader exceeded the two-chunk residency cap: {}",
+            stats.max_resident_chunks
+        );
+        let rows_per_sec = stats.rows as f64 / secs.max(1e-9);
+        println!(
+            "streaming loader: {} rows in {:.1} chunks, {:.1}k rows/s, max resident {} chunks",
+            stats.rows,
+            stats.chunks as f64,
+            rows_per_sec / 1e3,
+            stats.max_resident_chunks
+        );
+        records.push(Record {
+            bench: "stream_loader".into(),
+            fields: vec![
+                ("total_rows".into(), total.to_string()),
+                ("chunk_rows".into(), cfg.chunk.to_string()),
+                ("batch".into(), batch.to_string()),
+                ("rows_consumed".into(), stats.rows.to_string()),
+                ("rows_per_sec".into(), format!("{rows_per_sec:.1}")),
+                ("max_resident_chunks".into(), stats.max_resident_chunks.to_string()),
+            ],
+        });
+    }
+
+    // --- 3. allocation audit of the steady-state conv L step ----------------
+    {
+        let spec = lookup("lenet5-conv").unwrap();
+        let driver = TrainDriver::native_for_spec(&spec, 1);
+        let mut state = ParamState::init(&spec, 42);
+        let mut rng = Xoshiro256::new(7);
+        let mut x = vec![0.0f32; spec.batch * spec.widths[0]];
+        rng.fill_normal(&mut x, 0.0, 1.0);
+        let classes = *spec.widths.last().unwrap();
+        let y: Vec<i32> = (0..spec.batch).map(|_| rng.below(classes) as i32).collect();
+        let deltas: Vec<Matrix> = (0..spec.n_layers())
+            .map(|l| {
+                let (m, n) = spec.layer_shape(l);
+                let mut d = Matrix::zeros(m, n);
+                rng.fill_normal(&mut d.data, 0.0, 0.05);
+                d
+            })
+            .collect();
+        let lambdas: Vec<Matrix> = (0..spec.n_layers())
+            .map(|l| {
+                let (m, n) = spec.layer_shape(l);
+                Matrix::zeros(m, n)
+            })
+            .collect();
+        let mu = vec![1e-2f32; spec.n_layers()];
+        // warm-up: first step shapes the workspace (incl. per-shard im2col
+        // scratch), second proves reuse
+        for _ in 0..2 {
+            driver.step(&mut state, &x, &y, &deltas, &lambdas, &mu, 0.05).unwrap();
+        }
+        let iters = if quick { 5u64 } else { 25 };
+        let (a0, b0) = alloc_counts();
+        for _ in 0..iters {
+            std::hint::black_box(
+                driver.step(&mut state, &x, &y, &deltas, &lambdas, &mu, 0.05).unwrap(),
+            );
+        }
+        let (a1, b1) = alloc_counts();
+        let allocs_per_step = (a1 - a0) as f64 / iters as f64;
+        println!(
+            "conv L step steady state ({iters} steps, threads=1): {allocs_per_step:.2} \
+             allocs/step, {:.1} bytes/step",
+            (b1 - b0) as f64 / iters as f64
+        );
+        assert_eq!(a1 - a0, 0, "steady-state conv L step must be allocation-free at threads=1");
+        records.push(Record {
+            bench: "conv_l_step_allocs".into(),
+            fields: vec![
+                ("model".into(), "\"lenet5-conv\"".into()),
+                ("iters".into(), iters.to_string()),
+                ("threads".into(), "1".into()),
+                ("allocs_per_step".into(), format!("{allocs_per_step:.3}")),
+                ("allocation_free".into(), (a1 - a0 == 0).to_string()),
+            ],
+        });
+    }
+
+    // --- 4. vgg-small streaming LC step + infer equivalence gate ------------
+    {
+        let spec = lookup("vgg-small").unwrap();
+        assert!(spec.n_weights() > 10_000_000, "vgg-small must exceed 10M weights");
+        // two chunks of 128 = 4 batches of 64 per L epoch; never more than
+        // two chunks (≈ 2·128·784 floats of training data) resident
+        let total = if quick { 128usize } else { 256 };
+        let train_stream = StreamConfig { total, chunk: 128, seed: 11 };
+        let test = synth::generate(128, 12, 4);
+        let tasks = || {
+            TaskSet::new(vec![
+                TaskSpec {
+                    name: "quant-convs".into(),
+                    layers: vec![0, 1, 2],
+                    view: View::Vector,
+                    compression: Box::new(AdaptiveQuant::new(6)),
+                },
+                TaskSpec {
+                    name: "prune-fc".into(),
+                    layers: vec![3],
+                    view: View::Vector,
+                    compression: Box::new(ConstraintL0 { kappa: 500_000 }),
+                },
+            ])
+        };
+        let run = |threads: usize| {
+            let mut rt = Runtime::native_with_threads(threads);
+            let cfg = LcConfig {
+                mu: MuSchedule { mu0: 1e-3, growth: 1.5, steps: 1 },
+                lr: LrSchedule { lr0: 0.02, decay: 0.98 },
+                epochs_per_step: 1,
+                first_step_epochs: None,
+                use_al: true,
+                seed: 23,
+                threads,
+                eval_every: 0,
+                quiet: true,
+            };
+            let alg = LcAlgorithm::new(&mut rt, spec.clone(), tasks(), cfg).unwrap();
+            let t0 = Instant::now();
+            let out = alg.run_stream(ParamState::init(&spec, 1), &train_stream, &test).unwrap();
+            (out, t0.elapsed().as_secs_f64())
+        };
+
+        Bencher::header(&format!(
+            "vgg-small streaming LC step ({} weights, {} streamed rows)",
+            spec.n_weights(),
+            total
+        ));
+        let (want, secs1) = run(1);
+        println!("threads=1: {secs1:.2}s, final test err {:.2}%", want.final_test.error * 100.0);
+        let thread_set: &[usize] = if quick { &[2] } else { &[2, 4] };
+        for &threads in thread_set {
+            let (got, secs) = run(threads);
+            for l in 0..spec.n_layers() {
+                assert_eq!(
+                    bits(&got.compressed_state.weights[l].data),
+                    bits(&want.compressed_state.weights[l].data),
+                    "streamed compressed weights[{l}] diverge at threads={threads}"
+                );
+            }
+            println!("threads={threads}: {secs:.2}s, bit-identical to threads=1");
+        }
+
+        // infer equivalence gate: LCCZ roundtrip, compressed execution vs
+        // the dense-Δ(Θ) eval (same gate `lcc infer --expect` applies)
+        let ck = CompressedCheckpoint::from_lc(
+            &spec,
+            &tasks(),
+            &want.thetas,
+            &want.compressed_state,
+        );
+        let path = std::env::temp_dir().join("conv_bench_vgg_small.lccz");
+        save_compressed(&ck, &path).unwrap();
+        let model = load_compressed(&path).unwrap().to_model(spec.eval_batch).unwrap();
+        model.validate().unwrap();
+        let _ = std::fs::remove_file(&path);
+        let eval = EvalDriver::native_for_spec(&spec, 4);
+        let dense = eval.eval(&want.compressed_state, &test).unwrap();
+        let compressed = eval.eval_compressed(&model, &test).unwrap();
+        assert_eq!(
+            dense.error, compressed.error,
+            "compressed execution must reproduce dense-Δ(Θ) argmax decisions"
+        );
+        assert!(
+            (dense.mean_loss - compressed.mean_loss).abs()
+                <= 1e-5 * dense.mean_loss.abs().max(1.0),
+            "compressed loss {} vs dense {}",
+            compressed.mean_loss,
+            dense.mean_loss
+        );
+        println!(
+            "infer gate: compressed exec == dense Δ(Θ) (err {:.2}%, {} -> {} MACs/example)",
+            compressed.error * 100.0,
+            spec.flops_dense(),
+            model.flops_per_example()
+        );
+        records.push(Record {
+            bench: "vgg_small_stream_lc".into(),
+            fields: vec![
+                ("model".into(), "\"vgg-small\"".into()),
+                ("n_weights".into(), spec.n_weights().to_string()),
+                ("streamed_rows".into(), total.to_string()),
+                ("chunk_rows".into(), train_stream.chunk.to_string()),
+                ("step_secs_t1".into(), format!("{secs1:.3}")),
+                ("bit_identical".into(), "true".into()),
+                ("infer_gate".into(), "true".into()),
+                ("final_test_err".into(), format!("{:.4}", want.final_test.error)),
+                ("macs_per_example".into(), model.flops_per_example().to_string()),
+            ],
+        });
+    }
+
+    write_bench_json("BENCH_conv.json", &records);
+}

@@ -146,6 +146,7 @@ fn build_models(sc: &Scenario) -> (CompressedModel, CompressedModel) {
         .collect();
     let mk = |layers| CompressedModel {
         name: format!("{}-{}", sc.scheme, sc.config),
+        ops: lc::models::mlp_ops(&WIDTHS),
         widths: WIDTHS.to_vec(),
         eval_batch: BATCH,
         layers,

@@ -41,12 +41,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 const WIDTHS: [usize; 4] = [784, 500, 300, 10];
 
 fn spec() -> ModelSpec {
-    ModelSpec {
-        name: "lenet300-wide".into(),
-        widths: WIDTHS.to_vec(),
-        batch: 128,
-        eval_batch: 512,
-    }
+    ModelSpec::mlp("lenet300-wide", &WIDTHS, 128, 512)
 }
 
 fn tasks() -> TaskSet {

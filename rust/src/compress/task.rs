@@ -6,6 +6,11 @@
 //! Δ buffers.  Tasks are independent (their C steps run in parallel in the
 //! coordinator) and must not overlap; layers not covered by any task train
 //! unregularized (their μ_l is 0 in the L step).
+//!
+//! Tasks see only the *lowered* weight matrices (`&[Matrix]`), never the
+//! layer ops: a conv2d layer's `(ic·kh·kw) × oc` im2col matrix gathers,
+//! compresses, and scatters exactly like a dense layer of the same shape,
+//! so every C-step scheme applies to convolutions unchanged.
 
 use super::view::{View, ViewData};
 use super::{CContext, Compression, Theta};

@@ -6,7 +6,13 @@
 //! so the LeNet300-style reference nets reach a few-percent test error —
 //! the same regime as LeNet300/MNIST in the paper.  See DESIGN.md
 //! "Substitutions".
+//!
+//! Datasets larger than memory stream through `stream`: counter-based
+//! sample seeding in `synth` makes every chunk independently addressable,
+//! so a producer thread double-buffers fixed-size chunks past a consumer
+//! that never holds more than two at once.
 
+pub mod stream;
 pub mod synth;
 
 /// An in-memory classification dataset of flat f32 images.

@@ -1,0 +1,258 @@
+//! Chunked streaming dataset loader: train on arbitrarily long synthetic
+//! streams while holding **at most two chunks** of data in memory.
+//!
+//! A producer thread synthesizes fixed-size [`Dataset`] chunks via
+//! [`synth::generate_range`] (counter-based seeding makes every chunk
+//! independently addressable) and hands them to the consumer over a
+//! rendezvous channel.  The zero-capacity channel *is* the double buffer:
+//! while the consumer trains on chunk `c`, the producer is synthesizing
+//! chunk `c + 1` and then blocks in `send` until the consumer asks for it.
+//! Residency is therefore capped at two chunks by construction, and
+//! [`StreamStats::max_resident_chunks`] reports the observed high-water
+//! mark so tests and benches can assert the cap.
+//!
+//! Determinism: chunk contents depend only on `(seed, chunk index)`, the
+//! producer synthesizes serially (`threads = 1`), and batch order within a
+//! chunk is drawn from the *caller's* rng on the consumer side — so the
+//! exact sequence of `(x, y)` batches is a function of `(cfg, batch, rng
+//! state)` alone, independent of how many worker threads the training
+//! backend uses.  This is what lets the streaming L step keep the
+//! bit-identical-across-thread-counts contract.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use super::{synth, BatchIter, Dataset};
+use crate::util::rng::Xoshiro256;
+
+/// A synthetic stream: samples `0..total` of `synth`'s deterministic
+/// stream for `seed`, delivered in chunks of `chunk` samples (the final
+/// chunk may be ragged).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    /// Total samples in the stream.
+    pub total: usize,
+    /// Samples per resident chunk.
+    pub chunk: usize,
+    /// Stream seed; sample `i` is `synth::generate(n, seed, t)[i]` for any
+    /// `n > i`, so the same seed names the same stream at any length.
+    pub seed: u64,
+}
+
+impl StreamConfig {
+    pub fn n_chunks(&self) -> usize {
+        assert!(self.chunk > 0, "stream chunk size must be positive");
+        self.total.div_ceil(self.chunk)
+    }
+
+    /// Sample range `[lo, hi)` of chunk `c`.
+    pub fn chunk_range(&self, c: usize) -> (usize, usize) {
+        let lo = c * self.chunk;
+        let hi = (lo + self.chunk).min(self.total);
+        (lo, hi)
+    }
+}
+
+/// Telemetry of one pass over a stream.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamStats {
+    /// Chunks delivered to the consumer.
+    pub chunks: usize,
+    /// Rows the consumer callback observed (for [`for_each_batch`], full
+    /// batches only — each chunk's ragged tail is dropped, mirroring
+    /// [`BatchIter`]).
+    pub rows: usize,
+    /// High-water mark of simultaneously resident chunks; the rendezvous
+    /// hand-off bounds this at 2.
+    pub max_resident_chunks: usize,
+}
+
+/// RAII residency token: counts a chunk as resident from just before its
+/// buffers are allocated until the consumer drops it.
+struct ResidencyToken {
+    live: Arc<AtomicUsize>,
+}
+
+impl ResidencyToken {
+    fn acquire(live: &Arc<AtomicUsize>, high: &AtomicUsize) -> ResidencyToken {
+        let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+        high.fetch_max(now, Ordering::SeqCst);
+        ResidencyToken { live: Arc::clone(live) }
+    }
+}
+
+impl Drop for ResidencyToken {
+    fn drop(&mut self) {
+        self.live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One in-flight chunk: the data plus its residency token.
+struct Chunk {
+    data: Dataset,
+    _token: ResidencyToken,
+}
+
+/// Run `f(chunk_index, &chunk)` over every chunk of the stream while a
+/// producer thread synthesizes the next chunk concurrently.  At most two
+/// chunks are ever resident.
+pub fn for_each_chunk<F>(cfg: &StreamConfig, mut f: F) -> StreamStats
+where
+    F: FnMut(usize, &Dataset),
+{
+    let n_chunks = cfg.n_chunks();
+    let live = Arc::new(AtomicUsize::new(0));
+    let high = Arc::new(AtomicUsize::new(0));
+    let mut rows = 0usize;
+    let mut delivered = 0usize;
+    std::thread::scope(|scope| {
+        let (tx, rx) = mpsc::sync_channel::<Chunk>(0);
+        let producer_live = Arc::clone(&live);
+        let producer_high = Arc::clone(&high);
+        let cfg = *cfg;
+        scope.spawn(move || {
+            for c in 0..n_chunks {
+                let (lo, hi) = cfg.chunk_range(c);
+                // acquire *before* synthesis so the buffer being filled is
+                // already counted; serial generation (threads = 1) keeps
+                // the producer off the training backend's worker pool
+                let token = ResidencyToken::acquire(&producer_live, &producer_high);
+                let data = synth::generate_range(lo, hi, cfg.seed, 1);
+                if tx.send(Chunk { data, _token: token }).is_err() {
+                    return; // consumer hung up (e.g. panicked mid-pass)
+                }
+            }
+        });
+        for (c, chunk) in rx.iter().enumerate() {
+            rows += chunk.data.len();
+            f(c, &chunk.data);
+            delivered = c + 1;
+            // chunk (and its token) dropped here, freeing one residency slot
+        }
+    });
+    debug_assert_eq!(delivered, n_chunks);
+    StreamStats { chunks: delivered, rows, max_resident_chunks: high.load(Ordering::SeqCst) }
+}
+
+/// Run `f(&x, &y)` over shuffled fixed-size batches drawn chunk by chunk
+/// from the stream.  Within each chunk the order comes from `rng` (exactly
+/// [`BatchIter`] semantics, including dropping the chunk's ragged tail),
+/// so the batch sequence is independent of backend thread count.
+pub fn for_each_batch<F>(
+    cfg: &StreamConfig,
+    batch: usize,
+    rng: &mut Xoshiro256,
+    mut f: F,
+) -> StreamStats
+where
+    F: FnMut(&[f32], &[i32]),
+{
+    assert!(batch > 0, "batch size must be positive");
+    let (mut x, mut y) = (Vec::new(), Vec::new());
+    let mut batch_rows = 0usize;
+    let mut stats = for_each_chunk(cfg, |_, chunk| {
+        let mut it = BatchIter::new(chunk, batch, rng);
+        while it.next_into(&mut x, &mut y) {
+            batch_rows += y.len();
+            f(&x, &y);
+        }
+    });
+    stats.rows = batch_rows;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_concatenate_to_the_full_stream() {
+        // 100 samples in chunks of 32: three full chunks + a ragged 4
+        let cfg = StreamConfig { total: 100, chunk: 32, seed: 9 };
+        assert_eq!(cfg.n_chunks(), 4);
+        assert_eq!(cfg.chunk_range(3), (96, 100));
+        let mut images = Vec::new();
+        let mut labels = Vec::new();
+        let stats = for_each_chunk(&cfg, |c, chunk| {
+            let (lo, hi) = cfg.chunk_range(c);
+            assert_eq!(chunk.len(), hi - lo);
+            assert_eq!(chunk.dim, synth::DIM);
+            images.extend_from_slice(&chunk.images);
+            labels.extend_from_slice(&chunk.labels);
+        });
+        assert_eq!(stats.chunks, 4);
+        assert_eq!(stats.rows, 100);
+        let whole = synth::generate(100, 9, 2);
+        assert_eq!(images, whole.images, "streamed bytes must match eager generation");
+        assert_eq!(labels, whole.labels);
+    }
+
+    #[test]
+    fn residency_never_exceeds_two_chunks() {
+        let cfg = StreamConfig { total: 96, chunk: 16, seed: 4 };
+        let stats = for_each_chunk(&cfg, |_, chunk| {
+            // simulate a slow consumer so the producer runs ahead and
+            // blocks in send with its chunk already synthesized
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            assert!(!chunk.is_empty());
+        });
+        assert!(stats.max_resident_chunks >= 1);
+        assert!(
+            stats.max_resident_chunks <= 2,
+            "rendezvous hand-off must cap residency at 2 chunks, saw {}",
+            stats.max_resident_chunks
+        );
+    }
+
+    #[test]
+    fn batches_match_per_chunk_batch_iter_reference() {
+        let cfg = StreamConfig { total: 70, chunk: 30, seed: 5 };
+        let batch = 8usize;
+
+        // reference: eager per-chunk generation + BatchIter with the same rng
+        let mut want = Vec::new();
+        let mut rng = Xoshiro256::new(77);
+        for c in 0..cfg.n_chunks() {
+            let (lo, hi) = cfg.chunk_range(c);
+            let chunk = synth::generate_range(lo, hi, cfg.seed, 1);
+            let mut it = BatchIter::new(&chunk, batch, &mut rng);
+            let (mut x, mut y) = (Vec::new(), Vec::new());
+            while it.next_into(&mut x, &mut y) {
+                want.push((x.clone(), y.clone()));
+            }
+        }
+        // chunks of 30, 30, 10 at batch 8 -> 3 + 3 + 1 full batches
+        assert_eq!(want.len(), 7);
+
+        let mut rng = Xoshiro256::new(77);
+        let mut got = Vec::new();
+        let stats = for_each_batch(&cfg, batch, &mut rng, |x, y| {
+            got.push((x.to_vec(), y.to_vec()));
+        });
+        assert_eq!(stats.rows, 7 * batch, "per-chunk ragged tails dropped");
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn batch_stream_is_reproducible() {
+        // same cfg + same rng seed -> bitwise-identical batch sequence,
+        // regardless of producer/consumer interleaving
+        let cfg = StreamConfig { total: 64, chunk: 24, seed: 13 };
+        let run = || {
+            let mut rng = Xoshiro256::new(3);
+            let mut out: Vec<(Vec<f32>, Vec<i32>)> = Vec::new();
+            for_each_batch(&cfg, 4, &mut rng, |x, y| out.push((x.to_vec(), y.to_vec())));
+            out
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn empty_stream_is_legal() {
+        let cfg = StreamConfig { total: 0, chunk: 8, seed: 1 };
+        let stats = for_each_chunk(&cfg, |_, _| panic!("no chunks expected"));
+        assert_eq!(stats.chunks, 0);
+        assert_eq!(stats.rows, 0);
+    }
+}

@@ -172,11 +172,24 @@ fn render(class: usize, rng: &mut Xoshiro256, out: &mut [f32]) {
 /// Generate `n` samples deterministically from `seed`, classes balanced
 /// round-robin.  Parallel across `threads`.
 pub fn generate(n: usize, seed: u64, threads: usize) -> Dataset {
+    generate_range(0, n, seed, threads)
+}
+
+/// Generate samples `start..end` of the deterministic stream for `seed` —
+/// exactly the bytes `generate(end, seed, t)` would place at
+/// `[start*DIM, end*DIM)`, without materializing the prefix.  Counter-based
+/// seeding makes every sample independently addressable; this is what lets
+/// [`crate::data::stream`] hold only a chunk-sized window of an
+/// arbitrarily long stream in memory.
+pub fn generate_range(start: usize, end: usize, seed: u64, threads: usize) -> Dataset {
+    assert!(start <= end, "generate_range: start {start} > end {end}");
+    let n = end - start;
     let mut images = vec![0.0f32; n * DIM];
-    let labels: Vec<i32> = (0..n).map(|i| (i % CLASSES) as i32).collect();
+    let labels: Vec<i32> = (start..end).map(|i| (i % CLASSES) as i32).collect();
 
     // counter-based seeding: sample i depends only on (seed, i)
-    let chunks: Vec<Vec<f32>> = parallel_map(n, threads, |i| {
+    let chunks: Vec<Vec<f32>> = parallel_map(n, threads, |j| {
+        let i = start + j;
         let mut sm = SplitMix64::new(seed ^ 0xD1F3_5C77_0000_0000);
         let s0 = sm.next_u64();
         let mut rng = Xoshiro256::new(s0 ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
@@ -184,8 +197,8 @@ pub fn generate(n: usize, seed: u64, threads: usize) -> Dataset {
         render(i % CLASSES, &mut rng, &mut buf);
         buf
     });
-    for (i, chunk) in chunks.into_iter().enumerate() {
-        images[i * DIM..(i + 1) * DIM].copy_from_slice(&chunk);
+    for (j, chunk) in chunks.into_iter().enumerate() {
+        images[j * DIM..(j + 1) * DIM].copy_from_slice(&chunk);
     }
     Dataset { images, labels, dim: DIM, classes: CLASSES }
 }
@@ -217,6 +230,17 @@ mod tests {
         let a = generate(10, 3, 2);
         let b = generate(30, 3, 2);
         assert_eq!(a.images[..10 * DIM], b.images[..10 * DIM]);
+    }
+
+    #[test]
+    fn generate_range_matches_full_generation() {
+        let full = generate(30, 3, 2);
+        let mid = generate_range(10, 25, 3, 4);
+        assert_eq!(mid.len(), 15);
+        assert_eq!(mid.images, full.images[10 * DIM..25 * DIM].to_vec());
+        assert_eq!(mid.labels, full.labels[10..25].to_vec());
+        // empty range is legal
+        assert_eq!(generate_range(7, 7, 3, 1).len(), 0);
     }
 
     #[test]

@@ -25,10 +25,14 @@
 //! executes, and [`crate::metrics::account`] derives its FLOPs numbers from
 //! these same kernels — one accounting source of truth instead of two.
 //!
-//! A [`CompressedModel`] bundles per-layer kernels with biases and runs the
-//! standard MLP forward (ReLU hidden layers, identity head), bit-compatible
-//! in structure with the native backend's dense path.  The runtime exposes
-//! it through `Backend::eval_chunk_compressed` /
+//! A [`CompressedModel`] bundles per-layer kernels with biases and the
+//! model's op graph ([`crate::models::LayerOp`]), and runs the staged
+//! per-op forward: dense ops feed the activations straight into their
+//! kernel, conv ops lower through [`crate::linalg::conv::im2col`] first —
+//! so every compressed kernel (CSR, factored, gather, signs) applies to
+//! conv layers unchanged, operating on the `(ic·kh·kw) × oc` lowered
+//! weight.  The runtime exposes it through
+//! `Backend::eval_chunk_compressed` /
 //! [`crate::runtime::trainer::EvalDriver::eval_compressed`], and
 //! `lcc infer` serves it from compressed checkpoints
 //! ([`crate::models::checkpoint::save_compressed`]).
@@ -37,7 +41,8 @@ use anyhow::{ensure, Result};
 
 use crate::compress::task::TaskSet;
 use crate::compress::Theta;
-use crate::models::{ModelSpec, ParamState};
+use crate::linalg::conv;
+use crate::models::{Activation, LayerOp, ModelSpec, OpKind, ParamState};
 use crate::tensor::kernels::{matmul_gather, matmul_signs};
 use crate::tensor::sparse::Csr;
 use crate::tensor::{Matrix, Workspace};
@@ -305,12 +310,16 @@ pub fn build_layers(
         .collect()
 }
 
-/// A model held entirely in compressed form: per-layer execution kernels
-/// plus dense biases (biases are never compressed).
+/// A model held entirely in compressed form: the op graph, per-layer
+/// execution kernels over the lowered weight matrices, plus dense biases
+/// (biases are never compressed).
 #[derive(Clone, Debug)]
 pub struct CompressedModel {
     pub name: String,
-    /// Layer widths including input and output, as in [`ModelSpec`].
+    /// The op graph: one [`LayerOp`] per kernel/bias pair.
+    pub ops: Vec<LayerOp>,
+    /// Activation element counts including input and output, as in
+    /// [`ModelSpec::widths`] (a derived view of `ops`).
     pub widths: Vec<usize>,
     pub eval_batch: usize,
     pub layers: Vec<CompressedLayer>,
@@ -328,6 +337,7 @@ impl CompressedModel {
     ) -> CompressedModel {
         CompressedModel {
             name: spec.name.clone(),
+            ops: spec.ops.clone(),
             widths: spec.widths.clone(),
             eval_batch: spec.eval_batch,
             layers: build_layers(spec, tasks, thetas, &state.weights),
@@ -336,49 +346,61 @@ impl CompressedModel {
     }
 
     pub fn n_layers(&self) -> usize {
-        self.widths.len() - 1
+        self.ops.len()
     }
 
     /// An equivalent [`ModelSpec`] (for driver plumbing; the name may not
     /// be in the registry).
     pub fn spec(&self) -> ModelSpec {
-        ModelSpec {
-            name: self.name.clone(),
-            widths: self.widths.clone(),
-            batch: 128,
-            eval_batch: self.eval_batch,
-        }
+        ModelSpec::from_ops(&self.name, self.ops.clone(), 128, self.eval_batch)
     }
 
-    /// Total MACs per example over the kernels actually executed.
+    /// Total MACs per example over the kernels actually executed: each
+    /// kernel's MACs times the op's spatial weight reuse (`oh·ow` for conv).
     pub fn flops_per_example(&self) -> u64 {
-        self.layers.iter().map(|l| l.flops_per_example()).sum()
+        self.layers
+            .iter()
+            .zip(self.ops.iter())
+            .map(|(l, op)| l.flops_per_example() * op.spatial() as u64)
+            .sum()
     }
 
-    /// Validate layer/bias shapes against `widths` (done once up front so
-    /// the hot forward path can assume consistency).
+    /// Validate kernel/bias shapes against the op graph (done once up
+    /// front so the hot forward path can assume consistency).
     pub fn validate(&self) -> Result<()> {
         let nl = self.n_layers();
-        ensure!(self.widths.len() >= 2, "model needs at least one layer");
-        ensure!(self.layers.len() == nl, "layer count != widths");
-        ensure!(self.biases.len() == nl, "bias count != widths");
+        ensure!(nl >= 1, "model needs at least one layer");
+        ensure!(self.widths.len() == nl + 1, "widths count != ops + 1");
+        ensure!(self.layers.len() == nl, "layer count != ops");
+        ensure!(self.biases.len() == nl, "bias count != ops");
         for l in 0..nl {
+            let op = &self.ops[l];
             ensure!(
-                self.layers[l].in_dim() == self.widths[l]
-                    && self.layers[l].out_dim() == self.widths[l + 1],
-                "layer {l}: kernel {}x{} != widths {}x{}",
+                self.widths[l] == op.in_elems() && self.widths[l + 1] == op.out_elems(),
+                "layer {l} ({}): widths {}->{} != op activations {}->{}",
+                op.describe(),
+                self.widths[l],
+                self.widths[l + 1],
+                op.in_elems(),
+                op.out_elems()
+            );
+            let (m, n) = op.weight_shape();
+            ensure!(
+                self.layers[l].in_dim() == m && self.layers[l].out_dim() == n,
+                "layer {l} ({}): kernel {}x{} != lowered weight {m}x{n}",
+                op.describe(),
                 self.layers[l].in_dim(),
                 self.layers[l].out_dim(),
-                self.widths[l],
-                self.widths[l + 1]
             );
-            ensure!(self.biases[l].len() == self.widths[l + 1], "layer {l}: bias length");
+            ensure!(self.biases[l].len() == op.bias_len(), "layer {l}: bias length");
         }
         Ok(())
     }
 
-    /// MLP forward in compressed form: ReLU hidden layers, identity logits
-    /// head — the same semantics as the native backend's dense forward.
+    /// Staged per-op forward in compressed form: dense ops apply their
+    /// kernel to the activations directly, conv ops lower through im2col
+    /// and reinterpret the `(b·oh·ow) × oc` product as the NHWC activation
+    /// — the same semantics as the native backend's dense forward.
     /// Returns the `b × classes` logits.
     pub fn forward(&self, x: &[f32], b: usize, threads: usize) -> Result<Matrix> {
         let nl = self.n_layers();
@@ -390,11 +412,19 @@ impl CompressedModel {
             self.widths[0]
         );
         let mut h = Matrix::from_vec(b, self.widths[0], x.to_vec());
+        let mut col = Matrix::zeros(0, 0);
         for l in 0..nl {
-            let mut z = self.layers[l].forward(&h, threads);
-            let relu = l < nl - 1;
+            let op = &self.ops[l];
+            let mut z = match op.kind {
+                OpKind::Dense { .. } => self.layers[l].forward(&h, threads),
+                OpKind::Conv2d(cs) => {
+                    conv::im2col(&h.data, b, &cs, &mut col);
+                    self.layers[l].forward(&col, threads)
+                }
+            };
+            let relu = op.act == Activation::Relu;
             let bias = &self.biases[l];
-            for r in 0..b {
+            for r in 0..z.rows {
                 let row = z.row_mut(r);
                 for (v, &bi) in row.iter_mut().zip(bias.iter()) {
                     *v += bi;
@@ -403,6 +433,8 @@ impl CompressedModel {
                     }
                 }
             }
+            // (b·oh·ow) × oc row-major IS the b × (oh·ow·oc) NHWC activation
+            z.reset(b, op.out_elems());
             h = z;
         }
         Ok(h)
@@ -561,7 +593,7 @@ mod tests {
     fn model_forward_matches_dense_decompress_path() {
         // two-layer model, layer 0 quantized via a multi-layer-less task,
         // layer 1 dense fallback
-        let spec = ModelSpec { name: "t".into(), widths: vec![6, 5, 4], batch: 8, eval_batch: 8 };
+        let spec = ModelSpec::mlp("t", &[6, 5, 4], 8, 8);
         let mut state = ParamState::init(&spec, 11);
         let tasks = TaskSet::new(vec![TaskSpec {
             name: "q".into(),
@@ -607,11 +639,85 @@ mod tests {
     fn validate_rejects_shape_mismatch() {
         let model = CompressedModel {
             name: "bad".into(),
+            ops: crate::models::mlp_ops(&[4, 3]),
             widths: vec![4, 3],
             eval_batch: 8,
             layers: vec![CompressedLayer::Dense(Matrix::zeros(4, 2))], // wrong out dim
             biases: vec![vec![0.0; 3]],
         };
         assert!(model.validate().is_err());
+    }
+
+    #[test]
+    fn conv_model_forward_matches_manual_lowering() {
+        use crate::linalg::conv::Conv2dShape;
+        use crate::models::LayerOp;
+
+        // conv 2->3 3x3 s1 p1 on 4x4, then dense 48->5 head
+        let cs = Conv2dShape {
+            in_ch: 2,
+            out_ch: 3,
+            in_h: 4,
+            in_w: 4,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+        };
+        let ops = vec![
+            LayerOp::conv2d(cs, Activation::Relu),
+            LayerOp::dense(48, 5, Activation::Linear),
+        ];
+        let spec = ModelSpec::from_ops("tconv", ops, 6, 6);
+        let state = ParamState::init(&spec, 21);
+        let tasks = TaskSet::new(vec![TaskSpec {
+            name: "q".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(8)),
+        }]);
+        let view = tasks.tasks[0].gather(&state.weights);
+        let theta = tasks.tasks[0]
+            .compression
+            .compress(&view, &crate::compress::CContext::default());
+        let mut deltas = state.weights.clone();
+        tasks.tasks[0].scatter(&theta.decompress(), &mut deltas);
+        let mut qstate = state.clone();
+        qstate.weights = deltas.clone();
+
+        let model = CompressedModel::from_lc(&spec, &tasks, &[theta], &qstate);
+        model.validate().unwrap();
+        assert_eq!(
+            model.flops_per_example(),
+            model.layers[0].flops_per_example() * 16 + model.layers[1].flops_per_example()
+        );
+        let x = rand_matrix(6, 32, 22).data;
+        let logits = model.forward(&x, 6, 2).unwrap();
+        assert_eq!((logits.rows, logits.cols), (6, 5));
+
+        // reference: explicit im2col + dense GEMM through the same weights
+        let mut col = Matrix::zeros(0, 0);
+        conv::im2col(&x, 6, &cs, &mut col);
+        let mut z = col.matmul(&deltas[0]);
+        for r in 0..z.rows {
+            let row = z.row_mut(r);
+            for (v, &bi) in row.iter_mut().zip(qstate.biases[0].iter()) {
+                *v += bi;
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        z.reset(6, 48);
+        let mut want = z.matmul(&deltas[1]);
+        for r in 0..want.rows {
+            let row = want.row_mut(r);
+            for (v, &bi) in row.iter_mut().zip(qstate.biases[1].iter()) {
+                *v += bi;
+            }
+        }
+        for (g, e) in logits.data.iter().zip(want.data.iter()) {
+            assert!((g - e).abs() <= 1e-5 * e.abs().max(1.0), "{g} vs {e}");
+        }
     }
 }

@@ -22,6 +22,7 @@ use super::monitor::Monitor;
 use super::schedule::{LrSchedule, MuSchedule};
 use crate::compress::task::TaskSet;
 use crate::compress::Theta;
+use crate::data::stream::{self, StreamConfig};
 use crate::data::{BatchIter, Dataset};
 use crate::metrics::{account, Compressed};
 use crate::models::{ModelSpec, ParamState};
@@ -103,6 +104,16 @@ pub struct LcOutcome {
     pub compressed_state: ParamState,
 }
 
+/// Where an L-step epoch draws its batches from.
+#[derive(Clone, Copy)]
+enum TrainSource<'a> {
+    /// Whole dataset resident in memory ([`BatchIter`] over all rows).
+    InMemory(&'a Dataset),
+    /// Chunked synthetic stream, at most two chunks resident
+    /// (see [`crate::data::stream`]).
+    Stream(&'a StreamConfig),
+}
+
 /// The LC coordinator.
 pub struct LcAlgorithm {
     pub spec: ModelSpec,
@@ -126,12 +137,82 @@ impl LcAlgorithm {
         Ok(Self { spec, tasks, cfg, train, eval })
     }
 
+    /// One epoch of penalized SGD drawn from `source`; returns the mean
+    /// batch loss and the number of batches consumed.
+    #[allow(clippy::too_many_arguments)]
+    fn l_epoch(
+        &self,
+        source: TrainSource<'_>,
+        state: &mut ParamState,
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+        rng: &mut Xoshiro256,
+        x: &mut Vec<f32>,
+        y: &mut Vec<i32>,
+    ) -> Result<(f64, usize)> {
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        match source {
+            TrainSource::InMemory(data) => {
+                let mut it = BatchIter::new(data, self.train.batch, rng);
+                while it.next_into(x, y) {
+                    sum += self.train.step(state, x, y, deltas, lambdas, mu, lr)? as f64;
+                    count += 1;
+                }
+            }
+            TrainSource::Stream(cfg) => {
+                let mut fail = None;
+                stream::for_each_batch(cfg, self.train.batch, rng, |bx, by| {
+                    if fail.is_some() {
+                        return;
+                    }
+                    match self.train.step(state, bx, by, deltas, lambdas, mu, lr) {
+                        Ok(loss) => {
+                            sum += loss as f64;
+                            count += 1;
+                        }
+                        Err(e) => fail = Some(e),
+                    }
+                });
+                if let Some(e) = fail {
+                    return Err(e);
+                }
+            }
+        }
+        Ok((sum / count.max(1) as f64, count))
+    }
+
     /// Train the reference (uncompressed) model for `epochs`; returns the
     /// trained state.  This is ordinary SGD: all μ_l = 0.
     pub fn train_reference(
         &self,
         state: &mut ParamState,
         data: &Dataset,
+        epochs: usize,
+        lr: &LrSchedule,
+    ) -> Result<()> {
+        self.train.validate_dataset(data)?;
+        self.train_reference_from(TrainSource::InMemory(data), state, epochs, lr)
+    }
+
+    /// [`Self::train_reference`] over a chunked synthetic stream: the same
+    /// SGD, but at most two chunks of training data are ever resident.
+    pub fn train_reference_stream(
+        &self,
+        state: &mut ParamState,
+        data: &StreamConfig,
+        epochs: usize,
+        lr: &LrSchedule,
+    ) -> Result<()> {
+        self.train_reference_from(TrainSource::Stream(data), state, epochs, lr)
+    }
+
+    fn train_reference_from(
+        &self,
+        source: TrainSource<'_>,
+        state: &mut ParamState,
         epochs: usize,
         lr: &LrSchedule,
     ) -> Result<()> {
@@ -143,15 +224,11 @@ impl LcAlgorithm {
             })
             .collect();
         let mu = vec![0.0f32; nl];
-        self.train.validate_dataset(data)?;
         let mut rng = Xoshiro256::new(self.cfg.seed ^ 0xBEEF);
         let (mut x, mut y) = (Vec::new(), Vec::new());
         for e in 0..epochs {
-            let mut it = BatchIter::new(data, self.train.batch, &mut rng);
             let lr_e = lr.lr_at(e);
-            while it.next_into(&mut x, &mut y) {
-                self.train.step(state, &x, &y, &zeros, &zeros, &mu, lr_e)?;
-            }
+            self.l_epoch(source, state, &zeros, &zeros, &mu, lr_e, &mut rng, &mut x, &mut y)?;
         }
         Ok(())
     }
@@ -161,19 +238,68 @@ impl LcAlgorithm {
         self.eval.eval(state, data)
     }
 
+    /// Evaluate a state chunk by chunk over a stream, never holding more
+    /// than two chunks resident.  Each chunk is scored with the ordinary
+    /// eval driver and the per-chunk results are merged `n`-weighted.
+    pub fn evaluate_stream(&self, state: &ParamState, cfg: &StreamConfig) -> Result<EvalResult> {
+        let mut n = 0usize;
+        let mut err_weighted = 0.0f64;
+        let mut loss_weighted = 0.0f64;
+        let mut fail = None;
+        stream::for_each_chunk(cfg, |_, chunk| {
+            if fail.is_some() {
+                return;
+            }
+            match self.eval.eval(state, chunk) {
+                Ok(r) => {
+                    n += r.n;
+                    err_weighted += r.error * r.n as f64;
+                    loss_weighted += r.mean_loss * r.n as f64;
+                }
+                Err(e) => fail = Some(e),
+            }
+        });
+        if let Some(e) = fail {
+            return Err(e);
+        }
+        anyhow::ensure!(n > 0, "evaluate_stream: empty stream");
+        Ok(EvalResult { mean_loss: loss_weighted / n as f64, error: err_weighted / n as f64, n })
+    }
+
     /// Run the LC loop starting from a (pretrained) state.
     pub fn run(
         &self,
-        mut state: ParamState,
+        state: ParamState,
         train_data: &Dataset,
+        test_data: &Dataset,
+    ) -> Result<LcOutcome> {
+        // labels checked once up front; the per-step path only debug-asserts
+        self.train.validate_dataset(train_data)?;
+        self.run_loop(state, TrainSource::InMemory(train_data), test_data)
+    }
+
+    /// [`Self::run`] with the L steps fed from a chunked synthetic stream:
+    /// identical LC mathematics, but training data residency is capped at
+    /// two chunks end to end (final train-set evaluation included).
+    pub fn run_stream(
+        &self,
+        state: ParamState,
+        train_data: &StreamConfig,
+        test_data: &Dataset,
+    ) -> Result<LcOutcome> {
+        self.run_loop(state, TrainSource::Stream(train_data), test_data)
+    }
+
+    fn run_loop(
+        &self,
+        mut state: ParamState,
+        source: TrainSource<'_>,
         test_data: &Dataset,
     ) -> Result<LcOutcome> {
         let t0 = Instant::now();
         let nl = self.spec.n_layers();
         let mu_floor = self.cfg.mu.mu0.max(1e-12);
         let threads = self.cfg.threads.max(1);
-        // labels checked once up front; the per-step path only debug-asserts
-        self.train.validate_dataset(train_data)?;
 
         // Persistent auxiliary state: Δ(Θ), λ, the w − λ/μ shift buffers,
         // per-task gather views, and workspace scratch.  All per-step data
@@ -217,24 +343,18 @@ impl LcAlgorithm {
             let mut last_epoch_loss = 0.0f64;
             let mut samples = 0u64;
             for e in 0..epochs.max(1) {
-                let mut it = BatchIter::new(train_data, self.train.batch, &mut rng);
-                let mut sum = 0.0f64;
-                let mut count = 0usize;
-                while it.next_into(&mut x, &mut y) {
-                    let loss = self.train.step(
-                        &mut state,
-                        &x,
-                        &y,
-                        &aux.deltas,
-                        &aux.lambdas,
-                        &mu_vec,
-                        lr,
-                    )?;
-                    sum += loss as f64;
-                    count += 1;
-                }
+                let (mean, count) = self.l_epoch(
+                    source,
+                    &mut state,
+                    &aux.deltas,
+                    &aux.lambdas,
+                    &mu_vec,
+                    lr,
+                    &mut rng,
+                    &mut x,
+                    &mut y,
+                )?;
                 samples += (count * self.train.batch) as u64;
-                let mean = sum / count.max(1) as f64;
                 if e == 0 {
                     first_epoch_loss = mean;
                 }
@@ -296,7 +416,10 @@ impl LcAlgorithm {
 
         // --- finalize: the compressed model is Δ(Θ) -------------------------
         let compressed_state = aux.into_compressed_state(&state);
-        let final_train = self.eval.eval(&compressed_state, train_data)?;
+        let final_train = match source {
+            TrainSource::InMemory(data) => self.eval.eval(&compressed_state, data)?,
+            TrainSource::Stream(cfg) => self.evaluate_stream(&compressed_state, cfg)?,
+        };
         let final_test = self.eval.eval(&compressed_state, test_data)?;
         let thetas: Vec<Theta> = thetas.into_iter().map(|t| t.unwrap()).collect();
         // account against the final model's weights: Δ(Θ) on covered

@@ -256,7 +256,7 @@ mod tests {
     use crate::compress::view::View;
 
     fn spec() -> ModelSpec {
-        ModelSpec { name: "aux-test".into(), widths: vec![4, 3, 2], batch: 8, eval_batch: 8 }
+        ModelSpec::mlp("aux-test", &[4, 3, 2], 8, 8)
     }
 
     fn tasks() -> TaskSet {

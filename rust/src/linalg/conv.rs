@@ -1,0 +1,310 @@
+//! im2col/col2im lowering of 2-D convolution onto the packed GEMM.
+//!
+//! A `Conv2d` layer op stores its filters as one lowered dense matrix
+//! `W: (in_ch·kh·kw) × out_ch`, so every existing C step (prune, quant,
+//! low-rank, additive) and the compressed-execution kernels apply to conv
+//! filters unchanged.  The forward pass gathers input patches into a
+//! *column matrix* and runs the ordinary packed GEMM:
+//!
+//! ```text
+//! col  = im2col(x)        (b·oh·ow) × (ic·kh·kw)     — patch gather
+//! zmat = col · W          (b·oh·ow) × oc             — packed GEMM
+//! z    = zmat viewed as   b × (oh·ow·oc)             — NHWC, free reshape
+//! ```
+//!
+//! Activations are NHWC (each sample row is `[h][w][c]` flattened), and a
+//! patch row is `[ky][kx][ic]` flattened — channels innermost — so every
+//! `(ky, kx)` tap copies `ic` contiguous floats.  Because the GEMM output
+//! is row-major, the `(b·oh·ow) × oc` product *is* the `b × (oh·ow·oc)`
+//! NHWC activation; the reshape is metadata only.
+//!
+//! Backward reuses the same lowering: `dW = colᵀ·dZmat` and
+//! `dX = col2im(dZmat·Wᵀ)`.  [`col2im_into`] scatter-adds serially in
+//! ascending `(sample, oy, ox, ky, kx)` order, so within a gradient shard
+//! the accumulation order is fixed — the L step's bit-identical
+//! thread-count contract survives conv layers untouched.
+
+use crate::tensor::Matrix;
+
+/// Static geometry of one conv2d op (square stride, symmetric zero pad).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dShape {
+    pub in_ch: usize,
+    pub out_ch: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl Conv2dShape {
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Output positions per sample (`oh·ow`).
+    pub fn spatial(&self) -> usize {
+        self.out_h() * self.out_w()
+    }
+
+    /// Rows of the lowered weight matrix (`ic·kh·kw`).
+    pub fn patch_len(&self) -> usize {
+        self.in_ch * self.kh * self.kw
+    }
+
+    /// Input elements per sample (`ih·iw·ic`, NHWC).
+    pub fn in_elems(&self) -> usize {
+        self.in_h * self.in_w * self.in_ch
+    }
+
+    /// Output elements per sample (`oh·ow·oc`, NHWC).
+    pub fn out_elems(&self) -> usize {
+        self.spatial() * self.out_ch
+    }
+
+    /// Panics unless the geometry is realizable (kernel fits the padded
+    /// input, stride nonzero, no empty dims).
+    pub fn validate(&self) {
+        assert!(
+            self.in_ch > 0 && self.out_ch > 0 && self.in_h > 0 && self.in_w > 0,
+            "conv2d: empty dims"
+        );
+        assert!(self.kh > 0 && self.kw > 0 && self.stride > 0, "conv2d: empty kernel/stride");
+        assert!(
+            self.in_h + 2 * self.pad >= self.kh && self.in_w + 2 * self.pad >= self.kw,
+            "conv2d: kernel larger than padded input"
+        );
+    }
+}
+
+/// Gather input patches into the column matrix: `x` is `batch` NHWC sample
+/// rows (`in_elems` each), `col` becomes `(batch·oh·ow) × (ic·kh·kw)`,
+/// fully overwritten (zero padding included).  `col` is reshaped via
+/// [`Matrix::reset`], so a capacity-sufficient scratch matrix makes this
+/// allocation-free.
+pub fn im2col(x: &[f32], batch: usize, s: &Conv2dShape, col: &mut Matrix) {
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let (ih, iw, ic) = (s.in_h, s.in_w, s.in_ch);
+    let in_elems = s.in_elems();
+    assert_eq!(x.len(), batch * in_elems, "im2col: input length mismatch");
+    col.reset(batch * oh * ow, s.patch_len());
+    let mut out_r = 0usize;
+    for bi in 0..batch {
+        let xrow = &x[bi * in_elems..(bi + 1) * in_elems];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = col.row_mut(out_r);
+                out_r += 1;
+                for ky in 0..s.kh {
+                    let y = (oy * s.stride + ky) as isize - s.pad as isize;
+                    let dbase = ky * s.kw * ic;
+                    if y < 0 || y >= ih as isize {
+                        dst[dbase..dbase + s.kw * ic].fill(0.0);
+                        continue;
+                    }
+                    for kx in 0..s.kw {
+                        let xc = (ox * s.stride + kx) as isize - s.pad as isize;
+                        let d = dbase + kx * ic;
+                        if xc < 0 || xc >= iw as isize {
+                            dst[d..d + ic].fill(0.0);
+                        } else {
+                            let src = (y as usize * iw + xc as usize) * ic;
+                            dst[d..d + ic].copy_from_slice(&xrow[src..src + ic]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Adjoint of [`im2col`]: scatter-add the column-matrix cotangent back
+/// onto the input layout.  `dx` (length `batch·in_elems`) is fully
+/// overwritten: zeroed, then accumulated serially in ascending
+/// `(sample, oy, ox, ky, kx)` order — a fixed f32 summation chain, so the
+/// result is a function of `dcol` only (never of thread count; callers
+/// parallelize over shards *above* this routine).
+pub fn col2im_into(dcol: &Matrix, batch: usize, s: &Conv2dShape, dx: &mut [f32]) {
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let (ih, iw, ic) = (s.in_h, s.in_w, s.in_ch);
+    let in_elems = s.in_elems();
+    assert_eq!(dcol.rows, batch * oh * ow, "col2im: row count mismatch");
+    assert_eq!(dcol.cols, s.patch_len(), "col2im: patch length mismatch");
+    assert_eq!(dx.len(), batch * in_elems, "col2im: output length mismatch");
+    dx.fill(0.0);
+    let mut r = 0usize;
+    for bi in 0..batch {
+        let base = bi * in_elems;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = dcol.row(r);
+                r += 1;
+                for ky in 0..s.kh {
+                    let y = (oy * s.stride + ky) as isize - s.pad as isize;
+                    if y < 0 || y >= ih as isize {
+                        continue;
+                    }
+                    let sbase = ky * s.kw * ic;
+                    for kx in 0..s.kw {
+                        let xc = (ox * s.stride + kx) as isize - s.pad as isize;
+                        if xc < 0 || xc >= iw as isize {
+                            continue;
+                        }
+                        let d = base + (y as usize * iw + xc as usize) * ic;
+                        let sp = sbase + kx * ic;
+                        for c in 0..ic {
+                            dx[d + c] += src[sp + c];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn shape(in_ch: usize, out_ch: usize, hw: usize, k: usize, stride: usize, pad: usize) -> Conv2dShape {
+        Conv2dShape { in_ch, out_ch, in_h: hw, in_w: hw, kh: k, kw: k, stride, pad }
+    }
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 0.0, 1.0);
+        v
+    }
+
+    /// Naive direct convolution, accumulating taps in ascending
+    /// `(ky, kx, ic)` order — the same per-output-element chain as the
+    /// packed GEMM over the im2col column, so results must be bit-equal.
+    fn naive_conv(x: &[f32], batch: usize, s: &Conv2dShape, w: &Matrix) -> Matrix {
+        let (oh, ow) = (s.out_h(), s.out_w());
+        let mut out = Matrix::zeros(batch * oh * ow, s.out_ch);
+        let mut r = 0usize;
+        for bi in 0..batch {
+            let xrow = &x[bi * s.in_elems()..(bi + 1) * s.in_elems()];
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for oc in 0..s.out_ch {
+                        let mut acc = 0.0f32;
+                        for ky in 0..s.kh {
+                            let y = (oy * s.stride + ky) as isize - s.pad as isize;
+                            for kx in 0..s.kw {
+                                let xc = (ox * s.stride + kx) as isize - s.pad as isize;
+                                for c in 0..s.in_ch {
+                                    let xv = if y < 0
+                                        || y >= s.in_h as isize
+                                        || xc < 0
+                                        || xc >= s.in_w as isize
+                                    {
+                                        0.0
+                                    } else {
+                                        xrow[(y as usize * s.in_w + xc as usize) * s.in_ch + c]
+                                    };
+                                    let wr = (ky * s.kw + kx) * s.in_ch + c;
+                                    acc += xv * w.at(wr, oc);
+                                }
+                            }
+                        }
+                        *out.at_mut(r, oc) = acc;
+                    }
+                    r += 1;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn out_dims_known_cases() {
+        // LeNet5-style strided convs on 28x28
+        let s = shape(1, 20, 28, 5, 2, 0);
+        assert_eq!((s.out_h(), s.out_w()), (12, 12));
+        let s = shape(32, 64, 28, 3, 2, 1);
+        assert_eq!((s.out_h(), s.out_w()), (14, 14));
+        let s = shape(1, 32, 28, 3, 1, 1);
+        assert_eq!((s.out_h(), s.out_w()), (28, 28));
+        assert_eq!(s.patch_len(), 9);
+        assert_eq!(s.out_elems(), 28 * 28 * 32);
+    }
+
+    #[test]
+    fn im2col_gemm_matches_naive_conv_bitwise() {
+        for s in [
+            shape(1, 3, 7, 3, 1, 0),
+            shape(2, 4, 6, 3, 2, 1),
+            shape(3, 2, 5, 5, 2, 0),
+            shape(2, 3, 5, 3, 1, 2), // pad > stride: corner taps all-zero
+        ] {
+            s.validate();
+            let batch = 3usize;
+            let x = rand_vec(batch * s.in_elems(), 17 + s.out_ch as u64);
+            let mut w = Matrix::zeros(s.patch_len(), s.out_ch);
+            w.data = rand_vec(s.patch_len() * s.out_ch, 29 + s.kh as u64);
+            let mut col = Matrix::zeros(0, 0);
+            im2col(&x, batch, &s, &mut col);
+            assert_eq!((col.rows, col.cols), (batch * s.spatial(), s.patch_len()));
+            let got = col.matmul(&w);
+            let want = naive_conv(&x, batch, &s, &w);
+            assert_eq!(got.data, want.data, "conv lowering diverged for {s:?}");
+        }
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), c> == <x, col2im(c)> for random x, c — the defining
+        // property of the transpose, checked in f64
+        for s in [shape(2, 3, 6, 3, 1, 1), shape(3, 2, 7, 3, 2, 0), shape(1, 2, 5, 5, 2, 2)] {
+            let batch = 2usize;
+            let x = rand_vec(batch * s.in_elems(), 5);
+            let c = rand_vec(batch * s.spatial() * s.patch_len(), 6);
+            let mut col = Matrix::zeros(0, 0);
+            im2col(&x, batch, &s, &mut col);
+            let lhs: f64 = col.data.iter().zip(c.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+            let cmat = Matrix::from_vec(batch * s.spatial(), s.patch_len(), c);
+            let mut dx = vec![0.0f32; batch * s.in_elems()];
+            col2im_into(&cmat, batch, &s, &mut dx);
+            let rhs: f64 = x.iter().zip(dx.iter()).map(|(&a, &b)| a as f64 * b as f64).sum();
+            assert!(
+                (lhs - rhs).abs() <= 1e-4 * lhs.abs().max(1.0),
+                "adjoint identity broken for {s:?}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn im2col_roundtrip_counts_patch_multiplicity() {
+        // col2im(im2col(x)) multiplies each input element by the number of
+        // patches that cover it; with k=1, s=1, p=0 that count is exactly 1,
+        // so the roundtrip is the identity
+        let s = shape(3, 2, 4, 1, 1, 0);
+        let batch = 2usize;
+        let x = rand_vec(batch * s.in_elems(), 9);
+        let mut col = Matrix::zeros(0, 0);
+        im2col(&x, batch, &s, &mut col);
+        let mut back = vec![0.0f32; x.len()];
+        col2im_into(&col, batch, &s, &mut back);
+        assert_eq!(back, x);
+    }
+
+    #[test]
+    fn im2col_reuses_capacity() {
+        let s = shape(2, 2, 5, 3, 1, 1);
+        let batch = 2usize;
+        let x = rand_vec(batch * s.in_elems(), 3);
+        let mut col = Matrix::zeros(batch * s.spatial(), s.patch_len());
+        let ptr = col.data.as_ptr();
+        im2col(&x, batch, &s, &mut col);
+        assert_eq!(col.data.as_ptr(), ptr, "im2col into a shaped scratch must not reallocate");
+    }
+}

@@ -1,16 +1,19 @@
 //! Dense linear algebra substrate.
 //!
-//! Two pieces live here:
+//! Three pieces live here:
 //!
 //! * [`gemm`] — the packed, cache-blocked GEMM microkernel that executes
 //!   **every** dense matrix product in the codebase (the `Matrix::matmul*`
 //!   family, the sharded L step's per-shard GEMMs, the compressed-execution
 //!   factored and codebook-gather kernels);
+//! * [`conv`] — the im2col/col2im lowering that turns 2-D convolutions
+//!   into packed-GEMM calls over patch column matrices;
 //! * [`svd`] — the one-sided Jacobi SVD used by the low-rank C steps.
 //!
 //! The SVD items are re-exported at this level (`linalg::svd(a)`,
 //! `linalg::truncate`, ...) so existing call sites keep working.
 
+pub mod conv;
 pub mod gemm;
 pub mod svd;
 

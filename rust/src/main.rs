@@ -109,11 +109,12 @@ fn runtime_from_args(args: &Args, config_choice: BackendChoice) -> Result<Runtim
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = artifact_dir(args);
     println!("lc-compress: LC algorithm model-compression framework (Rust + JAX + Pallas)\n");
-    let mut t = Table::new(&["model", "widths", "weights", "params", "MACs"]);
+    let mut t = Table::new(&["model", "ops", "weights", "params", "MACs"]);
     for spec in lc::models::registry() {
+        let ops: Vec<String> = spec.ops.iter().map(|op| op.describe()).collect();
         t.row(&[
             spec.name.clone(),
-            format!("{:?}", spec.widths),
+            ops.join(", "),
             spec.n_weights().to_string(),
             spec.n_params().to_string(),
             spec.flops_dense().to_string(),
@@ -333,11 +334,12 @@ fn cmd_infer(args: &Args) -> Result<()> {
     println!("{}: compressed execution plan", ck.name);
     let mut t = Table::new(&["layer", "kernel", "MACs/example", "dense MACs"]);
     for (l, k) in model.layers.iter().enumerate() {
+        let spatial = model.ops[l].spatial() as u64;
         t.row(&[
-            format!("{l} ({}x{})", k.in_dim(), k.out_dim()),
+            format!("{l} ({})", model.ops[l].describe()),
             k.kernel_name().into(),
-            k.flops_per_example().to_string(),
-            (k.in_dim() * k.out_dim()).to_string(),
+            (k.flops_per_example() * spatial).to_string(),
+            ((k.in_dim() * k.out_dim()) as u64 * spatial).to_string(),
         ]);
     }
     println!("{}", t.render());
@@ -371,6 +373,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
         // per-example divergences that cancel
         let dense_model = lc::infer::CompressedModel {
             name: model.name.clone(),
+            ops: model.ops.clone(),
             widths: model.widths.clone(),
             eval_batch: model.eval_batch,
             layers: state

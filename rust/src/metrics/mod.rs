@@ -56,7 +56,8 @@ pub fn account(
 ) -> Compressed {
     assert_eq!(thetas.len(), tasks.tasks.len());
     let nl = spec.n_layers();
-    let bias_params: u64 = spec.widths[1..].iter().sum::<usize>() as u64;
+    let bias_params: u64 =
+        spec.ops.iter().map(|op| op.bias_len() as u64).sum();
     let dense_bits = 32 * (spec.n_weights() as u64 + bias_params);
     let dense_flops = spec.flops_dense();
 
@@ -77,11 +78,13 @@ pub fn account(
     }
 
     // FLOPs: build the per-layer execution kernels and charge exactly the
-    // MACs they execute — the single accounting source of truth shared
-    // with `infer::CompressedModel`.
+    // MACs they execute, times each op's spatial weight reuse (oh·ow for
+    // conv) — the single accounting source of truth shared with
+    // `infer::CompressedModel`.
     let flops: u64 = build_layers(spec, tasks, thetas, weights)
         .iter()
-        .map(|k| k.flops_per_example())
+        .zip(spec.ops.iter())
+        .map(|(k, op)| k.flops_per_example() * op.spatial() as u64)
         .sum();
     Compressed { storage_bits, dense_bits, flops, dense_flops, params }
 }
@@ -136,6 +139,19 @@ mod tests {
         assert!(c.ratio() > 25.0 && c.ratio() < 32.0, "ratio={}", c.ratio());
         // quantization does not reduce FLOPs
         assert_eq!(c.flops, c.dense_flops);
+    }
+
+    #[test]
+    fn conv_accounting_uses_spatial_reuse_and_channel_biases() {
+        let spec = lookup("lenet5-conv").unwrap();
+        let tasks = TaskSet::new(vec![]);
+        let c = account(&spec, &tasks, &[], &dense_deltas(&spec));
+        // uncompressed: kernel MACs × oh·ow must reproduce flops_dense
+        assert_eq!(c.flops, c.dense_flops);
+        assert_eq!(c.dense_flops, 500 * 144 + 25_000 * 16 + 400_000 + 5_000);
+        // biases are per output channel, not per output element
+        assert_eq!(c.params, spec.n_params() as u64);
+        assert_eq!(c.storage_bits, 32 * spec.n_params() as u64);
     }
 
     #[test]

@@ -9,14 +9,20 @@
 //! ```
 //!
 //! Compressed format (`save_compressed` / `load_compressed`): same header
-//! under magic "LCCZ", then per layer a tagged payload — `0` dense f32
-//! weights, `1` a serialized [`Theta`] (the low-dimensional compressed
-//! parameters; dense Δ(Θ) is *not* stored) — followed by the layer's f32
-//! biases.  Quantized assignments, sign values, and sparse indices are
-//! bit-packed at the same widths the storage accounting charges
-//! (⌈log₂k⌉ / 2 / ⌈log₂len⌉ bits), so a 1-bit-quantized layer really is
-//! ~32× smaller on disk, and `lcc infer` executes the checkpoint without
-//! ever materializing dense weights ([`crate::infer::CompressedModel`]).
+//! under magic "LCCZ" at version 2, followed by the **op graph** (one
+//! tagged record per layer: dense dims or the full conv2d shape, plus the
+//! activation flag — compressed checkpoints are self-describing and never
+//! consult the registry), then per layer a tagged payload — `0` dense f32
+//! weights over the op's *lowered* shape, `1` a serialized [`Theta`] (the
+//! low-dimensional compressed parameters; dense Δ(Θ) is *not* stored) —
+//! followed by the layer's f32 biases (`bias_len` = output channels for
+//! conv, not output elements).  Version-1 files carry no op records; they
+//! are read as classic MLPs ([`mlp_ops`] over the stored widths).
+//! Quantized assignments, sign values, and sparse indices are bit-packed
+//! at the same widths the storage accounting charges (⌈log₂k⌉ / 2 /
+//! ⌈log₂len⌉ bits), so a 1-bit-quantized layer really is ~32× smaller on
+//! disk, and `lcc infer` executes the checkpoint without ever
+//! materializing dense weights ([`crate::infer::CompressedModel`]).
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -26,15 +32,18 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::compress::task::TaskSet;
 use crate::compress::Theta;
 use crate::infer::{CompressedLayer, CompressedModel};
+use crate::linalg::conv::Conv2dShape;
 use crate::tensor::{Matrix, Workspace};
 
-use super::{lookup, ModelSpec, ParamState};
+use super::{lookup, mlp_ops, Activation, LayerOp, ModelSpec, OpKind, ParamState};
 
 const MAGIC: &[u8; 4] = b"LCCK";
 const VERSION: u32 = 1;
 /// Magic of the compressed-checkpoint format.
 pub const MAGIC_COMPRESSED: &[u8; 4] = b"LCCZ";
-const VERSION_COMPRESSED: u32 = 1;
+const VERSION_COMPRESSED: u32 = 2;
+/// Oldest compressed version still readable (pre-op-graph MLP files).
+const VERSION_COMPRESSED_MLP: u32 = 1;
 
 pub fn save(state: &ParamState, path: &Path) -> Result<()> {
     let mut f = std::io::BufWriter::new(
@@ -112,6 +121,9 @@ pub enum LayerPayload {
 #[derive(Clone, Debug)]
 pub struct CompressedCheckpoint {
     pub name: String,
+    /// The op graph (serialized at version 2; derived via [`mlp_ops`] for
+    /// version-1 files).
+    pub ops: Vec<LayerOp>,
     pub widths: Vec<usize>,
     /// Per weight matrix, in layer order.
     pub layers: Vec<LayerPayload>,
@@ -150,6 +162,7 @@ impl CompressedCheckpoint {
             .collect();
         CompressedCheckpoint {
             name: spec.name.clone(),
+            ops: spec.ops.clone(),
             widths: spec.widths.clone(),
             layers,
             biases: state.biases.clone(),
@@ -162,6 +175,7 @@ impl CompressedCheckpoint {
     pub fn from_dense_state(state: &ParamState) -> CompressedCheckpoint {
         CompressedCheckpoint {
             name: state.spec.name.clone(),
+            ops: state.spec.ops.clone(),
             widths: state.spec.widths.clone(),
             layers: state.weights.iter().map(|w| LayerPayload::Dense(w.clone())).collect(),
             biases: state.biases.clone(),
@@ -169,22 +183,23 @@ impl CompressedCheckpoint {
     }
 
     pub fn n_layers(&self) -> usize {
-        self.widths.len() - 1
+        self.ops.len()
     }
 
-    /// Build the executable compressed model (scheme-specific kernels).
+    /// Build the executable compressed model (scheme-specific kernels over
+    /// each op's lowered weight shape).
     pub fn to_model(&self, eval_batch: usize) -> Result<CompressedModel> {
-        ensure!(self.widths.len() >= 2, "checkpoint has no layers");
+        ensure!(!self.ops.is_empty(), "checkpoint has no layers");
         let mut layers = Vec::with_capacity(self.n_layers());
         // one workspace across every layer's plan/materialization
         let mut ws = Workspace::new();
         for (l, p) in self.layers.iter().enumerate() {
-            let (m, n) = (self.widths[l], self.widths[l + 1]);
+            let (m, n) = self.ops[l].weight_shape();
             layers.push(match p {
                 LayerPayload::Dense(w) => {
                     ensure!(
                         (w.rows, w.cols) == (m, n),
-                        "layer {l}: dense payload {}x{} != widths {m}x{n}",
+                        "layer {l}: dense payload {}x{} != lowered shape {m}x{n}",
                         w.rows,
                         w.cols
                     );
@@ -193,7 +208,7 @@ impl CompressedCheckpoint {
                 LayerPayload::Compressed(t) => {
                     ensure!(
                         t.decompressed_len() == m * n,
-                        "layer {l}: theta covers {} weights, widths say {}",
+                        "layer {l}: theta covers {} weights, op wants {}",
                         t.decompressed_len(),
                         m * n
                     );
@@ -203,6 +218,7 @@ impl CompressedCheckpoint {
         }
         let model = CompressedModel {
             name: self.name.clone(),
+            ops: self.ops.clone(),
             widths: self.widths.clone(),
             eval_batch,
             layers,
@@ -219,7 +235,7 @@ impl CompressedCheckpoint {
         let mut out = Vec::with_capacity(self.n_layers());
         let mut ws = Workspace::new();
         for (l, p) in self.layers.iter().enumerate() {
-            let (m, n) = (self.widths[l], self.widths[l + 1]);
+            let (m, n) = self.ops[l].weight_shape();
             out.push(match p {
                 LayerPayload::Dense(w) => w.clone(),
                 LayerPayload::Compressed(t) => {
@@ -236,8 +252,9 @@ impl CompressedCheckpoint {
 
 /// Save a model in compressed form (Θ serialized, dense Δ(Θ) never written).
 pub fn save_compressed(ck: &CompressedCheckpoint, path: &Path) -> Result<()> {
-    ensure!(ck.layers.len() == ck.n_layers(), "layer count != widths");
-    ensure!(ck.biases.len() == ck.n_layers(), "bias count != widths");
+    ensure!(ck.widths.len() == ck.n_layers() + 1, "widths count != ops + 1");
+    ensure!(ck.layers.len() == ck.n_layers(), "layer count != ops");
+    ensure!(ck.biases.len() == ck.n_layers(), "bias count != ops");
     let mut f = std::io::BufWriter::new(
         std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
     );
@@ -250,11 +267,14 @@ pub fn save_compressed(ck: &CompressedCheckpoint, path: &Path) -> Result<()> {
     for &w in &ck.widths {
         f.write_all(&(w as u32).to_le_bytes())?;
     }
+    for op in &ck.ops {
+        write_op(&mut f, op)?;
+    }
     for l in 0..ck.n_layers() {
         match &ck.layers[l] {
             LayerPayload::Dense(w) => {
                 ensure!(
-                    (w.rows, w.cols) == (ck.widths[l], ck.widths[l + 1]),
+                    (w.rows, w.cols) == ck.ops[l].weight_shape(),
                     "layer {l}: dense payload shape mismatch"
                 );
                 f.write_all(&[0u8])?;
@@ -265,13 +285,14 @@ pub fn save_compressed(ck: &CompressedCheckpoint, path: &Path) -> Result<()> {
                 write_theta(&mut f, t)?;
             }
         }
+        ensure!(ck.biases[l].len() == ck.ops[l].bias_len(), "layer {l}: bias length");
         write_f32s(&mut f, &ck.biases[l])?;
     }
     Ok(())
 }
 
 /// Load a compressed checkpoint.  The model name is *not* required to be
-/// in the registry — compressed execution handles arbitrary widths.
+/// in the registry — compressed execution handles arbitrary op graphs.
 pub fn load_compressed(path: &Path) -> Result<CompressedCheckpoint> {
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
@@ -282,7 +303,7 @@ pub fn load_compressed(path: &Path) -> Result<CompressedCheckpoint> {
         bail!("{}: not a compressed lcc checkpoint", path.display());
     }
     let version = read_u32(&mut f)?;
-    if version != VERSION_COMPRESSED {
+    if !(VERSION_COMPRESSED_MLP..=VERSION_COMPRESSED).contains(&version) {
         bail!("{}: unsupported compressed-checkpoint version {version}", path.display());
     }
     let name_len = read_u32(&mut f)? as usize;
@@ -296,14 +317,28 @@ pub fn load_compressed(path: &Path) -> Result<CompressedCheckpoint> {
         widths.push(read_u32(&mut f)? as usize);
     }
     let nl = n_widths - 1;
+    let ops: Vec<LayerOp> = if version >= 2 {
+        (0..nl).map(|_| read_op(&mut f)).collect::<Result<_>>()?
+    } else {
+        // version-1 files predate the op graph: classic MLP semantics
+        mlp_ops(&widths)
+    };
+    for (l, op) in ops.iter().enumerate() {
+        ensure!(
+            op.in_elems() == widths[l] && op.out_elems() == widths[l + 1],
+            "{}: op {l} ({}) disagrees with stored widths",
+            path.display(),
+            op.describe()
+        );
+    }
     let mut layers = Vec::with_capacity(nl);
     let mut biases = Vec::with_capacity(nl);
-    for l in 0..nl {
+    for op in &ops {
         let mut tag = [0u8; 1];
         f.read_exact(&mut tag)?;
         let payload = match tag[0] {
             0 => {
-                let (m, n) = (widths[l], widths[l + 1]);
+                let (m, n) = op.weight_shape();
                 let mut data = vec![0.0f32; m * n];
                 read_f32s(&mut f, &mut data)?;
                 LayerPayload::Dense(Matrix::from_vec(m, n, data))
@@ -311,12 +346,85 @@ pub fn load_compressed(path: &Path) -> Result<CompressedCheckpoint> {
             1 => LayerPayload::Compressed(read_theta(&mut f)?),
             t => bail!("{}: unknown layer payload tag {t}", path.display()),
         };
-        let mut b = vec![0.0f32; widths[l + 1]];
+        let mut b = vec![0.0f32; op.bias_len()];
         read_f32s(&mut f, &mut b)?;
         layers.push(payload);
         biases.push(b);
     }
-    Ok(CompressedCheckpoint { name, widths, layers, biases })
+    Ok(CompressedCheckpoint { name, ops, widths, layers, biases })
+}
+
+const OP_DENSE: u8 = 0;
+const OP_CONV2D: u8 = 1;
+
+/// Serialize one op record: kind tag, activation flag, then the dims.
+fn write_op<W: Write>(w: &mut W, op: &LayerOp) -> Result<()> {
+    let act = match op.act {
+        Activation::Relu => 0u8,
+        Activation::Linear => 1u8,
+    };
+    match op.kind {
+        OpKind::Dense { in_dim, out_dim } => {
+            w.write_all(&[OP_DENSE, act])?;
+            w.write_all(&(in_dim as u32).to_le_bytes())?;
+            w.write_all(&(out_dim as u32).to_le_bytes())?;
+        }
+        OpKind::Conv2d(s) => {
+            w.write_all(&[OP_CONV2D, act])?;
+            for d in [s.in_ch, s.out_ch, s.in_h, s.in_w, s.kh, s.kw, s.stride, s.pad] {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn read_op<R: Read>(r: &mut R) -> Result<LayerOp> {
+    let mut hdr = [0u8; 2];
+    r.read_exact(&mut hdr)?;
+    let act = match hdr[1] {
+        0 => Activation::Relu,
+        1 => Activation::Linear,
+        a => bail!("unknown activation flag {a}"),
+    };
+    Ok(match hdr[0] {
+        OP_DENSE => {
+            let in_dim = read_u32(r)? as usize;
+            let out_dim = read_u32(r)? as usize;
+            ensure!(in_dim > 0 && out_dim > 0, "dense op with empty dims");
+            LayerOp::dense(in_dim, out_dim, act)
+        }
+        OP_CONV2D => {
+            let mut d = [0usize; 8];
+            for v in d.iter_mut() {
+                *v = read_u32(r)? as usize;
+            }
+            let s = Conv2dShape {
+                in_ch: d[0],
+                out_ch: d[1],
+                in_h: d[2],
+                in_w: d[3],
+                kh: d[4],
+                kw: d[5],
+                stride: d[6],
+                pad: d[7],
+            };
+            ensure!(
+                s.in_ch > 0
+                    && s.out_ch > 0
+                    && s.in_h > 0
+                    && s.in_w > 0
+                    && s.kh > 0
+                    && s.kw > 0
+                    && s.stride > 0
+                    && s.kh <= s.in_h + 2 * s.pad
+                    && s.kw <= s.in_w + 2 * s.pad,
+                "conv op record with invalid shape"
+            );
+            LayerOp::conv2d(s, act)
+        }
+        t => bail!("unknown op tag {t}"),
+    })
 }
 
 const THETA_QUANTIZED: u8 = 0;
@@ -573,6 +681,7 @@ mod tests {
         ]);
         CompressedCheckpoint {
             name: "custom-tiny".into(),
+            ops: mlp_ops(&[4, 3, 2]),
             widths: vec![4, 3, 2],
             layers: vec![
                 LayerPayload::Compressed(theta),
@@ -616,6 +725,7 @@ mod tests {
         let n0 = state.weights[0].data.len();
         let ck = CompressedCheckpoint {
             name: spec.name.clone(),
+            ops: spec.ops.clone(),
             widths: spec.widths.clone(),
             layers: vec![
                 LayerPayload::Compressed(Theta::Quantized {
@@ -649,6 +759,63 @@ mod tests {
     }
 
     #[test]
+    fn conv_checkpoint_roundtrips_op_graph() {
+        let spec = lookup("lenet5-conv").unwrap();
+        let state = ParamState::init(&spec, 7);
+        let ck = CompressedCheckpoint::from_dense_state(&state);
+        let dir = std::env::temp_dir().join("lcc_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("conv.lccz");
+        save_compressed(&ck, &path).unwrap();
+        let loaded = load_compressed(&path).unwrap();
+        assert_eq!(loaded.ops, spec.ops, "op graph must survive the roundtrip");
+        assert_eq!(loaded.widths, spec.widths);
+        // conv biases are per channel: 20, not 12*12*20
+        assert_eq!(loaded.biases[0].len(), 20);
+        assert_eq!(loaded.to_dense_weights().unwrap(), state.weights);
+        let model = loaded.to_model(64).unwrap();
+        assert_eq!(model.n_layers(), 4);
+        assert!(model.ops[0].is_conv());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn reads_version1_files_as_mlps() {
+        // hand-write a version-1 LCCZ (no op records, dense payloads over
+        // widths, biases of widths[l+1]) and check it loads as an MLP
+        let widths = [3usize, 2, 2];
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC_COMPRESSED);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&(2u32).to_le_bytes()); // name "v1"
+        buf.extend_from_slice(b"v1");
+        buf.extend_from_slice(&(widths.len() as u32).to_le_bytes());
+        for &w in &widths {
+            buf.extend_from_slice(&(w as u32).to_le_bytes());
+        }
+        for l in 0..2 {
+            buf.push(0u8); // dense payload
+            for i in 0..widths[l] * widths[l + 1] {
+                buf.extend_from_slice(&(i as f32).to_le_bytes());
+            }
+            for _ in 0..widths[l + 1] {
+                buf.extend_from_slice(&0.5f32.to_le_bytes());
+            }
+        }
+        let dir = std::env::temp_dir().join("lcc_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.lccz");
+        std::fs::write(&path, &buf).unwrap();
+        let loaded = load_compressed(&path).unwrap();
+        assert_eq!(loaded.ops, mlp_ops(&widths));
+        assert_eq!(loaded.widths, widths.to_vec());
+        assert_eq!(loaded.layers.len(), 2);
+        assert_eq!(loaded.biases[0], vec![0.5, 0.5]);
+        loaded.to_model(4).unwrap().validate().unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn from_lc_splits_multi_layer_tasks() {
         use crate::compress::quantize::AdaptiveQuant;
         use crate::compress::task::TaskSpec;
@@ -656,12 +823,7 @@ mod tests {
         use crate::compress::CContext;
         use crate::compress::Compression;
 
-        let spec = ModelSpec {
-            name: "tiny".into(),
-            widths: vec![4, 3, 2],
-            batch: 8,
-            eval_batch: 8,
-        };
+        let spec = ModelSpec::mlp("tiny", &[4, 3, 2], 8, 8);
         let state = ParamState::init(&spec, 3);
         let tasks = TaskSet::new(vec![TaskSpec {
             name: "q".into(),

@@ -1,13 +1,21 @@
 //! Model registry and host-side parameter state.
 //!
-//! Mirrors `python/compile/model.py`: an MLP family with per-layer weight
-//! matrices `W_l: in x out` and biases, flat parameter ordering
-//! `[W1, b1, ..., WL, bL]`, Glorot-uniform init.  The registry entries must
-//! match the variants lowered by `aot.py` (checked at runtime against the
-//! artifact manifest).
+//! A model is an **op graph** ([`LayerOp`]): a chain of dense and conv2d
+//! layers, each owning one lowered weight matrix and one bias vector, with
+//! an explicit activation flag (see [`op`]).  The MLP family mirrors
+//! `python/compile/model.py` — per-layer weight matrices `W_l: in x out`,
+//! flat parameter ordering `[W1, b1, ..., WL, bL]`, Glorot-uniform init —
+//! and the conv entries lower onto the same layout via
+//! [`crate::linalg::conv`].  `widths` (activation element counts per
+//! stage) remains available as a derived view for consumers that only
+//! need input dim, output classes, or activation sizes.
 
 pub mod checkpoint;
+pub mod op;
 
+pub use op::{mlp_ops, Activation, LayerOp, OpKind};
+
+use crate::linalg::conv::Conv2dShape;
 use crate::tensor::Matrix;
 use crate::util::rng::{glorot_bound, Xoshiro256};
 
@@ -15,68 +23,150 @@ use crate::util::rng::{glorot_bound, Xoshiro256};
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelSpec {
     pub name: String,
-    /// Layer widths including input and output, e.g. [784, 300, 100, 10].
+    /// The op graph: one entry per layer.
+    pub ops: Vec<LayerOp>,
+    /// Derived activation element counts including input and output, e.g.
+    /// [784, 300, 100, 10] — `widths[0]` is the input dim, `widths[l+1] =
+    /// ops[l].out_elems()`.  Kept in lockstep with `ops` by the
+    /// constructors.
     pub widths: Vec<usize>,
     pub batch: usize,
     pub eval_batch: usize,
 }
 
 impl ModelSpec {
-    pub fn n_layers(&self) -> usize {
-        self.widths.len() - 1
+    /// A classic MLP: dense layers over `widths`, ReLU on all but the last.
+    pub fn mlp(name: &str, widths: &[usize], batch: usize, eval_batch: usize) -> ModelSpec {
+        ModelSpec::from_ops(name, mlp_ops(widths), batch, eval_batch)
     }
 
+    /// Build a spec from an arbitrary op graph, deriving `widths` and
+    /// validating that adjacent ops agree on activation element counts.
+    pub fn from_ops(name: &str, ops: Vec<LayerOp>, batch: usize, eval_batch: usize) -> ModelSpec {
+        assert!(!ops.is_empty(), "model {name:?} has no ops");
+        let mut widths = Vec::with_capacity(ops.len() + 1);
+        widths.push(ops[0].in_elems());
+        for (l, op) in ops.iter().enumerate() {
+            assert_eq!(
+                op.in_elems(),
+                *widths.last().unwrap(),
+                "model {name:?}: op {l} ({}) expects {} input elements, previous stage \
+                 produces {}",
+                op.describe(),
+                op.in_elems(),
+                widths.last().unwrap()
+            );
+            widths.push(op.out_elems());
+        }
+        ModelSpec { name: name.into(), ops, widths, batch, eval_batch }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Shape of layer `l`'s (lowered) weight matrix.
     pub fn layer_shape(&self, l: usize) -> (usize, usize) {
-        (self.widths[l], self.widths[l + 1])
+        self.ops[l].weight_shape()
+    }
+
+    /// Bias vector length of layer `l`.
+    pub fn bias_len(&self, l: usize) -> usize {
+        self.ops[l].bias_len()
     }
 
     /// Total scalar weights (matrices only, the compressible parameters).
+    /// Delegates to the per-op shapes — the single source of truth
+    /// `metrics::account` divides by.
     pub fn n_weights(&self) -> usize {
-        (0..self.n_layers()).map(|l| self.widths[l] * self.widths[l + 1]).sum()
+        self.ops
+            .iter()
+            .map(|op| {
+                let (m, n) = op.weight_shape();
+                m * n
+            })
+            .sum()
     }
 
     /// Total parameters including biases.
     pub fn n_params(&self) -> usize {
-        self.n_weights() + self.widths[1..].iter().sum::<usize>()
+        self.n_weights() + self.ops.iter().map(|op| op.bias_len()).sum::<usize>()
     }
 
-    /// Inference multiply-accumulates per example for the dense model.
+    /// Inference multiply-accumulates per example for the dense model —
+    /// per-op weight MACs times each op's spatial reuse.
     pub fn flops_dense(&self) -> u64 {
-        (0..self.n_layers())
-            .map(|l| (self.widths[l] * self.widths[l + 1]) as u64)
-            .sum()
+        self.ops.iter().map(|op| op.macs_per_example()).sum()
+    }
+
+    /// True when every layer is dense (the family the PJRT artifact path
+    /// and its manifests cover).
+    pub fn is_mlp(&self) -> bool {
+        !self.ops.iter().any(|op| op.is_conv())
     }
 }
 
-/// The built-in registry (must mirror MODEL_VARIANTS in model.py).
+/// The built-in registry.  The MLP entries must mirror MODEL_VARIANTS in
+/// model.py; the conv entries are native-backend models lowered onto the
+/// packed GEMM.
 pub fn registry() -> Vec<ModelSpec> {
+    let relu = Activation::Relu;
     vec![
-        ModelSpec {
-            name: "mlp-small".into(),
-            widths: vec![784, 100, 10],
-            batch: 128,
-            eval_batch: 512,
-        },
-        ModelSpec {
-            name: "lenet300".into(),
-            widths: vec![784, 300, 100, 10],
-            batch: 128,
-            eval_batch: 512,
-        },
-        ModelSpec {
-            name: "lenet300-wide".into(),
-            widths: vec![784, 500, 300, 10],
-            batch: 128,
-            eval_batch: 512,
-        },
+        ModelSpec::mlp("mlp-small", &[784, 100, 10], 128, 512),
+        ModelSpec::mlp("lenet300", &[784, 300, 100, 10], 128, 512),
+        ModelSpec::mlp("lenet300-wide", &[784, 500, 300, 10], 128, 512),
+        // LeNet5-style conv net on 28x28x1: strided 5x5 convs instead of
+        // pooling, 430,500 weights.
+        ModelSpec::from_ops(
+            "lenet5-conv",
+            vec![
+                LayerOp::conv2d(
+                    Conv2dShape { in_ch: 1, out_ch: 20, in_h: 28, in_w: 28, kh: 5, kw: 5, stride: 2, pad: 0 },
+                    relu,
+                ),
+                LayerOp::conv2d(
+                    Conv2dShape { in_ch: 20, out_ch: 50, in_h: 12, in_w: 12, kh: 5, kw: 5, stride: 2, pad: 0 },
+                    relu,
+                ),
+                LayerOp::dense(800, 500, relu),
+                LayerOp::dense(500, 10, Activation::Linear),
+            ],
+            128,
+            512,
+        ),
+        // VGG-small-style conv net at 10,771,848 weights: 3x3 convs (the
+        // second and third strided), then a wide dense head — the >10M
+        // entry the streaming loader exists for.
+        ModelSpec::from_ops(
+            "vgg-small",
+            vec![
+                LayerOp::conv2d(
+                    Conv2dShape { in_ch: 1, out_ch: 32, in_h: 28, in_w: 28, kh: 3, kw: 3, stride: 1, pad: 1 },
+                    relu,
+                ),
+                LayerOp::conv2d(
+                    Conv2dShape { in_ch: 32, out_ch: 64, in_h: 28, in_w: 28, kh: 3, kw: 3, stride: 2, pad: 1 },
+                    relu,
+                ),
+                LayerOp::conv2d(
+                    Conv2dShape { in_ch: 64, out_ch: 128, in_h: 14, in_w: 14, kh: 3, kw: 3, stride: 2, pad: 1 },
+                    relu,
+                ),
+                LayerOp::dense(7 * 7 * 128, 1700, relu),
+                LayerOp::dense(1700, 10, Activation::Linear),
+            ],
+            64,
+            256,
+        ),
     ]
 }
 
 pub fn lookup(name: &str) -> Result<ModelSpec, String> {
-    registry()
-        .into_iter()
-        .find(|m| m.name == name)
-        .ok_or_else(|| format!("unknown model {name:?}; known: mlp-small, lenet300, lenet300-wide"))
+    registry().into_iter().find(|m| m.name == name).ok_or_else(|| {
+        // derive the known-model list from the registry so it can't drift
+        let known: Vec<String> = registry().into_iter().map(|m| m.name).collect();
+        format!("unknown model {name:?}; known: {}", known.join(", "))
+    })
 }
 
 /// Host-side parameter state of a model instance: weights, biases, and the
@@ -91,7 +181,9 @@ pub struct ParamState {
 }
 
 impl ParamState {
-    /// Glorot-uniform weights, zero biases and momenta.
+    /// Glorot-uniform weights, zero biases and momenta.  Conv layers draw
+    /// fan-in/fan-out from their lowered matrix shape (`ic·kh·kw` / `oc`),
+    /// the standard im2col-Glorot convention.
     pub fn init(spec: &ModelSpec, seed: u64) -> Self {
         let mut rng = Xoshiro256::new(seed);
         let mut weights = Vec::new();
@@ -104,7 +196,7 @@ impl ParamState {
                 *v = rng.uniform_in(-bound, bound);
             }
             weights.push(w);
-            biases.push(vec![0.0; fan_out]);
+            biases.push(vec![0.0; spec.bias_len(l)]);
         }
         let w_momenta = weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect();
         let b_momenta = biases.iter().map(|b| vec![0.0; b.len()]).collect();
@@ -143,6 +235,13 @@ mod tests {
             assert!(spec.widths.len() >= 2);
             assert_eq!(spec.widths[0], 784);
             assert_eq!(*spec.widths.last().unwrap(), 10);
+            assert_eq!(spec.widths.len(), spec.ops.len() + 1);
+            for (l, op) in spec.ops.iter().enumerate() {
+                assert_eq!(op.in_elems(), spec.widths[l], "{} op {l}", spec.name);
+                assert_eq!(op.out_elems(), spec.widths[l + 1], "{} op {l}", spec.name);
+            }
+            // logits head is linear, everything before it activated
+            assert_eq!(spec.ops.last().unwrap().act, Activation::Linear, "{}", spec.name);
         }
     }
 
@@ -158,8 +257,27 @@ mod tests {
     }
 
     #[test]
-    fn lookup_unknown_fails() {
-        assert!(lookup("resnet50").is_err());
+    fn conv_registry_counts() {
+        let m = lookup("lenet5-conv").unwrap();
+        // 25*20 + 500*50 + 800*500 + 500*10
+        assert_eq!(m.n_weights(), 500 + 25_000 + 400_000 + 5_000);
+        assert_eq!(m.n_params(), m.n_weights() + 20 + 50 + 500 + 10);
+        // conv MACs scale with spatial reuse: 500*144 + 25000*16 + dense
+        assert_eq!(m.flops_dense(), 500 * 144 + 25_000 * 16 + 400_000 + 5_000);
+        assert!(!m.is_mlp());
+
+        let v = lookup("vgg-small").unwrap();
+        assert_eq!(v.n_weights(), 10_771_848);
+        assert!(v.n_weights() > 10_000_000, "vgg-small must break the 10M ceiling");
+        assert_eq!(v.widths, vec![784, 25_088, 12_544, 6_272, 1_700, 10]);
+    }
+
+    #[test]
+    fn lookup_unknown_fails_and_lists_registry() {
+        let err = lookup("resnet50").unwrap_err();
+        for spec in registry() {
+            assert!(err.contains(&spec.name), "error message must list {}", spec.name);
+        }
     }
 
     #[test]
@@ -173,6 +291,16 @@ mod tests {
         assert!(a.biases[0].iter().all(|&v| v == 0.0));
         let c = ParamState::init(&spec, 43);
         assert_ne!(a.weights[0].data, c.weights[0].data);
+    }
+
+    #[test]
+    fn init_shapes_conv_layers_from_lowering() {
+        let spec = lookup("lenet5-conv").unwrap();
+        let st = ParamState::init(&spec, 1);
+        assert_eq!((st.weights[0].rows, st.weights[0].cols), (25, 20));
+        assert_eq!(st.biases[0].len(), 20);
+        assert_eq!((st.weights[1].rows, st.weights[1].cols), (500, 50));
+        assert_eq!((st.weights[2].rows, st.weights[2].cols), (800, 500));
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Typed per-layer IR: the op graph a model executes.
+//!
+//! Every subsystem that used to assume "a model is a list of dense
+//! matrices" (training, compression, inference, serialization, FLOP
+//! accounting) now consumes a `Vec<LayerOp>`.  An op pairs a kind —
+//! [`OpKind::Dense`] or [`OpKind::Conv2d`], the latter lowered onto the
+//! packed GEMM via [`crate::linalg::conv`] — with an explicit
+//! [`Activation`] flag, replacing the implicit "ReLU on all but the last
+//! layer" convention.
+//!
+//! The invariant that makes the rest of the codebase op-agnostic: **every
+//! op owns exactly one lowered weight matrix** ([`LayerOp::weight_shape`])
+//! **and one bias vector** ([`LayerOp::bias_len`]).  Conv filters are
+//! stored *as* their `(ic·kh·kw) × oc` lowering, so the C-step library
+//! (prune/quant/low-rank/additive), the Θ checkpoint payloads, and the
+//! compressed-execution kernels apply to conv layers with zero changes.
+
+use crate::linalg::conv::Conv2dShape;
+
+/// Elementwise nonlinearity applied after the affine op.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    /// Identity (logits head).
+    Linear,
+}
+
+/// The affine part of one layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Dense { in_dim: usize, out_dim: usize },
+    Conv2d(Conv2dShape),
+}
+
+/// One layer of the op graph: affine kind + activation flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerOp {
+    pub kind: OpKind,
+    pub act: Activation,
+}
+
+impl LayerOp {
+    pub fn dense(in_dim: usize, out_dim: usize, act: Activation) -> LayerOp {
+        assert!(in_dim > 0 && out_dim > 0, "dense op with empty dims");
+        LayerOp { kind: OpKind::Dense { in_dim, out_dim }, act }
+    }
+
+    pub fn conv2d(shape: Conv2dShape, act: Activation) -> LayerOp {
+        shape.validate();
+        LayerOp { kind: OpKind::Conv2d(shape), act }
+    }
+
+    /// Shape of the op's (lowered) weight matrix.
+    pub fn weight_shape(&self) -> (usize, usize) {
+        match self.kind {
+            OpKind::Dense { in_dim, out_dim } => (in_dim, out_dim),
+            OpKind::Conv2d(s) => (s.patch_len(), s.out_ch),
+        }
+    }
+
+    /// Bias vector length (one bias per output unit / output channel).
+    pub fn bias_len(&self) -> usize {
+        self.weight_shape().1
+    }
+
+    /// Input activation elements per example.
+    pub fn in_elems(&self) -> usize {
+        match self.kind {
+            OpKind::Dense { in_dim, .. } => in_dim,
+            OpKind::Conv2d(s) => s.in_elems(),
+        }
+    }
+
+    /// Output activation elements per example.
+    pub fn out_elems(&self) -> usize {
+        match self.kind {
+            OpKind::Dense { out_dim, .. } => out_dim,
+            OpKind::Conv2d(s) => s.out_elems(),
+        }
+    }
+
+    /// How many output positions share the weight matrix per example: 1
+    /// for dense, `oh·ow` for conv.  Multiplies the weight-matrix MACs in
+    /// every FLOP account.
+    pub fn spatial(&self) -> usize {
+        match self.kind {
+            OpKind::Dense { .. } => 1,
+            OpKind::Conv2d(s) => s.spatial(),
+        }
+    }
+
+    /// Dense multiply-accumulates per example through this op.
+    pub fn macs_per_example(&self) -> u64 {
+        let (r, c) = self.weight_shape();
+        (r * c) as u64 * self.spatial() as u64
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self.kind, OpKind::Conv2d(_))
+    }
+
+    /// Compact human-readable form for tables and error messages, e.g.
+    /// `dense 784x300+relu` or `conv 3x3 s2 p1 32->64+relu`.
+    pub fn describe(&self) -> String {
+        let act = match self.act {
+            Activation::Relu => "+relu",
+            Activation::Linear => "",
+        };
+        match self.kind {
+            OpKind::Dense { in_dim, out_dim } => format!("dense {in_dim}x{out_dim}{act}"),
+            OpKind::Conv2d(s) => format!(
+                "conv {}x{} s{} p{} {}->{}{act}",
+                s.kh, s.kw, s.stride, s.pad, s.in_ch, s.out_ch
+            ),
+        }
+    }
+}
+
+/// The op graph of a classic MLP over `widths`: dense layers with ReLU on
+/// every layer but the last (identity logits head).
+pub fn mlp_ops(widths: &[usize]) -> Vec<LayerOp> {
+    assert!(widths.len() >= 2, "an MLP needs at least input and output widths");
+    let nl = widths.len() - 1;
+    (0..nl)
+        .map(|l| {
+            let act = if l < nl - 1 { Activation::Relu } else { Activation::Linear };
+            LayerOp::dense(widths[l], widths[l + 1], act)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_op_shapes() {
+        let op = LayerOp::dense(784, 300, Activation::Relu);
+        assert_eq!(op.weight_shape(), (784, 300));
+        assert_eq!(op.bias_len(), 300);
+        assert_eq!((op.in_elems(), op.out_elems(), op.spatial()), (784, 300, 1));
+        assert_eq!(op.macs_per_example(), 784 * 300);
+        assert!(!op.is_conv());
+    }
+
+    #[test]
+    fn conv_op_shapes() {
+        // LeNet5-style: 1->20 channels, 5x5, stride 2, no pad, 28x28 input
+        let s = Conv2dShape { in_ch: 1, out_ch: 20, in_h: 28, in_w: 28, kh: 5, kw: 5, stride: 2, pad: 0 };
+        let op = LayerOp::conv2d(s, Activation::Relu);
+        assert_eq!(op.weight_shape(), (25, 20));
+        assert_eq!(op.bias_len(), 20);
+        assert_eq!(op.in_elems(), 784);
+        assert_eq!(op.out_elems(), 12 * 12 * 20);
+        assert_eq!(op.spatial(), 144);
+        assert_eq!(op.macs_per_example(), 25 * 20 * 144);
+        assert!(op.is_conv());
+    }
+
+    #[test]
+    fn mlp_ops_activation_convention() {
+        let ops = mlp_ops(&[784, 300, 100, 10]);
+        assert_eq!(ops.len(), 3);
+        assert_eq!(ops[0].act, Activation::Relu);
+        assert_eq!(ops[1].act, Activation::Relu);
+        assert_eq!(ops[2].act, Activation::Linear);
+        assert_eq!(ops[2].weight_shape(), (100, 10));
+    }
+}

@@ -7,8 +7,10 @@
 //! data-parallel with no shared mutable state:
 //!
 //! * each shard covers a fixed row range `[lo, hi)` of the minibatch and
-//!   owns its activations, backprop ping-pong buffers (`dz`/`dh`), and a
-//!   full per-layer gradient shard (`dw`/`db`) plus a local CE partial;
+//!   owns its activations, backprop ping-pong buffers (`dz`/`dh`), its
+//!   conv scratch (retained im2col column matrices per conv layer plus a
+//!   shared `colgrad` for the col2im backward), and a full per-layer
+//!   gradient shard (`dw`/`db`) plus a local CE partial;
 //! * the shard layout is a function of the **batch size only**
 //!   ([`MICROBATCH`] rows per shard) — never of the thread count — so the
 //!   per-shard arithmetic and the fixed-shape tree reduce
@@ -16,15 +18,15 @@
 //!   parameters for any `threads` (pinned by `benches/l_step_bench.rs`);
 //! * buffers are recycled through a [`Workspace`] arena when the driver
 //!   switches model or batch shape, and [`GradWorkspace::prepare`] is a
-//!   no-op on a shape match, so the steady-state L step performs zero
-//!   heap allocations (measured by the counting allocator in
-//!   `benches/l_step_bench.rs`).
+//!   no-op on an op-graph match, so the steady-state L step performs zero
+//!   heap allocations (measured by the counting allocators in
+//!   `benches/l_step_bench.rs` and `benches/conv_bench.rs`).
 //!
 //! [`crate::runtime::trainer::TrainDriver`] owns one `GradWorkspace` for
 //! its lifetime and threads it through [`super::Backend::train_step_ws`];
 //! backends that manage their own device buffers (PJRT) simply ignore it.
 
-use crate::models::ModelSpec;
+use crate::models::{LayerOp, ModelSpec, OpKind};
 use crate::tensor::{Matrix, Workspace};
 
 /// Rows per gradient shard.  Matches the GEMM row-block granularity in
@@ -38,9 +40,16 @@ pub(crate) struct ShardGrad {
     pub(crate) lo: usize,
     pub(crate) hi: usize,
     /// Retained activations: `acts[0]` = input rows, `acts[l+1]` = layer
-    /// `l` output (`hi - lo` rows each).
+    /// `l` output (`hi - lo` rows each, `ops[l].out_elems()` columns).
     pub(crate) acts: Vec<Matrix>,
-    /// Backprop ping-pong buffers, capacity `rows × max(widths[1..])`.
+    /// Retained im2col column matrices, one per layer: conv layers get
+    /// `(rows·oh·ow) × (ic·kh·kw)`, dense layers an empty 0×0 (they read
+    /// `acts[l]` directly).
+    pub(crate) cols: Vec<Matrix>,
+    /// Backward conv scratch for `dcol = dZmat · Wᵀ` before col2im,
+    /// capacity = the largest conv column matrix (empty when no conv op).
+    pub(crate) colgrad: Matrix,
+    /// Backprop ping-pong buffers, capacity `rows × max(out_elems)`.
     pub(crate) dz: Matrix,
     pub(crate) dh: Matrix,
     /// Per-layer weight-gradient shard (summed into shard 0 by the tree
@@ -57,6 +66,14 @@ impl ShardGrad {
         for m in self.acts {
             pool.put(m.data);
         }
+        for m in self.cols {
+            if m.data.capacity() > 0 {
+                pool.put(m.data);
+            }
+        }
+        if self.colgrad.data.capacity() > 0 {
+            pool.put(self.colgrad.data);
+        }
         pool.put(self.dz.data);
         pool.put(self.dh.data);
         for m in self.dw {
@@ -72,12 +89,17 @@ fn take_matrix(pool: &mut Workspace, rows: usize, cols: usize) -> Matrix {
     Matrix { rows, cols, data: pool.take(rows * cols) }
 }
 
+/// An empty placeholder matrix (no heap allocation).
+fn empty_matrix() -> Matrix {
+    Matrix { rows: 0, cols: 0, data: Vec::new() }
+}
+
 /// Persistent, shard-structured scratch state for the native L step.
 #[derive(Default)]
 pub struct GradWorkspace {
     pub(crate) shards: Vec<ShardGrad>,
-    /// `(batch, widths)` the shards are currently shaped for.
-    shape: Option<(usize, Vec<usize>)>,
+    /// `(batch, ops)` the shards are currently shaped for.
+    shape: Option<(usize, Vec<LayerOp>)>,
     /// Arena the buffers are recycled through on shape changes.
     pool: Workspace,
 }
@@ -96,7 +118,7 @@ impl GradWorkspace {
     /// and allocation-free — when the shape already matches; otherwise old
     /// buffers are recycled through the arena and new ones taken from it.
     pub(crate) fn prepare(&mut self, spec: &ModelSpec, b: usize) {
-        if self.shape.as_ref().is_some_and(|(pb, pw)| *pb == b && *pw == spec.widths) {
+        if self.shape.as_ref().is_some_and(|(pb, pops)| *pb == b && *pops == spec.ops) {
             return;
         }
         let pool = &mut self.pool;
@@ -104,29 +126,52 @@ impl GradWorkspace {
             sh.recycle(pool);
         }
         let nl = spec.n_layers();
-        let max_w = spec.widths[1..].iter().copied().max().unwrap_or(1);
+        let max_out = spec.ops.iter().map(|op| op.out_elems()).max().unwrap_or(1);
         let n_shards = (b + MICROBATCH - 1) / MICROBATCH;
         for s in 0..n_shards.max(1) {
             let lo = (s * MICROBATCH).min(b);
             let hi = ((s + 1) * MICROBATCH).min(b);
             let rows = hi - lo;
+            // the largest conv column matrix doubles as the dcol scratch
+            let max_col = spec
+                .ops
+                .iter()
+                .filter_map(|op| match op.kind {
+                    OpKind::Conv2d(cs) => Some(rows * cs.spatial() * cs.patch_len()),
+                    OpKind::Dense { .. } => None,
+                })
+                .max();
             self.shards.push(ShardGrad {
                 lo,
                 hi,
                 acts: (0..=nl).map(|l| take_matrix(pool, rows, spec.widths[l])).collect(),
-                dz: take_matrix(pool, rows, max_w),
-                dh: take_matrix(pool, rows, max_w),
+                cols: spec
+                    .ops
+                    .iter()
+                    .map(|op| match op.kind {
+                        OpKind::Conv2d(cs) => {
+                            take_matrix(pool, rows * cs.spatial(), cs.patch_len())
+                        }
+                        OpKind::Dense { .. } => empty_matrix(),
+                    })
+                    .collect(),
+                colgrad: match max_col {
+                    Some(len) => Matrix { rows: 0, cols: 0, data: pool.take(len) },
+                    None => empty_matrix(),
+                },
+                dz: take_matrix(pool, rows, max_out),
+                dh: take_matrix(pool, rows, max_out),
                 dw: (0..nl)
                     .map(|l| {
                         let (m, n) = spec.layer_shape(l);
                         take_matrix(pool, m, n)
                     })
                     .collect(),
-                db: (0..nl).map(|l| pool.take(spec.layer_shape(l).1)).collect(),
+                db: (0..nl).map(|l| pool.take(spec.bias_len(l))).collect(),
                 ce_sum: 0.0,
             });
         }
-        self.shape = Some((b, spec.widths.clone()));
+        self.shape = Some((b, spec.ops.clone()));
     }
 }
 
@@ -135,7 +180,7 @@ mod tests {
     use super::*;
 
     fn spec(widths: &[usize], batch: usize) -> ModelSpec {
-        ModelSpec { name: "gw".into(), widths: widths.to_vec(), batch, eval_batch: batch }
+        ModelSpec::mlp("gw", widths, batch, batch)
     }
 
     #[test]
@@ -172,5 +217,31 @@ mod tests {
         for sh in &ws.shards {
             assert_eq!(sh.acts[0].data.len(), (sh.hi - sh.lo) * 8);
         }
+    }
+
+    #[test]
+    fn conv_shards_carry_column_scratch() {
+        let mut ws = GradWorkspace::new();
+        let spec = crate::models::lookup("lenet5-conv").unwrap();
+        ws.prepare(&spec, 48); // ragged: shards of 32 and 16 rows
+        assert_eq!(ws.shard_count(), 2);
+        for sh in &ws.shards {
+            let rows = sh.hi - sh.lo;
+            // conv layers 0 and 1 have column matrices, dense layers empty
+            assert_eq!(sh.cols[0].rows, rows * 144);
+            assert_eq!(sh.cols[0].cols, 25);
+            assert_eq!(sh.cols[1].rows, rows * 16);
+            assert_eq!(sh.cols[1].cols, 500);
+            assert_eq!(sh.cols[2].data.len(), 0);
+            assert_eq!(sh.cols[3].data.len(), 0);
+            // colgrad holds the largest conv column (layer 1: 16*500 > 144*25)
+            assert_eq!(sh.colgrad.data.len(), rows * 16 * 500);
+            // acts sized by activation elements, dz/dh by the widest output
+            assert_eq!(sh.acts[1].cols, 12 * 12 * 20);
+            assert_eq!(sh.dz.data.len(), rows * (12 * 12 * 20));
+        }
+        // dense-only respec empties the conv scratch without leaking
+        ws.prepare(&spec, 48); // no-op on match
+        assert_eq!(ws.shard_count(), 2);
     }
 }

@@ -73,12 +73,9 @@ impl Backend for PjrtBackend {
 
     fn model_spec(&mut self, model: &str) -> Result<ModelSpec> {
         let art = self.manifest.model(model).map_err(anyhow::Error::msg)?;
-        Ok(ModelSpec {
-            name: art.name.clone(),
-            widths: art.widths.clone(),
-            batch: art.batch,
-            eval_batch: art.eval_batch,
-        })
+        // PJRT artifacts are compiled MLPs: the widths fully determine the
+        // op graph (dense + ReLU chain, linear head)
+        Ok(ModelSpec::mlp(&art.name, &art.widths, art.batch, art.eval_batch))
     }
 
     #[allow(clippy::too_many_arguments)]

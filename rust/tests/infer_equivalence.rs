@@ -132,7 +132,7 @@ fn every_variant_matches_dense_forward_within_1e5() {
 fn multi_layer_vector_task_splits_equivalently() {
     // one task covering both layers as a flat vector: the per-layer split
     // inside CompressedModel must reproduce the scattered Δ(Θ) exactly
-    let spec = ModelSpec { name: "t".into(), widths: vec![9, 6, 4], batch: 8, eval_batch: 8 };
+    let spec = ModelSpec::mlp("t", &[9, 6, 4], 8, 8);
     let state = ParamState::init(&spec, 21);
     let tasks = TaskSet::new(vec![TaskSpec {
         name: "q-all".into(),
@@ -177,12 +177,7 @@ fn eval_compressed_matches_dense_eval_on_dataset() {
     // kernels (CSR + codebook): the compressed eval must agree with the
     // dense-Δ(Θ) eval to float identity.
     let (_, test_data) = lc::data::synth::train_test(0, 300, 3, 2);
-    let spec = ModelSpec {
-        name: "eq-test".into(),
-        widths: vec![784, 32, 10],
-        batch: 64,
-        eval_batch: 128,
-    };
+    let spec = ModelSpec::mlp("eq-test", &[784, 32, 10], 64, 128);
     let mut state = ParamState::init(&spec, 17);
 
     // prune layer 0 to 10%, quantize layer 1 to k=4
@@ -194,6 +189,7 @@ fn eval_compressed_matches_dense_eval_on_dataset() {
 
     let model = CompressedModel {
         name: spec.name.clone(),
+        ops: spec.ops.clone(),
         widths: spec.widths.clone(),
         eval_batch: spec.eval_batch,
         layers: vec![

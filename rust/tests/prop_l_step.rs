@@ -12,15 +12,23 @@
 //!   forward/backward + fixed-shape tree reduce make parameters a function
 //!   of the inputs only, never of the thread count; asserted bitwise on a
 //!   ragged-shard batch and end-to-end through a whole LC run.
+//! * `conv_*` — the same contracts through the conv2d lowering: finite
+//!   differences through im2col/col2im, and bitwise thread-count
+//!   invariance for the lenet5-conv registry entry.
+//! * `lc_stream_*` — the streaming loader: a single whole-stream chunk
+//!   reproduces the in-memory run bit for bit, and chunked streaming runs
+//!   are bitwise thread-count invariant.
 
 use lc::compress::prune::ConstraintL0;
 use lc::compress::quantize::AdaptiveQuant;
 use lc::compress::task::{TaskSet, TaskSpec};
 use lc::compress::view::View;
+use lc::data::stream::StreamConfig;
 use lc::data::synth;
 use lc::lc::{LcAlgorithm, LcConfig, MuSchedule};
 use lc::lc::schedule::LrSchedule;
-use lc::models::{ModelSpec, ParamState};
+use lc::linalg::conv::Conv2dShape;
+use lc::models::{Activation, LayerOp, ModelSpec, ParamState};
 use lc::runtime::backend::native::MOMENTUM;
 use lc::runtime::trainer::TrainDriver;
 use lc::runtime::Runtime;
@@ -28,7 +36,7 @@ use lc::tensor::Matrix;
 use lc::util::rng::Xoshiro256;
 
 fn spec(widths: &[usize], batch: usize) -> ModelSpec {
-    ModelSpec { name: "prop-l".into(), widths: widths.to_vec(), batch, eval_batch: batch }
+    ModelSpec::mlp("prop-l", widths, batch, batch)
 }
 
 fn batch_for(spec: &ModelSpec, seed: u64) -> (Vec<f32>, Vec<i32>) {
@@ -303,6 +311,239 @@ fn lc_outcome_bit_identical_across_thread_counts() {
                 bits(&got.compressed_state.biases[l]),
                 bits(&want.compressed_state.biases[l]),
                 "biases[{l}] t={threads}"
+            );
+        }
+        assert_eq!(got.final_test.error, want.final_test.error, "t={threads}");
+    }
+}
+
+#[test]
+fn conv_gradients_match_finite_differences() {
+    // conv 1->2 3x3 s1 p1 on a 4x4 input, then a linear head: the full
+    // penalized gradient through im2col/col2im must match central
+    // differences.  Same kink-safety construction as the dense test:
+    // conv pre-activations sit at ±2 ∓ (≤ 9·0.05) = beyond ±1.55, far from
+    // the ReLU kink relative to any eps probe (a single-weight probe moves
+    // a pre-activation by at most eps·|x| = 1e-2).
+    let spec = ModelSpec::from_ops(
+        "conv-fd",
+        vec![
+            LayerOp::conv2d(
+                Conv2dShape {
+                    in_ch: 1,
+                    out_ch: 2,
+                    in_h: 4,
+                    in_w: 4,
+                    kh: 3,
+                    kw: 3,
+                    stride: 1,
+                    pad: 1,
+                },
+                Activation::Relu,
+            ),
+            LayerOp::dense(32, 3, Activation::Linear),
+        ],
+        6,
+        6,
+    );
+    let driver = TrainDriver::native_for_spec(&spec, 2);
+
+    let mut rng = Xoshiro256::new(51);
+    let mut state0 = ParamState::init(&spec, 51);
+    for v in state0.weights[0].data.iter_mut() {
+        *v = rng.uniform_in(-0.05, 0.05);
+    }
+    // channel 0 is always live, channel 1 saturated dead: the conv ReLU
+    // mask must zero the dead channel's fd and analytic gradient alike
+    for (j, v) in state0.biases[0].iter_mut().enumerate() {
+        *v = if j == 0 { 2.0 } else { -2.0 };
+    }
+    for v in state0.weights[1].data.iter_mut() {
+        *v = rng.uniform_in(-0.5, 0.5);
+    }
+    for v in state0.biases[1].iter_mut() {
+        *v = rng.uniform_in(-0.1, 0.1);
+    }
+    let mut x = vec![0.0f32; spec.batch * spec.widths[0]];
+    for v in x.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    let y: Vec<i32> = (0..spec.batch).map(|i| (i % 3) as i32).collect();
+    // nonzero penalty couplings on the *lowered* conv matrix as well
+    let deltas = rand_like(&spec, 53, 0.2);
+    let lambdas = rand_like(&spec, 54, 0.1);
+    let mu = vec![1.5f32, 0.5];
+
+    let lr = 0.5f32;
+    let mut stepped = state0.clone();
+    driver.step(&mut stepped, &x, &y, &deltas, &lambdas, &mu, lr).unwrap();
+    let scale = (lr * (1.0 + MOMENTUM)) as f64;
+
+    let eps = 1e-2f32;
+    for l in 0..spec.n_layers() {
+        let (m, n) = spec.layer_shape(l);
+        let gmax: f64 = state0.weights[l]
+            .data
+            .iter()
+            .zip(stepped.weights[l].data.iter())
+            .map(|(&w, &w2)| ((w - w2) as f64 / scale).abs())
+            .fold(0.0, f64::max);
+        for i in 0..m * n {
+            let analytic =
+                (state0.weights[l].data[i] - stepped.weights[l].data[i]) as f64 / scale;
+            let mut plus = state0.clone();
+            plus.weights[l].data[i] += eps;
+            let mut minus = state0.clone();
+            minus.weights[l].data[i] -= eps;
+            let fd = (loss_at(&driver, &plus, &x, &y, &deltas, &lambdas, &mu)
+                - loss_at(&driver, &minus, &x, &y, &deltas, &lambdas, &mu))
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - analytic).abs() <= 2e-2 * gmax.max(1e-2),
+                "w{l}[{i}]: fd {fd:.6e} vs analytic {analytic:.6e} (gmax {gmax:.3e})"
+            );
+        }
+        for i in 0..spec.bias_len(l) {
+            let analytic = (state0.biases[l][i] - stepped.biases[l][i]) as f64 / scale;
+            let mut plus = state0.clone();
+            plus.biases[l][i] += eps;
+            let mut minus = state0.clone();
+            minus.biases[l][i] -= eps;
+            let fd = (loss_at(&driver, &plus, &x, &y, &deltas, &lambdas, &mu)
+                - loss_at(&driver, &minus, &x, &y, &deltas, &lambdas, &mu))
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - analytic).abs() <= 2e-2 * gmax.max(1e-2),
+                "b{l}[{i}]: fd {fd:.6e} vs analytic {analytic:.6e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn conv_train_steps_bit_identical_across_thread_counts() {
+    // the lenet5-conv registry entry at batch 70: ragged shard layout
+    // (32, 32, 6) through im2col forward and the serial per-shard col2im
+    // backward must leave parameters a pure function of the inputs
+    let mut spec = lc::models::lookup("lenet5-conv").unwrap();
+    spec.batch = 70;
+    let state0 = ParamState::init(&spec, 61);
+    let (x, y) = batch_for(&spec, 62);
+    let deltas = rand_like(&spec, 63, 0.1);
+    let lambdas = rand_like(&spec, 64, 0.02);
+    let mu = vec![0.2f32; spec.n_layers()];
+
+    let run = |threads: usize| {
+        let driver = TrainDriver::native_for_spec(&spec, threads);
+        let mut s = state0.clone();
+        for _ in 0..2 {
+            driver.step(&mut s, &x, &y, &deltas, &lambdas, &mu, 0.02).unwrap();
+        }
+        s
+    };
+    let want = run(1);
+    for threads in [2usize, 4, 8] {
+        let got = run(threads);
+        for l in 0..spec.n_layers() {
+            assert_eq!(
+                bits(&got.weights[l].data),
+                bits(&want.weights[l].data),
+                "conv weights[{l}] diverge at threads={threads}"
+            );
+            assert_eq!(bits(&got.biases[l]), bits(&want.biases[l]), "biases[{l}] t={threads}");
+            assert_eq!(
+                bits(&got.w_momenta[l].data),
+                bits(&want.w_momenta[l].data),
+                "w_momenta[{l}] t={threads}"
+            );
+        }
+    }
+}
+
+/// Quant-layer-0 + prune-layer-1 task set shared by the streaming tests.
+fn qp_tasks() -> TaskSet {
+    TaskSet::new(vec![
+        TaskSpec {
+            name: "quant0".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(4)),
+        },
+        TaskSpec {
+            name: "prune1".into(),
+            layers: vec![1],
+            view: View::Vector,
+            compression: Box::new(ConstraintL0 { kappa: 200 }),
+        },
+    ])
+}
+
+fn stream_lc_cfg(threads: usize) -> LcConfig {
+    LcConfig {
+        mu: MuSchedule { mu0: 1e-3, growth: 1.6, steps: 3 },
+        lr: LrSchedule { lr0: 0.05, decay: 0.95 },
+        epochs_per_step: 1,
+        first_step_epochs: None,
+        use_al: true,
+        seed: 7,
+        threads,
+        eval_every: 0,
+        quiet: true,
+    }
+}
+
+#[test]
+fn lc_stream_single_chunk_matches_in_memory_run_bitwise() {
+    // a single chunk covering the whole stream consumes the caller rng
+    // exactly like one BatchIter epoch over the eager dataset, so the
+    // streaming LC run must reproduce the in-memory run bit for bit
+    let train = synth::generate(256, 5, 2);
+    let test = synth::generate(64, 99, 2);
+    let stream = StreamConfig { total: 256, chunk: 256, seed: 5 };
+
+    let spec = lc::models::lookup("mlp-small").unwrap();
+    let mut rt = Runtime::native_with_threads(2);
+    let alg = LcAlgorithm::new(&mut rt, spec.clone(), qp_tasks(), stream_lc_cfg(2)).unwrap();
+    let want = alg.run(ParamState::init(&spec, 9), &train, &test).unwrap();
+    let got = alg.run_stream(ParamState::init(&spec, 9), &stream, &test).unwrap();
+
+    for l in 0..want.compressed_state.weights.len() {
+        assert_eq!(
+            bits(&got.compressed_state.weights[l].data),
+            bits(&want.compressed_state.weights[l].data),
+            "streamed compressed weights[{l}] diverge from in-memory run"
+        );
+        assert_eq!(bits(&got.compressed_state.biases[l]), bits(&want.compressed_state.biases[l]));
+    }
+    assert_eq!(got.final_test.error, want.final_test.error);
+    // n = 256 is a power of two: the n-weighted single-chunk merge in
+    // evaluate_stream is exact in f64
+    assert_eq!(got.final_train.error, want.final_train.error);
+    assert_eq!(got.final_train.n, 256);
+}
+
+#[test]
+fn lc_stream_outcome_bit_identical_across_thread_counts() {
+    // chunked stream (96, 96, 64): batch order differs from the in-memory
+    // epoch but is itself a pure function of the stream config, so the
+    // compressed outcome must be bitwise thread-count invariant
+    let stream = StreamConfig { total: 256, chunk: 96, seed: 5 };
+    let test = synth::generate(64, 99, 2);
+    let run = |threads: usize| {
+        let mut rt = Runtime::native_with_threads(threads);
+        let spec = lc::models::lookup("mlp-small").unwrap();
+        let alg =
+            LcAlgorithm::new(&mut rt, spec.clone(), qp_tasks(), stream_lc_cfg(threads)).unwrap();
+        alg.run_stream(ParamState::init(&spec, 9), &stream, &test).unwrap()
+    };
+    let want = run(1);
+    for threads in [2usize, 4] {
+        let got = run(threads);
+        for l in 0..want.compressed_state.weights.len() {
+            assert_eq!(
+                bits(&got.compressed_state.weights[l].data),
+                bits(&want.compressed_state.weights[l].data),
+                "compressed weights[{l}] diverge at threads={threads}"
             );
         }
         assert_eq!(got.final_test.error, want.final_test.error, "t={threads}");

@@ -1,0 +1,33 @@
+//! Toolchain probe for the GEMM kernel family.
+//!
+//! The AVX-512 intrinsics (`core::arch::x86_64::_mm512_*`) and
+//! `#[target_feature(enable = "avx512f")]` are only stable since Rust 1.89,
+//! but this crate must keep building on older stable toolchains.  The build
+//! script parses `rustc --version` and emits the `lcc_avx512` cfg when the
+//! compiler is new enough; `linalg/gemm.rs` gates its 16-lane microkernel
+//! variants on that cfg and falls back to the AVX2/portable kernels
+//! otherwise.  Runtime CPU detection is a separate, orthogonal gate.
+
+use std::process::Command;
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    let minor = rustc_minor_version().unwrap_or(0);
+    // `cargo:rustc-check-cfg` itself needs Cargo/rustc >= 1.80 (where the
+    // `unexpected_cfgs` lint it silences also first appears).
+    if minor >= 80 {
+        println!("cargo:rustc-check-cfg=cfg(lcc_avx512)");
+    }
+    if minor >= 89 {
+        println!("cargo:rustc-cfg=lcc_avx512");
+    }
+}
+
+/// Minor version of the active `rustc` ("rustc 1.89.0 (...)" -> 89).
+fn rustc_minor_version() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8(out.stdout).ok()?;
+    let version = text.split_whitespace().nth(1)?;
+    version.split('.').nth(1)?.parse().ok()
+}

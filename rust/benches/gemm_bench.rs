@@ -17,7 +17,14 @@
 //!    (the pre-PR-5 implementation, replicated below).
 //! 3. **Alloc-free steady state.** Repeated same-shape serial GEMMs
 //!    perform zero heap allocations once the thread-local pack buffers
-//!    are warm (counting global allocator).
+//!    are warm (counting global allocator), and repeated same-shape
+//!    *parallel* GEMMs stop growing every worker's pack buffers
+//!    (`pack_grow_events_total`, aggregated across the pool).
+//! 4. **ISA dispatch.** The runtime-dispatched `Fast` kernel vs the
+//!    portable `Exact` kernel (the PR-5 packed kernel's numerics) at a
+//!    compute-bound shape.  Full runs on FMA hardware assert >= 2x
+//!    GFLOP/s; detected CPU features, the dispatched kernel variants, and
+//!    the numerics mode are all recorded in `BENCH_gemm.json`.
 //!
 //! `LCC_BENCH_QUICK=1` bounds the iteration budget for CI smoke runs.
 
@@ -25,6 +32,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use lc::bench::{alloc_counts, write_bench_json, Bencher, CountingAlloc, Record};
+use lc::linalg::gemm::{self, AOp, BOp, Isa, Numerics};
 use lc::tensor::Matrix;
 use lc::util::rng::Xoshiro256;
 use lc::util::threadpool::parallel_map;
@@ -96,6 +104,25 @@ fn main() {
     let mut b = if quick { Bencher::quick() } else { Bencher::default() };
     let mut records: Vec<Record> = Vec::new();
 
+    let isa = gemm::active_isa();
+    println!(
+        "cpu features: {} -> dispatch {} (exact: {}, fast: {})",
+        gemm::detected_features(),
+        isa.name(),
+        gemm::kernel_name(isa, Numerics::Exact),
+        gemm::kernel_name(isa, Numerics::Fast)
+    );
+    records.push(Record {
+        bench: "gemm_dispatch_metadata".into(),
+        fields: vec![
+            ("cpu_features".into(), format!("\"{}\"", gemm::detected_features())),
+            ("active_isa".into(), format!("\"{}\"", isa.name())),
+            ("exact_kernel".into(), format!("\"{}\"", gemm::kernel_name(isa, Numerics::Exact))),
+            ("fast_kernel".into(), format!("\"{}\"", gemm::kernel_name(isa, Numerics::Fast))),
+            ("numerics_default".into(), format!("\"{}\"", gemm::numerics().name())),
+        ],
+    });
+
     // --- packed kernel vs scalar ikj at lenet300 layer shapes --------------
     // (batch 128 forward products; the backward tn/nt products run the same
     // kernel on the same panels, so forward shapes are representative).
@@ -155,6 +182,57 @@ fn main() {
         });
     }
 
+    // --- dispatched Fast kernel vs portable Exact (the PR-5 numerics) ------
+    // compute-bound shape: k deep enough to amortize packing, several KC
+    // panels, output resident in cache.  The gate is the acceptance target
+    // "Fast >= 2x the previous packed kernel on FMA hardware"; portable
+    // hosts only record the (trivially ~1x) ratio.
+    Bencher::header("GEMM: dispatched Fast kernel vs portable Exact (256x1024x512)");
+    {
+        let (m, k, n) = (256usize, 1024, 512);
+        let a = rand_matrix(m, k, 3);
+        let w = rand_matrix(k, n, 4);
+        let mut out = Matrix::zeros(m, n);
+        let gflop = 2.0 * (m * k * n) as f64 / 1e9;
+        let exact_ns = b
+            .bench("portable exact", || {
+                let (pa, pw) = (AOp::N(&a), BOp::N(&w));
+                gemm::gemm_forced(pa, pw, &mut out, 1, Isa::Portable, Numerics::Exact)
+            })
+            .mean_ns;
+        let name = format!("{} fast", gemm::kernel_name(isa, Numerics::Fast));
+        let fast_ns = b
+            .bench(&name, || {
+                gemm::gemm_forced(AOp::N(&a), BOp::N(&w), &mut out, 1, isa, Numerics::Fast)
+            })
+            .mean_ns;
+        let exact_gflops = gflop / (exact_ns / 1e9);
+        let fast_gflops = gflop / (fast_ns / 1e9);
+        let speedup = exact_ns / fast_ns.max(1e-12);
+        println!(
+            "  {m}x{k}x{n}: portable-exact {exact_gflops:.2} GFLOP/s -> {} \
+             {fast_gflops:.2} GFLOP/s ({speedup:.2}x)",
+            gemm::kernel_name(isa, Numerics::Fast)
+        );
+        if isa != Isa::Portable && !quick {
+            assert!(
+                speedup >= 2.0,
+                "dispatched Fast kernel {speedup:.2}x below the 2x target at {m}x{k}x{n}"
+            );
+        }
+        records.push(Record {
+            bench: "gemm_fast_vs_portable_exact".into(),
+            fields: vec![
+                ("shape".into(), format!("\"{m}x{k}x{n}\"")),
+                ("fast_kernel".into(), format!("\"{}\"", gemm::kernel_name(isa, Numerics::Fast))),
+                ("portable_exact_gflops".into(), format!("{exact_gflops:.3}")),
+                ("fast_gflops".into(), format!("{fast_gflops:.3}")),
+                ("speedup".into(), format!("{speedup:.3}")),
+                ("gated".into(), (isa != Isa::Portable).to_string()),
+            ],
+        });
+    }
+
     // --- persistent pool vs spawn+join dispatch overhead -------------------
     // four trivial items at four threads: the measurement is pure dispatch
     Bencher::header("dispatch: persistent pool vs spawn+join (4 items, 4 threads)");
@@ -206,6 +284,40 @@ fn main() {
                 ("iters".into(), iters.to_string()),
                 ("allocs".into(), grew.to_string()),
                 ("allocation_free".into(), (grew == 0).to_string()),
+            ],
+        });
+    }
+
+    // --- parallel steady state: pool-wide pack buffers stop growing --------
+    // m = 4·ROW_BLOCK, so every row block is full-size and any worker's
+    // first touch grows its thread-local A-pack buffer to its final size
+    // regardless of which blocks it happens to claim.  Warm generously
+    // (work distribution is first-come), then require flatness under the
+    // pool-wide counter — the per-thread counter only sees this thread.
+    {
+        let a = rand_matrix(128, 784, 7);
+        let w = rand_matrix(784, 300, 8);
+        for _ in 0..20 {
+            std::hint::black_box(a.matmul_par(&w, 4));
+        }
+        let iters = if quick { 10u64 } else { 50 };
+        let warm = gemm::pack_grow_events_total();
+        for _ in 0..iters {
+            std::hint::black_box(a.matmul_par(&w, 4));
+        }
+        let grew = gemm::pack_grow_events_total() - warm;
+        println!("steady-state parallel GEMM ({iters} calls, 4 threads): {grew} pack-grow events");
+        if !quick {
+            // quick smoke runs share loaded runners where a worker can sit
+            // descheduled through the whole warm-up; full runs gate
+            assert_eq!(grew, 0, "pool-wide pack buffers must not grow at steady state");
+        }
+        records.push(Record {
+            bench: "gemm_parallel_steady_state_pack_grows".into(),
+            fields: vec![
+                ("iters".into(), iters.to_string()),
+                ("threads".into(), "4".into()),
+                ("pack_grow_events".into(), grew.to_string()),
             ],
         });
     }

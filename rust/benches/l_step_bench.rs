@@ -17,6 +17,12 @@
 //!    the serial path on the same model; full runs assert > 1.5x, quick
 //!    (CI smoke) runs only record the ratio since shared runners vary in
 //!    core count and scheduling noise.
+//! 4. **Pack-cache steady state.** The generation-stamped weight-pack
+//!    cache packs each weight panel exactly once per train step
+//!    (`2·nl − 1` misses/step: a forward panel per layer plus a
+//!    transposed backward panel for every layer past the first), and
+//!    every per-shard GEMM after that is a cache hit — packing cost no
+//!    longer scales with the shard count.
 //!
 //! Bench config: lenet300-wide (784-500-300-10, 545k weights), batch 128
 //! (4 gradient shards), penalty active on every layer so the fused
@@ -24,6 +30,7 @@
 //! bounds the iteration budget for CI smoke runs.
 
 use lc::bench::{alloc_counts, write_bench_json, Bencher, CountingAlloc, Record};
+use lc::linalg::gemm;
 use lc::models::{lookup, ParamState};
 use lc::runtime::trainer::TrainDriver;
 use lc::tensor::Matrix;
@@ -160,6 +167,52 @@ fn main() {
                 ("allocs_per_step".into(), format!("{allocs_per_step:.3}")),
                 ("bytes_per_step".into(), format!("{bytes_per_step:.1}")),
                 ("allocation_free".into(), (a1 - a0 == 0).to_string()),
+            ],
+        });
+    }
+
+    // --- pack-cache steady state: one pack per weight panel per step --------
+    {
+        let driver = TrainDriver::native_for_spec(&sc.spec, 4);
+        let mut state = sc.state0.clone();
+        // warm-up: shapes the workspace and fills the cache
+        for _ in 0..2 {
+            driver
+                .step(&mut state, &sc.x, &sc.y, &sc.deltas, &sc.lambdas, &sc.mu, 0.05)
+                .unwrap();
+        }
+        let steps = 10u64;
+        let (h0, m0) = gemm::pack_cache_counters();
+        for _ in 0..steps {
+            driver
+                .step(&mut state, &sc.x, &sc.y, &sc.deltas, &sc.lambdas, &sc.mu, 0.05)
+                .unwrap();
+        }
+        let (h1, m1) = gemm::pack_cache_counters();
+        let (hits, misses) = (h1 - h0, m1 - m0);
+        let nl = sc.spec.n_layers() as u64;
+        println!(
+            "pack cache over {steps} steps: {misses} misses ({} per step), {hits} hits",
+            misses / steps
+        );
+        // the optimizer bumps the weight generation every step, so steady
+        // state is exactly one (re)pack per panel per step: nl forward
+        // panels + (nl − 1) transposed backward panels
+        assert_eq!(
+            misses,
+            steps * (2 * nl - 1),
+            "expected exactly 2·nl−1 = {} pack-cache misses per step",
+            2 * nl - 1
+        );
+        assert!(hits > misses, "per-shard GEMMs should hit the cache more often than it repacks");
+        records.push(Record {
+            bench: "l_step_pack_cache".into(),
+            fields: vec![
+                ("steps".into(), steps.to_string()),
+                ("n_layers".into(), nl.to_string()),
+                ("misses".into(), misses.to_string()),
+                ("hits".into(), hits.to_string()),
+                ("misses_per_step".into(), (misses / steps).to_string()),
             ],
         });
     }

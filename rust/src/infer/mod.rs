@@ -19,7 +19,11 @@
 //! The dense, factored, and all-nonzero-codebook kernels execute on the
 //! packed SIMD GEMM microkernel ([`crate::linalg::gemm`]); the gather
 //! variant feeds the codebook lookup into the kernel's pack stage, so the
-//! dense `W` is still never materialized.
+//! dense `W` is still never materialized.  Those GEMM-backed kernels
+//! follow the runtime-dispatched ISA variant and the active numerics mode
+//! ([`crate::linalg::gemm::Numerics`]) — `lcc infer` prints the dispatched
+//! kernel next to its execution plan table; scalar kernels (CSR, signs,
+//! zero-skipping gather) are exact in either mode.
 //!
 //! [`ExecKernel::flops_per_example`] reports the MACs each kernel actually
 //! executes, and [`crate::metrics::account`] derives its FLOPs numbers from

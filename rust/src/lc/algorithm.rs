@@ -24,6 +24,7 @@ use crate::compress::task::TaskSet;
 use crate::compress::Theta;
 use crate::data::stream::{self, StreamConfig};
 use crate::data::{BatchIter, Dataset};
+use crate::linalg::gemm;
 use crate::metrics::{account, Compressed};
 use crate::models::{ModelSpec, ParamState};
 use crate::runtime::trainer::{EvalDriver, EvalResult, TrainDriver};
@@ -308,6 +309,14 @@ impl LcAlgorithm {
         let mut thetas: Vec<Option<Theta>> = self.tasks.tasks.iter().map(|_| None).collect();
         let mut monitor = Monitor::new(self.cfg.quiet);
         let mut records = Vec::new();
+        if !self.cfg.quiet {
+            crate::info!(
+                "LC monitor: {} task(s) over {nl} layer(s); gemm kernel {} / numerics {}",
+                self.tasks.tasks.len(),
+                gemm::active_kernel_name(),
+                gemm::numerics().name()
+            );
+        }
 
         // --- direct-compression init: Θ ← Π(w), λ = 0 ---------------------
         aux.c_step(

@@ -217,17 +217,13 @@ impl AuxState {
     /// pure overhead.
     pub fn refresh_snapshot(&mut self, state: &ParamState) -> &ParamState {
         if self.snapshot.is_none() {
-            self.snapshot = Some(ParamState {
-                spec: state.spec.clone(),
-                weights: state.weights.clone(),
-                biases: state.biases.clone(),
-                w_momenta: state
-                    .weights
-                    .iter()
-                    .map(|w| Matrix::zeros(w.rows, w.cols))
-                    .collect(),
-                b_momenta: state.biases.iter().map(|b| vec![0.0; b.len()]).collect(),
-            });
+            self.snapshot = Some(ParamState::from_parts(
+                state.spec.clone(),
+                state.weights.clone(),
+                state.biases.clone(),
+                state.weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect(),
+                state.biases.iter().map(|b| vec![0.0; b.len()]).collect(),
+            ));
         }
         let snap = self.snapshot.as_mut().unwrap();
         for l in 0..self.deltas.len() {

@@ -23,6 +23,10 @@
 //! al = true
 //! eval_every = 5
 //!
+//! [runtime]                      # optional
+//! backend = "auto"               # or "native" | "pjrt"
+//! numerics = "exact"             # GEMM numerics: "exact" | "fast"
+//!
 //! [task.<name>]                  # one section per compression task
 //! layers = [0, 1, 2]
 //! view = "vector"                # or "as_is"
@@ -41,6 +45,7 @@ use crate::compress::view::View;
 use crate::compress::Compression;
 use crate::lc::schedule::{LrSchedule, MuSchedule};
 use crate::lc::LcConfig;
+use crate::linalg::gemm::Numerics;
 use crate::models::{lookup, ModelSpec};
 use crate::runtime::BackendChoice;
 use crate::util::config::{Config, Section};
@@ -58,6 +63,10 @@ pub struct Experiment {
     /// L-step execution backend (`[runtime] backend = "auto"|"native"|"pjrt"`;
     /// the `--backend` CLI flag overrides it).
     pub backend: BackendChoice,
+    /// GEMM numerics mode (`[runtime] numerics = "exact"|"fast"`). `None`
+    /// means the key was absent: the `LCC_NUMERICS` env default applies.
+    /// The `--numerics` CLI flag overrides both.
+    pub numerics: Option<Numerics>,
 }
 
 impl Experiment {
@@ -100,9 +109,18 @@ impl Experiment {
             quiet: lc_sec.get("quiet").and_then(|v| v.as_bool()).unwrap_or(false),
         };
 
-        let backend = match cfg.section("runtime") {
-            Some(r) => BackendChoice::parse(&r.str_or("backend", "auto"))?,
-            None => BackendChoice::Auto,
+        let (backend, numerics) = match cfg.section("runtime") {
+            Some(r) => {
+                let backend = BackendChoice::parse(&r.str_or("backend", "auto"))?;
+                let numerics = match r.get("numerics").and_then(|v| v.as_str()) {
+                    None => None,
+                    Some(s) => Some(Numerics::parse(s).ok_or_else(|| {
+                        format!("unknown numerics {s:?} (expected \"exact\" or \"fast\")")
+                    })?),
+                };
+                (backend, numerics)
+            }
+            None => (BackendChoice::Auto, None),
         };
 
         let mut tasks = Vec::new();
@@ -122,6 +140,7 @@ impl Experiment {
             data_seed,
             reference_epochs,
             backend,
+            numerics,
         })
     }
 }
@@ -231,6 +250,25 @@ k = 2
         assert!(Experiment::from_config(&Config::parse(&bad).unwrap())
             .unwrap_err()
             .contains("unknown backend"));
+    }
+
+    #[test]
+    fn numerics_key_parses_and_rejects_unknown() {
+        let exp = Experiment::from_config(&Config::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(exp.numerics, None);
+
+        let fast = format!("{SAMPLE}\n[runtime]\nnumerics = \"fast\"\n");
+        let exp = Experiment::from_config(&Config::parse(&fast).unwrap()).unwrap();
+        assert_eq!(exp.numerics, Some(Numerics::Fast));
+
+        let exact = format!("{SAMPLE}\n[runtime]\nnumerics = \"Exact\"\n");
+        let exp = Experiment::from_config(&Config::parse(&exact).unwrap()).unwrap();
+        assert_eq!(exp.numerics, Some(Numerics::Exact));
+
+        let bad = format!("{SAMPLE}\n[runtime]\nnumerics = \"approximate\"\n");
+        assert!(Experiment::from_config(&Config::parse(&bad).unwrap())
+            .unwrap_err()
+            .contains("unknown numerics"));
     }
 
     #[test]

@@ -22,7 +22,12 @@
 //! `dX = col2im(dZmat·Wᵀ)`.  [`col2im_into`] scatter-adds serially in
 //! ascending `(sample, oy, ox, ky, kx)` order, so within a gradient shard
 //! the accumulation order is fixed — the L step's bit-identical
-//! thread-count contract survives conv layers untouched.
+//! thread-count contract survives conv layers untouched.  The underlying
+//! GEMM cache-blocks the shared dimension in `KC`-deep panels with an
+//! exact accumulator carry ([`crate::linalg::gemm`]), so deep patch
+//! dimensions (`ic·kh·kw` ≥ 4096) keep the same determinism contracts as
+//! the dense layers; the `col · W` and `dZmat · Wᵀ` products also reuse
+//! the train step's generation-stamped weight-pack cache.
 
 use crate::tensor::Matrix;
 

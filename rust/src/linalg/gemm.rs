@@ -1,55 +1,92 @@
-//! Packed, cache-blocked GEMM microkernel — the one compute kernel behind
-//! every dense matrix product in the codebase.
+//! Packed, cache-blocked, runtime-ISA-dispatched GEMM — the one compute
+//! kernel behind every dense matrix product in the codebase.
 //!
-//! ## Why packing
+//! ## Kernel family and dispatch
 //!
-//! The previous kernels were scalar ikj triple loops: correct and
-//! deterministic, but they stream the right-hand operand with a stride of
-//! `n` floats per k step, reload the output row once per k, and (for the
-//! `A·Bᵀ` variant) reduce each inner product serially, which blocks
-//! autovectorization entirely.  This module instead copies both operands
-//! into contiguous, register-tile-shaped **panels** once per call and runs
-//! an [`MR`]`×`[`NR`] accumulator microkernel over them:
+//! Both operands are copied into contiguous, register-tile-shaped **panels**
+//! once per call (B per call, A per [`ROW_BLOCK`] of output rows) and an
+//! `MR × nr` accumulator microkernel runs over them.  Which microkernel runs
+//! is decided once per process from runtime CPU feature detection
+//! (`is_x86_feature_detected!`, cached in a `OnceLock` primed at thread-pool
+//! init) and the active [`Numerics`] mode:
 //!
-//! * **B panel**: strips of [`NR`] columns, each strip laid out `k × NR`
-//!   row-major, so the microkernel loads one contiguous 8-float line per k
-//!   step — packed once per call and shared read-only by every worker;
-//! * **A panel**: strips of [`MR`] rows, each strip laid out `k × MR`
-//!   (column-major within the strip), packed per [`ROW_BLOCK`] of output
-//!   rows by the worker that owns the block;
-//! * **microkernel**: an `MR × NR` f32 accumulator tile held in registers
-//!   across the *entire* k loop; the per-lane update `acc[r][c] += a·b[c]`
-//!   is written so rustc autovectorizes it to 8-wide SIMD.  Ragged edges
-//!   are zero-padded at pack time, so the microkernel has no tail branches
-//!   and padded lanes are simply not stored.
+//! | ISA detected        | `Exact` mode            | `Fast` mode            |
+//! |---------------------|-------------------------|------------------------|
+//! | none / non-x86_64   | `portable-8x8-exact`    | `portable-8x8-exact`   |
+//! | AVX2 + FMA          | `avx2-8x8-exact`        | `avx2-8x8-fma`         |
+//! | AVX-512F (*)        | `avx512-8x16-exact`     | `avx512-8x16-fma`      |
 //!
-//! ## Determinism contract
+//! (*) 16-lane variants additionally require a toolchain with stable AVX-512
+//! intrinsics (Rust >= 1.89); `build.rs` probes `rustc --version` and emits
+//! the `lcc_avx512` cfg.  Older toolchains fall back to the AVX2 kernels on
+//! the same hardware.  The portable kernel is plain indexed Rust that rustc
+//! autovectorizes; it is the fallback for every combination and the
+//! reference the SIMD variants are pinned against.
 //!
-//! For every output element `(i, j)` the accumulator folds the products
-//! `a(i, k) · b(k, j)` in ascending-`k` order into a single f32 chain that
-//! starts at `0.0` — exactly the operation sequence of the scalar ikj
-//! loops this module replaces (SIMD lanes hold *different* output elements,
-//! so vectorization never reassociates a chain, and rustc does not contract
-//! `mul + add` to FMA).  Consequences:
+//! ## Numerics modes and the determinism contract
 //!
-//! * results are **bit-identical for every thread count** (the row-block
-//!   partition decides who computes a chain, never how it associates), the
-//!   invariant the sharded L step's determinism pin rests on;
-//! * all entry points routed through this kernel agree **exactly** with
-//!   each other and with a naive ascending-k triple loop
-//!   (`rust/tests/prop_gemm.rs` pins both properties).
+//! For every output element `(i, j)` the products `a(i, k) · b(k, j)` fold
+//! in ascending-`k` order into a **single f32 accumulator chain** starting
+//! at `0.0`.  SIMD lanes hold *different* output elements, so vectorization
+//! never reassociates a chain, and the fixed [`ROW_BLOCK`] partition decides
+//! only *who* computes a chain, never how it associates.  The two modes
+//! (selected via the `LCC_NUMERICS` env var, the `[runtime] numerics` config
+//! key, or [`set_numerics`]; default `Exact`):
+//!
+//! * [`Numerics::Exact`] — each product is a separate IEEE `mul` then `add`
+//!   (no FMA contraction).  Results are bit-identical to the naive
+//!   ascending-k triple loop, across *every* entry point, operand view,
+//!   thread count, and ISA variant (`rust/tests/prop_gemm.rs` pins all of
+//!   it).  Every determinism-pinned path in the LC loop runs in this mode.
+//! * [`Numerics::Fast`] — the same ascending-k chain contracted to fused
+//!   multiply-add (one rounding per step instead of two).  Still fully
+//!   deterministic: bit-identical run-to-run and across thread counts, and
+//!   the AVX2 and AVX-512 FMA variants agree with each other bit for bit
+//!   (same chain, same [`KC`] boundaries).  It differs from `Exact` only by
+//!   the dropped intermediate roundings — `prop_gemm.rs` re-pins it with a
+//!   documented tolerance against an f64 reference.  On hardware without
+//!   FMA, `Fast` silently falls back to the exact portable kernel.
+//!
+//! ## Cache blocking
+//!
+//! The k loop is tiled by [`KC`] with **accumulator carry**: the tile is
+//! stored to the output after each k-panel and reloaded for the next, so
+//! the per-element chain is unchanged (f32 store/load is exact) while the
+//! working set per inner iteration stays at `KC × MR + KC × nr` floats —
+//! L1-resident even at the `k >= 1000` shapes im2col produces for
+//! lenet5-conv / vgg-small.  Within a row block the loop order is
+//! `k-panel → B strip → A strip`, so each packed B strip is streamed once
+//! per k-panel while the row block's A panel stays hot.
+//!
+//! ## Pack cache
+//!
+//! Operand panels are normally packed per call into thread-local recycled
+//! buffers.  For the L step's weight matrices — shared read-only by every
+//! microbatch shard — [`PackedPanel`] additionally caches the packed B
+//! panel across calls, keyed by a caller-supplied **generation stamp**
+//! (`ParamState` bumps its generation on every weight update):
+//! [`PackedPanel::ensure`] repacks only when the stamp, shape, or kernel
+//! changed, and [`gemm_prepacked`] consumes the panel without touching the
+//! pack stage.  Cache traffic is observable via [`pack_cache_counters`]
+//! (hits = GEMM calls served from a cached panel, misses = panel packs),
+//! alongside the existing [`pack_grow_events`] / [`pack_grow_events_total`]
+//! buffer-growth counters.  Panels recycle their backing buffers through
+//! the [`Workspace`] arena (`from_buf` / `into_buf`).
 //!
 //! ## Memory
 //!
-//! Pack buffers are thread-local and recycled across calls ([`Workspace`]'s
-//! take/put discipline, scoped per thread): steady-state same-shape calls
-//! perform zero heap allocations ([`pack_grow_events`] observes this, and
+//! Per-call pack buffers are thread-local and recycled across calls
+//! ([`Workspace`]'s take/put discipline, scoped per thread): steady-state
+//! same-shape calls perform zero heap allocations ([`pack_grow_events`]
+//! observes this per thread, [`pack_grow_events_total`] process-wide, and
 //! `benches/gemm_bench.rs` re-checks it with a counting global allocator).
 //! Persistent pool workers keep their pack buffers warm across train steps.
 //!
 //! [`Workspace`]: crate::tensor::Workspace
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::thread::LocalKey;
 
 use crate::tensor::Matrix;
@@ -57,11 +94,266 @@ use crate::util::threadpool::parallel_map_mut;
 
 /// Rows of the register accumulator tile.
 pub const MR: usize = 8;
-/// Columns of the register accumulator tile (one 8-wide f32 SIMD line).
+/// Columns of the portable / AVX2 accumulator tile (one 8-wide f32 SIMD
+/// line).  The AVX-512 variants widen this to [`NR_MAX`].
 pub const NR: usize = 8;
+/// Widest tile column count across the kernel family (AVX-512, 16 lanes).
+const NR_MAX: usize = 16;
+/// k-panel depth of the cache-blocking loop: microkernels consume the k
+/// dimension in [`KC`]-deep slices with accumulator carry through the
+/// output, keeping the per-iteration working set L1-resident at any k.
+pub const KC: usize = 256;
 /// Output rows per parallel work item (a multiple of [`MR`]; fixed, so the
 /// block layout — like everything else here — is thread-count independent).
 pub const ROW_BLOCK: usize = 32;
+
+// ---------------------------------------------------------------------------
+// Numerics mode
+// ---------------------------------------------------------------------------
+
+/// Floating-point accumulation mode of the kernel family (see module docs).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum Numerics {
+    /// Separate IEEE `mul` + `add` per product: bit-identical to the naive
+    /// ascending-k loop.  The default, and the mode every
+    /// determinism-pinned path runs in.
+    Exact = 0,
+    /// FMA-contracted ascending-k chain: still deterministic across runs
+    /// and thread counts, differs from `Exact` only by fused roundings.
+    Fast = 1,
+}
+
+impl Numerics {
+    /// Parse a config/env spelling (`"exact"` / `"fast"`, case-insensitive).
+    pub fn parse(s: &str) -> Option<Numerics> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Some(Numerics::Exact),
+            "fast" => Some(Numerics::Fast),
+            _ => None,
+        }
+    }
+
+    /// Canonical lower-case name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Numerics::Exact => "exact",
+            Numerics::Fast => "fast",
+        }
+    }
+}
+
+/// `u8::MAX` = not yet initialized (first read consults `LCC_NUMERICS`).
+static NUMERICS: AtomicU8 = AtomicU8::new(u8::MAX);
+
+/// The process-wide numerics mode.  Initialized lazily from the
+/// `LCC_NUMERICS` env var (`exact` / `fast`; unset or unrecognized values
+/// mean `Exact`) unless [`set_numerics`] ran first.
+pub fn numerics() -> Numerics {
+    match NUMERICS.load(Ordering::Relaxed) {
+        0 => Numerics::Exact,
+        1 => Numerics::Fast,
+        _ => {
+            let n = std::env::var("LCC_NUMERICS")
+                .ok()
+                .and_then(|s| Numerics::parse(&s))
+                .unwrap_or(Numerics::Exact);
+            NUMERICS.store(n as u8, Ordering::Relaxed);
+            n
+        }
+    }
+}
+
+/// Set the process-wide numerics mode (CLI `--numerics` / `[runtime]
+/// numerics` config key; overrides `LCC_NUMERICS`).  Call once at startup:
+/// switching modes mid-run invalidates nothing retroactively, but panels
+/// packed under the old mode are rejected by [`gemm_prepacked`].
+pub fn set_numerics(n: Numerics) {
+    NUMERICS.store(n as u8, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// ISA detection
+// ---------------------------------------------------------------------------
+
+/// Instruction-set tier the dispatcher can select.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Isa {
+    /// Autovectorized plain Rust — always available.
+    Portable,
+    /// 8-lane AVX2 with FMA (both features required).
+    Avx2Fma,
+    /// 16-lane AVX-512F (requires a Rust >= 1.89 toolchain; see `build.rs`).
+    Avx512,
+}
+
+impl Isa {
+    /// Canonical lower-case name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Portable => "portable",
+            Isa::Avx2Fma => "avx2+fma",
+            Isa::Avx512 => "avx512",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_fma_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_fma_available() -> bool {
+    false
+}
+
+#[cfg(all(target_arch = "x86_64", lcc_avx512))]
+fn avx512_available() -> bool {
+    is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(all(target_arch = "x86_64", lcc_avx512)))]
+fn avx512_available() -> bool {
+    false
+}
+
+/// Whether `isa` can actually run here (runtime CPU support and, for
+/// AVX-512, compile-time toolchain support).  [`gemm_forced`] asserts this.
+pub fn isa_supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Portable => true,
+        Isa::Avx2Fma => avx2_fma_available(),
+        Isa::Avx512 => avx512_available(),
+    }
+}
+
+static ISA: OnceLock<Isa> = OnceLock::new();
+
+fn detect_isa() -> Isa {
+    if avx512_available() {
+        Isa::Avx512
+    } else if avx2_fma_available() {
+        Isa::Avx2Fma
+    } else {
+        Isa::Portable
+    }
+}
+
+/// Run CPU feature detection (idempotent; cached in a `OnceLock`).  The
+/// persistent thread pool calls this once at init so detection never runs
+/// on a hot path; [`gemm`] also self-initializes for pool-less callers.
+pub fn init_isa() -> Isa {
+    *ISA.get_or_init(detect_isa)
+}
+
+/// The ISA tier the dispatcher selected for this process.
+pub fn active_isa() -> Isa {
+    init_isa()
+}
+
+/// Runtime-detected CPU features relevant to the kernel family, joined as
+/// e.g. `"avx2+fma+avx512f"` — recorded in bench metadata so GFLOP/s
+/// numbers are comparable across runners.  Reports raw CPU capability;
+/// whether the AVX-512 kernels are *compiled in* is a separate toolchain
+/// gate (compare with [`active_kernel_name`]).
+#[cfg(target_arch = "x86_64")]
+pub fn detected_features() -> String {
+    let mut out: Vec<&str> = Vec::new();
+    if is_x86_feature_detected!("avx2") {
+        out.push("avx2");
+    }
+    if is_x86_feature_detected!("fma") {
+        out.push("fma");
+    }
+    if is_x86_feature_detected!("avx512f") {
+        out.push("avx512f");
+    }
+    if out.is_empty() {
+        "x86_64-baseline".to_string()
+    } else {
+        out.join("+")
+    }
+}
+
+/// Non-x86_64 build: no x86 feature detection to report.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn detected_features() -> String {
+    "non-x86_64".to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Kernel table
+// ---------------------------------------------------------------------------
+
+/// Which microkernel body to run (dispatched by `match`, resolved once per
+/// GEMM call — an enum rather than a fn pointer so `#[target_feature]`
+/// functions never need to coerce to safe fn pointers).
+#[derive(Clone, Copy)]
+enum Micro {
+    Portable,
+    #[cfg(target_arch = "x86_64")]
+    Avx2Exact,
+    #[cfg(target_arch = "x86_64")]
+    Avx2Fast,
+    #[cfg(all(target_arch = "x86_64", lcc_avx512))]
+    Avx512Exact,
+    #[cfg(all(target_arch = "x86_64", lcc_avx512))]
+    Avx512Fast,
+}
+
+/// A resolved kernel: microkernel body + the B-panel strip width it eats.
+#[derive(Clone, Copy)]
+struct Kernel {
+    nr: usize,
+    micro: Micro,
+    name: &'static str,
+}
+
+const PORTABLE_KERNEL: Kernel =
+    Kernel { nr: NR, micro: Micro::Portable, name: "portable-8x8-exact" };
+
+/// Resolve the kernel for an (ISA, numerics) pair.  Unsupported or
+/// not-compiled-in combinations fall back to the portable exact kernel —
+/// which is bit-identical in `Exact` mode and the documented `Fast`
+/// fallback on FMA-less hardware.
+fn kernel_for(isa: Isa, num: Numerics) -> Kernel {
+    match (isa, num) {
+        #[cfg(target_arch = "x86_64")]
+        (Isa::Avx2Fma, Numerics::Exact) => {
+            Kernel { nr: 8, micro: Micro::Avx2Exact, name: "avx2-8x8-exact" }
+        }
+        #[cfg(target_arch = "x86_64")]
+        (Isa::Avx2Fma, Numerics::Fast) => {
+            Kernel { nr: 8, micro: Micro::Avx2Fast, name: "avx2-8x8-fma" }
+        }
+        #[cfg(all(target_arch = "x86_64", lcc_avx512))]
+        (Isa::Avx512, Numerics::Exact) => {
+            Kernel { nr: 16, micro: Micro::Avx512Exact, name: "avx512-8x16-exact" }
+        }
+        #[cfg(all(target_arch = "x86_64", lcc_avx512))]
+        (Isa::Avx512, Numerics::Fast) => {
+            Kernel { nr: 16, micro: Micro::Avx512Fast, name: "avx512-8x16-fma" }
+        }
+        _ => PORTABLE_KERNEL,
+    }
+}
+
+/// Name of the microkernel variant a given (ISA, numerics) pair resolves
+/// to, e.g. `"avx2-8x8-fma"` — for bench metadata and CLI surfacing.
+pub fn kernel_name(isa: Isa, num: Numerics) -> &'static str {
+    kernel_for(isa, num).name
+}
+
+/// Name of the microkernel variant active right now (detected ISA +
+/// process-wide numerics mode).
+pub fn active_kernel_name() -> &'static str {
+    kernel_for(active_isa(), numerics()).name
+}
+
+// ---------------------------------------------------------------------------
+// Operand views
+// ---------------------------------------------------------------------------
 
 /// Left operand view: how the kernel reads the logical `m × k` matrix A.
 #[derive(Clone, Copy)]
@@ -108,18 +400,34 @@ impl BOp<'_> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Pack buffers and growth counters
+// ---------------------------------------------------------------------------
+
 thread_local! {
     static PACK_A: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
     static PACK_B: Cell<Vec<f32>> = const { Cell::new(Vec::new()) };
     static PACK_GROWS: Cell<u64> = const { Cell::new(0) };
 }
 
-/// How many times this thread's pack buffers grew (analogous to
+/// Process-wide sum of pack-buffer grow events across *all* threads
+/// (including persistent pool workers) — see [`pack_grow_events_total`].
+static PACK_GROWS_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// How many times *this thread's* pack buffers grew (analogous to
 /// [`crate::tensor::Workspace::grow_events`]): steady-state same-shape
 /// calls must not move this counter — the property `rust/tests/prop_gemm.rs`
-/// pins.
+/// pins on the serial path.
 pub fn pack_grow_events() -> u64 {
     PACK_GROWS.with(|c| c.get())
+}
+
+/// How many times pack buffers grew across **every** thread in the process,
+/// persistent pool workers included.  [`pack_grow_events`] is thread-local
+/// and therefore blind to growth inside pool workers; parallel steady-state
+/// assertions (the benches) must read this aggregate instead.
+pub fn pack_grow_events_total() -> u64 {
+    PACK_GROWS_TOTAL.load(Ordering::Relaxed)
 }
 
 /// Run `f` with a thread-local recycled buffer (take/put, never dropped).
@@ -132,31 +440,38 @@ fn with_buf<R>(slot: &'static LocalKey<Cell<Vec<f32>>>, f: impl FnOnce(&mut Vec<
     r
 }
 
-/// Grow `buf` to at least `len` elements (counted as a grow event when the
-/// capacity actually moves).
+/// Grow `buf` to at least `len` elements (counted as a grow event — on both
+/// the thread-local and the process-wide counter — when the capacity
+/// actually moves).
 fn ensure_len(buf: &mut Vec<f32>, len: usize) {
     if buf.len() < len {
         if buf.capacity() < len {
             PACK_GROWS.with(|c| c.set(c.get() + 1));
+            PACK_GROWS_TOTAL.fetch_add(1, Ordering::Relaxed);
         }
         buf.resize(len, 0.0);
     }
 }
 
-/// Pack op(B) (`k × n` logical) into NR-column strips: strip `s` holds
-/// columns `s*NR ..`, laid out `k × NR` row-major at offset `s*k*NR`.
-/// Columns past `n` are zero-padded.
-fn pack_b(b: BOp<'_>, k: usize, n: usize, buf: &mut [f32]) {
-    let nstrips = n.div_ceil(NR);
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// Pack op(B) (`k × n` logical) into `nr`-column strips: strip `s` holds
+/// columns `s*nr ..`, laid out `k × nr` row-major at offset `s*k*nr`.
+/// Columns past `n` are zero-padded.  `nr` is the strip width of the kernel
+/// that will consume the panel (8 for portable/AVX2, 16 for AVX-512).
+fn pack_b(b: BOp<'_>, k: usize, n: usize, nr: usize, buf: &mut [f32]) {
+    let nstrips = n.div_ceil(nr);
     for s in 0..nstrips {
-        let j0 = s * NR;
-        let w = NR.min(n - j0);
-        let dst = &mut buf[s * k * NR..(s + 1) * k * NR];
+        let j0 = s * nr;
+        let w = nr.min(n - j0);
+        let dst = &mut buf[s * k * nr..(s + 1) * k * nr];
         match b {
             BOp::N(mat) => {
                 for kk in 0..k {
                     let src = &mat.data[kk * n + j0..kk * n + j0 + w];
-                    let d = &mut dst[kk * NR..kk * NR + NR];
+                    let d = &mut dst[kk * nr..kk * nr + nr];
                     d[..w].copy_from_slice(src);
                     d[w..].fill(0.0);
                 }
@@ -164,20 +479,20 @@ fn pack_b(b: BOp<'_>, k: usize, n: usize, buf: &mut [f32]) {
             BOp::T(mat) => {
                 // mat is n × k row-major; logical B(kk, j) = mat[j, kk],
                 // so each packed column c streams one contiguous mat row
-                if w < NR {
+                if w < nr {
                     dst.fill(0.0);
                 }
                 for c in 0..w {
                     let src = &mat.data[(j0 + c) * k..(j0 + c + 1) * k];
                     for (kk, &v) in src.iter().enumerate() {
-                        dst[kk * NR + c] = v;
+                        dst[kk * nr + c] = v;
                     }
                 }
             }
             BOp::Gather { cols, codebook, assignments, .. } => {
                 for kk in 0..k {
                     let src = &assignments[kk * cols + j0..kk * cols + j0 + w];
-                    let d = &mut dst[kk * NR..kk * NR + NR];
+                    let d = &mut dst[kk * nr..kk * nr + nr];
                     for (dc, &a) in d[..w].iter_mut().zip(src.iter()) {
                         *dc = codebook[a as usize];
                     }
@@ -223,52 +538,268 @@ fn pack_a(a: AOp<'_>, i0: usize, mb: usize, k: usize, buf: &mut [f32]) {
     }
 }
 
-/// The register-tile microkernel: full-k accumulation of one `MR × NR`
-/// tile.  `ap` is one packed A strip (`k × MR`), `bp` one packed B strip
-/// (`k × NR`).  Each `acc[r][c]` is a single ascending-k f32 chain — the
-/// determinism contract — and the `c` loop is the 8-wide SIMD lane.
+// ---------------------------------------------------------------------------
+// Microkernels
+// ---------------------------------------------------------------------------
+
+/// One `MR × nr` accumulator tile, sized for the widest kernel.  Columns
+/// past the active kernel's `nr` are dead (zero and never stored).
+type AccTile = [[f32; NR_MAX]; MR];
+
+/// Portable exact microkernel: folds one `kc`-deep slice of packed panels
+/// on top of `acc`.  `ap` is `kc × MR` (column-major strip), `bp` is
+/// `kc × NR`.  Each `acc[r][c]` extends a single ascending-k f32 chain —
+/// the determinism contract — and the `c` loop is the 8-wide SIMD lane
+/// rustc autovectorizes.
 #[inline]
-fn microkernel(ap: &[f32], bp: &[f32]) -> [[f32; NR]; MR] {
-    let mut acc = [[0.0f32; NR]; MR];
+fn micro_portable(ap: &[f32], bp: &[f32], acc: &mut AccTile) {
+    let mut t = [[0.0f32; NR]; MR];
+    for (tr, accr) in t.iter_mut().zip(acc.iter()) {
+        tr.copy_from_slice(&accr[..NR]);
+    }
     for (a8, b8) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
         let b: [f32; NR] = b8.try_into().unwrap();
-        for (&ar, accr) in a8.iter().zip(acc.iter_mut()) {
-            for (av, &bv) in accr.iter_mut().zip(b.iter()) {
+        for (&ar, tr) in a8.iter().zip(t.iter_mut()) {
+            for (av, &bv) in tr.iter_mut().zip(b.iter()) {
                 *av += ar * bv;
             }
         }
     }
-    acc
+    for (accr, tr) in acc.iter_mut().zip(t.iter()) {
+        accr[..NR].copy_from_slice(tr);
+    }
 }
 
-/// Compute one `mb × n` block of output rows from packed panels.
-fn block_rows(ap: &[f32], bp: &[f32], k: usize, mb: usize, n: usize, out: &mut [f32]) {
+/// Hand-vectorized x86-64 microkernel variants.  All share the portable
+/// kernel's loop structure (lanes = output columns, one chain per element);
+/// `*_exact` use separate `mul` + `add` (bit-identical to portable),
+/// `*_fast` contract to `fmadd`.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    #[cfg(lcc_avx512)]
+    use super::NR_MAX;
+    use super::{AccTile, MR, NR};
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn micro_avx2_exact(ap: &[f32], bp: &[f32], acc: &mut AccTile) {
+        let mut t = [_mm256_setzero_ps(); MR];
+        for (tr, accr) in t.iter_mut().zip(acc.iter()) {
+            *tr = _mm256_loadu_ps(accr.as_ptr());
+        }
+        for (a8, b8) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+            let b = _mm256_loadu_ps(b8.as_ptr());
+            for (&ar, tr) in a8.iter().zip(t.iter_mut()) {
+                // separate mul + add: strict IEEE, same chain as portable
+                *tr = _mm256_add_ps(*tr, _mm256_mul_ps(_mm256_set1_ps(ar), b));
+            }
+        }
+        for (accr, tr) in acc.iter_mut().zip(t.iter()) {
+            _mm256_storeu_ps(accr.as_mut_ptr(), *tr);
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 + FMA support at runtime.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn micro_avx2_fast(ap: &[f32], bp: &[f32], acc: &mut AccTile) {
+        let mut t = [_mm256_setzero_ps(); MR];
+        for (tr, accr) in t.iter_mut().zip(acc.iter()) {
+            *tr = _mm256_loadu_ps(accr.as_ptr());
+        }
+        for (a8, b8) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+            let b = _mm256_loadu_ps(b8.as_ptr());
+            for (&ar, tr) in a8.iter().zip(t.iter_mut()) {
+                *tr = _mm256_fmadd_ps(_mm256_set1_ps(ar), b, *tr);
+            }
+        }
+        for (accr, tr) in acc.iter_mut().zip(t.iter()) {
+            _mm256_storeu_ps(accr.as_mut_ptr(), *tr);
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX-512F support at runtime.
+    #[cfg(lcc_avx512)]
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn micro_avx512_exact(ap: &[f32], bp: &[f32], acc: &mut AccTile) {
+        let mut t = [_mm512_setzero_ps(); MR];
+        for (tr, accr) in t.iter_mut().zip(acc.iter()) {
+            *tr = _mm512_loadu_ps(accr.as_ptr());
+        }
+        for (a8, b16) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR_MAX)) {
+            let b = _mm512_loadu_ps(b16.as_ptr());
+            for (&ar, tr) in a8.iter().zip(t.iter_mut()) {
+                *tr = _mm512_add_ps(*tr, _mm512_mul_ps(_mm512_set1_ps(ar), b));
+            }
+        }
+        for (accr, tr) in acc.iter_mut().zip(t.iter()) {
+            _mm512_storeu_ps(accr.as_mut_ptr(), *tr);
+        }
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX-512F support at runtime.
+    #[cfg(lcc_avx512)]
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn micro_avx512_fast(ap: &[f32], bp: &[f32], acc: &mut AccTile) {
+        let mut t = [_mm512_setzero_ps(); MR];
+        for (tr, accr) in t.iter_mut().zip(acc.iter()) {
+            *tr = _mm512_loadu_ps(accr.as_ptr());
+        }
+        for (a8, b16) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR_MAX)) {
+            let b = _mm512_loadu_ps(b16.as_ptr());
+            for (&ar, tr) in a8.iter().zip(t.iter_mut()) {
+                *tr = _mm512_fmadd_ps(_mm512_set1_ps(ar), b, *tr);
+            }
+        }
+        for (accr, tr) in acc.iter_mut().zip(t.iter()) {
+            _mm512_storeu_ps(accr.as_mut_ptr(), *tr);
+        }
+    }
+}
+
+/// Dispatch one microkernel invocation.
+#[inline]
+fn run_micro(micro: Micro, ap: &[f32], bp: &[f32], acc: &mut AccTile) {
+    // SAFETY: each SIMD arm is only reachable through `kernel_for`, which
+    // hands out those variants strictly after the matching runtime feature
+    // detection (`isa_supported` / `detect_isa`) succeeded on this CPU.
+    match micro {
+        Micro::Portable => micro_portable(ap, bp, acc),
+        #[cfg(target_arch = "x86_64")]
+        Micro::Avx2Exact => unsafe { x86::micro_avx2_exact(ap, bp, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Micro::Avx2Fast => unsafe { x86::micro_avx2_fast(ap, bp, acc) },
+        #[cfg(all(target_arch = "x86_64", lcc_avx512))]
+        Micro::Avx512Exact => unsafe { x86::micro_avx512_exact(ap, bp, acc) },
+        #[cfg(all(target_arch = "x86_64", lcc_avx512))]
+        Micro::Avx512Fast => unsafe { x86::micro_avx512_fast(ap, bp, acc) },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked driver
+// ---------------------------------------------------------------------------
+
+/// Compute one `mb × n` block of output rows from packed panels, k-blocked
+/// by [`KC`] with accumulator carry: the tile is stored after each k-panel
+/// and reloaded for the next, so every output element remains one
+/// ascending-k chain (store/load of f32 is exact).  Loop order within a
+/// k-panel is `B strip → A strip`, keeping the `KC × nr` B slice hot
+/// across the row block's A strips.
+fn block_rows(
+    kern: Kernel,
+    ap: &[f32],
+    bp: &[f32],
+    k: usize,
+    mb: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    let nr = kern.nr;
     let mstrips = mb.div_ceil(MR);
-    let nstrips = n.div_ceil(NR);
-    for ms in 0..mstrips {
-        let a_strip = &ap[ms * k * MR..(ms + 1) * k * MR];
-        let r0 = ms * MR;
-        let h = MR.min(mb - r0);
+    let nstrips = n.div_ceil(nr);
+    let kblocks = k.div_ceil(KC);
+    for kb in 0..kblocks {
+        let k0 = kb * KC;
+        let kc = KC.min(k - k0);
         for ns in 0..nstrips {
-            let b_strip = &bp[ns * k * NR..(ns + 1) * k * NR];
-            let j0 = ns * NR;
-            let w = NR.min(n - j0);
-            let acc = microkernel(a_strip, b_strip);
-            for (r, accr) in acc.iter().enumerate().take(h) {
-                let dst = &mut out[(r0 + r) * n + j0..(r0 + r) * n + j0 + w];
-                dst.copy_from_slice(&accr[..w]);
+            let j0 = ns * nr;
+            let w = nr.min(n - j0);
+            let b_strip = &bp[ns * k * nr + k0 * nr..ns * k * nr + (k0 + kc) * nr];
+            for ms in 0..mstrips {
+                let r0 = ms * MR;
+                let h = MR.min(mb - r0);
+                let a_strip = &ap[ms * k * MR + k0 * MR..ms * k * MR + (k0 + kc) * MR];
+                let mut acc: AccTile = [[0.0f32; NR_MAX]; MR];
+                if kb > 0 {
+                    // carry: resume each element's chain from the output
+                    for (r, accr) in acc.iter_mut().enumerate().take(h) {
+                        let src = &out[(r0 + r) * n + j0..(r0 + r) * n + j0 + w];
+                        accr[..w].copy_from_slice(src);
+                    }
+                }
+                run_micro(kern.micro, a_strip, b_strip, &mut acc);
+                for (r, accr) in acc.iter().enumerate().take(h) {
+                    let dst = &mut out[(r0 + r) * n + j0..(r0 + r) * n + j0 + w];
+                    dst.copy_from_slice(&accr[..w]);
+                }
             }
         }
     }
 }
 
+/// A packed B panel plus the geometry needed to consume it.
+#[derive(Clone, Copy)]
+struct PanelRef<'a> {
+    buf: &'a [f32],
+    k: usize,
+    n: usize,
+}
+
+/// Row-block driver over an already-packed B panel: packs A per
+/// [`ROW_BLOCK`] and runs the blocked microkernel loop, inline at
+/// `threads <= 1` or over the persistent pool otherwise.  The block layout
+/// is fixed, so results are identical for every thread count.
+fn run_packed(kern: Kernel, a: AOp<'_>, bp: PanelRef<'_>, out: &mut Matrix, threads: usize) {
+    let (k, n) = (bp.k, bp.n);
+    let m = out.rows;
+    let blocks = m.div_ceil(ROW_BLOCK);
+    let run_block = |i0: usize, mb: usize, chunk: &mut [f32]| {
+        with_buf(&PACK_A, |abuf| {
+            let mbp = mb.div_ceil(MR) * MR;
+            ensure_len(abuf, k * mbp);
+            pack_a(a, i0, mb, k, &mut abuf[..k * mbp]);
+            block_rows(kern, &abuf[..k * mbp], bp.buf, k, mb, n, chunk);
+        });
+    };
+    if threads <= 1 || blocks <= 1 {
+        for (bi, chunk) in out.data.chunks_mut(ROW_BLOCK * n).enumerate() {
+            run_block(bi * ROW_BLOCK, chunk.len() / n, chunk);
+        }
+    } else {
+        let mut chunks: Vec<&mut [f32]> = out.data.chunks_mut(ROW_BLOCK * n).collect();
+        parallel_map_mut(&mut chunks, threads, |bi, chunk| {
+            run_block(bi * ROW_BLOCK, chunk.len() / n, &mut **chunk);
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
 /// `out = op(A) · op(B)`, fully overwritten (`out` is reshaped to `m × n`;
-/// prior contents are irrelevant).  B is packed once on the calling thread
-/// and shared read-only; output rows are computed in fixed
-/// [`ROW_BLOCK`]-row work items, inline at `threads <= 1` or over the
-/// persistent thread pool otherwise.  Per-element accumulation order is
-/// identical in every case — see the module docs for the contract.
+/// prior contents are irrelevant).  Runs the kernel the dispatcher selected
+/// for this process (detected ISA + process-wide [`numerics`] mode); B is
+/// packed once on the calling thread and shared read-only.  Per-element
+/// accumulation order follows the active numerics mode's contract — see
+/// the module docs.
 pub fn gemm(a: AOp<'_>, b: BOp<'_>, out: &mut Matrix, threads: usize) {
+    gemm_with(a, b, out, threads, kernel_for(init_isa(), numerics()));
+}
+
+/// [`gemm`] with an explicitly chosen ISA tier and numerics mode, ignoring
+/// the process-wide settings.  For tests and benches that pin individual
+/// kernel variants against each other without mutating global state (the
+/// global mode is racy to flip while other tests run).  Panics if `isa`
+/// is not supported on this host/toolchain — check [`isa_supported`].
+pub fn gemm_forced(
+    a: AOp<'_>,
+    b: BOp<'_>,
+    out: &mut Matrix,
+    threads: usize,
+    isa: Isa,
+    num: Numerics,
+) {
+    assert!(isa_supported(isa), "ISA {} not supported on this host/toolchain", isa.name());
+    gemm_with(a, b, out, threads, kernel_for(isa, num));
+}
+
+fn gemm_with(a: AOp<'_>, b: BOp<'_>, out: &mut Matrix, threads: usize, kern: Kernel) {
     let (m, ka) = a.dims();
     let (kb, n) = b.dims();
     assert_eq!(ka, kb, "gemm inner-dimension mismatch: {ka} vs {kb}");
@@ -281,31 +812,124 @@ pub fn gemm(a: AOp<'_>, b: BOp<'_>, out: &mut Matrix, threads: usize) {
         out.data.fill(0.0);
         return;
     }
-    let np = n.div_ceil(NR) * NR;
+    let np = n.div_ceil(kern.nr) * kern.nr;
     with_buf(&PACK_B, |bbuf| {
         ensure_len(bbuf, k * np);
-        pack_b(b, k, n, &mut bbuf[..k * np]);
-        let bp: &[f32] = &bbuf[..k * np];
-        let blocks = m.div_ceil(ROW_BLOCK);
-        let run_block = |i0: usize, mb: usize, chunk: &mut [f32]| {
-            with_buf(&PACK_A, |abuf| {
-                let mbp = mb.div_ceil(MR) * MR;
-                ensure_len(abuf, k * mbp);
-                pack_a(a, i0, mb, k, &mut abuf[..k * mbp]);
-                block_rows(&abuf[..k * mbp], bp, k, mb, n, chunk);
-            });
-        };
-        if threads <= 1 || blocks <= 1 {
-            for (bi, chunk) in out.data.chunks_mut(ROW_BLOCK * n).enumerate() {
-                run_block(bi * ROW_BLOCK, chunk.len() / n, chunk);
-            }
-        } else {
-            let mut chunks: Vec<&mut [f32]> = out.data.chunks_mut(ROW_BLOCK * n).collect();
-            parallel_map_mut(&mut chunks, threads, |bi, chunk| {
-                run_block(bi * ROW_BLOCK, chunk.len() / n, &mut **chunk);
-            });
-        }
+        pack_b(b, k, n, kern.nr, &mut bbuf[..k * np]);
+        run_packed(kern, a, PanelRef { buf: &bbuf[..k * np], k, n }, out, threads);
     });
+}
+
+// ---------------------------------------------------------------------------
+// Generation-stamped pack cache
+// ---------------------------------------------------------------------------
+
+/// Pack-cache traffic counters: process-wide (hits, misses).  A **hit** is
+/// a cache lookup served without packing — a [`gemm_prepacked`] call (a
+/// pack the pre-cache design would have performed) or an already-valid
+/// [`PackedPanel::ensure`]; a **miss** is an actual (re)pack inside
+/// `ensure`.  In the L step's steady state the miss count moves by exactly
+/// one per weight panel per train step.
+static PACK_CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static PACK_CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Read the pack-cache counters as `(hits, misses)` — see the field docs
+/// on the statics; exposed alongside [`pack_grow_events`] for bench
+/// observability.
+pub fn pack_cache_counters() -> (u64, u64) {
+    (PACK_CACHE_HITS.load(Ordering::Relaxed), PACK_CACHE_MISSES.load(Ordering::Relaxed))
+}
+
+/// A cached, reusable packed copy of one op(B) operand, keyed by a
+/// caller-supplied generation stamp (see the module docs): the L step
+/// stamps panels with `ParamState::generation()`, which bumps on every
+/// weight update, so a panel packed at step start is valid for every
+/// microbatch shard of that step and expires the moment the optimizer
+/// writes new weights.
+#[derive(Default)]
+pub struct PackedPanel {
+    buf: Vec<f32>,
+    k: usize,
+    n: usize,
+    nr: usize,
+    stamp: Option<u64>,
+}
+
+impl PackedPanel {
+    /// An empty panel (first [`ensure`](Self::ensure) packs it).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build a panel around a recycled backing buffer (e.g. from
+    /// [`Workspace::take`](crate::tensor::Workspace::take)); the panel
+    /// starts unstamped, so the first `ensure` packs into the buffer.
+    pub fn from_buf(buf: Vec<f32>) -> Self {
+        PackedPanel { buf, k: 0, n: 0, nr: 0, stamp: None }
+    }
+
+    /// Tear the panel down to its backing buffer for recycling through
+    /// [`Workspace::put`](crate::tensor::Workspace::put).
+    pub fn into_buf(self) -> Vec<f32> {
+        self.buf
+    }
+
+    /// Make the panel hold op(B) packed for the currently active kernel,
+    /// repacking only if `stamp`, the operand shape, or the kernel's strip
+    /// width changed since the last pack.  Returns `true` when a (re)pack
+    /// happened (a cache miss).
+    pub fn ensure(&mut self, b: BOp<'_>, stamp: u64) -> bool {
+        let kern = kernel_for(init_isa(), numerics());
+        let (k, n) = b.dims();
+        if self.stamp == Some(stamp) && self.k == k && self.n == n && self.nr == kern.nr {
+            PACK_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        PACK_CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+        let np = n.div_ceil(kern.nr) * kern.nr;
+        ensure_len(&mut self.buf, k * np);
+        pack_b(b, k, n, kern.nr, &mut self.buf[..k * np]);
+        self.k = k;
+        self.n = n;
+        self.nr = kern.nr;
+        self.stamp = Some(stamp);
+        true
+    }
+}
+
+/// `out = op(A) · B` where B was packed ahead of time by
+/// [`PackedPanel::ensure`] — the pack stage is skipped entirely (counted
+/// as a cache hit).  Bit-identical to calling [`gemm`] with the same
+/// logical B under the same kernel: the panel bytes and the blocked loop
+/// are shared with the pack-per-call path.  Panics if the panel was packed
+/// for a different kernel (numerics/ISA changed since `ensure`).
+pub fn gemm_prepacked(a: AOp<'_>, panel: &PackedPanel, out: &mut Matrix, threads: usize) {
+    let kern = kernel_for(init_isa(), numerics());
+    let (m, ka) = a.dims();
+    assert_eq!(ka, panel.k, "gemm_prepacked inner-dimension mismatch: {ka} vs {}", panel.k);
+    out.reset(m, panel.n);
+    if m == 0 || panel.n == 0 {
+        return;
+    }
+    if panel.k == 0 {
+        out.data.fill(0.0);
+        return;
+    }
+    assert_eq!(
+        panel.nr, kern.nr,
+        "packed panel built for a different kernel (strip width {} vs {}); \
+         re-run PackedPanel::ensure under the current numerics/ISA mode",
+        panel.nr, kern.nr
+    );
+    PACK_CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+    let np = panel.n.div_ceil(kern.nr) * kern.nr;
+    run_packed(
+        kern,
+        a,
+        PanelRef { buf: &panel.buf[..panel.k * np], k: panel.k, n: panel.n },
+        out,
+        threads,
+    );
 }
 
 #[cfg(test)]
@@ -321,7 +945,8 @@ mod tests {
     }
 
     /// Ascending-k single-accumulator triple loop — the chain the packed
-    /// kernel must reproduce exactly.
+    /// kernel must reproduce exactly (in `Exact` mode, for any k: the
+    /// KC-blocked accumulator carry does not reassociate it).
     fn naive(a: &Matrix, b: &Matrix) -> Matrix {
         let (m, k, n) = (a.rows, a.cols, b.cols);
         let mut out = Matrix::zeros(m, n);
@@ -367,6 +992,21 @@ mod tests {
     }
 
     #[test]
+    fn k_blocking_boundaries_match_naive_exactly() {
+        // shapes straddling the KC panel boundary: tail-less, tail-of-1,
+        // KC-1, and a multi-panel ragged case — the accumulator carry must
+        // keep the single ascending-k chain bit-for-bit
+        for &k in &[KC - 1, KC, KC + 1, 2 * KC + 3] {
+            let a = rand_matrix(11, k, 40 + k as u64);
+            let b = rand_matrix(k, 13, 80 + k as u64);
+            let want = naive(&a, &b);
+            let mut out = Matrix::zeros(0, 0);
+            gemm(AOp::N(&a), BOp::N(&b), &mut out, 1);
+            assert_eq!(out.data, want.data, "k={k}");
+        }
+    }
+
+    #[test]
     fn gather_view_matches_dense_exactly() {
         let (k, n) = (17, 11);
         let codebook = vec![-1.5f32, 0.25, 0.75, 2.0];
@@ -390,5 +1030,61 @@ mod tests {
         let mut out = rand_matrix(3, 4, 9);
         gemm(AOp::N(&a), BOp::N(&b), &mut out, 1);
         assert_eq!(out.data, vec![0.0; 12]);
+    }
+
+    #[test]
+    fn forced_exact_variants_agree_bitwise_with_portable() {
+        let a = rand_matrix(21, 2 * KC + 7, 3);
+        let b = rand_matrix(2 * KC + 7, 19, 4);
+        let mut want = Matrix::zeros(0, 0);
+        gemm_forced(AOp::N(&a), BOp::N(&b), &mut want, 1, Isa::Portable, Numerics::Exact);
+        for isa in [Isa::Avx2Fma, Isa::Avx512] {
+            if !isa_supported(isa) {
+                continue;
+            }
+            let mut out = Matrix::zeros(0, 0);
+            gemm_forced(AOp::N(&a), BOp::N(&b), &mut out, 1, isa, Numerics::Exact);
+            assert_eq!(out.data, want.data, "exact {} != portable", isa.name());
+        }
+    }
+
+    #[test]
+    fn numerics_parse_and_names() {
+        assert_eq!(Numerics::parse("exact"), Some(Numerics::Exact));
+        assert_eq!(Numerics::parse("FAST"), Some(Numerics::Fast));
+        assert_eq!(Numerics::parse("loose"), None);
+        assert_eq!(Numerics::Exact.name(), "exact");
+        assert_eq!(Numerics::Fast.name(), "fast");
+        assert_eq!(Isa::Portable.name(), "portable");
+    }
+
+    #[test]
+    fn prepacked_panel_matches_gemm_and_tracks_stamps() {
+        let a = rand_matrix(27, 300, 7);
+        let w = rand_matrix(300, 40, 8);
+        let mut want = Matrix::zeros(0, 0);
+        gemm(AOp::N(&a), BOp::N(&w), &mut want, 1);
+
+        let mut panel = PackedPanel::new();
+        assert!(panel.ensure(BOp::N(&w), 1), "first ensure must pack");
+        assert!(!panel.ensure(BOp::N(&w), 1), "same stamp+shape must be a cache hit");
+        let mut out = Matrix::zeros(0, 0);
+        gemm_prepacked(AOp::N(&a), &panel, &mut out, 1);
+        assert_eq!(out.data, want.data, "prepacked must be bit-identical to gemm");
+
+        // stamp bump invalidates; repack picks up new weights
+        let w2 = rand_matrix(300, 40, 9);
+        assert!(panel.ensure(BOp::N(&w2), 2), "new stamp must repack");
+        gemm_prepacked(AOp::N(&a), &panel, &mut out, 1);
+        let mut want2 = Matrix::zeros(0, 0);
+        gemm(AOp::N(&a), BOp::N(&w2), &mut want2, 1);
+        assert_eq!(out.data, want2.data);
+
+        // buffer recycling keeps the panel usable
+        let buf = panel.into_buf();
+        let mut panel = PackedPanel::from_buf(buf);
+        assert!(panel.ensure(BOp::T(&w2.transpose()), 2), "recycled panel must repack");
+        gemm_prepacked(AOp::N(&a), &panel, &mut out, 1);
+        assert_eq!(out.data, want2.data, "T-view panel of transposed storage");
     }
 }

@@ -23,6 +23,7 @@ use lc::data::synth;
 use lc::lc::builder::Experiment;
 use lc::lc::schedule::LrSchedule;
 use lc::lc::LcAlgorithm;
+use lc::linalg::gemm;
 use lc::models::checkpoint::CompressedCheckpoint;
 use lc::models::{checkpoint, lookup, ParamState};
 use lc::report::{pct, Table};
@@ -35,7 +36,7 @@ use lc::util::log::{set_level, Level};
 
 const VALUE_OPTS: &[&str] = &[
     "model", "epochs", "out", "out-compressed", "checkpoint", "config", "artifacts", "seed",
-    "n-train", "n-test", "lr0", "threads", "backend",
+    "n-train", "n-test", "lr0", "threads", "backend", "numerics",
 ];
 
 fn main() {
@@ -84,7 +85,8 @@ fn usage() {
          compress --config EXP.lcc [--checkpoint REF.lcck] [--out-compressed FILE.lccz]\n  \
          infer    --checkpoint FILE.lccz|FILE.lcck [--n-test N] [--no-compare]\n\
          common options: --artifacts DIR (default ./artifacts),\n                 \
-         --backend auto|native|pjrt (default auto), --quiet, --verbose"
+         --backend auto|native|pjrt (default auto),\n                 \
+         --numerics exact|fast (GEMM numerics; default exact), --quiet, --verbose"
     );
 }
 
@@ -98,6 +100,35 @@ fn cli_backend(args: &Args) -> Result<Option<BackendChoice>> {
         None => Ok(None),
         Some(s) => BackendChoice::parse(s).map(Some).map_err(anyhow::Error::msg),
     }
+}
+
+/// Resolve and apply the GEMM numerics mode. Priority: `--numerics` CLI
+/// flag > `[runtime] numerics` config key > `LCC_NUMERICS` env var (the
+/// lazy default inside `gemm::numerics()`, so "apply" here means only the
+/// first two override it).
+fn apply_numerics(args: &Args, config_choice: Option<gemm::Numerics>) -> Result<()> {
+    match args.get("numerics") {
+        Some(s) => match gemm::Numerics::parse(s) {
+            Some(n) => gemm::set_numerics(n),
+            None => bail!("unknown numerics {s:?} (expected \"exact\" or \"fast\")"),
+        },
+        None => {
+            if let Some(n) = config_choice {
+                gemm::set_numerics(n);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One-line description of the active GEMM dispatch, for startup banners.
+fn gemm_banner() -> String {
+    format!(
+        "gemm kernel {} / numerics {} / cpu {}",
+        gemm::active_kernel_name(),
+        gemm::numerics().name(),
+        gemm::detected_features()
+    )
 }
 
 fn runtime_from_args(args: &Args, config_choice: BackendChoice) -> Result<Runtime> {
@@ -131,6 +162,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     match Runtime::with_backend_threads(&dir, choice, threads) {
         Ok(rt) => {
             println!("backend: {} ({})", rt.backend_name(), rt.platform());
+            println!("{}", gemm_banner());
             match &rt.manifest {
                 Some(m) => {
                     println!("artifacts: {}", dir.display());
@@ -175,8 +207,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = args.get("out").context("--out required")?;
 
     let spec = lookup(model).map_err(anyhow::Error::msg)?;
+    apply_numerics(args, None)?;
     let mut rt = runtime_from_args(args, BackendChoice::Auto)?;
-    lc::info!("L-step backend: {}", rt.backend_name());
+    lc::info!("L-step backend: {} ({})", rt.backend_name(), gemm_banner());
     let (train_data, test_data) = load_data(n_train, n_test, 1, threads);
 
     let alg = LcAlgorithm::new(
@@ -207,6 +240,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let n_test: usize = args.get_parse("n-test", 2048).map_err(anyhow::Error::msg)?;
     let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
     let state = checkpoint::load(Path::new(ckpt))?;
+    apply_numerics(args, None)?;
     let mut rt = runtime_from_args(args, BackendChoice::Auto)?;
     let (_, test_data) = load_data(0, n_test, 1, threads);
     let eval = lc::runtime::trainer::EvalDriver::new(&mut rt, &state.spec.name)?;
@@ -225,8 +259,9 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let cfg_path = args.get("config").context("--config required")?;
     let cfg = Config::load(cfg_path).map_err(anyhow::Error::msg)?;
     let exp = Experiment::from_config(&cfg).map_err(anyhow::Error::msg)?;
+    apply_numerics(args, exp.numerics)?;
     let mut rt = runtime_from_args(args, exp.backend)?;
-    lc::info!("L-step backend: {}", rt.backend_name());
+    lc::info!("L-step backend: {} ({})", rt.backend_name(), gemm_banner());
     let (train_data, test_data) =
         load_data(exp.n_train, exp.n_test, exp.data_seed, exp.lc.threads);
 
@@ -311,6 +346,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let ckpt = args.get("checkpoint").context("--checkpoint required")?;
     let n_test: usize = args.get_parse("n-test", 2048).map_err(anyhow::Error::msg)?;
     let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
+    apply_numerics(args, None)?;
 
     let path = Path::new(ckpt);
     let magic = {
@@ -343,6 +379,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+    println!("dense-path {}", gemm_banner());
 
     let t0 = std::time::Instant::now();
     let rc = eval.eval_compressed(&model, &test_data)?;
@@ -364,7 +401,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
         let w_momenta: Vec<Matrix> =
             weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect();
         let b_momenta: Vec<Vec<f32>> = biases.iter().map(|b| vec![0.0; b.len()]).collect();
-        let state = ParamState { spec, weights, biases, w_momenta, b_momenta };
+        let state = ParamState::from_parts(spec, weights, biases, w_momenta, b_momenta);
         let rd = eval.eval(&state, &test_data)?;
         let dense_secs = t1.elapsed().as_secs_f64();
         let loss_rel = (rc.mean_loss - rd.mean_loss).abs() / rd.mean_loss.abs().max(1.0);

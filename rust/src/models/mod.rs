@@ -169,15 +169,47 @@ pub fn lookup(name: &str) -> Result<ModelSpec, String> {
     })
 }
 
+/// Source of globally unique generation stamps for [`ParamState`]: every
+/// constructor, clone, and weight update draws a fresh value, so a stamp
+/// observed by the GEMM pack cache can never alias a different state (or a
+/// different version of the same state).
+static NEXT_GEN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+fn next_generation() -> u64 {
+    NEXT_GEN.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
 /// Host-side parameter state of a model instance: weights, biases, and the
 /// SGD momentum buffers the L step threads through the train artifact.
-#[derive(Clone, Debug)]
+///
+/// Carries a private **generation stamp** ([`ParamState::generation`]) that
+/// the L step hands to the GEMM weight-pack cache: any code that mutates
+/// `weights` in place must call [`ParamState::bump_generation`] afterwards
+/// (the backend's train step and [`ParamState::set_weights`] do), so cached
+/// packed panels expire the moment the weights change.
+#[derive(Debug)]
 pub struct ParamState {
     pub spec: ModelSpec,
     pub weights: Vec<Matrix>,
     pub biases: Vec<Vec<f32>>,
     pub w_momenta: Vec<Matrix>,
     pub b_momenta: Vec<Vec<f32>>,
+    generation: u64,
+}
+
+impl Clone for ParamState {
+    /// Clones take a *fresh* generation: the clone is a distinct weight
+    /// store, and pack-cache stamps must never alias across instances.
+    fn clone(&self) -> Self {
+        ParamState {
+            spec: self.spec.clone(),
+            weights: self.weights.clone(),
+            biases: self.biases.clone(),
+            w_momenta: self.w_momenta.clone(),
+            b_momenta: self.b_momenta.clone(),
+            generation: next_generation(),
+        }
+    }
 }
 
 impl ParamState {
@@ -200,7 +232,31 @@ impl ParamState {
         }
         let w_momenta = weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect();
         let b_momenta = biases.iter().map(|b| vec![0.0; b.len()]).collect();
-        Self { spec: spec.clone(), weights, biases, w_momenta, b_momenta }
+        Self::from_parts(spec.clone(), weights, biases, w_momenta, b_momenta)
+    }
+
+    /// Assemble a state from pre-built parts (checkpoint load, snapshots);
+    /// the new state gets a fresh generation stamp.
+    pub fn from_parts(
+        spec: ModelSpec,
+        weights: Vec<Matrix>,
+        biases: Vec<Vec<f32>>,
+        w_momenta: Vec<Matrix>,
+        b_momenta: Vec<Vec<f32>>,
+    ) -> Self {
+        Self { spec, weights, biases, w_momenta, b_momenta, generation: next_generation() }
+    }
+
+    /// The state's current generation stamp — the GEMM pack cache's
+    /// invalidation key (see the struct docs).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Record that `weights` changed: the next L-step pack-cache lookup
+    /// repacks.  Idempotent in effect (stamps only ever move forward).
+    pub fn bump_generation(&mut self) {
+        self.generation = next_generation();
     }
 
     /// Zero the momentum buffers (fresh optimizer per L step, matching the
@@ -222,6 +278,7 @@ impl ParamState {
             assert_eq!((w.rows, w.cols), (d.rows, d.cols));
             w.data.copy_from_slice(&d.data);
         }
+        self.bump_generation();
     }
 }
 

@@ -26,6 +26,7 @@
 //! its lifetime and threads it through [`super::Backend::train_step_ws`];
 //! backends that manage their own device buffers (PJRT) simply ignore it.
 
+use crate::linalg::gemm::PackedPanel;
 use crate::models::{LayerOp, ModelSpec, OpKind};
 use crate::tensor::{Matrix, Workspace};
 
@@ -94,10 +95,33 @@ fn empty_matrix() -> Matrix {
     Matrix { rows: 0, cols: 0, data: Vec::new() }
 }
 
+/// Per-layer cached weight panels, shared read-only by every shard within
+/// one train step (see the pack-cache section of
+/// [`crate::linalg::gemm`]'s docs).  Stamped with the `ParamState`
+/// generation at step start; the stamp expires when the optimizer writes.
+#[derive(Default)]
+pub(crate) struct LayerPacks {
+    /// Forward panel: op(B) = W (`in × out`).
+    pub(crate) n: PackedPanel,
+    /// Backward dH panel: op(B) = Wᵀ.  Never packed for layer 0 (no
+    /// upstream gradient to produce).
+    pub(crate) t: PackedPanel,
+}
+
+impl LayerPacks {
+    fn recycle(self, pool: &mut Workspace) {
+        pool.put(self.n.into_buf());
+        pool.put(self.t.into_buf());
+    }
+}
+
 /// Persistent, shard-structured scratch state for the native L step.
 #[derive(Default)]
 pub struct GradWorkspace {
     pub(crate) shards: Vec<ShardGrad>,
+    /// Generation-stamped packed weight panels, one pair per layer —
+    /// packed once per train step instead of once per shard.
+    pub(crate) wpacks: Vec<LayerPacks>,
     /// `(batch, ops)` the shards are currently shaped for.
     shape: Option<(usize, Vec<LayerOp>)>,
     /// Arena the buffers are recycled through on shape changes.
@@ -114,6 +138,12 @@ impl GradWorkspace {
         self.shards.len()
     }
 
+    /// Split borrow for the parallel stage: mutable shards plus the shared
+    /// read-only weight panels.
+    pub(crate) fn shards_and_packs(&mut self) -> (&mut [ShardGrad], &[LayerPacks]) {
+        (&mut self.shards, &self.wpacks)
+    }
+
     /// (Re)shape the shard buffers for `spec` at batch size `b`.  No-op —
     /// and allocation-free — when the shape already matches; otherwise old
     /// buffers are recycled through the arena and new ones taken from it.
@@ -125,7 +155,18 @@ impl GradWorkspace {
         for sh in self.shards.drain(..) {
             sh.recycle(pool);
         }
+        for lp in self.wpacks.drain(..) {
+            lp.recycle(pool);
+        }
         let nl = spec.n_layers();
+        // one pack pair per layer; buffers come back from the arena and
+        // are sized lazily by the first `PackedPanel::ensure`
+        for _ in 0..nl {
+            self.wpacks.push(LayerPacks {
+                n: PackedPanel::from_buf(pool.take(0)),
+                t: PackedPanel::from_buf(pool.take(0)),
+            });
+        }
         let max_out = spec.ops.iter().map(|op| op.out_elems()).max().unwrap_or(1);
         let n_shards = (b + MICROBATCH - 1) / MICROBATCH;
         for s in 0..n_shards.max(1) {

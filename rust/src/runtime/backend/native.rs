@@ -36,18 +36,27 @@
 //! **zero heap allocations** at `threads = 1` (both measured by
 //! `benches/l_step_bench.rs`).
 //!
-//! Every GEMM here — the per-shard serial `matmul_*_into` calls and the
-//! eval pass's parallel [`Matrix::matmul_par`] — executes on the packed
-//! SIMD microkernel ([`crate::linalg::gemm`]), and shards are dispatched
-//! to the persistent worker pool rather than freshly spawned threads;
-//! neither changes any accumulation chain (see the gemm module's
-//! determinism contract), so the bit-identity pins hold unchanged.
+//! Every GEMM here executes on the packed SIMD microkernel
+//! ([`crate::linalg::gemm`]), and shards are dispatched to the persistent
+//! worker pool rather than freshly spawned threads; neither changes any
+//! accumulation chain (see the gemm module's determinism contract), so the
+//! bit-identity pins hold unchanged.  The step's weight-matrix GEMMs (the
+//! per-shard forward `acts · W` and backward `dz · Wᵀ`) additionally read
+//! from the **generation-stamped pack cache**: `train_step_ws` packs each
+//! weight panel once at step start ([`crate::linalg::gemm::PackedPanel`],
+//! stamped with [`ParamState::generation`]) and every shard consumes the
+//! shared panel via `gemm_prepacked` — one pack per weight matrix per step
+//! instead of one per shard.  The packed bytes and the blocked kernel loop
+//! are identical either way, so cached GEMMs are bit-identical to the
+//! pack-per-call path.  The update stage bumps the state's generation, so
+//! the next step repacks exactly once.
 
 use anyhow::{ensure, Result};
 
-use super::grad::{GradWorkspace, ShardGrad};
+use super::grad::{GradWorkspace, LayerPacks, ShardGrad};
 use super::{Backend, QuantAssignRaw};
 use crate::linalg::conv;
+use crate::linalg::gemm::{self, AOp, BOp};
 use crate::models::{Activation, ModelSpec, OpKind, ParamState};
 use crate::tensor::Matrix;
 use crate::util::threadpool::{parallel_map, parallel_map_mut, tree_reduce_mut};
@@ -194,6 +203,7 @@ fn shard_forward_backward(
     sh: &mut ShardGrad,
     spec: &ModelSpec,
     state: &ParamState,
+    wpacks: &[LayerPacks],
     x: &[f32],
     y: &[i32],
     b: usize,
@@ -211,15 +221,17 @@ fn shard_forward_backward(
         let op = &spec.ops[l];
         let (prev, rest) = acts.split_at_mut(l + 1);
         let z = &mut rest[0];
+        // weight panels come pre-packed from the step-level cache (serial
+        // within the shard: shards are the parallel unit)
         match op.kind {
             OpKind::Dense { .. } => {
-                prev[l].matmul_into(&state.weights[l], z);
+                gemm::gemm_prepacked(AOp::N(&prev[l]), &wpacks[l].n, z, 1);
             }
             OpKind::Conv2d(cs) => {
                 // gather patches once; the column matrix is retained for
                 // the backward dW GEMM (the conv analogue of `acts[l]`)
                 conv::im2col(&prev[l].data, rows, &cs, &mut cols[l]);
-                cols[l].matmul_into(&state.weights[l], z);
+                gemm::gemm_prepacked(AOp::N(&cols[l]), &wpacks[l].n, z, 1);
             }
         }
         bias_and_activation(z, &state.biases[l], op.act);
@@ -268,14 +280,14 @@ fn shard_forward_backward(
         if l > 0 {
             match op.kind {
                 OpKind::Dense { .. } => {
-                    dz.matmul_nt_into(&state.weights[l], dh);
+                    gemm::gemm_prepacked(AOp::N(dz), &wpacks[l].t, dh, 1);
                 }
                 OpKind::Conv2d(cs) => {
                     // dX = col2im(dZmat · Wᵀ): the GEMM lands in the shared
                     // colgrad scratch, then a serial fixed-order scatter-add
                     // (deterministic — shards are the parallel unit, not
                     // output pixels)
-                    dz.matmul_nt_into(&state.weights[l], colgrad);
+                    gemm::gemm_prepacked(AOp::N(dz), &wpacks[l].t, colgrad, 1);
                     dh.reset(rows, op.in_elems());
                     conv::col2im_into(colgrad, rows, &cs, &mut dh.data);
                 }
@@ -443,12 +455,26 @@ impl Backend for NativeBackend {
         let threads = self.threads;
         ws.prepare(spec, b);
 
+        // ---- stage 0: refresh the generation-stamped weight-pack cache -----
+        // Each weight panel is packed at most once per step (a miss only when
+        // the state's generation moved, i.e. the optimizer wrote new weights);
+        // every shard then consumes the shared panels read-only.
+        let gen = state.generation();
+        for (l, (lp, w)) in ws.wpacks.iter_mut().zip(state.weights.iter()).enumerate() {
+            lp.n.ensure(BOp::N(w), gen);
+            if l > 0 {
+                // the dH backward panel; layer 0 produces no upstream grad
+                lp.t.ensure(BOp::T(w), gen);
+            }
+        }
+
         // ---- stages 1+2: sharded forward + local backward ------------------
         // Shard layout is a function of the batch size only, so per-shard
         // arithmetic is identical for every thread count.
         let state_ro: &ParamState = state;
-        parallel_map_mut(&mut ws.shards, threads, |_, sh| {
-            shard_forward_backward(sh, spec, state_ro, x, y, b);
+        let (shards, wpacks) = ws.shards_and_packs();
+        parallel_map_mut(shards, threads, |_, sh| {
+            shard_forward_backward(sh, spec, state_ro, wpacks, x, y, b);
         });
 
         // ---- stage 3: deterministic tree reduce of the gradient shards -----
@@ -520,6 +546,9 @@ impl Backend for NativeBackend {
             .into_iter()
             .sum()
         };
+        // the update wrote new weights: expire the cached panels so the
+        // next step's stage 0 repacks (exactly once)
+        state.bump_generation();
         Ok((ce + penalty) as f32)
     }
 

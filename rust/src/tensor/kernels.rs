@@ -7,7 +7,11 @@
 //! the codebook kernel reads per-weight center indices and gathers values
 //! from a k-entry codebook; the sign kernel adds/subtracts activations and
 //! applies the shared scale once per output.  Accumulation is K-ascending
-//! per output element, matching [`Matrix::matmul`] exactly.
+//! per output element, matching [`Matrix::matmul`] exactly in `Exact`
+//! numerics mode ([`crate::linalg::gemm::Numerics`]); in `Fast` mode the
+//! gather path below inherits the dispatched FMA kernel's fused rounding
+//! like every other packed-GEMM caller, while the zero-skipping scalar
+//! loops stay exact by construction.
 //!
 //! A codebook with **no zero centers** executes every MAC regardless of
 //! path, so that case runs through the packed GEMM microkernel

@@ -74,10 +74,15 @@ impl Matrix {
     }
 
     /// `self * other` through the packed GEMM microkernel
-    /// ([`crate::linalg::gemm`]), serial.  Per output element the products
-    /// accumulate in ascending-k order into a single f32 chain, so results
-    /// are identical to a naive ascending-k triple loop and to every other
-    /// `matmul*` entry point.
+    /// ([`crate::linalg::gemm`]), serial.  All `matmul*` entry points obey
+    /// the active numerics mode ([`gemm::numerics`]): in `Exact` (the
+    /// default) each output element accumulates its products in
+    /// ascending-k order into a single f32 chain, so results are identical
+    /// to a naive ascending-k triple loop regardless of the dispatched ISA
+    /// variant; in `Fast` the FMA kernels fuse multiply-add (one rounding
+    /// per term instead of two) — still a single deterministic per-element
+    /// chain, reproducible run-to-run and across thread counts, but not
+    /// bit-equal to the naive loop.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Matrix::zeros(0, 0);

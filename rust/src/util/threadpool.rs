@@ -145,10 +145,15 @@ thread_local! {
 }
 
 fn pool() -> &'static Pool {
-    POOL.get_or_init(|| Pool {
-        queue: Mutex::new(VecDeque::new()),
-        work_cv: Condvar::new(),
-        spawned: Mutex::new(0),
+    POOL.get_or_init(|| {
+        // Prime the GEMM dispatcher's CPU feature detection exactly once,
+        // at pool init, so kernel selection never detects on a hot path.
+        crate::linalg::gemm::init_isa();
+        Pool {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            spawned: Mutex::new(0),
+        }
     })
 }
 

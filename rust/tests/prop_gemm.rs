@@ -15,7 +15,7 @@
 //!    growing the thread-local pack buffers after the first call
 //!    (`pack_grow_events`, the `Workspace::grow_events` idiom).
 
-use lc::linalg::gemm::{self, pack_grow_events, AOp, BOp};
+use lc::linalg::gemm::{self, pack_grow_events, AOp, BOp, Isa, Numerics};
 use lc::tensor::kernels::matmul_gather;
 use lc::tensor::Matrix;
 use lc::util::rng::Xoshiro256;
@@ -162,4 +162,146 @@ fn steady_state_same_shape_calls_do_not_grow_pack_buffers() {
         warm,
         "steady-state same-shape GEMMs must not grow the pack buffers"
     );
+}
+
+// ---------------------------------------------------------------------------
+// Deep-k shapes: k ≥ 4096 spans many KC-deep cache-block panels (KC = 256),
+// exercising the accumulator-carry path and its ragged tails (4096 = 16·KC
+// exactly; 4423 and 5000 leave 71- and 136-deep final panels).
+// ---------------------------------------------------------------------------
+
+const DEEP_SHAPES: &[(usize, usize, usize)] = &[(40, 4096, 24), (9, 4423, 17), (33, 5000, 40)];
+
+/// Every ISA tier the host + toolchain can actually run.
+fn supported_isas() -> Vec<Isa> {
+    [Isa::Portable, Isa::Avx2Fma, Isa::Avx512]
+        .into_iter()
+        .filter(|&isa| gemm::isa_supported(isa))
+        .collect()
+}
+
+/// Naive triple loop accumulating in f64 — the tolerance reference for
+/// `Fast` mode (its fused rounding differs from f32 Exact but both should
+/// sit close to the f64 chain).
+fn naive_f64(a: &Matrix, b: &Matrix) -> Vec<f64> {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for kk in 0..k {
+                acc += a.at(i, kk) as f64 * b.at(kk, j) as f64;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn deep_k_exact_equals_naive_bitwise_all_views_and_threads() {
+    for &(m, k, n) in DEEP_SHAPES {
+        let a = rand_matrix(m, k, 400 + m as u64);
+        let b = rand_matrix(k, n, 500 + n as u64);
+        let want = naive(&a, &b);
+        let at = a.transpose();
+        let bt = b.transpose();
+        for threads in [1usize, 2, 4, 8] {
+            let ctx = format!("{m}x{k}x{n} threads={threads}");
+            assert_eq!(bits(&a.matmul_par(&b, threads).data), bits(&want.data), "nn {ctx}");
+            assert_eq!(bits(&at.matmul_tn_par(&b, threads).data), bits(&want.data), "tn {ctx}");
+            assert_eq!(bits(&a.matmul_nt_par(&bt, threads).data), bits(&want.data), "nt {ctx}");
+        }
+    }
+}
+
+#[test]
+fn deep_k_exact_is_bitwise_isa_independent() {
+    // Exact mode promises the *same bits* from every dispatched variant:
+    // the SIMD lanes hold different output elements, never partial sums,
+    // so the per-element chain matches the naive loop on every tier.
+    for &(m, k, n) in DEEP_SHAPES {
+        let a = rand_matrix(m, k, 600 + m as u64);
+        let b = rand_matrix(k, n, 700 + n as u64);
+        let want = naive(&a, &b);
+        let at = a.transpose();
+        let bt = b.transpose();
+        let mut out = Matrix::zeros(0, 0);
+        for isa in supported_isas() {
+            for threads in [1usize, 4] {
+                let ctx = format!("{m}x{k}x{n} isa={} threads={threads}", isa.name());
+                gemm::gemm_forced(AOp::N(&a), BOp::N(&b), &mut out, threads, isa, Numerics::Exact);
+                assert_eq!(bits(&out.data), bits(&want.data), "nn {ctx}");
+                gemm::gemm_forced(AOp::T(&at), BOp::N(&b), &mut out, threads, isa, Numerics::Exact);
+                assert_eq!(bits(&out.data), bits(&want.data), "tn {ctx}");
+                gemm::gemm_forced(AOp::N(&a), BOp::T(&bt), &mut out, threads, isa, Numerics::Exact);
+                assert_eq!(bits(&out.data), bits(&want.data), "nt {ctx}");
+            }
+        }
+    }
+}
+
+#[test]
+fn deep_k_gather_view_exact_all_isas() {
+    let (m, k, n) = (11, 4423, 13);
+    let codebook = vec![-1.25f32, 0.5, 0.125, 2.0, -0.375];
+    let mut rng = Xoshiro256::new(23);
+    let assignments: Vec<u32> = (0..k * n).map(|_| rng.below(codebook.len()) as u32).collect();
+    let gathered: Vec<f32> = assignments.iter().map(|&c| codebook[c as usize]).collect();
+    let dense = Matrix::from_vec(k, n, gathered);
+    let x = rand_matrix(m, k, 24);
+    let want = naive(&x, &dense);
+    let mut out = Matrix::zeros(0, 0);
+    for isa in supported_isas() {
+        let bop = BOp::Gather { rows: k, cols: n, codebook: &codebook, assignments: &assignments };
+        gemm::gemm_forced(AOp::N(&x), bop, &mut out, 4, isa, Numerics::Exact);
+        assert_eq!(bits(&out.data), bits(&want.data), "gather isa={}", isa.name());
+    }
+}
+
+#[test]
+fn deep_k_fast_within_tolerance_of_f64_reference() {
+    for &(m, k, n) in DEEP_SHAPES {
+        let a = rand_matrix(m, k, 800 + m as u64);
+        let b = rand_matrix(k, n, 900 + n as u64);
+        let reference = naive_f64(&a, &b);
+        let mut out = Matrix::zeros(0, 0);
+        for isa in supported_isas() {
+            gemm::gemm_forced(AOp::N(&a), BOp::N(&b), &mut out, 4, isa, Numerics::Fast);
+            for (idx, (&got, &want)) in out.data.iter().zip(reference.iter()).enumerate() {
+                let err = (got as f64 - want).abs();
+                let tol = 1e-3 + 5e-4 * want.abs();
+                assert!(
+                    err <= tol,
+                    "{m}x{k}x{n} isa={} idx={idx}: |{got} - {want}| = {err:.3e} > {tol:.3e}",
+                    isa.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn deep_k_fast_is_bit_deterministic_across_threads() {
+    // Fast relaxes the bit contract *between* variants, not *within* one:
+    // a given kernel at a given shape must produce identical bits at every
+    // thread count (fixed row-block ownership, fixed KC walk).
+    for &(m, k, n) in DEEP_SHAPES {
+        let a = rand_matrix(m, k, 1000 + m as u64);
+        let b = rand_matrix(k, n, 1100 + n as u64);
+        let mut out = Matrix::zeros(0, 0);
+        for isa in supported_isas() {
+            gemm::gemm_forced(AOp::N(&a), BOp::N(&b), &mut out, 1, isa, Numerics::Fast);
+            let serial = bits(&out.data);
+            for threads in [2usize, 4, 8] {
+                gemm::gemm_forced(AOp::N(&a), BOp::N(&b), &mut out, threads, isa, Numerics::Fast);
+                assert_eq!(
+                    bits(&out.data),
+                    serial,
+                    "{m}x{k}x{n} isa={} threads={threads}",
+                    isa.name()
+                );
+            }
+        }
+    }
 }

@@ -1,0 +1,204 @@
+//! Serving-engine load bench (`cargo bench --bench serve_bench`) — the
+//! measurement behind the batching request front: open-loop QPS and
+//! p50/p99 latency, dense vs compressed execution, at `max_batch` 1/8/32,
+//! plus one hot-swap under continuous load.
+//!
+//! Models are lenet300-shaped (784-300-100-10).  The gated "compressed"
+//! model is the paper's flagship prune+quantize combination: the big
+//! input layer pruned to 5% survivors (CSR kernel), the rest quantized to
+//! a 16-entry all-nonzero codebook (packed gather-GEMM kernel).  A
+//! pure-quantization model rides along report-only.  Gates:
+//!
+//!   * deadline batching pays: compressed QPS at max_batch=32 must be
+//!     >= 2x max_batch=1;
+//!   * compressed serving >= dense QPS at max_batch=32;
+//!   * the hot-swap loses zero requests and every response is stamped
+//!     with exactly one of the two published generations.
+//!
+//! Results go to stdout and `BENCH_serve.json`.  `LCC_BENCH_QUICK=1`
+//! shrinks the request count for CI smoke runs.
+
+use lc::bench::{write_bench_json, Record};
+use lc::compress::Theta;
+use lc::infer::{CompressedLayer, CompressedModel, ExecKernel};
+use lc::linalg::gemm;
+use lc::serve::loadgen::{bench_sweep, SweepOpts};
+use lc::tensor::Matrix;
+use lc::util::rng::Xoshiro256;
+
+const WIDTHS: [usize; 4] = [784, 300, 100, 10];
+const THREADS: usize = 4;
+
+fn sparse_theta(m: usize, n: usize, keep_frac: f64, rng: &mut Xoshiro256) -> Theta {
+    let total = m * n;
+    let keep = ((total as f64 * keep_frac) as usize).max(1);
+    let mut idx = rng.sample_indices(total, keep);
+    idx.sort_unstable();
+    let values: Vec<f32> = idx.iter().map(|_| rng.normal_f32(0.0, 0.5)).collect();
+    Theta::Sparse { len: total, indices: idx.iter().map(|&i| i as u32).collect(), values }
+}
+
+/// k-entry codebook with every center nonzero, so the codebook kernel
+/// takes its packed gather-GEMM path (a zero center would switch it to
+/// the scalar zero-skipping loop).
+fn quantized_theta(m: usize, n: usize, k: usize, rng: &mut Xoshiro256) -> Theta {
+    let codebook: Vec<f32> = (0..k).map(|i| (i as f32 + 0.5) / k as f32 - 0.5).collect();
+    assert!(codebook.iter().all(|&c| c != 0.0), "codebook must be all-nonzero");
+    let assignments: Vec<u32> = (0..m * n).map(|_| rng.below(k) as u32).collect();
+    Theta::Quantized { codebook, assignments }
+}
+
+fn shapes() -> Vec<(usize, usize)> {
+    (0..WIDTHS.len() - 1).map(|l| (WIDTHS[l], WIDTHS[l + 1])).collect()
+}
+
+fn model_from_thetas(name: &str, thetas: &[Theta], biases: &[Vec<f32>]) -> CompressedModel {
+    let layers: Vec<CompressedLayer> = thetas
+        .iter()
+        .enumerate()
+        .map(|(l, t)| CompressedLayer::from_theta(t, WIDTHS[l], WIDTHS[l + 1]))
+        .collect();
+    CompressedModel {
+        name: name.to_string(),
+        ops: lc::models::mlp_ops(&WIDTHS),
+        widths: WIDTHS.to_vec(),
+        eval_batch: 512,
+        layers,
+        biases: biases.to_vec(),
+    }
+}
+
+/// The decompress-then-GEMM baseline: every layer forced dense (no
+/// auto-CSR), weights materialized from the same thetas.
+fn dense_twin(name: &str, thetas: &[Theta], biases: &[Vec<f32>]) -> CompressedModel {
+    let layers: Vec<CompressedLayer> = thetas
+        .iter()
+        .enumerate()
+        .map(|(l, t)| {
+            CompressedLayer::Dense(Matrix::from_vec(WIDTHS[l], WIDTHS[l + 1], t.decompress()))
+        })
+        .collect();
+    CompressedModel {
+        name: name.to_string(),
+        ops: lc::models::mlp_ops(&WIDTHS),
+        widths: WIDTHS.to_vec(),
+        eval_batch: 512,
+        layers,
+        biases: biases.to_vec(),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("LCC_BENCH_QUICK").is_ok();
+    let requests = if quick { 300 } else { 2000 };
+
+    let mut rng = Xoshiro256::new(2024);
+    let sh = shapes();
+    // prune+quantize: big input layer 5%-sparse, the rest 16-center quant
+    let pq_thetas: Vec<Theta> = sh
+        .iter()
+        .enumerate()
+        .map(|(l, &(m, n))| {
+            if l == 0 {
+                sparse_theta(m, n, 0.05, &mut rng)
+            } else {
+                quantized_theta(m, n, 16, &mut rng)
+            }
+        })
+        .collect();
+    let quant_thetas: Vec<Theta> =
+        sh.iter().map(|&(m, n)| quantized_theta(m, n, 16, &mut rng)).collect();
+    let biases: Vec<Vec<f32>> = sh
+        .iter()
+        .map(|&(_, n)| (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect())
+        .collect();
+
+    let dense = dense_twin("lenet300-serve", &pq_thetas, &biases);
+    let purequant = model_from_thetas("lenet300-serve", &quant_thetas, &biases);
+    let compressed = model_from_thetas("lenet300-serve", &pq_thetas, &biases);
+    dense.validate().expect("dense model");
+    purequant.validate().expect("purequant model");
+    compressed.validate().expect("compressed model");
+    assert_eq!(compressed.layers[0].kernel_name(), "csr", "layer 0 must plan to CSR");
+
+    println!(
+        "serving load bench: lenet300 shapes, {requests} requests/run, {THREADS} threads, \
+         gemm {} / numerics {}",
+        gemm::active_kernel_name(),
+        gemm::numerics().name()
+    );
+
+    let opts = SweepOpts {
+        requests,
+        qps: 0.0,
+        batches: vec![1, 8, 32],
+        max_delay_us: 1000,
+        threads: THREADS,
+        eval_batch: 512,
+        n_pool: 256,
+        seed: 3,
+    };
+    // compressed last: the hot-swap phase republishes the final model
+    let models: Vec<(&str, CompressedModel)> =
+        vec![("dense", dense), ("purequant", purequant), ("compressed", compressed)];
+    let (mut records, summary) = bench_sweep(&models, &opts).expect("serve sweep");
+
+    println!("\n{:<12} {:>9} {:>10} {:>10} {:>10}", "mode", "max_batch", "qps", "p50us", "p99us");
+    for rec in records.iter().filter(|r| r.bench == "serve_qps") {
+        let f = |k: &str| {
+            rec.fields.iter().find(|(n, _)| n == k).map(|(_, v)| v.as_str()).unwrap_or("?")
+        };
+        println!(
+            "{:<12} {:>9} {:>10} {:>10} {:>10}",
+            f("mode"),
+            f("max_batch"),
+            f("qps_sustained"),
+            f("p50_us"),
+            f("p99_us")
+        );
+    }
+    println!("hot-swap: {}", summary.swap.render());
+
+    // gate 1: size-or-deadline coalescing must pay >= 2x over batch=1
+    let c1 = summary.qps_of("compressed", 1).expect("compressed batch-1 run");
+    let c32 = summary.qps_of("compressed", 32).expect("compressed batch-32 run");
+    assert!(
+        c32 >= 2.0 * c1,
+        "batched serving too slow: {c32:.0} qps at max_batch=32 vs {c1:.0} at 1 (< 2x)"
+    );
+    // gate 2: compressed execution must at least match the dense baseline
+    let d32 = summary.qps_of("dense", 32).expect("dense batch-32 run");
+    assert!(
+        c32 >= d32,
+        "compressed serving slower than dense: {c32:.0} vs {d32:.0} qps at max_batch=32"
+    );
+    // gate 3: the hot-swap lost nothing and every response is attributable
+    // to exactly one of the two published generations
+    assert_eq!(summary.swap.failed, 0, "hot-swap dropped/failed requests");
+    assert_eq!(summary.swap.completed, summary.swap.submitted, "hot-swap lost responses");
+    assert_eq!(
+        summary.swap.generations.len(),
+        2,
+        "expected responses from exactly two generations, got {:?}",
+        summary.swap.generations
+    );
+    for &(g, n) in &summary.swap.generations {
+        assert!((1..=2).contains(&g) && n > 0, "bad generation stamp {g} ({n} responses)");
+    }
+
+    records.push(Record {
+        bench: "serve_dispatch_metadata".into(),
+        fields: vec![
+            ("gemm_kernel".into(), gemm::active_kernel_name().to_string()),
+            ("numerics".into(), gemm::numerics().name().to_string()),
+            ("cpu_features".into(), gemm::detected_features().to_string()),
+            ("threads".into(), THREADS.to_string()),
+            ("requests".into(), requests.to_string()),
+            ("quick".into(), quick.to_string()),
+            ("batched_speedup".into(), format!("{:.2}", c32 / c1.max(1e-9))),
+            ("compressed_vs_dense".into(), format!("{:.2}", c32 / d32.max(1e-9))),
+        ],
+    });
+    write_bench_json("BENCH_serve.json", &records);
+    println!("\nwrote BENCH_serve.json ({} records)", records.len());
+}

@@ -74,6 +74,7 @@ pub mod metrics;
 pub mod models;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod testing;
 pub mod util;

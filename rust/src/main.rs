@@ -36,7 +36,8 @@ use lc::util::log::{set_level, Level};
 
 const VALUE_OPTS: &[&str] = &[
     "model", "epochs", "out", "out-compressed", "checkpoint", "config", "artifacts", "seed",
-    "n-train", "n-test", "lr0", "threads", "backend", "numerics",
+    "n-train", "n-test", "lr0", "threads", "backend", "numerics", "eval-batch", "qps", "requests",
+    "max-batch", "max-delay-us", "swap-checkpoint",
 ];
 
 fn main() {
@@ -59,6 +60,7 @@ fn main() {
         Some("eval") => cmd_eval(&args),
         Some("compress") => cmd_compress(&args),
         Some("infer") => cmd_infer(&args),
+        Some("serve") => cmd_serve(&args),
         Some(other) => {
             eprintln!("unknown command {other:?}");
             usage();
@@ -83,7 +85,9 @@ fn usage() {
          train    --model NAME [--epochs N] [--seed S] --out FILE.lcck\n  \
          eval     --checkpoint FILE.lcck [--n-test N]\n  \
          compress --config EXP.lcc [--checkpoint REF.lcck] [--out-compressed FILE.lccz]\n  \
-         infer    --checkpoint FILE.lccz|FILE.lcck [--n-test N] [--no-compare]\n\
+         infer    --checkpoint FILE.lccz|FILE.lcck [--n-test N] [--no-compare] [--eval-batch N]\n  \
+         serve    --checkpoint FILE.lccz [--requests N] [--qps Q] [--max-batch N]\n           \
+         [--max-delay-us US] [--eval-batch N] [--swap-checkpoint FILE.lccz] [--bench]\n\
          common options: --artifacts DIR (default ./artifacts),\n                 \
          --backend auto|native|pjrt (default auto),\n                 \
          --numerics exact|fast (GEMM numerics; default exact), --quiet, --verbose"
@@ -348,20 +352,11 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
     apply_numerics(args, None)?;
 
-    let path = Path::new(ckpt);
-    let magic = {
-        let mut f = std::fs::File::open(path).with_context(|| format!("opening {ckpt}"))?;
-        let mut m = [0u8; 4];
-        std::io::Read::read_exact(&mut f, &mut m)?;
-        m
+    let ck = load_any_checkpoint(Path::new(ckpt))?;
+    let eval_batch = match args.get("eval-batch") {
+        Some(_) => args.get_parse("eval-batch", 512).map_err(anyhow::Error::msg)?,
+        None => lookup(&ck.name).map(|s| s.eval_batch).unwrap_or(512),
     };
-    let ck = if &magic == checkpoint::MAGIC_COMPRESSED {
-        checkpoint::load_compressed(path)?
-    } else {
-        lc::info!("{ckpt} is a dense checkpoint; layers execute dense (or auto-CSR)");
-        CompressedCheckpoint::from_dense_state(&checkpoint::load(path)?)
-    };
-    let eval_batch = lookup(&ck.name).map(|s| s.eval_batch).unwrap_or(512);
     let model = ck.to_model(eval_batch)?;
     let eval = EvalDriver::native_for_model(&model, threads);
     let (_, test_data) = load_data(0, n_test, 1, threads);
@@ -393,8 +388,8 @@ fn cmd_infer(args: &Args) -> Result<()> {
     );
 
     if !args.has("no-compare") {
-        // dense path, decompress included (that is the path being replaced)
-        let t1 = std::time::Instant::now();
+        // build the dense comparison model up front: the timed region below
+        // covers only evaluation, not decompression or model assembly
         let weights = ck.to_dense_weights()?;
         let biases = ck.biases.clone();
         let spec = model.spec();
@@ -402,10 +397,6 @@ fn cmd_infer(args: &Args) -> Result<()> {
             weights.iter().map(|w| Matrix::zeros(w.rows, w.cols)).collect();
         let b_momenta: Vec<Vec<f32>> = biases.iter().map(|b| vec![0.0; b.len()]).collect();
         let state = ParamState::from_parts(spec, weights, biases, w_momenta, b_momenta);
-        let rd = eval.eval(&state, &test_data)?;
-        let dense_secs = t1.elapsed().as_secs_f64();
-        let loss_rel = (rc.mean_loss - rd.mean_loss).abs() / rd.mean_loss.abs().max(1.0);
-
         // elementwise logits gate on one batch: aggregate means can hide
         // per-example divergences that cancel
         let dense_model = lc::infer::CompressedModel {
@@ -420,6 +411,11 @@ fn cmd_infer(args: &Args) -> Result<()> {
                 .collect(),
             biases: state.biases.clone(),
         };
+
+        let t1 = std::time::Instant::now();
+        let rd = eval.eval(&state, &test_data)?;
+        let dense_secs = t1.elapsed().as_secs_f64();
+        let loss_rel = (rc.mean_loss - rd.mean_loss).abs() / rd.mean_loss.abs().max(1.0);
         let bsz = test_data.len().min(model.eval_batch);
         let (mut xb, mut yb) = (Vec::new(), Vec::new());
         test_data.gather(&(0..bsz).collect::<Vec<_>>(), &mut xb, &mut yb);
@@ -452,5 +448,128 @@ fn cmd_infer(args: &Args) -> Result<()> {
             bail!("compressed/dense outputs diverge: loss rel-diff {loss_rel:.3e} > 1e-5");
         }
     }
+    Ok(())
+}
+
+/// Load either checkpoint flavor: LCCZ directly, dense LCCK wrapped
+/// layerwise (each layer executes dense or auto-CSR).
+fn load_any_checkpoint(path: &Path) -> Result<CompressedCheckpoint> {
+    let magic = {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut m = [0u8; 4];
+        std::io::Read::read_exact(&mut f, &mut m)?;
+        m
+    };
+    if &magic == checkpoint::MAGIC_COMPRESSED {
+        checkpoint::load_compressed(path)
+    } else {
+        lc::info!(
+            "{} is a dense checkpoint; layers execute dense (or auto-CSR)",
+            path.display()
+        );
+        Ok(CompressedCheckpoint::from_dense_state(&checkpoint::load(path)?))
+    }
+}
+
+/// Force every layer of `ck` to the dense kernel (planner bypassed): the
+/// decompress-then-GEMM baseline the serving bench compares against.
+fn forced_dense_model(
+    ck: &CompressedCheckpoint,
+    eval_batch: usize,
+) -> Result<lc::infer::CompressedModel> {
+    let template = ck.to_model(eval_batch)?;
+    Ok(lc::infer::CompressedModel {
+        name: template.name.clone(),
+        ops: template.ops.clone(),
+        widths: template.widths.clone(),
+        eval_batch,
+        layers: ck
+            .to_dense_weights()?
+            .into_iter()
+            .map(lc::infer::CompressedLayer::Dense)
+            .collect(),
+        biases: ck.biases.clone(),
+    })
+}
+
+/// Serve a compressed checkpoint through the batching engine — or, with
+/// `--bench`, run the dense-vs-compressed QPS/latency sweep and write
+/// BENCH_serve.json.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use lc::serve::loadgen::{bench_sweep, run_load, LoadSpec, SweepOpts};
+    use lc::serve::{BatchPolicy, ModelRegistry, ServeEngine};
+
+    let ckpt = args.get("checkpoint").context("--checkpoint required")?;
+    let threads: usize = args.get_parse("threads", 4).map_err(anyhow::Error::msg)?;
+    let n_test: usize = args.get_parse("n-test", 2048).map_err(anyhow::Error::msg)?;
+    let requests: usize = args.get_parse("requests", 1024).map_err(anyhow::Error::msg)?;
+    let qps: f64 = args.get_parse("qps", 0.0f64).map_err(anyhow::Error::msg)?;
+    let max_batch: usize = args.get_parse("max-batch", 32).map_err(anyhow::Error::msg)?;
+    let max_delay_us: u64 =
+        args.get_parse("max-delay-us", 1000u64).map_err(anyhow::Error::msg)?;
+    let eval_batch: Option<usize> = match args.get("eval-batch") {
+        Some(_) => Some(args.get_parse("eval-batch", 512).map_err(anyhow::Error::msg)?),
+        None => None,
+    };
+    apply_numerics(args, None)?;
+
+    if args.has("bench") {
+        let ck = load_any_checkpoint(Path::new(ckpt))?;
+        let eb = eval_batch
+            .unwrap_or_else(|| lookup(&ck.name).map(|s| s.eval_batch).unwrap_or(512));
+        let compressed = ck.to_model(eb)?;
+        let dense = forced_dense_model(&ck, eb)?;
+        println!("serve bench over {}: dense vs compressed at max_batch 1/8/32", ck.name);
+        println!("{}", gemm_banner());
+        let opts = SweepOpts {
+            requests,
+            qps,
+            batches: vec![1, 8, 32],
+            max_delay_us,
+            threads,
+            eval_batch: eb,
+            n_pool: n_test.max(1),
+            seed: 1,
+        };
+        let (records, summary) =
+            bench_sweep(&[("dense", dense), ("compressed", compressed)], &opts)?;
+        for (label, batch, q) in &summary.qps {
+            println!("  {label:>10} max_batch {batch:>2}: {q:.0} qps");
+        }
+        println!("  hot-swap: {}", summary.swap.render());
+        lc::bench::write_bench_json("BENCH_serve.json", &records);
+        println!("wrote BENCH_serve.json ({} records)", records.len());
+        return Ok(());
+    }
+
+    let registry = ModelRegistry::new(threads).with_eval_batch(eval_batch);
+    let slot = registry.publish_file(Path::new(ckpt))?;
+    {
+        let session = slot.session();
+        println!(
+            "serving {} gen {} from {} ({} checkpoint, eval_batch {})",
+            session.name(),
+            session.generation(),
+            session.source(),
+            if session.is_mapped() { "mmap'd" } else { "buffered" },
+            session.eval_batch()
+        );
+    }
+    println!("{}", gemm_banner());
+    let engine = ServeEngine::start(slot, BatchPolicy { max_batch, max_delay_us })?;
+    let (_, pool) = load_data(0, n_test, 1, threads);
+    let swap: Option<PathBuf> = args.get("swap-checkpoint").map(PathBuf::from);
+    let halfway = requests / 2;
+    let report = run_load(&engine, &pool, LoadSpec { n_requests: requests, qps }, |i| {
+        if let Some(p) = swap.as_ref().filter(|_| i == halfway) {
+            match registry.publish_file(p) {
+                Ok(_) => lc::info!("hot-swapped {} in at request {i}", p.display()),
+                Err(e) => eprintln!("hot-swap of {} failed: {e:#}", p.display()),
+            }
+        }
+    })?;
+    println!("{}", report.render());
+    println!("{}", engine.stats().metrics_line());
     Ok(())
 }

@@ -34,6 +34,7 @@ use crate::compress::Theta;
 use crate::infer::{CompressedLayer, CompressedModel};
 use crate::linalg::conv::Conv2dShape;
 use crate::tensor::{Matrix, Workspace};
+use crate::util::mmap::MappedFile;
 
 use super::{lookup, mlp_ops, Activation, LayerOp, ModelSpec, OpKind, ParamState};
 
@@ -44,6 +45,17 @@ pub const MAGIC_COMPRESSED: &[u8; 4] = b"LCCZ";
 const VERSION_COMPRESSED: u32 = 2;
 /// Oldest compressed version still readable (pre-op-graph MLP files).
 const VERSION_COMPRESSED_MLP: u32 = 1;
+
+// The serving registry loads LCCZ files off disk from untrusted paths, so
+// every count read from the wire is bounded *before* it sizes an
+// allocation: a corrupt header must produce an `Err`, never an OOM abort.
+const MAX_NAME_LEN: usize = 1 << 12;
+const MAX_WIDTHS: usize = 1 << 10;
+/// Upper bound on one layer's lowered weight count (268M ≫ vgg-small's
+/// 10.77M) and on a quantized codebook.
+const MAX_LAYER_ELEMS: usize = 1 << 28;
+const MAX_CODEBOOK: usize = 1 << 20;
+const MAX_ADDITIVE_PARTS: usize = 64;
 
 pub fn save(state: &ParamState, path: &Path) -> Result<()> {
     let mut f = std::io::BufWriter::new(
@@ -293,32 +305,47 @@ pub fn save_compressed(ck: &CompressedCheckpoint, path: &Path) -> Result<()> {
 
 /// Load a compressed checkpoint.  The model name is *not* required to be
 /// in the registry — compressed execution handles arbitrary op graphs.
+///
+/// On 64-bit unix the file is memory-mapped and the bit-packed payloads
+/// are parsed straight out of the page cache ([`MappedFile`]); elsewhere
+/// a buffered read feeds the same parser.
 pub fn load_compressed(path: &Path) -> Result<CompressedCheckpoint> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-    );
+    let m = MappedFile::open(path)?;
+    load_compressed_bytes(m.bytes(), &path.display().to_string())
+}
+
+/// Parse a compressed checkpoint from raw bytes (the mmap'd registry
+/// path; `label` names the source in error messages).  Every count is
+/// validated against the op graph before it sizes an allocation, so
+/// corrupt or truncated input returns an error rather than panicking or
+/// aborting on an absurd allocation.
+pub fn load_compressed_bytes(bytes: &[u8], label: &str) -> Result<CompressedCheckpoint> {
+    let mut r: &[u8] = bytes;
+    let f = &mut r;
     let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic).with_context(|| format!("{label}: reading magic"))?;
     if &magic != MAGIC_COMPRESSED {
-        bail!("{}: not a compressed lcc checkpoint", path.display());
+        bail!("{label}: not a compressed lcc checkpoint");
     }
-    let version = read_u32(&mut f)?;
+    let version = read_u32(f)?;
     if !(VERSION_COMPRESSED_MLP..=VERSION_COMPRESSED).contains(&version) {
-        bail!("{}: unsupported compressed-checkpoint version {version}", path.display());
+        bail!("{label}: unsupported compressed-checkpoint version {version}");
     }
-    let name_len = read_u32(&mut f)? as usize;
+    let name_len = read_u32(f)? as usize;
+    ensure!(name_len <= MAX_NAME_LEN, "{label}: model name of {name_len} bytes");
     let mut name = vec![0u8; name_len];
-    f.read_exact(&mut name)?;
+    f.read_exact(&mut name).with_context(|| format!("{label}: reading model name"))?;
     let name = String::from_utf8(name).context("checkpoint model name")?;
-    let n_widths = read_u32(&mut f)? as usize;
-    ensure!(n_widths >= 2, "{}: fewer than two widths", path.display());
+    let n_widths = read_u32(f)? as usize;
+    ensure!(n_widths >= 2, "{label}: fewer than two widths");
+    ensure!(n_widths <= MAX_WIDTHS, "{label}: {n_widths} widths");
     let mut widths = Vec::with_capacity(n_widths);
     for _ in 0..n_widths {
-        widths.push(read_u32(&mut f)? as usize);
+        widths.push(read_u32(f)? as usize);
     }
     let nl = n_widths - 1;
     let ops: Vec<LayerOp> = if version >= 2 {
-        (0..nl).map(|_| read_op(&mut f)).collect::<Result<_>>()?
+        (0..nl).map(|_| read_op(f)).collect::<Result<_>>()?
     } else {
         // version-1 files predate the op graph: classic MLP semantics
         mlp_ops(&widths)
@@ -326,28 +353,30 @@ pub fn load_compressed(path: &Path) -> Result<CompressedCheckpoint> {
     for (l, op) in ops.iter().enumerate() {
         ensure!(
             op.in_elems() == widths[l] && op.out_elems() == widths[l + 1],
-            "{}: op {l} ({}) disagrees with stored widths",
-            path.display(),
+            "{label}: op {l} ({}) disagrees with stored widths",
             op.describe()
         );
+        let (m, n) = op.weight_shape();
+        let elems = m.checked_mul(n).filter(|&e| (1..=MAX_LAYER_ELEMS).contains(&e));
+        ensure!(elems.is_some(), "{label}: op {l} ({}) weight shape out of range", op.describe());
     }
     let mut layers = Vec::with_capacity(nl);
     let mut biases = Vec::with_capacity(nl);
     for op in &ops {
         let mut tag = [0u8; 1];
-        f.read_exact(&mut tag)?;
+        f.read_exact(&mut tag).with_context(|| format!("{label}: reading payload tag"))?;
+        let (m, n) = op.weight_shape();
         let payload = match tag[0] {
             0 => {
-                let (m, n) = op.weight_shape();
                 let mut data = vec![0.0f32; m * n];
-                read_f32s(&mut f, &mut data)?;
+                read_f32s(f, &mut data)?;
                 LayerPayload::Dense(Matrix::from_vec(m, n, data))
             }
-            1 => LayerPayload::Compressed(read_theta(&mut f)?),
-            t => bail!("{}: unknown layer payload tag {t}", path.display()),
+            1 => LayerPayload::Compressed(read_theta(f, m * n)?),
+            t => bail!("{label}: unknown layer payload tag {t}"),
         };
         let mut b = vec![0.0f32; op.bias_len()];
-        read_f32s(&mut f, &mut b)?;
+        read_f32s(f, &mut b)?;
         layers.push(payload);
         biases.push(b);
     }
@@ -535,16 +564,20 @@ fn write_theta<W: Write>(w: &mut W, t: &Theta) -> Result<()> {
     Ok(())
 }
 
-fn read_theta<R: Read>(r: &mut R) -> Result<Theta> {
+/// Deserialize one Θ that must decompress to exactly `expect` weights.
+/// Threading the expected length in (the op graph owns it) bounds every
+/// wire-derived count before the corresponding allocation.
+fn read_theta<R: Read>(r: &mut R, expect: usize) -> Result<Theta> {
     let mut tag = [0u8; 1];
     r.read_exact(&mut tag)?;
     Ok(match tag[0] {
         THETA_QUANTIZED => {
             let k = read_u32(r)? as usize;
-            ensure!(k >= 1, "empty codebook");
+            ensure!((1..=MAX_CODEBOOK).contains(&k), "codebook size {k} out of range");
             let mut codebook = vec![0.0f32; k];
             read_f32s(r, &mut codebook)?;
             let n = read_u64(r)? as usize;
+            ensure!(n == expect, "quantized theta covers {n} weights, layer wants {expect}");
             let assignments = read_packed(r, index_bits(k), n)?;
             for &a in &assignments {
                 ensure!((a as usize) < k, "assignment {a} out of codebook range {k}");
@@ -558,6 +591,7 @@ fn read_theta<R: Read>(r: &mut R) -> Result<Theta> {
             let mut t = [0u8; 1];
             r.read_exact(&mut t)?;
             let n = read_u64(r)? as usize;
+            ensure!(n == expect, "signs theta covers {n} weights, layer wants {expect}");
             let packed = read_packed(r, 2, n)?;
             let mut values = Vec::with_capacity(n);
             for v in packed {
@@ -568,6 +602,7 @@ fn read_theta<R: Read>(r: &mut R) -> Result<Theta> {
         }
         THETA_SPARSE => {
             let len = read_u64(r)? as usize;
+            ensure!(len == expect, "sparse theta covers {len} weights, layer wants {expect}");
             let nnz = read_u64(r)? as usize;
             ensure!(nnz <= len, "sparse theta has more entries than its length");
             let indices = read_packed(r, index_bits(len), nnz)?;
@@ -588,7 +623,12 @@ fn read_theta<R: Read>(r: &mut R) -> Result<Theta> {
         THETA_LOWRANK => {
             let m = read_u32(r)? as usize;
             let n = read_u32(r)? as usize;
+            ensure!(
+                m >= 1 && n >= 1 && m.checked_mul(n) == Some(expect),
+                "low-rank theta is {m}x{n}, layer wants {expect} weights"
+            );
             let rank = read_u32(r)? as usize;
+            ensure!(rank <= m.min(n), "low-rank rank {rank} exceeds min({m},{n})");
             let mut u = Matrix::zeros(m, rank);
             read_f32s(r, &mut u.data)?;
             let mut s = vec![0.0f32; rank];
@@ -599,10 +639,14 @@ fn read_theta<R: Read>(r: &mut R) -> Result<Theta> {
         }
         THETA_ADDITIVE => {
             let k = read_u32(r)? as usize;
-            ensure!(k >= 1, "empty additive theta");
+            ensure!(
+                (1..=MAX_ADDITIVE_PARTS).contains(&k),
+                "additive theta with {k} parts out of range"
+            );
             let mut parts = Vec::with_capacity(k);
             for _ in 0..k {
-                parts.push(read_theta(r)?);
+                // each summand decompresses to the full layer
+                parts.push(read_theta(r, expect)?);
             }
             Theta::Additive(parts)
         }
@@ -813,6 +857,141 @@ mod tests {
         assert_eq!(loaded.biases[0], vec![0.5, 0.5]);
         loaded.to_model(4).unwrap().validate().unwrap();
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// Hand-build a version-1 LCCZ prefix (magic, version, name, widths)
+    /// for robustness tests that append crafted payloads.
+    fn v1_header(widths: &[usize]) -> Vec<u8> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC_COMPRESSED);
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&(2u32).to_le_bytes());
+        buf.extend_from_slice(b"v1");
+        buf.extend_from_slice(&(widths.len() as u32).to_le_bytes());
+        for &w in widths {
+            buf.extend_from_slice(&(w as u32).to_le_bytes());
+        }
+        buf
+    }
+
+    #[test]
+    fn every_truncation_errors_never_panics() {
+        // serialize a checkpoint exercising quantized, additive, and dense
+        // payloads, then feed the parser every strict prefix: each must
+        // return Err (the format has no ignorable trailing section)
+        let mut ck = sample_compressed();
+        ck.ops = mlp_ops(&[4, 3, 2]);
+        ck.layers[1] = LayerPayload::Compressed(Theta::Quantized {
+            codebook: vec![-1.0, 0.5, 2.0],
+            assignments: vec![0, 1, 2, 1, 0, 2],
+        });
+        let dir = std::env::temp_dir().join("lcc_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.lccz");
+        save_compressed(&ck, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert!(load_compressed_bytes(&bytes, "full").is_ok());
+        for cut in 0..bytes.len() {
+            assert!(
+                load_compressed_bytes(&bytes[..cut], "prefix").is_err(),
+                "prefix of {cut}/{} bytes should fail to parse",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let err = load_compressed_bytes(b"LCCQ\x01\x00\x00\x00rest", "m").unwrap_err();
+        assert!(err.to_string().contains("not a compressed"), "{err}");
+        let mut buf = Vec::from(*MAGIC_COMPRESSED);
+        buf.extend_from_slice(&99u32.to_le_bytes());
+        let err = load_compressed_bytes(&buf, "v").unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_codebook_index_rejected() {
+        // widths [4,2]: one layer, expect = 8 weights.  k=3 packs indices
+        // at 2 bits, so the value 3 is encodable but out of range.
+        let mut buf = v1_header(&[4, 2]);
+        buf.push(1u8); // compressed payload
+        buf.push(THETA_QUANTIZED);
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        for c in [0.5f32, -0.5, 1.0] {
+            buf.extend_from_slice(&c.to_le_bytes());
+        }
+        buf.extend_from_slice(&8u64.to_le_bytes());
+        let vals = [0u32, 1, 2, 3, 0, 1, 2, 0]; // one illegal index 3
+        let mut packed: Vec<u8> = Vec::new();
+        write_packed(&mut packed, vals.iter().copied(), 2).unwrap();
+        buf.extend_from_slice(&packed);
+        for _ in 0..2 {
+            buf.extend_from_slice(&0.0f32.to_le_bytes());
+        }
+        let err = load_compressed_bytes(&buf, "oob").unwrap_err();
+        assert!(err.to_string().contains("out of codebook range"), "{err}");
+    }
+
+    #[test]
+    fn absurd_counts_error_instead_of_allocating() {
+        // a codebook claiming 2^30 entries must be rejected before any
+        // 4 GiB allocation happens
+        let mut buf = v1_header(&[4, 2]);
+        buf.push(1u8);
+        buf.push(THETA_QUANTIZED);
+        buf.extend_from_slice(&(1u32 << 30).to_le_bytes());
+        let err = load_compressed_bytes(&buf, "hugek").unwrap_err();
+        assert!(err.to_string().contains("codebook size"), "{err}");
+
+        // a theta length disagreeing with the op graph is rejected before
+        // the assignment buffer is sized from it
+        let mut buf = v1_header(&[4, 2]);
+        buf.push(1u8);
+        buf.push(THETA_QUANTIZED);
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        buf.extend_from_slice(&0.5f32.to_le_bytes());
+        buf.extend_from_slice(&(-0.5f32).to_le_bytes());
+        buf.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        let err = load_compressed_bytes(&buf, "hugen").unwrap_err();
+        assert!(err.to_string().contains("layer wants 8"), "{err}");
+
+        // widths implying an overflowing / absurd dense layer are rejected
+        // before the weight buffer allocation
+        let buf = v1_header(&[u32::MAX as usize, u32::MAX as usize]);
+        let err = load_compressed_bytes(&buf, "hugew").unwrap_err();
+        assert!(err.to_string().contains("weight shape out of range"), "{err}");
+    }
+
+    #[test]
+    fn v1_to_v2_roundtrip_preserves_model() {
+        // load a v1 (pre-op-graph) file, save it back (written as v2 with
+        // op records), reload, and require the same model
+        let widths = [4usize, 3, 2];
+        let mut buf = v1_header(&widths);
+        for l in 0..2 {
+            buf.push(0u8);
+            for i in 0..widths[l] * widths[l + 1] {
+                buf.extend_from_slice(&(i as f32 * 0.25 - 1.0).to_le_bytes());
+            }
+            for _ in 0..widths[l + 1] {
+                buf.extend_from_slice(&0.125f32.to_le_bytes());
+            }
+        }
+        let v1 = load_compressed_bytes(&buf, "v1").unwrap();
+        assert_eq!(v1.ops, mlp_ops(&widths));
+        let dir = std::env::temp_dir().join("lcc_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1v2.lccz");
+        save_compressed(&v1, &path).unwrap();
+        let v2 = load_compressed(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(v2.name, v1.name);
+        assert_eq!(v2.ops, v1.ops);
+        assert_eq!(v2.widths, v1.widths);
+        assert_eq!(v2.biases, v1.biases);
+        assert_eq!(v2.to_dense_weights().unwrap(), v1.to_dense_weights().unwrap());
     }
 
     #[test]

@@ -65,6 +65,21 @@ impl ModelSpec {
         self.ops.len()
     }
 
+    /// Re-derive the activation widths from the op graph — the ops are the
+    /// single source of truth.  Drivers consume this instead of trusting
+    /// the stored `widths` field, so a spec whose cached widths drifted
+    /// from its ops (e.g. a hand-built conv spec) cannot reach execution
+    /// undetected.
+    pub fn derived_widths(&self) -> Vec<usize> {
+        assert!(!self.ops.is_empty(), "model {:?} has no ops", self.name);
+        let mut widths = Vec::with_capacity(self.ops.len() + 1);
+        widths.push(self.ops[0].in_elems());
+        for op in &self.ops {
+            widths.push(op.out_elems());
+        }
+        widths
+    }
+
     /// Shape of layer `l`'s (lowered) weight matrix.
     pub fn layer_shape(&self, l: usize) -> (usize, usize) {
         self.ops[l].weight_shape()

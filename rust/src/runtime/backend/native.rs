@@ -155,8 +155,10 @@ fn bias_and_activation(z: &mut Matrix, bias: &[f32], act: Activation) {
 
 /// Summed per-example CE loss and argmax-correct count over a logits
 /// matrix (first index on ties, matching `jnp.argmax`) — shared by the
-/// dense and compressed eval paths.
-fn ce_and_correct(logits: &Matrix, y: &[i32]) -> (f64, i64) {
+/// dense and compressed eval paths and by the serving session
+/// ([`crate::serve::InferSession`]), which must reproduce this metric
+/// bit-for-bit.
+pub fn ce_and_correct(logits: &Matrix, y: &[i32]) -> (f64, i64) {
     let mut loss_sum = 0.0f64;
     let mut correct = 0i64;
     for (i, &yi) in y.iter().enumerate() {

@@ -38,29 +38,30 @@ pub struct TrainDriver {
 }
 
 impl TrainDriver {
-    pub fn new(rt: &mut Runtime, model: &str) -> Result<TrainDriver> {
-        let backend = rt.handle();
-        let spec = backend.borrow_mut().model_spec(model)?;
-        Ok(TrainDriver {
-            widths: spec.widths.clone(),
+    /// All constructors funnel here: the driver's widths come from
+    /// [`ModelSpec::derived_widths`] (the op graph), never from a cached
+    /// copy that a conv spec could let drift.
+    fn with_backend(backend: BackendHandle, spec: ModelSpec) -> TrainDriver {
+        TrainDriver {
+            widths: spec.derived_widths(),
             batch: spec.batch,
             spec,
             backend,
             ws: RefCell::new(GradWorkspace::new()),
-        })
+        }
+    }
+
+    pub fn new(rt: &mut Runtime, model: &str) -> Result<TrainDriver> {
+        let backend = rt.handle();
+        let spec = backend.borrow_mut().model_spec(model)?;
+        Ok(Self::with_backend(backend, spec))
     }
 
     /// Native-backend driver for an arbitrary (possibly unregistered) model
     /// spec — the native L step is not shape-static, so tests and library
     /// callers can bring their own shapes.
     pub fn native_for_spec(spec: &ModelSpec, threads: usize) -> TrainDriver {
-        TrainDriver {
-            backend: native_handle(threads),
-            widths: spec.widths.clone(),
-            batch: spec.batch,
-            spec: spec.clone(),
-            ws: RefCell::new(GradWorkspace::new()),
-        }
+        Self::with_backend(native_handle(threads), spec.clone())
     }
 
     pub fn n_layers(&self) -> usize {
@@ -147,21 +148,22 @@ pub struct EvalResult {
 }
 
 impl EvalDriver {
+    /// All constructors funnel here (see [`TrainDriver::with_backend`]):
+    /// widths are re-derived from the op graph.
+    fn with_backend(backend: BackendHandle, spec: ModelSpec) -> EvalDriver {
+        EvalDriver { widths: spec.derived_widths(), eval_batch: spec.eval_batch, spec, backend }
+    }
+
     pub fn new(rt: &mut Runtime, model: &str) -> Result<EvalDriver> {
         let backend = rt.handle();
         let spec = backend.borrow_mut().model_spec(model)?;
-        Ok(EvalDriver { widths: spec.widths.clone(), eval_batch: spec.eval_batch, spec, backend })
+        Ok(Self::with_backend(backend, spec))
     }
 
     /// Native-backend driver for an arbitrary spec (see
     /// [`TrainDriver::native_for_spec`]).
     pub fn native_for_spec(spec: &ModelSpec, threads: usize) -> EvalDriver {
-        EvalDriver {
-            backend: native_handle(threads),
-            widths: spec.widths.clone(),
-            eval_batch: spec.eval_batch,
-            spec: spec.clone(),
-        }
+        Self::with_backend(native_handle(threads), spec.clone())
     }
 
     /// Native-backend driver sized for a compressed model (whose name need
@@ -194,59 +196,71 @@ impl EvalDriver {
         })
     }
 
-    /// Shared chunking/padding driver: the last partial chunk is padded
-    /// with copies of example 0 and its contribution subtracted exactly
-    /// (one extra all-example-0 chunk evaluation, cached per call).
+    /// Shared chunking/padding driver (see [`eval_dataset`]).
     fn eval_loop(
         &self,
         data: &Dataset,
-        mut run: impl FnMut(&[f32], &[i32]) -> Result<(f64, i64)>,
+        run: impl FnMut(&[f32], &[i32]) -> Result<(f64, i64)>,
     ) -> Result<EvalResult> {
-        let b = self.eval_batch;
-        let dim = self.widths[0];
-        ensure!(data.dim == dim, "dataset dim {} != model dim {dim}", data.dim);
-        let n = data.len();
-        ensure!(n > 0, "empty dataset");
-
-        let mut total_loss = 0.0f64;
-        let mut total_correct = 0i64;
-        let full_chunks = n / b;
-        let mut x = Vec::with_capacity(b * dim);
-        let mut y: Vec<i32> = Vec::with_capacity(b);
-        // one index buffer reused across every chunk (steady-state eval
-        // loops allocate nothing per chunk)
-        let mut idx: Vec<usize> = Vec::with_capacity(b);
-        for c in 0..full_chunks {
-            idx.clear();
-            idx.extend(c * b..(c + 1) * b);
-            data.gather(&idx, &mut x, &mut y);
-            let (l, k) = run(&x, &y)?;
-            total_loss += l;
-            total_correct += k;
-        }
-        let rem = n - full_chunks * b;
-        if rem > 0 {
-            // padded final chunk
-            idx.clear();
-            idx.extend(full_chunks * b..n);
-            idx.resize(b, 0); // pad with example 0
-            data.gather(&idx, &mut x, &mut y);
-            let (l_pad, k_pad) = run(&x, &y)?;
-            // one pure-example-0 chunk gives the exact per-example values
-            idx.clear();
-            idx.resize(b, 0);
-            data.gather(&idx, &mut x, &mut y);
-            let (l0, k0) = run(&x, &y)?;
-            let pad = (b - rem) as f64;
-            total_loss += l_pad - l0 / b as f64 * pad;
-            total_correct += k_pad - ((k0 as f64 / b as f64) * pad).round() as i64;
-        }
-        Ok(EvalResult {
-            mean_loss: total_loss / n as f64,
-            error: 1.0 - total_correct as f64 / n as f64,
-            n,
-        })
+        eval_dataset(self.widths[0], self.eval_batch, data, run)
     }
+}
+
+/// Chunking/padding driver shared by [`EvalDriver`] and the serving
+/// session ([`crate::serve::InferSession`]): `run` receives full chunks of
+/// `eval_batch` examples and returns (summed loss, correct count); the
+/// last partial chunk is padded with copies of example 0 and its
+/// contribution subtracted exactly (one extra all-example-0 chunk
+/// evaluation per call).
+pub fn eval_dataset(
+    dim: usize,
+    eval_batch: usize,
+    data: &Dataset,
+    mut run: impl FnMut(&[f32], &[i32]) -> Result<(f64, i64)>,
+) -> Result<EvalResult> {
+    let b = eval_batch;
+    ensure!(data.dim == dim, "dataset dim {} != model dim {dim}", data.dim);
+    let n = data.len();
+    ensure!(n > 0, "empty dataset");
+
+    let mut total_loss = 0.0f64;
+    let mut total_correct = 0i64;
+    let full_chunks = n / b;
+    let mut x = Vec::with_capacity(b * dim);
+    let mut y: Vec<i32> = Vec::with_capacity(b);
+    // one index buffer reused across every chunk (steady-state eval
+    // loops allocate nothing per chunk)
+    let mut idx: Vec<usize> = Vec::with_capacity(b);
+    for c in 0..full_chunks {
+        idx.clear();
+        idx.extend(c * b..(c + 1) * b);
+        data.gather(&idx, &mut x, &mut y);
+        let (l, k) = run(&x, &y)?;
+        total_loss += l;
+        total_correct += k;
+    }
+    let rem = n - full_chunks * b;
+    if rem > 0 {
+        // padded final chunk
+        idx.clear();
+        idx.extend(full_chunks * b..n);
+        idx.resize(b, 0); // pad with example 0
+        data.gather(&idx, &mut x, &mut y);
+        let (l_pad, k_pad) = run(&x, &y)?;
+        // one pure-example-0 chunk gives the exact per-example values
+        idx.clear();
+        idx.resize(b, 0);
+        data.gather(&idx, &mut x, &mut y);
+        let (l0, k0) = run(&x, &y)?;
+        let pad = (b - rem) as f64;
+        total_loss += l_pad - l0 / b as f64 * pad;
+        total_correct += k_pad - ((k0 as f64 / b as f64) * pad).round() as i64;
+    }
+    Ok(EvalResult {
+        mean_loss: total_loss / n as f64,
+        error: 1.0 - total_correct as f64 / n as f64,
+        n,
+    })
 }
 
 /// Driver for the quantization E-step kernel: k-means assignment +

@@ -1,0 +1,238 @@
+//! The async request front: coalesce single queries into batched
+//! `predict_batch` calls under a size-or-deadline policy.
+//!
+//! [`ServeEngine::submit`] copies one example into the queue and returns
+//! a [`Pending`] handle immediately.  A collector thread flushes the
+//! queue whenever `max_batch` requests are waiting *or* the oldest
+//! request has waited `max_delay_us` — whichever comes first — grabs the
+//! slot's active session **once per flush** (so a concurrent hot-swap
+//! can never tear a batch across checkpoint generations), assembles the
+//! batch in a recycled staging buffer, and runs one
+//! [`predict_batch`](super::session::InferSession::predict_batch) on the
+//! persistent worker pool.  Every
+//! response carries the generation that computed it, the flushed batch
+//! size, and the enqueue→complete latency.
+//!
+//! Dropping the engine flushes everything still queued before joining
+//! the collector: accepted requests are never dropped.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::stats::{global_stats, ServeStats};
+use crate::serve::registry::ModelSlot;
+
+/// Size-or-deadline batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Flush at the latest this long after the oldest queued request.
+    pub max_delay_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_delay_us: 1_000 }
+    }
+}
+
+/// One answered query.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// The example's logits row.
+    pub logits: Vec<f32>,
+    /// Generation of the checkpoint that computed it.
+    pub generation: u64,
+    /// Enqueue→complete latency.
+    pub latency: Duration,
+    /// Size of the flushed batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// Handle to a submitted request.
+pub struct Pending {
+    rx: mpsc::Receiver<Result<Response, String>>,
+}
+
+impl Pending {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<Response> {
+        match self.rx.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => Err(anyhow!("{e}")),
+            // the engine vanished without answering — cannot happen while
+            // the drop-flush contract holds
+            Err(_) => Err(anyhow!("serve engine dropped the request")),
+        }
+    }
+}
+
+struct Request {
+    x: Vec<f32>,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<Response, String>>,
+}
+
+struct QueueState {
+    pending: VecDeque<Request>,
+    shutdown: bool,
+}
+
+struct Shared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+    stats: ServeStats,
+    dim: usize,
+}
+
+/// The batching request front over one [`ModelSlot`].
+pub struct ServeEngine {
+    shared: Arc<Shared>,
+    policy: BatchPolicy,
+    collector: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServeEngine {
+    /// Start the collector thread over `slot` with `policy`.
+    pub fn start(slot: Arc<ModelSlot>, policy: BatchPolicy) -> Result<ServeEngine> {
+        ensure!(policy.max_batch >= 1, "max_batch must be >= 1");
+        let dim = slot.session().in_dim();
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState { pending: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            stats: ServeStats::new(),
+            dim,
+        });
+        let worker_shared = shared.clone();
+        let collector = std::thread::Builder::new()
+            .name(format!("lcc-serve-{}", slot.name()))
+            .spawn(move || collector_loop(&worker_shared, &slot, policy))
+            .expect("spawning serve collector");
+        Ok(ServeEngine { shared, policy, collector: Some(collector) })
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// This engine's counters (the process-wide aggregate is
+    /// [`global_stats`]).
+    pub fn stats(&self) -> &ServeStats {
+        &self.shared.stats
+    }
+
+    /// Enqueue one example (`x` must be exactly the model's input dim) and
+    /// return immediately; await the answer via [`Pending::wait`].
+    pub fn submit(&self, x: &[f32]) -> Result<Pending> {
+        ensure!(
+            x.len() == self.shared.dim,
+            "query has {} elements, model wants {}",
+            x.len(),
+            self.shared.dim
+        );
+        let (tx, rx) = mpsc::channel();
+        let req = Request { x: x.to_vec(), enqueued: Instant::now(), tx };
+        let depth = {
+            let mut q = self.shared.q.lock().unwrap();
+            ensure!(!q.shutdown, "serve engine is shutting down");
+            q.pending.push_back(req);
+            q.pending.len()
+        };
+        self.shared.stats.record_enqueue(depth);
+        global_stats().record_enqueue(depth);
+        self.shared.cv.notify_one();
+        Ok(Pending { rx })
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.collector.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn collector_loop(shared: &Shared, slot: &Arc<ModelSlot>, policy: BatchPolicy) {
+    let max_delay = Duration::from_micros(policy.max_delay_us);
+    let mut batch: Vec<Request> = Vec::with_capacity(policy.max_batch);
+    loop {
+        {
+            let mut q = shared.q.lock().unwrap();
+            // sleep until work or shutdown
+            while q.pending.is_empty() && !q.shutdown {
+                q = shared.cv.wait(q).unwrap();
+            }
+            if q.pending.is_empty() && q.shutdown {
+                return;
+            }
+            // size-or-deadline: the deadline belongs to the *oldest*
+            // queued request; shutdown flushes immediately
+            let deadline = q.pending.front().unwrap().enqueued + max_delay;
+            while q.pending.len() < policy.max_batch && !q.shutdown {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared.cv.wait_timeout(q, deadline - now).unwrap();
+                q = guard;
+            }
+            let take = q.pending.len().min(policy.max_batch);
+            batch.extend(q.pending.drain(..take));
+        }
+        run_batch(shared, slot, &mut batch);
+    }
+}
+
+/// Flush one batch: exactly one session grab (generation attribution),
+/// one staged input assembly, one `predict_batch`.
+fn run_batch(shared: &Shared, slot: &Arc<ModelSlot>, batch: &mut Vec<Request>) {
+    let b = batch.len();
+    debug_assert!(b >= 1);
+    shared.stats.record_flush(b);
+    global_stats().record_flush(b);
+
+    let session = slot.session();
+    let mut x = session.checkout_scratch();
+    for req in batch.iter() {
+        x.extend_from_slice(&req.x);
+    }
+    let result = session.predict_batch(&x, b);
+    session.checkin_scratch(x);
+
+    match result {
+        Ok(logits) => {
+            let generation = session.generation();
+            for (i, req) in batch.drain(..).enumerate() {
+                let resp = Response {
+                    logits: logits.row(i).to_vec(),
+                    generation,
+                    latency: req.enqueued.elapsed(),
+                    batch_size: b,
+                };
+                // a closed receiver just means the client gave up waiting
+                let _ = req.tx.send(Ok(resp));
+                shared.stats.record_done(true);
+                global_stats().record_done(true);
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for req in batch.drain(..) {
+                let _ = req.tx.send(Err(msg.clone()));
+                shared.stats.record_done(false);
+                global_stats().record_done(false);
+            }
+        }
+    }
+}

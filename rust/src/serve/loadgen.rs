@@ -1,0 +1,289 @@
+//! Open-loop load generation and the serve bench sweep.
+//!
+//! [`run_load`] submits requests at arrival times `tᵢ = i/qps` measured
+//! from the start of the run — *open loop*: arrivals never wait for
+//! completions, so a slow server builds queue depth instead of silently
+//! throttling the offered load (the classic coordinated-omission trap).
+//! Latencies are the engine's enqueue→complete stamps; percentiles are
+//! nearest-rank.
+//!
+//! [`bench_sweep`] is the shared driver behind `lcc serve --bench` and
+//! `benches/serve_bench.rs`: a QPS/latency sweep over named models ×
+//! batch policies plus one hot-swap-under-load phase, emitted as
+//! `BENCH_serve.json` records.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::bench::Record;
+use crate::data::Dataset;
+use crate::infer::CompressedModel;
+
+use super::batcher::{BatchPolicy, Pending, ServeEngine};
+use super::registry::ModelRegistry;
+
+/// Open-loop load shape.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    pub n_requests: usize,
+    /// Offered arrival rate; `0.0` = submit as fast as possible.
+    pub qps: f64,
+}
+
+/// Outcome of one load run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub submitted: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub mean_us: u64,
+    pub max_us: u64,
+    pub wall_secs: f64,
+    /// Completions per wall-clock second.
+    pub qps_sustained: f64,
+    /// Mean flushed-batch size over completed requests.
+    pub mean_batch: f64,
+    /// (generation, responses computed by it), ascending by generation.
+    pub generations: Vec<(u64, usize)>,
+}
+
+impl LoadReport {
+    pub fn render(&self) -> String {
+        let gens: Vec<String> =
+            self.generations.iter().map(|(g, n)| format!("g{g}:{n}")).collect();
+        format!(
+            "{} ok / {} failed of {} in {:.3}s — {:.0} qps, latency p50 {}us p99 {}us \
+             (mean {}us, max {}us), mean batch {:.1}, generations [{}]",
+            self.completed,
+            self.failed,
+            self.submitted,
+            self.wall_secs,
+            self.qps_sustained,
+            self.p50_us,
+            self.p99_us,
+            self.mean_us,
+            self.max_us,
+            self.mean_batch,
+            gens.join(" ")
+        )
+    }
+}
+
+/// Nearest-rank percentile (`p` in [0,100]) of an unsorted sample.
+fn percentile_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Drive `spec.n_requests` queries from `data` (cycled) through `engine`
+/// at the offered rate.  `on_request(i)` runs just before submission `i`
+/// — the bench uses it to trigger a mid-load hot-swap.
+pub fn run_load(
+    engine: &ServeEngine,
+    data: &Dataset,
+    spec: LoadSpec,
+    mut on_request: impl FnMut(usize),
+) -> Result<LoadReport> {
+    ensure!(spec.n_requests >= 1, "load run needs at least one request");
+    ensure!(!data.is_empty(), "load run needs a non-empty input pool");
+    let n_pool = data.len();
+    let start = Instant::now();
+    let mut handles: Vec<Pending> = Vec::with_capacity(spec.n_requests);
+    let mut report = LoadReport { submitted: spec.n_requests, ..Default::default() };
+    for i in 0..spec.n_requests {
+        if spec.qps > 0.0 {
+            let due = start + Duration::from_secs_f64(i as f64 / spec.qps);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        on_request(i);
+        match engine.submit(data.image(i % n_pool)) {
+            Ok(p) => handles.push(p),
+            Err(_) => report.failed += 1,
+        }
+    }
+    let mut lat_us: Vec<u64> = Vec::with_capacity(handles.len());
+    let mut batch_sum = 0u64;
+    let mut gens: Vec<(u64, usize)> = Vec::new();
+    for p in handles {
+        match p.wait() {
+            Ok(r) => {
+                lat_us.push(r.latency.as_micros() as u64);
+                batch_sum += r.batch_size as u64;
+                match gens.iter_mut().find(|(g, _)| *g == r.generation) {
+                    Some((_, n)) => *n += 1,
+                    None => gens.push((r.generation, 1)),
+                }
+            }
+            Err(_) => report.failed += 1,
+        }
+    }
+    report.wall_secs = start.elapsed().as_secs_f64();
+    report.completed = lat_us.len();
+    lat_us.sort_unstable();
+    report.p50_us = percentile_us(&lat_us, 50.0);
+    report.p99_us = percentile_us(&lat_us, 99.0);
+    report.max_us = lat_us.last().copied().unwrap_or(0);
+    if !lat_us.is_empty() {
+        report.mean_us = lat_us.iter().sum::<u64>() / lat_us.len() as u64;
+        report.mean_batch = batch_sum as f64 / lat_us.len() as f64;
+    }
+    report.qps_sustained = report.completed as f64 / report.wall_secs.max(1e-9);
+    gens.sort_unstable_by_key(|&(g, _)| g);
+    report.generations = gens;
+    Ok(report)
+}
+
+/// Sweep configuration for [`bench_sweep`].
+#[derive(Clone, Debug)]
+pub struct SweepOpts {
+    /// Requests per (model, batch) run.
+    pub requests: usize,
+    /// Offered QPS (0 = max rate).
+    pub qps: f64,
+    /// `max_batch` values to sweep.
+    pub batches: Vec<usize>,
+    pub max_delay_us: u64,
+    pub threads: usize,
+    pub eval_batch: usize,
+    /// Input-pool size (synthetic queries are cycled from it).
+    pub n_pool: usize,
+    pub seed: u64,
+}
+
+/// Gate-relevant numbers [`bench_sweep`] extracts from its records.
+#[derive(Clone, Debug, Default)]
+pub struct SweepSummary {
+    /// (model label, max_batch, sustained QPS) per run.
+    pub qps: Vec<(String, usize, f64)>,
+    pub swap: LoadReport,
+}
+
+impl SweepSummary {
+    /// Sustained QPS of one (model, batch) run.
+    pub fn qps_of(&self, label: &str, batch: usize) -> Option<f64> {
+        self.qps.iter().find(|(l, b, _)| l == label && *b == batch).map(|&(_, _, q)| q)
+    }
+}
+
+/// The serve bench: for each named model, run the open-loop load at every
+/// batch policy; then hot-swap the last model under continuous load.
+/// Returns BENCH_serve.json records plus the gate summary.
+pub fn bench_sweep(
+    models: &[(&str, CompressedModel)],
+    opts: &SweepOpts,
+) -> Result<(Vec<Record>, SweepSummary)> {
+    ensure!(!models.is_empty(), "sweep needs at least one model");
+    let dim = models[0].1.widths[0];
+    let (_, pool) = crate::data::synth::train_test(0, opts.n_pool, opts.seed, opts.threads);
+    ensure!(pool.dim == dim, "input pool dim {} != model dim {dim}", pool.dim);
+
+    let mut records = Vec::new();
+    let mut summary = SweepSummary::default();
+    for (label, model) in models {
+        for &batch in &opts.batches {
+            let registry = ModelRegistry::new(opts.threads).with_eval_batch(Some(opts.eval_batch));
+            let slot = registry.publish_model(model.clone(), format!("sweep:{label}"), false)?;
+            let engine = ServeEngine::start(
+                slot,
+                BatchPolicy { max_batch: batch, max_delay_us: opts.max_delay_us },
+            )?;
+            let report = run_load(
+                &engine,
+                &pool,
+                LoadSpec { n_requests: opts.requests, qps: opts.qps },
+                |_| {},
+            )?;
+            ensure!(
+                report.failed == 0 && report.completed == report.submitted,
+                "{label} batch {batch}: {} failed / {} completed of {}",
+                report.failed,
+                report.completed,
+                report.submitted
+            );
+            summary.qps.push((label.to_string(), batch, report.qps_sustained));
+            records.push(Record {
+                bench: "serve_qps".into(),
+                fields: vec![
+                    ("model".into(), model.name.clone()),
+                    ("mode".into(), label.to_string()),
+                    ("max_batch".into(), batch.to_string()),
+                    ("max_delay_us".into(), opts.max_delay_us.to_string()),
+                    ("requests".into(), report.submitted.to_string()),
+                    ("completed".into(), report.completed.to_string()),
+                    ("failed".into(), report.failed.to_string()),
+                    ("p50_us".into(), report.p50_us.to_string()),
+                    ("p99_us".into(), report.p99_us.to_string()),
+                    ("mean_us".into(), report.mean_us.to_string()),
+                    ("max_us".into(), report.max_us.to_string()),
+                    ("mean_batch".into(), format!("{:.2}", report.mean_batch)),
+                    ("qps_sustained".into(), format!("{:.1}", report.qps_sustained)),
+                ],
+            });
+        }
+    }
+
+    // hot-swap under continuous load: republish the last model halfway
+    // through; zero requests may fail and every response must come from
+    // exactly one of the two generations
+    let (label, model) = models.last().unwrap();
+    let max_batch = opts.batches.iter().copied().max().unwrap_or(32);
+    let registry = ModelRegistry::new(opts.threads).with_eval_batch(Some(opts.eval_batch));
+    let slot = registry.publish_model(model.clone(), format!("swap:{label}:a"), false)?;
+    let engine =
+        ServeEngine::start(slot, BatchPolicy { max_batch, max_delay_us: opts.max_delay_us })?;
+    let halfway = opts.requests / 2;
+    let mut swapped = false;
+    let swap_report = run_load(
+        &engine,
+        &pool,
+        LoadSpec { n_requests: opts.requests, qps: opts.qps },
+        |i| {
+            if i == halfway && !swapped {
+                swapped = true;
+                registry
+                    .publish_model(model.clone(), format!("swap:{label}:b"), false)
+                    .expect("mid-load publish");
+            }
+        },
+    )?;
+    records.push(Record {
+        bench: "serve_hot_swap".into(),
+        fields: vec![
+            ("model".into(), model.name.clone()),
+            ("mode".into(), label.to_string()),
+            ("max_batch".into(), max_batch.to_string()),
+            ("requests".into(), swap_report.submitted.to_string()),
+            ("completed".into(), swap_report.completed.to_string()),
+            ("failed".into(), swap_report.failed.to_string()),
+            ("generations".into(), swap_report.generations.len().to_string()),
+            ("p99_us".into(), swap_report.p99_us.to_string()),
+            ("qps_sustained".into(), format!("{:.1}", swap_report.qps_sustained)),
+        ],
+    });
+    summary.swap = swap_report;
+    Ok((records, summary))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_percentiles() {
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&s, 50.0), 50);
+        assert_eq!(percentile_us(&s, 99.0), 99);
+        assert_eq!(percentile_us(&s, 100.0), 100);
+        assert_eq!(percentile_us(&[7], 50.0), 7);
+        assert_eq!(percentile_us(&[], 99.0), 0);
+    }
+}

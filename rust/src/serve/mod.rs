@@ -1,0 +1,42 @@
+//! Compressed-model serving engine: LCCZ checkpoints under sustained
+//! traffic.
+//!
+//! The training side of the framework ends at a checkpoint; this module
+//! is the path from that checkpoint to answered queries:
+//!
+//! * [`InferSession`] — the reusable inference core extracted from
+//!   `EvalDriver`: one immutable [`crate::infer::CompressedModel`] plus
+//!   its execution plan and a persistent staging workspace, exposing a
+//!   reentrant [`InferSession::predict_batch`] whose logits are
+//!   bit-identical to the `eval_compressed` path.
+//! * [`ModelRegistry`] / [`ModelSlot`] — named slots holding the active
+//!   `Arc<InferSession>`.  Checkpoints load through the mmap-backed
+//!   parser ([`crate::util::mmap::MappedFile`] →
+//!   [`crate::models::checkpoint::load_compressed_bytes`]), and
+//!   publishing a new checkpoint is a zero-downtime hot-swap: the slot's
+//!   `Arc` is swapped atomically while in-flight batches finish on the
+//!   session they started with, so every response is attributable to
+//!   exactly one checkpoint generation.
+//! * [`ServeEngine`] — the async request front: single queries coalesce
+//!   under a size-or-deadline policy (flush at `max_batch` requests or
+//!   `max_delay_us` after the oldest enqueue, whichever first) into one
+//!   `predict_batch` on the persistent worker pool; per-request latency
+//!   is stamped enqueue→complete.
+//! * [`loadgen`] — the open-loop load generator behind `lcc serve
+//!   --bench` and `benches/serve_bench.rs` (BENCH_serve.json: p50/p99
+//!   latency and sustained QPS, dense vs compressed, per batch size).
+//! * [`ServeStats`] — atomic serving counters (active generation,
+//!   in-flight, batch-size histogram, queue-depth high-water) per engine
+//!   and mirrored process-wide for the CLI banner, following the
+//!   `pack_grow_events_total` pattern.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod registry;
+pub mod session;
+pub mod stats;
+
+pub use batcher::{BatchPolicy, Pending, Response, ServeEngine};
+pub use registry::{ModelRegistry, ModelSlot};
+pub use session::InferSession;
+pub use stats::{global_stats, ServeStats};

@@ -1,0 +1,187 @@
+//! Model registry: named slots of hot-swappable [`InferSession`]s.
+//!
+//! A slot holds the active session behind `RwLock<Arc<...>>`.  Readers
+//! ([`ModelSlot::session`]) clone the `Arc` under the read lock — a few
+//! nanoseconds, never blocking on inference — and keep serving on that
+//! clone for the whole batch; publishing swaps the `Arc` under the write
+//! lock.  That is the zero-downtime hot-swap contract: no request ever
+//! observes a half-installed model (the `Arc` swap is atomic behind the
+//! lock), in-flight batches finish on the session they started with, and
+//! each response carries the generation of exactly the session that
+//! computed it.
+//!
+//! Checkpoints load through [`MappedFile`]: on 64-bit unix the LCCZ bytes
+//! are parsed straight out of the page cache
+//! ([`load_compressed_bytes`]), with a buffered read everywhere else.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{Context, Result};
+
+use crate::infer::CompressedModel;
+use crate::models::checkpoint::load_compressed_bytes;
+use crate::models::lookup;
+use crate::util::mmap::MappedFile;
+
+use super::session::InferSession;
+use super::stats::global_stats;
+
+/// Fallback eval-batch for checkpoints whose model name is not in the
+/// registry (matches `lcc infer`).
+const DEFAULT_EVAL_BATCH: usize = 512;
+
+/// One named slot holding the active session.
+pub struct ModelSlot {
+    name: String,
+    active: RwLock<Arc<InferSession>>,
+}
+
+impl ModelSlot {
+    /// The active session.  Cheap (`Arc` clone under a read lock); callers
+    /// hold the returned `Arc` for the duration of one batch so a
+    /// concurrent publish never tears a batch across generations.
+    pub fn session(&self) -> Arc<InferSession> {
+        self.active.read().unwrap().clone()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn publish(&self, s: Arc<InferSession>) {
+        *self.active.write().unwrap() = s;
+    }
+}
+
+/// A set of [`ModelSlot`]s keyed by model name, handing out monotonically
+/// increasing generation stamps.
+pub struct ModelRegistry {
+    threads: usize,
+    /// Overrides the checkpoint's registry/default eval batch when set.
+    eval_batch: Option<usize>,
+    next_gen: AtomicU64,
+    slots: Mutex<Vec<Arc<ModelSlot>>>,
+}
+
+impl ModelRegistry {
+    pub fn new(threads: usize) -> ModelRegistry {
+        ModelRegistry {
+            threads,
+            eval_batch: None,
+            next_gen: AtomicU64::new(0),
+            slots: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Override the eval batch every published session is built with.
+    pub fn with_eval_batch(mut self, eval_batch: Option<usize>) -> ModelRegistry {
+        self.eval_batch = eval_batch;
+        self
+    }
+
+    /// Load an LCCZ checkpoint (mmap'd where possible) and publish it into
+    /// its model's slot, creating the slot on first publish and
+    /// hot-swapping otherwise.
+    pub fn publish_file(&self, path: &Path) -> Result<Arc<ModelSlot>> {
+        let label = path.display().to_string();
+        let mapped = MappedFile::open(path)?;
+        let ck = load_compressed_bytes(mapped.bytes(), &label)
+            .with_context(|| format!("loading {label}"))?;
+        let eval_batch = self
+            .eval_batch
+            .or_else(|| lookup(&ck.name).ok().map(|s| s.eval_batch))
+            .unwrap_or(DEFAULT_EVAL_BATCH);
+        let model = ck.to_model(eval_batch)?;
+        self.publish_model(model, label, mapped.is_mapped())
+    }
+
+    /// Publish an already-built model (the in-process path: an LC run
+    /// handing its outcome straight to serving).
+    pub fn publish_model(
+        &self,
+        mut model: CompressedModel,
+        source: impl Into<String>,
+        mapped: bool,
+    ) -> Result<Arc<ModelSlot>> {
+        if let Some(b) = self.eval_batch {
+            model.eval_batch = b;
+        }
+        let generation = self.next_gen.fetch_add(1, Ordering::Relaxed) + 1;
+        let name = model.name.clone();
+        let session =
+            Arc::new(InferSession::new(model, self.threads, generation, source, mapped)?);
+        let mut slots = self.slots.lock().unwrap();
+        if let Some(slot) = slots.iter().find(|s| s.name == name) {
+            slot.publish(session);
+            global_stats().record_publish(generation, true);
+            return Ok(slot.clone());
+        }
+        let slot = Arc::new(ModelSlot { name, active: RwLock::new(session) });
+        slots.push(slot.clone());
+        global_stats().record_publish(generation, false);
+        Ok(slot)
+    }
+
+    /// The slot for `name`, if any checkpoint was published under it.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelSlot>> {
+        self.slots.lock().unwrap().iter().find(|s| s.name == name).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.slots.lock().unwrap().is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::checkpoint::{save_compressed, CompressedCheckpoint};
+    use crate::models::{lookup, ParamState};
+
+    fn tiny_ck(seed: u64) -> CompressedCheckpoint {
+        let spec = lookup("mlp-small").unwrap();
+        CompressedCheckpoint::from_dense_state(&ParamState::init(&spec, seed))
+    }
+
+    #[test]
+    fn publish_file_mmaps_and_generations_increase() {
+        let dir = std::env::temp_dir().join("lcc_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.lccz");
+        save_compressed(&tiny_ck(1), &path).unwrap();
+
+        let reg = ModelRegistry::new(2).with_eval_batch(Some(8));
+        let slot = reg.publish_file(&path).unwrap();
+        let s1 = slot.session();
+        assert_eq!(s1.generation(), 1);
+        assert_eq!(s1.eval_batch(), 8);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(s1.is_mapped(), "file publishes should be mmap-backed on unix");
+
+        // republish under the same name: hot-swap, new generation, same slot
+        save_compressed(&tiny_ck(2), &path).unwrap();
+        let slot2 = reg.publish_file(&path).unwrap();
+        assert!(Arc::ptr_eq(&slot, &slot2));
+        let s2 = slot.session();
+        assert_eq!(s2.generation(), 2);
+        assert_eq!(reg.len(), 1);
+        // the old session stays fully usable while anyone holds it
+        let x = vec![0.1f32; s1.in_dim()];
+        s1.predict_batch(&x, 1).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn get_finds_slots_by_name() {
+        let reg = ModelRegistry::new(1);
+        let ck = tiny_ck(3);
+        reg.publish_model(ck.to_model(4).unwrap(), "inline", false).unwrap();
+        assert!(reg.get("mlp-small").is_some());
+        assert!(reg.get("absent").is_none());
+    }
+}

@@ -1,0 +1,202 @@
+//! The reusable inference core: one immutable compressed model, its
+//! execution plan, and a persistent staging workspace.
+//!
+//! Extracted from `EvalDriver` (which now shares
+//! [`crate::runtime::trainer::eval_dataset`] with this type): a session
+//! owns everything needed to answer `predict_batch` calls and nothing
+//! about datasets, backends, or training.  Sessions are immutable after
+//! construction and get wrapped in `Arc` by the registry, so any number
+//! of threads — including persistent-pool workers, where nested parallel
+//! dispatch runs inline — can call [`InferSession::predict_batch`]
+//! concurrently.
+
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use crate::data::Dataset;
+use crate::infer::{CompressedModel, ExecKernel};
+use crate::runtime::backend::native::ce_and_correct;
+use crate::runtime::trainer::{eval_dataset, EvalResult};
+use crate::tensor::Matrix;
+
+/// An immutable serving session over one [`CompressedModel`].
+///
+/// The numerics contract: [`InferSession::predict_batch`] calls
+/// `CompressedModel::forward` with the session's thread count exactly as
+/// `Backend::eval_chunk_compressed` does, and the GEMM kernel's `Exact`
+/// mode is bit-identical across thread counts — so serving results are
+/// bit-identical to the `EvalDriver::eval_compressed` path
+/// (`tests/serve_engine.rs` pins this).
+pub struct InferSession {
+    model: CompressedModel,
+    threads: usize,
+    generation: u64,
+    source: String,
+    mapped: bool,
+    /// Recycled batch staging buffers: the request front checks one out
+    /// per flush to assemble its batch, so steady-state serving does not
+    /// allocate a fresh input buffer per batch.
+    scratch: Mutex<Vec<Vec<f32>>>,
+}
+
+impl InferSession {
+    /// Wrap a validated model.  `generation` is the registry's publish
+    /// stamp; `source`/`mapped` describe where the checkpoint came from.
+    pub fn new(
+        model: CompressedModel,
+        threads: usize,
+        generation: u64,
+        source: impl Into<String>,
+        mapped: bool,
+    ) -> Result<InferSession> {
+        model.validate()?;
+        ensure!(threads >= 1, "session needs at least one thread");
+        Ok(InferSession {
+            model,
+            threads,
+            generation,
+            source: source.into(),
+            mapped,
+            scratch: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn model(&self) -> &CompressedModel {
+        &self.model
+    }
+    pub fn name(&self) -> &str {
+        &self.model.name
+    }
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+    /// Where the checkpoint came from (path or a synthetic label).
+    pub fn source(&self) -> &str {
+        &self.source
+    }
+    /// Whether the checkpoint bytes were served from a memory mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.mapped
+    }
+    /// Input dimension of one example.
+    pub fn in_dim(&self) -> usize {
+        self.model.widths[0]
+    }
+    /// Logit count per example.
+    pub fn out_dim(&self) -> usize {
+        *self.model.widths.last().unwrap()
+    }
+    pub fn eval_batch(&self) -> usize {
+        self.model.eval_batch
+    }
+
+    /// Execution-plan rows for reports: (layer description, kernel name,
+    /// executed MACs/example, dense MACs/example).
+    pub fn plan(&self) -> Vec<(String, &'static str, u64, u64)> {
+        self.model
+            .layers
+            .iter()
+            .zip(self.model.ops.iter())
+            .map(|(k, op)| {
+                let spatial = op.spatial() as u64;
+                (
+                    op.describe(),
+                    k.kernel_name(),
+                    k.flops_per_example() * spatial,
+                    (k.in_dim() * k.out_dim()) as u64 * spatial,
+                )
+            })
+            .collect()
+    }
+
+    /// Compute the `b × classes` logits for a batch of `b` examples.
+    /// Reentrant: takes `&self`, runs on the persistent worker pool with
+    /// the session's thread count, and is safe to call from pool workers
+    /// (nested dispatch runs inline).
+    pub fn predict_batch(&self, x: &[f32], b: usize) -> Result<Matrix> {
+        self.model.forward(x, b, self.threads)
+    }
+
+    /// Evaluate loss/error over a whole dataset through the serving
+    /// forward path — chunking, padding, and metrics exactly as
+    /// `EvalDriver::eval_compressed` (shared
+    /// [`eval_dataset`] driver, shared [`ce_and_correct`] metric).
+    pub fn eval(&self, data: &Dataset) -> Result<EvalResult> {
+        let classes = self.out_dim() as i32;
+        eval_dataset(self.in_dim(), self.model.eval_batch, data, |x, y| {
+            for &yi in y {
+                ensure!((0..classes).contains(&yi), "label {yi} out of range [0,{classes})");
+            }
+            let logits = self.predict_batch(x, y.len())?;
+            Ok(ce_and_correct(&logits, y))
+        })
+    }
+
+    /// Check out a staging buffer (cleared, capacity retained from prior
+    /// use).  Pair with [`InferSession::checkin_scratch`].
+    pub fn checkout_scratch(&self) -> Vec<f32> {
+        let mut buf = self.scratch.lock().unwrap().pop().unwrap_or_default();
+        buf.clear();
+        buf
+    }
+
+    /// Return a staging buffer to the pool for reuse.
+    pub fn checkin_scratch(&self, buf: Vec<f32>) {
+        let mut pool = self.scratch.lock().unwrap();
+        // a handful of buffers covers any realistic flush concurrency
+        if pool.len() < 8 {
+            pool.push(buf);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{lookup, ParamState};
+
+    fn tiny_session() -> InferSession {
+        let spec = lookup("mlp-small").unwrap();
+        let state = ParamState::init(&spec, 42);
+        let ck = crate::models::checkpoint::CompressedCheckpoint::from_dense_state(&state);
+        InferSession::new(ck.to_model(16).unwrap(), 2, 1, "test", false).unwrap()
+    }
+
+    #[test]
+    fn predict_batch_shapes_and_reuse() {
+        let s = tiny_session();
+        let x = vec![0.25f32; 3 * s.in_dim()];
+        let z = s.predict_batch(&x, 3).unwrap();
+        assert_eq!((z.rows, z.cols), (3, s.out_dim()));
+        // scratch pool recycles buffers
+        let mut buf = s.checkout_scratch();
+        buf.extend_from_slice(&x);
+        let cap = buf.capacity();
+        s.checkin_scratch(buf);
+        let again = s.checkout_scratch();
+        assert!(again.is_empty());
+        assert_eq!(again.capacity(), cap, "buffer must be recycled, not reallocated");
+    }
+
+    #[test]
+    fn plan_reports_every_layer() {
+        let s = tiny_session();
+        let plan = s.plan();
+        assert_eq!(plan.len(), s.model().n_layers());
+        for (_, kernel, macs, dense) in &plan {
+            assert!(!kernel.is_empty());
+            assert!(macs <= dense);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_batch() {
+        let s = tiny_session();
+        assert!(s.predict_batch(&[0.0; 7], 1).is_err());
+        assert!(s.predict_batch(&[], 0).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Serving metrics: lock-free atomic counters per engine, mirrored into
+//! one process-wide instance for banners.
+//!
+//! Follows the `pack_grow_events_total` pattern from
+//! [`crate::linalg::gemm`]: the hot path only does relaxed atomic
+//! increments; readers assemble a snapshot whenever they want one.  Each
+//! [`crate::serve::ServeEngine`] owns a `ServeStats` (tests assert on it
+//! in isolation) and forwards every update to [`global_stats`], which
+//! `lcc serve` prints as its metrics banner.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Batch-size histogram bucket upper bounds (inclusive); the last bucket
+/// is open-ended.
+pub const BATCH_BUCKETS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// Atomic serving counters.  All updates are `Relaxed`: the numbers are
+/// observability, not synchronization.
+#[derive(Debug)]
+pub struct ServeStats {
+    /// Generation of the most recently published checkpoint.
+    generation: AtomicU64,
+    /// Requests accepted but not yet answered.
+    in_flight: AtomicU64,
+    /// Requests answered successfully.
+    completed: AtomicU64,
+    /// Requests answered with an error.
+    failed: AtomicU64,
+    /// Batches flushed.
+    batches: AtomicU64,
+    /// Flushed-batch size histogram over [`BATCH_BUCKETS`] (+ overflow).
+    batch_hist: [AtomicU64; BATCH_BUCKETS.len() + 1],
+    /// Highest queue depth observed at enqueue time.
+    queue_depth_hw: AtomicU64,
+    /// Hot-swaps (publishes into an already-occupied slot).
+    swaps: AtomicU64,
+}
+
+impl ServeStats {
+    pub const fn new() -> ServeStats {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        ServeStats {
+            generation: Z,
+            in_flight: Z,
+            completed: Z,
+            failed: Z,
+            batches: Z,
+            batch_hist: [Z; BATCH_BUCKETS.len() + 1],
+            queue_depth_hw: Z,
+            swaps: Z,
+        }
+    }
+
+    pub fn record_publish(&self, generation: u64, is_swap: bool) {
+        self.generation.store(generation, Ordering::Relaxed);
+        if is_swap {
+            self.swaps.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One request entered the queue; `depth` is the queue depth including
+    /// it.
+    pub fn record_enqueue(&self, depth: usize) {
+        self.in_flight.fetch_add(1, Ordering::Relaxed);
+        self.queue_depth_hw.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    /// One batch of `size` requests flushed to the session.
+    pub fn record_flush(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let bucket =
+            BATCH_BUCKETS.iter().position(|&ub| size <= ub).unwrap_or(BATCH_BUCKETS.len());
+        self.batch_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request answered (`ok` = no error).
+    pub fn record_done(&self, ok: bool) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(Ordering::Relaxed)
+    }
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+    pub fn queue_depth_hw(&self) -> u64 {
+        self.queue_depth_hw.load(Ordering::Relaxed)
+    }
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+
+    /// Histogram snapshot as (bucket label, count), zero buckets included.
+    pub fn batch_histogram(&self) -> Vec<(String, u64)> {
+        let mut out = Vec::with_capacity(self.batch_hist.len());
+        for (i, c) in self.batch_hist.iter().enumerate() {
+            let label = if i < BATCH_BUCKETS.len() {
+                format!("<={}", BATCH_BUCKETS[i])
+            } else {
+                format!(">{}", BATCH_BUCKETS[BATCH_BUCKETS.len() - 1])
+            };
+            out.push((label, c.load(Ordering::Relaxed)));
+        }
+        out
+    }
+
+    /// One-line metrics banner (the serving analogue of `gemm_banner`).
+    pub fn metrics_line(&self) -> String {
+        let hist: Vec<String> = self
+            .batch_histogram()
+            .into_iter()
+            .filter(|(_, c)| *c > 0)
+            .map(|(l, c)| format!("{l}:{c}"))
+            .collect();
+        format!(
+            "serve gen {} / in-flight {} / done {} ({} failed) / batches {} [{}] / queue-hw {} \
+             / swaps {}",
+            self.generation(),
+            self.in_flight(),
+            self.completed(),
+            self.failed(),
+            self.batches(),
+            hist.join(" "),
+            self.queue_depth_hw(),
+            self.swaps(),
+        )
+    }
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static GLOBAL: ServeStats = ServeStats::new();
+
+/// The process-wide serving counters every engine and registry mirrors
+/// into (the `pack_grow_events_total` of the serving path).  Tests assert
+/// on per-engine stats instead — this aggregate is shared across the
+/// whole test binary.
+pub fn global_stats() -> &'static ServeStats {
+    &GLOBAL
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_counters() {
+        let s = ServeStats::new();
+        s.record_publish(3, false);
+        s.record_publish(4, true);
+        s.record_enqueue(1);
+        s.record_enqueue(7);
+        s.record_enqueue(4);
+        for size in [1, 2, 3, 8, 33, 1000] {
+            s.record_flush(size);
+        }
+        s.record_done(true);
+        s.record_done(true);
+        s.record_done(false);
+        assert_eq!(s.generation(), 4);
+        assert_eq!(s.swaps(), 1);
+        assert_eq!(s.in_flight(), 0);
+        assert_eq!(s.completed(), 2);
+        assert_eq!(s.failed(), 1);
+        assert_eq!(s.batches(), 6);
+        assert_eq!(s.queue_depth_hw(), 7);
+        let hist = s.batch_histogram();
+        assert_eq!(hist[0], ("<=1".to_string(), 1));
+        assert_eq!(hist[1], ("<=2".to_string(), 1));
+        assert_eq!(hist[2], ("<=4".to_string(), 1));
+        assert_eq!(hist[3], ("<=8".to_string(), 1));
+        assert_eq!(hist[6], ("<=64".to_string(), 1));
+        assert_eq!(hist[7], (">64".to_string(), 2));
+        let line = s.metrics_line();
+        assert!(line.contains("gen 4"), "{line}");
+        assert!(line.contains("queue-hw 7"), "{line}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Read-only memory-mapped files with a buffered-read fallback.
+//!
+//! The serving registry loads LCCZ checkpoints through [`MappedFile`]: on
+//! 64-bit unix the file is `mmap(2)`'d `PROT_READ`/`MAP_PRIVATE`, so the
+//! bit-packed theta payloads are parsed straight out of the page cache
+//! with zero copies into process heap; everywhere else (or when the map
+//! syscall fails, e.g. on an empty file or an exotic filesystem) the file
+//! is read into an owned `Vec<u8>` and the same `&[u8]` API is served
+//! from that.  No `libc` crate exists in this offline build — `std`
+//! already links the platform libc on unix, so the two syscall wrappers
+//! are declared directly.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A file exposed as `&[u8]`, memory-mapped when the platform allows it.
+pub struct MappedFile {
+    data: Data,
+}
+
+enum Data {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped {
+        ptr: *mut u8,
+        len: usize,
+    },
+    Owned(Vec<u8>),
+}
+
+// The mapping is PROT_READ and never mutated after construction; sharing
+// the raw pointer across threads is the whole point of the registry.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    //! Minimal raw bindings for the two calls we need (std links libc).
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+}
+
+impl MappedFile {
+    /// Map `path` read-only, falling back to a plain read if mapping is
+    /// unavailable or fails.
+    pub fn open(path: &Path) -> Result<MappedFile> {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            use std::os::unix::io::AsRawFd;
+            let f = std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            let len = f
+                .metadata()
+                .with_context(|| format!("stat {}", path.display()))?
+                .len() as usize;
+            if len > 0 {
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        f.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr != sys::MAP_FAILED {
+                    // the fd can close; the mapping persists until munmap
+                    return Ok(MappedFile { data: Data::Mapped { ptr: ptr as *mut u8, len } });
+                }
+            }
+        }
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Ok(MappedFile { data: Data::Owned(bytes) })
+    }
+
+    /// The file contents.  For mapped files this borrows the page cache.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.data {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Data::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Data::Owned(v) => v,
+        }
+    }
+
+    /// Whether this file is served by a real memory mapping (false on the
+    /// buffered-read fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.data {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Data::Mapped { .. } => true,
+            Data::Owned(_) => false,
+        }
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Data::Mapped { ptr, len } = self.data {
+            unsafe {
+                sys::munmap(ptr as *mut std::ffi::c_void, len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_and_reads_back() {
+        let dir = std::env::temp_dir().join("lcc_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("blob.bin");
+        let payload: Vec<u8> = (0..10_000u32).flat_map(|i| i.to_le_bytes()).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let m = MappedFile::open(&path).unwrap();
+        assert_eq!(m.bytes(), &payload[..]);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(m.is_mapped(), "expected a real mapping on 64-bit unix");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_owned() {
+        let dir = std::env::temp_dir().join("lcc_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let m = MappedFile::open(&path).unwrap();
+        assert!(m.bytes().is_empty());
+        assert!(!m.is_mapped());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(MappedFile::open(Path::new("/nonexistent/lcc_mmap.bin")).is_err());
+    }
+}

@@ -7,5 +7,6 @@
 pub mod cli;
 pub mod config;
 pub mod log;
+pub mod mmap;
 pub mod rng;
 pub mod threadpool;

@@ -220,6 +220,7 @@ fn main() {
                 threads,
                 eval_every: 0,
                 quiet: true,
+                l_mode: lc::lc::LMode::Dense,
             };
             let alg = LcAlgorithm::new(&mut rt, spec.clone(), tasks(), cfg).unwrap();
             let t0 = Instant::now();

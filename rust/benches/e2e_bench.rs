@@ -35,6 +35,7 @@ fn main() {
         threads: 4,
         eval_every: 0,
         quiet: tasks_quiet,
+        l_mode: lc::lc::LMode::Dense,
     };
 
     Bencher::header("end-to-end: one LC step vs one reference epoch (lenet300, 2048 ex)");

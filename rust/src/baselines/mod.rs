@@ -133,6 +133,7 @@ fn project_state(
     for l in 0..nl {
         snap.weights[l].data.copy_from_slice(&deltas[l].data);
     }
+    snap.bump_generation();
     (snap, thetas)
 }
 

@@ -188,6 +188,7 @@ pub fn scaled_quant_config(threads: usize) -> LcConfig {
         threads,
         eval_every: 0,
         quiet: true,
+        l_mode: crate::lc::LMode::Dense,
     }
 }
 
@@ -204,6 +205,7 @@ pub fn scaled_lowrank_config(threads: usize) -> LcConfig {
         threads,
         eval_every: 0,
         quiet: true,
+        l_mode: crate::lc::LMode::Dense,
     }
 }
 

@@ -41,6 +41,8 @@
 //! `lcc infer` serves it from compressed checkpoints
 //! ([`crate::models::checkpoint::save_compressed`]).
 
+pub mod train;
+
 use anyhow::{ensure, Result};
 
 use crate::compress::task::TaskSet;

@@ -1,0 +1,398 @@
+//! Compression-aware training: train *through* the compressed kernels.
+//!
+//! The dense L step fine-tunes `w` under the penalty `μ/2‖w − Δ(Θ)‖² −
+//! ⟨λ, w − Δ(Θ)⟩` and pays full dense FLOPs per epoch even when most
+//! layers are already committed to a sparse/low-rank/quantized Θ.  This
+//! module is the other idiom (NNCF-style compression-aware training, see
+//! PAPERS.md): covered layers whose scheme has a trainable compressed
+//! parameterization skip the decompress→train→compress round trip and run
+//! SGD directly on Θ —
+//!
+//! | Θ variant   | trainable parameters            | train kernel        |
+//! |-------------|---------------------------------|---------------------|
+//! | `Sparse`    | nonzero values, fixed pattern   | CSR fwd/bwd         |
+//! | `LowRank`   | effective factors `a`, `bt`     | two-GEMM chain      |
+//! | `Quantized` | the k codebook centers          | gather + scatter-add|
+//! | `Signs`     | — (discrete)                    | dense fallback      |
+//! | `Additive`  | — (coupled sum)                 | dense fallback      |
+//!
+//! Because such a layer's weights are `Δ(Θ)` *by construction*, the
+//! penalty term is identically zero and the compressed update is plain
+//! (Nesterov) SGD on Θ; uncovered layers and fallback layers keep the
+//! exact dense penalized path, per layer, inside one training step
+//! ([`crate::runtime::backend::Backend::train_step_compressed`]).
+//!
+//! Plan selection mirrors the inference planner
+//! ([`crate::infer::CompressedLayer::from_theta_ws`]): a kernel that would
+//! execute more forward MACs than the dense GEMM (an over-ranked or
+//! rank-0 `LowRank`) falls back to dense training; ties (codebook-gather,
+//! which runs `m·n` MACs) keep the compressed form so the update touches
+//! `k` centers instead of `m·n` weights.
+//!
+//! Like [`crate::models::ParamState`], a [`CompressedTrainState`] carries
+//! a generation stamp drawn from the same global counter, so the
+//! GEMM weight-pack cache can cache packed factor/codebook panels across
+//! microbatch shards and expire them the moment the optimizer writes Θ.
+
+use crate::compress::task::TaskSet;
+use crate::compress::Theta;
+use crate::models::{fresh_generation, ModelSpec, ParamState};
+use crate::tensor::sparse::Csr;
+use crate::tensor::Matrix;
+
+/// Per-layer train-time kernel: the trainable compressed parameters plus
+/// their momentum buffers (fresh per L step, like [`ParamState`] momenta).
+#[derive(Debug)]
+pub enum TrainKernel {
+    /// Dense fallback: the layer trains through `ParamState` weights with
+    /// the standard penalized update (uncovered layers, `Signs`,
+    /// `Additive`, rank-0 / over-ranked `LowRank`).
+    Dense,
+    /// Pruned layer: SGD on the CSR values at a fixed sparsity pattern.
+    Sparse {
+        csr: Csr,
+        /// Momentum per stored value.
+        vm: Vec<f32>,
+    },
+    /// Low-rank layer: SGD on the effective factors of `W = a · bt`
+    /// (`a: m × r` with `diag(S)` folded in, `bt: r × n`).
+    Factored { a: Matrix, bt: Matrix, am: Matrix, btm: Matrix },
+    /// Quantized layer: SGD on the `k` codebook centers at fixed
+    /// assignments.  `w` is the materialized `rows × cols` dense view,
+    /// kept in sync with the codebook so the forward/backward GEMMs run
+    /// through the generation-stamped pack cache.
+    Codebook {
+        codebook: Vec<f32>,
+        assignments: Vec<u32>,
+        /// Momentum per center.
+        cm: Vec<f32>,
+        /// Gradient scratch per center (scatter-accumulate target).
+        cg: Vec<f32>,
+        w: Matrix,
+    },
+}
+
+impl TrainKernel {
+    fn from_theta(part: &Theta, m: usize, n: usize) -> TrainKernel {
+        match part {
+            Theta::Sparse { indices, values, .. } => {
+                let csr = Csr::from_flat_entries(m, n, indices, values);
+                let vm = vec![0.0; csr.nnz()];
+                TrainKernel::Sparse { csr, vm }
+            }
+            Theta::LowRank { u, s, v } => {
+                assert_eq!((u.rows, v.rows), (m, n), "low-rank factor shape mismatch");
+                let keep: Vec<usize> = (0..s.len()).filter(|&j| s[j] != 0.0).collect();
+                let r = keep.len();
+                // never slower than dense: an empty or over-ranked
+                // factorization trains dense (same contract as inference)
+                if r == 0 || r * (m + n) > m * n {
+                    return TrainKernel::Dense;
+                }
+                let mut a = Matrix::zeros(m, r);
+                for i in 0..m {
+                    for (jj, &j) in keep.iter().enumerate() {
+                        a.data[i * r + jj] = u.data[i * u.cols + j] * s[j];
+                    }
+                }
+                let mut bt = Matrix::zeros(r, n);
+                for (jj, &j) in keep.iter().enumerate() {
+                    for c in 0..n {
+                        bt.data[jj * n + c] = v.data[c * v.cols + j];
+                    }
+                }
+                let (am, btm) = (Matrix::zeros(m, r), Matrix::zeros(r, n));
+                TrainKernel::Factored { a, bt, am, btm }
+            }
+            Theta::Quantized { codebook, assignments } => {
+                assert_eq!(assignments.len(), m * n, "assignment count mismatch");
+                let mut w = Matrix::zeros(m, n);
+                for (wi, &a) in w.data.iter_mut().zip(assignments.iter()) {
+                    *wi = codebook[a as usize];
+                }
+                TrainKernel::Codebook {
+                    codebook: codebook.clone(),
+                    assignments: assignments.clone(),
+                    cm: vec![0.0; codebook.len()],
+                    cg: vec![0.0; codebook.len()],
+                    w,
+                }
+            }
+            // discrete signs and coupled additive sums have no smooth
+            // compressed parameterization — dense penalized fallback
+            Theta::Signs { .. } | Theta::Additive(_) => TrainKernel::Dense,
+        }
+    }
+
+    pub fn kernel_name(&self) -> &'static str {
+        match self {
+            TrainKernel::Dense => "dense",
+            TrainKernel::Sparse { .. } => "csr",
+            TrainKernel::Factored { .. } => "factored",
+            TrainKernel::Codebook { .. } => "codebook",
+        }
+    }
+}
+
+/// The Θ-side training state for one model: one [`TrainKernel`] per layer
+/// plus a pack-cache generation stamp (same global counter as
+/// [`ParamState`], so stamps never alias across weight stores).
+#[derive(Debug)]
+pub struct CompressedTrainState {
+    pub kernels: Vec<TrainKernel>,
+    generation: u64,
+}
+
+impl Clone for CompressedTrainState {
+    /// Clones take a fresh generation, like [`ParamState::clone`]: the
+    /// clone is a distinct weight store and must repack.
+    fn clone(&self) -> Self {
+        let kernels = self
+            .kernels
+            .iter()
+            .map(|k| match k {
+                TrainKernel::Dense => TrainKernel::Dense,
+                TrainKernel::Sparse { csr, vm } => {
+                    TrainKernel::Sparse { csr: csr.clone(), vm: vm.clone() }
+                }
+                TrainKernel::Factored { a, bt, am, btm } => TrainKernel::Factored {
+                    a: a.clone(),
+                    bt: bt.clone(),
+                    am: am.clone(),
+                    btm: btm.clone(),
+                },
+                TrainKernel::Codebook { codebook, assignments, cm, cg, w } => {
+                    TrainKernel::Codebook {
+                        codebook: codebook.clone(),
+                        assignments: assignments.clone(),
+                        cm: cm.clone(),
+                        cg: cg.clone(),
+                        w: w.clone(),
+                    }
+                }
+            })
+            .collect();
+        CompressedTrainState { kernels, generation: fresh_generation() }
+    }
+}
+
+impl CompressedTrainState {
+    /// Plan train-time kernels for the current Θs: covered layers get
+    /// their scheme's trainable kernel (or dense fallback per the cost
+    /// rule), uncovered layers are dense.  Momenta start at zero — the LC
+    /// loop plans a fresh state per L step, matching the fresh-optimizer
+    /// semantics of [`ParamState::reset_momenta`].
+    pub fn plan(spec: &ModelSpec, tasks: &TaskSet, thetas: &[&Theta]) -> CompressedTrainState {
+        let nl = spec.n_layers();
+        assert_eq!(thetas.len(), tasks.tasks.len(), "theta/task count mismatch");
+        let mut kernels: Vec<TrainKernel> = (0..nl).map(|_| TrainKernel::Dense).collect();
+        for (t, theta) in tasks.tasks.iter().zip(thetas.iter()) {
+            let lens: Vec<usize> = t
+                .layers
+                .iter()
+                .map(|&l| {
+                    let (m, n) = spec.layer_shape(l);
+                    m * n
+                })
+                .collect();
+            for (&l, part) in t.layers.iter().zip(theta.split(&lens).iter()) {
+                let (m, n) = spec.layer_shape(l);
+                kernels[l] = TrainKernel::from_theta(part, m, n);
+            }
+        }
+        CompressedTrainState { kernels, generation: fresh_generation() }
+    }
+
+    /// Number of layers training through a compressed kernel (the rest
+    /// run the dense penalized path).
+    pub fn n_compressed(&self) -> usize {
+        self.kernels.iter().filter(|k| !matches!(k, TrainKernel::Dense)).count()
+    }
+
+    pub fn kernel_name(&self, l: usize) -> &'static str {
+        self.kernels[l].kernel_name()
+    }
+
+    /// Forward MACs per example the layer's train kernel executes — the
+    /// train-time analogue of
+    /// [`crate::infer::ExecKernel::flops_per_example`] (backward costs
+    /// scale by the same factor).
+    pub fn train_flops_per_example(&self, spec: &ModelSpec, l: usize) -> u64 {
+        let (m, n) = spec.layer_shape(l);
+        match &self.kernels[l] {
+            TrainKernel::Dense => (m * n) as u64,
+            TrainKernel::Sparse { csr, .. } => csr.nnz() as u64,
+            TrainKernel::Factored { a, bt, .. } => (a.rows * a.cols + bt.rows * bt.cols) as u64,
+            TrainKernel::Codebook { .. } => (m * n) as u64,
+        }
+    }
+
+    /// The pack-cache invalidation key for panels packed from this state's
+    /// factor/codebook weights (see [`ParamState::generation`]).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Record that Θ-side weights changed: the next pack-cache lookup
+    /// repacks.
+    pub fn bump_generation(&mut self) {
+        self.generation = fresh_generation();
+    }
+
+    /// Re-materialize derived dense views (the codebook `w`) from the
+    /// trainable parameters and expire cached panels.  Call after mutating
+    /// kernel parameters directly (tests, finite-difference probes).
+    pub fn refresh(&mut self) {
+        for k in self.kernels.iter_mut() {
+            if let TrainKernel::Codebook { codebook, assignments, w, .. } = k {
+                for (wi, &a) in w.data.iter_mut().zip(assignments.iter()) {
+                    *wi = codebook[a as usize];
+                }
+            }
+        }
+        self.bump_generation();
+    }
+
+    /// Write every compressed layer's `Δ(Θ)` into `state.weights` (dense
+    /// fallback layers already live there) and bump the state generation —
+    /// called once per L step, after which the ordinary C step and dual
+    /// update run unchanged on exactly-representable weights.
+    pub fn materialize_into(&self, state: &mut ParamState) {
+        assert_eq!(self.kernels.len(), state.weights.len(), "layer count mismatch");
+        let mut touched = false;
+        for (k, w) in self.kernels.iter().zip(state.weights.iter_mut()) {
+            match k {
+                TrainKernel::Dense => {}
+                TrainKernel::Sparse { csr, .. } => {
+                    assert_eq!((w.rows, w.cols), (csr.rows, csr.cols));
+                    w.data.iter_mut().for_each(|v| *v = 0.0);
+                    for r in 0..csr.rows {
+                        for e in csr.row_ptr[r]..csr.row_ptr[r + 1] {
+                            w.data[r * csr.cols + csr.col_idx[e] as usize] = csr.values[e];
+                        }
+                    }
+                    touched = true;
+                }
+                TrainKernel::Factored { a, bt, .. } => {
+                    assert_eq!((w.rows, w.cols), (a.rows, bt.cols));
+                    a.matmul_into(bt, w);
+                    touched = true;
+                }
+                TrainKernel::Codebook { w: cw, .. } => {
+                    assert_eq!((w.rows, w.cols), (cw.rows, cw.cols));
+                    w.data.copy_from_slice(&cw.data);
+                    touched = true;
+                }
+            }
+        }
+        if touched {
+            state.bump_generation();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::quantize::AdaptiveQuant;
+    use crate::compress::task::TaskSpec;
+    use crate::compress::view::View;
+    use crate::models::ModelSpec;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, 0.0, 1.0);
+        m
+    }
+
+    #[test]
+    fn planner_picks_scheme_kernels_and_fallbacks() {
+        let sp = Theta::Sparse { len: 12, indices: vec![0, 5, 7], values: vec![1.0, 2.0, 3.0] };
+        assert_eq!(TrainKernel::from_theta(&sp, 3, 4).kernel_name(), "csr");
+
+        let lr = Theta::LowRank {
+            u: rand_matrix(6, 1, 1),
+            s: vec![2.0],
+            v: rand_matrix(4, 1, 2),
+        };
+        assert_eq!(TrainKernel::from_theta(&lr, 6, 4).kernel_name(), "factored");
+
+        // rank-0 and over-ranked low-rank fall back to dense
+        let dead = Theta::LowRank {
+            u: rand_matrix(6, 1, 3),
+            s: vec![0.0],
+            v: rand_matrix(4, 1, 4),
+        };
+        assert_eq!(TrainKernel::from_theta(&dead, 6, 4).kernel_name(), "dense");
+        let fat = Theta::LowRank {
+            u: rand_matrix(2, 2, 5),
+            s: vec![1.0, 2.0],
+            v: rand_matrix(2, 2, 6),
+        };
+        assert_eq!(TrainKernel::from_theta(&fat, 2, 2).kernel_name(), "dense");
+
+        let q = Theta::Quantized { codebook: vec![0.5, -0.5], assignments: vec![0, 1, 1, 0] };
+        assert_eq!(TrainKernel::from_theta(&q, 2, 2).kernel_name(), "codebook");
+
+        let sg = Theta::Signs { scale: 1.0, values: vec![1, -1, 0, 1], ternary: true };
+        assert_eq!(TrainKernel::from_theta(&sg, 2, 2).kernel_name(), "dense");
+    }
+
+    #[test]
+    fn materialize_writes_delta_theta_and_bumps_generation() {
+        let spec = ModelSpec::mlp("t", &[4, 3, 2], 8, 8);
+        let mut state = ParamState::init(&spec, 7);
+        let tasks = TaskSet::new(vec![TaskSpec {
+            name: "q".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(4)),
+        }]);
+        let view = tasks.tasks[0].gather(&state.weights);
+        let theta =
+            tasks.tasks[0].compression.compress(&view, &crate::compress::CContext::default());
+        let cstate = CompressedTrainState::plan(&spec, &tasks, &[&theta]);
+        assert_eq!(cstate.kernel_name(0), "codebook");
+        assert_eq!(cstate.kernel_name(1), "dense");
+        assert_eq!(cstate.n_compressed(), 1);
+
+        let want = theta.decompress();
+        let g0 = state.generation();
+        cstate.materialize_into(&mut state);
+        assert_ne!(state.generation(), g0, "materialize must expire cached panels");
+        assert_eq!(state.weights[0].data, want);
+    }
+
+    #[test]
+    fn clone_and_refresh_take_fresh_generations() {
+        let spec = ModelSpec::mlp("t", &[4, 3], 8, 8);
+        let tasks = TaskSet::new(vec![TaskSpec {
+            name: "q".into(),
+            layers: vec![0],
+            view: View::Vector,
+            compression: Box::new(AdaptiveQuant::new(2)),
+        }]);
+        let state = ParamState::init(&spec, 9);
+        let view = tasks.tasks[0].gather(&state.weights);
+        let theta =
+            tasks.tasks[0].compression.compress(&view, &crate::compress::CContext::default());
+        let mut cstate = CompressedTrainState::plan(&spec, &tasks, &[&theta]);
+        let clone = cstate.clone();
+        assert_ne!(clone.generation(), cstate.generation());
+
+        // perturb a center, refresh: materialized w follows and gen bumps
+        let g0 = cstate.generation();
+        if let TrainKernel::Codebook { codebook, .. } = &mut cstate.kernels[0] {
+            codebook[0] += 1.0;
+        }
+        cstate.refresh();
+        assert_ne!(cstate.generation(), g0);
+        if let TrainKernel::Codebook { codebook, assignments, w, .. } = &cstate.kernels[0] {
+            for (wi, &a) in w.data.iter().zip(assignments.iter()) {
+                assert_eq!(*wi, codebook[a as usize]);
+            }
+        }
+    }
+}

@@ -24,12 +24,37 @@ use crate::compress::task::TaskSet;
 use crate::compress::Theta;
 use crate::data::stream::{self, StreamConfig};
 use crate::data::{BatchIter, Dataset};
+use crate::infer::train::CompressedTrainState;
 use crate::linalg::gemm;
 use crate::metrics::{account, Compressed};
 use crate::models::{ModelSpec, ParamState};
 use crate::runtime::trainer::{EvalDriver, EvalResult, TrainDriver};
 use crate::tensor::Matrix;
 use crate::util::rng::Xoshiro256;
+
+/// Which execution path the L step's SGD epochs take.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum LMode {
+    /// Dense penalized SGD on `w` for every layer (paper Fig. 2).
+    #[default]
+    Dense,
+    /// Train through the compressed kernels: layers whose Θ has a
+    /// trainable compressed parameterization run SGD directly on Θ (CSR
+    /// values / low-rank factors / codebook centers, see
+    /// [`CompressedTrainState`]); uncovered layers and schemes without
+    /// one fall back to the dense penalized update, per layer.
+    Compressed,
+}
+
+impl LMode {
+    pub fn parse(s: &str) -> Result<LMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "dense" => Ok(LMode::Dense),
+            "compressed" => Ok(LMode::Compressed),
+            other => Err(format!("unknown l_mode {other:?} (expected dense|compressed)")),
+        }
+    }
+}
 
 /// Configuration of one LC run.
 #[derive(Clone, Debug)]
@@ -48,6 +73,8 @@ pub struct LcConfig {
     /// Evaluate train/test error every k LC steps (0 = only at the end).
     pub eval_every: usize,
     pub quiet: bool,
+    /// Dense penalized L step vs training through the compressed kernels.
+    pub l_mode: LMode,
 }
 
 impl Default for LcConfig {
@@ -62,6 +89,7 @@ impl Default for LcConfig {
             threads: 4,
             eval_every: 0,
             quiet: false,
+            l_mode: LMode::Dense,
         }
     }
 }
@@ -139,12 +167,16 @@ impl LcAlgorithm {
     }
 
     /// One epoch of penalized SGD drawn from `source`; returns the mean
-    /// batch loss and the number of batches consumed.
+    /// batch loss and the number of batches consumed.  With a compressed
+    /// train state the steps route through
+    /// [`crate::runtime::trainer::TrainDriver::step_compressed`] (SGD on Θ
+    /// for covered layers, dense penalized updates for the rest).
     #[allow(clippy::too_many_arguments)]
     fn l_epoch(
         &self,
         source: TrainSource<'_>,
         state: &mut ParamState,
+        mut cstate: Option<&mut CompressedTrainState>,
         deltas: &[Matrix],
         lambdas: &[Matrix],
         mu: &[f32],
@@ -159,7 +191,13 @@ impl LcAlgorithm {
             TrainSource::InMemory(data) => {
                 let mut it = BatchIter::new(data, self.train.batch, rng);
                 while it.next_into(x, y) {
-                    sum += self.train.step(state, x, y, deltas, lambdas, mu, lr)? as f64;
+                    let loss = match cstate.as_deref_mut() {
+                        Some(cs) => self
+                            .train
+                            .step_compressed(state, cs, x, y, deltas, lambdas, mu, lr)?,
+                        None => self.train.step(state, x, y, deltas, lambdas, mu, lr)?,
+                    };
+                    sum += loss as f64;
                     count += 1;
                 }
             }
@@ -169,7 +207,13 @@ impl LcAlgorithm {
                     if fail.is_some() {
                         return;
                     }
-                    match self.train.step(state, bx, by, deltas, lambdas, mu, lr) {
+                    let r = match cstate.as_deref_mut() {
+                        Some(cs) => {
+                            self.train.step_compressed(state, cs, bx, by, deltas, lambdas, mu, lr)
+                        }
+                        None => self.train.step(state, bx, by, deltas, lambdas, mu, lr),
+                    };
+                    match r {
                         Ok(loss) => {
                             sum += loss as f64;
                             count += 1;
@@ -229,7 +273,7 @@ impl LcAlgorithm {
         let (mut x, mut y) = (Vec::new(), Vec::new());
         for e in 0..epochs {
             let lr_e = lr.lr_at(e);
-            self.l_epoch(source, state, &zeros, &zeros, &mu, lr_e, &mut rng, &mut x, &mut y)?;
+            self.l_epoch(source, state, None, &zeros, &zeros, &mu, lr_e, &mut rng, &mut x, &mut y)?;
         }
         Ok(())
     }
@@ -342,9 +386,29 @@ impl LcAlgorithm {
                 self.cfg.epochs_per_step
             };
 
-            // L step: fresh optimizer per step (paper Listing 2)
+            // L step: fresh optimizer per step (paper Listing 2).  In
+            // compressed mode the fresh optimizer also covers Θ: `plan`
+            // rebuilds the train kernels (zero momenta) from the Θs the
+            // C step just committed.
             let t_l = Instant::now();
             state.reset_momenta();
+            let mut cstate = if self.cfg.l_mode == LMode::Compressed {
+                let theta_refs: Vec<&Theta> =
+                    thetas.iter().map(|t| t.as_ref().expect("Θ set by init C step")).collect();
+                Some(CompressedTrainState::plan(&self.spec, &self.tasks, &theta_refs))
+            } else {
+                None
+            };
+            if step == 0 && !self.cfg.quiet {
+                if let Some(cs) = &cstate {
+                    let names: Vec<&str> = (0..nl).map(|l| cs.kernel_name(l)).collect();
+                    crate::info!(
+                        "L mode compressed: {}/{nl} layer(s) on compressed kernels [{}]",
+                        cs.n_compressed(),
+                        names.join(", ")
+                    );
+                }
+            }
             for (m, &c) in mu_vec.iter_mut().zip(aux.covered().iter()) {
                 *m = if c { mu as f32 } else { 0.0 };
             }
@@ -355,6 +419,7 @@ impl LcAlgorithm {
                 let (mean, count) = self.l_epoch(
                     source,
                     &mut state,
+                    cstate.as_mut(),
                     &aux.deltas,
                     &aux.lambdas,
                     &mu_vec,
@@ -368,6 +433,11 @@ impl LcAlgorithm {
                     first_epoch_loss = mean;
                 }
                 last_epoch_loss = mean;
+            }
+            // Θ-trained layers land back in `state` as exactly-representable
+            // weights, so the C step / dual update below run unchanged.
+            if let Some(cs) = &cstate {
+                cs.materialize_into(&mut state);
             }
             if epochs > 1 {
                 monitor.check_l_step(step, first_epoch_loss, last_epoch_loss);

@@ -232,6 +232,9 @@ impl AuxState {
             snap.weights[l].data.copy_from_slice(src);
             snap.biases[l].copy_from_slice(&state.biases[l]);
         }
+        // in-place weight rewrite: cached GEMM panels packed from this
+        // snapshot's previous contents must expire
+        snap.bump_generation();
         self.snapshot.as_ref().unwrap()
     }
 

@@ -26,6 +26,7 @@
 //! [runtime]                      # optional
 //! backend = "auto"               # or "native" | "pjrt"
 //! numerics = "exact"             # GEMM numerics: "exact" | "fast"
+//! l_mode = "dense"               # L-step path: "dense" | "compressed"
 //!
 //! [task.<name>]                  # one section per compression task
 //! layers = [0, 1, 2]
@@ -44,7 +45,7 @@ use crate::compress::task::{TaskSet, TaskSpec};
 use crate::compress::view::View;
 use crate::compress::Compression;
 use crate::lc::schedule::{LrSchedule, MuSchedule};
-use crate::lc::LcConfig;
+use crate::lc::{LMode, LcConfig};
 use crate::linalg::gemm::Numerics;
 use crate::models::{lookup, ModelSpec};
 use crate::runtime::BackendChoice;
@@ -67,6 +68,10 @@ pub struct Experiment {
     /// means the key was absent: the `LCC_NUMERICS` env default applies.
     /// The `--numerics` CLI flag overrides both.
     pub numerics: Option<Numerics>,
+    /// L-step execution path (`[runtime] l_mode = "dense"|"compressed"`).
+    /// `None` means the key was absent: the `LCC_L_MODE` env default
+    /// applies.  The `--l-mode` CLI flag overrides both.
+    pub l_mode: Option<LMode>,
 }
 
 impl Experiment {
@@ -107,9 +112,10 @@ impl Experiment {
             threads: lc_sec.usize_or("threads", 4),
             eval_every: lc_sec.usize_or("eval_every", 0),
             quiet: lc_sec.get("quiet").and_then(|v| v.as_bool()).unwrap_or(false),
+            l_mode: LMode::Dense, // resolved later: CLI > config > env
         };
 
-        let (backend, numerics) = match cfg.section("runtime") {
+        let (backend, numerics, l_mode) = match cfg.section("runtime") {
             Some(r) => {
                 let backend = BackendChoice::parse(&r.str_or("backend", "auto"))?;
                 let numerics = match r.get("numerics").and_then(|v| v.as_str()) {
@@ -118,9 +124,13 @@ impl Experiment {
                         format!("unknown numerics {s:?} (expected \"exact\" or \"fast\")")
                     })?),
                 };
-                (backend, numerics)
+                let l_mode = match r.get("l_mode").and_then(|v| v.as_str()) {
+                    None => None,
+                    Some(s) => Some(LMode::parse(s)?),
+                };
+                (backend, numerics, l_mode)
             }
-            None => (BackendChoice::Auto, None),
+            None => (BackendChoice::Auto, None, None),
         };
 
         let mut tasks = Vec::new();
@@ -141,6 +151,7 @@ impl Experiment {
             reference_epochs,
             backend,
             numerics,
+            l_mode,
         })
     }
 }
@@ -269,6 +280,25 @@ k = 2
         assert!(Experiment::from_config(&Config::parse(&bad).unwrap())
             .unwrap_err()
             .contains("unknown numerics"));
+    }
+
+    #[test]
+    fn l_mode_key_parses_and_rejects_unknown() {
+        let exp = Experiment::from_config(&Config::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(exp.l_mode, None, "absent key leaves env/default resolution to the CLI");
+
+        let compressed = format!("{SAMPLE}\n[runtime]\nl_mode = \"compressed\"\n");
+        let exp = Experiment::from_config(&Config::parse(&compressed).unwrap()).unwrap();
+        assert_eq!(exp.l_mode, Some(LMode::Compressed));
+
+        let upper = format!("{SAMPLE}\n[runtime]\nl_mode = \"Dense\"\n");
+        let exp = Experiment::from_config(&Config::parse(&upper).unwrap()).unwrap();
+        assert_eq!(exp.l_mode, Some(LMode::Dense));
+
+        let bad = format!("{SAMPLE}\n[runtime]\nl_mode = \"sparse\"\n");
+        assert!(Experiment::from_config(&Config::parse(&bad).unwrap())
+            .unwrap_err()
+            .contains("unknown l_mode"));
     }
 
     #[test]

@@ -13,6 +13,6 @@ pub mod builder;
 pub mod monitor;
 pub mod schedule;
 
-pub use algorithm::{LcAlgorithm, LcConfig, LcOutcome, StepRecord};
+pub use algorithm::{LMode, LcAlgorithm, LcConfig, LcOutcome, StepRecord};
 pub use aux::AuxState;
 pub use schedule::MuSchedule;

@@ -22,7 +22,7 @@ use anyhow::{bail, Context, Result};
 use lc::data::synth;
 use lc::lc::builder::Experiment;
 use lc::lc::schedule::LrSchedule;
-use lc::lc::LcAlgorithm;
+use lc::lc::{LMode, LcAlgorithm};
 use lc::linalg::gemm;
 use lc::models::checkpoint::CompressedCheckpoint;
 use lc::models::{checkpoint, lookup, ParamState};
@@ -36,8 +36,8 @@ use lc::util::log::{set_level, Level};
 
 const VALUE_OPTS: &[&str] = &[
     "model", "epochs", "out", "out-compressed", "checkpoint", "config", "artifacts", "seed",
-    "n-train", "n-test", "lr0", "threads", "backend", "numerics", "eval-batch", "qps", "requests",
-    "max-batch", "max-delay-us", "swap-checkpoint",
+    "n-train", "n-test", "lr0", "threads", "backend", "numerics", "l-mode", "eval-batch", "qps",
+    "requests", "max-batch", "max-delay-us", "swap-checkpoint",
 ];
 
 fn main() {
@@ -84,7 +84,8 @@ fn usage() {
          info                                     list models, artifacts, compression catalogue\n  \
          train    --model NAME [--epochs N] [--seed S] --out FILE.lcck\n  \
          eval     --checkpoint FILE.lcck [--n-test N]\n  \
-         compress --config EXP.lcc [--checkpoint REF.lcck] [--out-compressed FILE.lccz]\n  \
+         compress --config EXP.lcc [--checkpoint REF.lcck] [--out-compressed FILE.lccz]\n           \
+         [--l-mode dense|compressed] (train the L step through the compressed kernels)\n  \
          infer    --checkpoint FILE.lccz|FILE.lcck [--n-test N] [--no-compare] [--eval-batch N]\n  \
          serve    --checkpoint FILE.lccz [--requests N] [--qps Q] [--max-batch N]\n           \
          [--max-delay-us US] [--eval-batch N] [--swap-checkpoint FILE.lccz] [--bench]\n\
@@ -123,6 +124,21 @@ fn apply_numerics(args: &Args, config_choice: Option<gemm::Numerics>) -> Result<
         }
     }
     Ok(())
+}
+
+/// Resolve the L-step execution path. Priority: `--l-mode` CLI flag >
+/// `[runtime] l_mode` config key > `LCC_L_MODE` env var > dense.
+fn resolve_l_mode(args: &Args, config_choice: Option<LMode>) -> Result<LMode> {
+    if let Some(s) = args.get("l-mode") {
+        return LMode::parse(s).map_err(anyhow::Error::msg);
+    }
+    if let Some(m) = config_choice {
+        return Ok(m);
+    }
+    match std::env::var("LCC_L_MODE") {
+        Ok(s) => LMode::parse(&s).map_err(anyhow::Error::msg),
+        Err(_) => Ok(LMode::Dense),
+    }
 }
 
 /// One-line description of the active GEMM dispatch, for startup banners.
@@ -262,10 +278,16 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_compress(args: &Args) -> Result<()> {
     let cfg_path = args.get("config").context("--config required")?;
     let cfg = Config::load(cfg_path).map_err(anyhow::Error::msg)?;
-    let exp = Experiment::from_config(&cfg).map_err(anyhow::Error::msg)?;
+    let mut exp = Experiment::from_config(&cfg).map_err(anyhow::Error::msg)?;
     apply_numerics(args, exp.numerics)?;
+    exp.lc.l_mode = resolve_l_mode(args, exp.l_mode)?;
     let mut rt = runtime_from_args(args, exp.backend)?;
-    lc::info!("L-step backend: {} ({})", rt.backend_name(), gemm_banner());
+    lc::info!(
+        "L-step backend: {} / l_mode {:?} ({})",
+        rt.backend_name(),
+        exp.lc.l_mode,
+        gemm_banner()
+    );
     let (train_data, test_data) =
         load_data(exp.n_train, exp.n_test, exp.data_seed, exp.lc.threads);
 

@@ -194,6 +194,14 @@ fn next_generation() -> u64 {
     NEXT_GEN.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
 }
 
+/// Draw a fresh generation stamp from the same global counter as
+/// [`ParamState`].  Other weight stores that feed the GEMM pack cache
+/// (e.g. the compressed-training Θ state in [`crate::infer::train`]) use
+/// this so their stamps can never alias a `ParamState` generation.
+pub(crate) fn fresh_generation() -> u64 {
+    next_generation()
+}
+
 /// Host-side parameter state of a model instance: weights, biases, and the
 /// SGD momentum buffers the L step threads through the train artifact.
 ///

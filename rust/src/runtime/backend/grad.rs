@@ -26,6 +26,7 @@
 //! its lifetime and threads it through [`super::Backend::train_step_ws`];
 //! backends that manage their own device buffers (PJRT) simply ignore it.
 
+use crate::infer::train::{CompressedTrainState, TrainKernel};
 use crate::linalg::gemm::PackedPanel;
 use crate::models::{LayerOp, ModelSpec, OpKind};
 use crate::tensor::{Matrix, Workspace};
@@ -60,10 +61,26 @@ pub(crate) struct ShardGrad {
     pub(crate) db: Vec<Vec<f32>>,
     /// Shard-local summed CE (f64 partial; reduced with the gradients).
     pub(crate) ce_sum: f64,
+    /// Compressed-training scratch (sized by [`GradWorkspace::prepare_compressed`],
+    /// empty on the dense path): retained factored mid-activations
+    /// `x · a` per layer (`(rows·spatial) × r` for factored layers, 0×0
+    /// otherwise).
+    pub(crate) hmid: Vec<Matrix>,
+    /// Backward scratch `dmid = dZ · btᵀ` for factored layers, capacity =
+    /// the largest factored mid-activation.
+    pub(crate) dmid: Matrix,
+    /// Per-layer CSR value-gradient shard (`nnz` entries for sparse
+    /// layers, empty otherwise).
+    pub(crate) dvals: Vec<Vec<f32>>,
+    /// Per-layer left/right factor-gradient shards for factored layers
+    /// (`m × r` / `r × n`, empty otherwise).
+    pub(crate) da: Vec<Matrix>,
+    pub(crate) dbt: Vec<Matrix>,
 }
 
 impl ShardGrad {
-    fn recycle(self, pool: &mut Workspace) {
+    fn recycle(mut self, pool: &mut Workspace) {
+        self.recycle_compressed(pool);
         for m in self.acts {
             pool.put(m.data);
         }
@@ -82,6 +99,36 @@ impl ShardGrad {
         }
         for b in self.db {
             pool.put(b);
+        }
+    }
+
+    /// Return just the compressed-training scratch to the arena, leaving
+    /// the dense shard buffers in place (compressed plan changed but the
+    /// batch/op shape did not).
+    fn recycle_compressed(&mut self, pool: &mut Workspace) {
+        for m in self.hmid.drain(..) {
+            if m.data.capacity() > 0 {
+                pool.put(m.data);
+            }
+        }
+        if self.dmid.data.capacity() > 0 {
+            pool.put(std::mem::take(&mut self.dmid.data));
+        }
+        self.dmid = empty_matrix();
+        for v in self.dvals.drain(..) {
+            if v.capacity() > 0 {
+                pool.put(v);
+            }
+        }
+        for m in self.da.drain(..) {
+            if m.data.capacity() > 0 {
+                pool.put(m.data);
+            }
+        }
+        for m in self.dbt.drain(..) {
+            if m.data.capacity() > 0 {
+                pool.put(m.data);
+            }
         }
     }
 }
@@ -115,6 +162,51 @@ impl LayerPacks {
     }
 }
 
+/// Per-layer cached panels for the *compressed* weight store
+/// ([`CompressedTrainState`]): factored layers pack both factors (`n` =
+/// `a`, `n2` = `bt`, `t` = `aᵀ`, `t2` = `btᵀ`), codebook layers pack the
+/// materialized `w` (`n`/`t`); sparse and dense layers leave these empty
+/// (CSR streams its own encoding, dense layers use [`LayerPacks`]).
+/// Stamped with the `CompressedTrainState` generation.
+#[derive(Default)]
+pub(crate) struct CLayerPacks {
+    pub(crate) n: PackedPanel,
+    pub(crate) t: PackedPanel,
+    pub(crate) n2: PackedPanel,
+    pub(crate) t2: PackedPanel,
+}
+
+impl CLayerPacks {
+    fn recycle(self, pool: &mut Workspace) {
+        pool.put(self.n.into_buf());
+        pool.put(self.t.into_buf());
+        pool.put(self.n2.into_buf());
+        pool.put(self.t2.into_buf());
+    }
+}
+
+/// Shape key of one layer's compressed-training scratch: which kernel the
+/// plan chose, and the dimension that sizes its per-shard buffers.
+#[derive(Clone, PartialEq, Debug)]
+pub(crate) enum CKey {
+    Dense,
+    /// CSR with this many stored values.
+    Sparse(usize),
+    /// Factored with this effective rank.
+    Factored(usize),
+    /// Codebook with this many centers.
+    Codebook(usize),
+}
+
+fn ckey_of(k: &TrainKernel) -> CKey {
+    match k {
+        TrainKernel::Dense => CKey::Dense,
+        TrainKernel::Sparse { csr, .. } => CKey::Sparse(csr.nnz()),
+        TrainKernel::Factored { a, .. } => CKey::Factored(a.cols),
+        TrainKernel::Codebook { codebook, .. } => CKey::Codebook(codebook.len()),
+    }
+}
+
 /// Persistent, shard-structured scratch state for the native L step.
 #[derive(Default)]
 pub struct GradWorkspace {
@@ -122,8 +214,14 @@ pub struct GradWorkspace {
     /// Generation-stamped packed weight panels, one pair per layer —
     /// packed once per train step instead of once per shard.
     pub(crate) wpacks: Vec<LayerPacks>,
+    /// Compressed-store panels, one set per layer (empty sets for layers
+    /// training dense).
+    pub(crate) cpacks: Vec<CLayerPacks>,
     /// `(batch, ops)` the shards are currently shaped for.
     shape: Option<(usize, Vec<LayerOp>)>,
+    /// `(batch, per-layer kernel keys)` the compressed scratch is shaped
+    /// for (`None` on the dense path).
+    cshape: Option<(usize, Vec<CKey>)>,
     /// Arena the buffers are recycled through on shape changes.
     pool: Workspace,
 }
@@ -158,6 +256,10 @@ impl GradWorkspace {
         for lp in self.wpacks.drain(..) {
             lp.recycle(pool);
         }
+        for cp in self.cpacks.drain(..) {
+            cp.recycle(pool);
+        }
+        self.cshape = None;
         let nl = spec.n_layers();
         // one pack pair per layer; buffers come back from the arena and
         // are sized lazily by the first `PackedPanel::ensure`
@@ -210,9 +312,91 @@ impl GradWorkspace {
                     .collect(),
                 db: (0..nl).map(|l| pool.take(spec.bias_len(l))).collect(),
                 ce_sum: 0.0,
+                hmid: Vec::new(),
+                dmid: empty_matrix(),
+                dvals: Vec::new(),
+                da: Vec::new(),
+                dbt: Vec::new(),
             });
         }
         self.shape = Some((b, spec.ops.clone()));
+    }
+
+    /// [`GradWorkspace::prepare`] plus the compressed-training scratch for
+    /// the given plan: per-shard factor mid-activations and gradient
+    /// shards keyed by each layer's kernel shape.  No-op — and
+    /// allocation-free — when both the dense shape and the compressed key
+    /// already match.
+    pub(crate) fn prepare_compressed(
+        &mut self,
+        spec: &ModelSpec,
+        b: usize,
+        cstate: &CompressedTrainState,
+    ) {
+        self.prepare(spec, b);
+        let key: Vec<CKey> = cstate.kernels.iter().map(ckey_of).collect();
+        if self.cshape.as_ref().is_some_and(|(pb, pk)| *pb == b && *pk == key) {
+            return;
+        }
+        let pool = &mut self.pool;
+        for sh in self.shards.iter_mut() {
+            sh.recycle_compressed(pool);
+        }
+        for cp in self.cpacks.drain(..) {
+            cp.recycle(pool);
+        }
+        let nl = spec.n_layers();
+        for _ in 0..nl {
+            self.cpacks.push(CLayerPacks {
+                n: PackedPanel::from_buf(pool.take(0)),
+                t: PackedPanel::from_buf(pool.take(0)),
+                n2: PackedPanel::from_buf(pool.take(0)),
+                t2: PackedPanel::from_buf(pool.take(0)),
+            });
+        }
+        for sh in self.shards.iter_mut() {
+            let rows = sh.hi - sh.lo;
+            let mut max_mid = 0usize;
+            for l in 0..nl {
+                let grows = rows * spec.ops[l].spatial();
+                match &key[l] {
+                    CKey::Dense | CKey::Codebook(_) => {
+                        sh.hmid.push(empty_matrix());
+                        sh.dvals.push(Vec::new());
+                        sh.da.push(empty_matrix());
+                        sh.dbt.push(empty_matrix());
+                    }
+                    CKey::Sparse(nnz) => {
+                        sh.hmid.push(empty_matrix());
+                        sh.dvals.push(pool.take(*nnz));
+                        sh.da.push(empty_matrix());
+                        sh.dbt.push(empty_matrix());
+                    }
+                    CKey::Factored(r) => {
+                        let (m, n) = spec.layer_shape(l);
+                        sh.hmid.push(take_matrix(pool, grows, *r));
+                        sh.dvals.push(Vec::new());
+                        sh.da.push(take_matrix(pool, m, *r));
+                        sh.dbt.push(take_matrix(pool, *r, n));
+                        max_mid = max_mid.max(grows * *r);
+                    }
+                }
+            }
+            sh.dmid = if max_mid > 0 {
+                Matrix { rows: 0, cols: 0, data: pool.take(max_mid) }
+            } else {
+                empty_matrix()
+            };
+        }
+        self.cshape = Some((b, key));
+    }
+
+    /// Split borrow for the compressed parallel stage: mutable shards plus
+    /// both shared read-only panel sets.
+    pub(crate) fn shards_and_all_packs(
+        &mut self,
+    ) -> (&mut [ShardGrad], &[LayerPacks], &[CLayerPacks]) {
+        (&mut self.shards, &self.wpacks, &self.cpacks)
     }
 }
 

@@ -24,6 +24,7 @@ use anyhow::Result;
 
 pub use grad::GradWorkspace;
 
+use crate::infer::train::CompressedTrainState;
 use crate::infer::CompressedModel;
 use crate::models::{ModelSpec, ParamState};
 use crate::tensor::Matrix;
@@ -116,6 +117,31 @@ pub trait Backend {
     ) -> Result<f32> {
         let _ = ws;
         self.train_step(spec, state, x, y, deltas, lambdas, mu, lr)
+    }
+
+    /// Compression-aware variant of [`Backend::train_step_ws`]: layers
+    /// with a compressed train kernel ([`CompressedTrainState`]) run SGD
+    /// directly on Θ (no penalty — their weights are `Δ(Θ)` by
+    /// construction), the rest take the standard dense penalized update.
+    /// Updates `cstate` (compressed params) and `state` (dense-fallback
+    /// weights + all biases) in place.  Backends without compressed train
+    /// kernels report unsupported; callers fall back to the dense path.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_compressed(
+        &mut self,
+        spec: &ModelSpec,
+        state: &mut ParamState,
+        cstate: &mut CompressedTrainState,
+        x: &[f32],
+        y: &[i32],
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+        ws: &mut GradWorkspace,
+    ) -> Result<f32> {
+        let _ = (spec, state, cstate, x, y, deltas, lambdas, mu, lr, ws);
+        anyhow::bail!("backend {:?} does not support compressed training", self.name())
     }
 
     /// Sum of per-example CE loss and count of correct predictions over one

@@ -53,11 +53,13 @@
 
 use anyhow::{ensure, Result};
 
-use super::grad::{GradWorkspace, LayerPacks, ShardGrad};
+use super::grad::{CLayerPacks, GradWorkspace, LayerPacks, ShardGrad};
 use super::{Backend, QuantAssignRaw};
+use crate::infer::train::{CompressedTrainState, TrainKernel};
 use crate::linalg::conv;
 use crate::linalg::gemm::{self, AOp, BOp};
 use crate::models::{Activation, ModelSpec, OpKind, ParamState};
+use crate::tensor::kernels::gather_backward_into;
 use crate::tensor::Matrix;
 use crate::util::threadpool::{parallel_map, parallel_map_mut, tree_reduce_mut};
 
@@ -210,7 +212,7 @@ fn shard_forward_backward(
     y: &[i32],
     b: usize,
 ) {
-    let ShardGrad { lo, hi, acts, cols, colgrad, dz, dh, dw, db, ce_sum } = sh;
+    let ShardGrad { lo, hi, acts, cols, colgrad, dz, dh, dw, db, ce_sum, .. } = sh;
     let (lo, hi) = (*lo, *hi);
     let nl = spec.n_layers();
     let rows = hi - lo;
@@ -306,6 +308,188 @@ fn shard_forward_backward(
             }
             std::mem::swap(dz, dh);
         }
+    }
+}
+
+/// Stage 1+2 of the *compressed* L step for one gradient shard: like
+/// [`shard_forward_backward`], but each layer dispatches on its train
+/// kernel ([`TrainKernel`]) — dense-fallback layers run the ordinary
+/// prepacked GEMMs against `state`/`wpacks`, compressed layers run their
+/// scheme's forward and produce gradients w.r.t. the compressed
+/// parameters (CSR values into `dvals`, factors into `da`/`dbt`, and a
+/// dense `dw` for codebook layers that the update stage scatter-reduces
+/// per center).  All per-shard kernels are serial with fixed accumulation
+/// orders — shards stay the only parallel unit, so compressed training
+/// keeps the bit-identical-across-thread-counts contract.
+#[allow(clippy::too_many_arguments)]
+fn shard_forward_backward_compressed(
+    sh: &mut ShardGrad,
+    spec: &ModelSpec,
+    state: &ParamState,
+    cstate: &CompressedTrainState,
+    wpacks: &[LayerPacks],
+    cpacks: &[CLayerPacks],
+    x: &[f32],
+    y: &[i32],
+    b: usize,
+) {
+    let ShardGrad {
+        lo,
+        hi,
+        acts,
+        cols,
+        colgrad,
+        dz,
+        dh,
+        dw,
+        db,
+        ce_sum,
+        hmid,
+        dmid,
+        dvals,
+        da,
+        dbt,
+    } = sh;
+    let (lo, hi) = (*lo, *hi);
+    let nl = spec.n_layers();
+    let rows = hi - lo;
+    let dim = spec.widths[0];
+
+    // ---- forward (retaining activations, conv columns, factored mids) ---
+    acts[0].reset(rows, dim);
+    acts[0].data.copy_from_slice(&x[lo * dim..hi * dim]);
+    for l in 0..nl {
+        let op = &spec.ops[l];
+        let (prev, rest) = acts.split_at_mut(l + 1);
+        let z = &mut rest[0];
+        let input: &Matrix = match op.kind {
+            OpKind::Dense { .. } => &prev[l],
+            OpKind::Conv2d(cs) => {
+                conv::im2col(&prev[l].data, rows, &cs, &mut cols[l]);
+                &cols[l]
+            }
+        };
+        match &cstate.kernels[l] {
+            TrainKernel::Dense => {
+                gemm::gemm_prepacked(AOp::N(input), &wpacks[l].n, z, 1);
+            }
+            TrainKernel::Codebook { .. } => {
+                gemm::gemm_prepacked(AOp::N(input), &cpacks[l].n, z, 1);
+            }
+            TrainKernel::Sparse { csr, .. } => {
+                csr.left_matmul_into(input, z);
+            }
+            TrainKernel::Factored { .. } => {
+                // z = (input · a) · bt, retaining the mid activation for
+                // the backward factor gradients
+                gemm::gemm_prepacked(AOp::N(input), &cpacks[l].n, &mut hmid[l], 1);
+                gemm::gemm_prepacked(AOp::N(&hmid[l]), &cpacks[l].n2, z, 1);
+            }
+        }
+        bias_and_activation(z, &state.biases[l], op.act);
+        z.reset(rows, op.out_elems());
+    }
+
+    // ---- dZ_L = (softmax(logits) − onehot(y)) / B, CE partial ----------
+    let classes = spec.widths[nl];
+    dz.reset(rows, classes);
+    let mut ce = 0.0f64;
+    for r in 0..rows {
+        let lrow = acts[nl].row(r);
+        let lz = logsumexp_row(lrow);
+        let yi = y[lo + r] as usize;
+        ce += (lz - lrow[yi]) as f64;
+        for (j, (d, &v)) in dz.row_mut(r).iter_mut().zip(lrow.iter()).enumerate() {
+            let p = (v - lz).exp();
+            let one = if yi == j { 1.0 } else { 0.0 };
+            *d = (p - one) / b as f32;
+        }
+    }
+    *ce_sum = ce;
+
+    // ---- local backprop ------------------------------------------------
+    for l in (0..nl).rev() {
+        let op = &spec.ops[l];
+        let (_, wc) = op.weight_shape();
+        dz.reset(rows * op.spatial(), wc);
+        let input: &Matrix = match op.kind {
+            OpKind::Dense { .. } => &acts[l],
+            OpKind::Conv2d(_) => &cols[l],
+        };
+        // parameter gradients per kernel (codebook layers take the dense
+        // dW; the per-center scatter happens once, at update time)
+        match &cstate.kernels[l] {
+            TrainKernel::Dense | TrainKernel::Codebook { .. } => {
+                input.matmul_tn_into(dz, &mut dw[l]);
+            }
+            TrainKernel::Sparse { csr, .. } => {
+                csr.grad_values_into(input, dz, &mut dvals[l]);
+            }
+            TrainKernel::Factored { .. } => {
+                // dbt = hmidᵀ·dZ ; dmid = dZ·btᵀ ; da = inputᵀ·dmid
+                hmid[l].matmul_tn_into(dz, &mut dbt[l]);
+                gemm::gemm_prepacked(AOp::N(dz), &cpacks[l].t2, dmid, 1);
+                input.matmul_tn_into(dmid, &mut da[l]);
+            }
+        }
+        let dbl = &mut db[l];
+        dbl.clear();
+        dbl.resize(wc, 0.0);
+        for r in 0..dz.rows {
+            for (s, &v) in dbl.iter_mut().zip(dz.row(r).iter()) {
+                *s += v;
+            }
+        }
+        if l > 0 {
+            // dH through the layer's kernel, landing in `dh` directly for
+            // dense ops or via colgrad + col2im for conv ops
+            let target: &mut Matrix = match op.kind {
+                OpKind::Dense { .. } => dh,
+                OpKind::Conv2d(_) => colgrad,
+            };
+            match &cstate.kernels[l] {
+                TrainKernel::Dense => {
+                    gemm::gemm_prepacked(AOp::N(dz), &wpacks[l].t, target, 1);
+                }
+                TrainKernel::Codebook { .. } => {
+                    gemm::gemm_prepacked(AOp::N(dz), &cpacks[l].t, target, 1);
+                }
+                TrainKernel::Sparse { csr, .. } => {
+                    csr.matmul_nt_into(dz, target);
+                }
+                TrainKernel::Factored { .. } => {
+                    // dX = dmid · aᵀ (dmid was just computed above)
+                    gemm::gemm_prepacked(AOp::N(dmid), &cpacks[l].t, target, 1);
+                }
+            }
+            if let OpKind::Conv2d(cs) = op.kind {
+                dh.reset(rows, op.in_elems());
+                conv::col2im_into(colgrad, rows, &cs, &mut dh.data);
+            }
+            if spec.ops[l - 1].act == Activation::Relu {
+                for (g, &h) in dh.data.iter_mut().zip(acts[l].data.iter()) {
+                    if h <= 0.0 {
+                        *g = 0.0;
+                    }
+                }
+            }
+            std::mem::swap(dz, dh);
+        }
+    }
+}
+
+/// Plain Nesterov SGD over a flat parameter slice — the compressed-layer
+/// update (no penalty: a compressed layer's weights are `Δ(Θ)` by
+/// construction, so the attachment term is identically zero).  Same
+/// `v ← m·v + g; w ← w − lr·(g + m·v)` convention as
+/// [`fused_layer_update`].
+fn nesterov_vec(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32) {
+    debug_assert_eq!(w.len(), v.len(), "momentum length mismatch");
+    debug_assert_eq!(w.len(), g.len(), "gradient length mismatch");
+    for ((wi, vi), &gi) in w.iter_mut().zip(v.iter_mut()).zip(g.iter()) {
+        let v2 = MOMENTUM * *vi + gi;
+        *wi -= lr * (gi + MOMENTUM * v2);
+        *vi = v2;
     }
 }
 
@@ -550,6 +734,193 @@ impl Backend for NativeBackend {
         };
         // the update wrote new weights: expire the cached panels so the
         // next step's stage 0 repacks (exactly once)
+        state.bump_generation();
+        Ok((ce + penalty) as f32)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_compressed(
+        &mut self,
+        spec: &ModelSpec,
+        state: &mut ParamState,
+        cstate: &mut CompressedTrainState,
+        x: &[f32],
+        y: &[i32],
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+        ws: &mut GradWorkspace,
+    ) -> Result<f32> {
+        let nl = spec.n_layers();
+        ensure!(cstate.kernels.len() == nl, "compressed kernel count mismatch");
+        if cstate.n_compressed() == 0 {
+            // every layer fell back to dense: identical to the dense step
+            return self.train_step_ws(spec, state, x, y, deltas, lambdas, mu, lr, ws);
+        }
+        let b = y.len();
+        ensure!(b > 0, "empty batch");
+        ensure!(
+            deltas.len() == nl && lambdas.len() == nl && mu.len() == nl,
+            "penalty input count mismatch"
+        );
+        ensure!(
+            x.len() == b * spec.widths[0],
+            "x has {} elements for batch {b} x dim {}",
+            x.len(),
+            spec.widths[0]
+        );
+        ensure!(state.weights.len() == nl, "state/spec layer count mismatch");
+        for l in 0..nl {
+            let (rows, cols) = spec.layer_shape(l);
+            ensure!(state.biases[l].len() == cols, "layer {l}: bias length mismatch");
+            ensure!(
+                (state.weights[l].rows, state.weights[l].cols) == (rows, cols),
+                "layer {l}: weight shape mismatch"
+            );
+        }
+        let classes = spec.widths[nl];
+        debug_assert!(
+            y.iter().all(|&yi| (0..classes as i32).contains(&yi)),
+            "label out of range [0,{classes})"
+        );
+
+        let threads = self.threads;
+        ws.prepare_compressed(spec, b, cstate);
+
+        // ---- stage 0: refresh both generation-stamped pack caches ----------
+        // Dense-fallback layers pack `state` weights (ParamState stamp);
+        // factored/codebook layers pack their Θ-side panels (cstate stamp).
+        let gen = state.generation();
+        let cgen = cstate.generation();
+        for l in 0..nl {
+            match &cstate.kernels[l] {
+                TrainKernel::Dense => {
+                    ws.wpacks[l].n.ensure(BOp::N(&state.weights[l]), gen);
+                    if l > 0 {
+                        ws.wpacks[l].t.ensure(BOp::T(&state.weights[l]), gen);
+                    }
+                }
+                TrainKernel::Sparse { .. } => {}
+                TrainKernel::Factored { a, bt, .. } => {
+                    ws.cpacks[l].n.ensure(BOp::N(a), cgen);
+                    ws.cpacks[l].n2.ensure(BOp::N(bt), cgen);
+                    // btᵀ feeds dmid at every layer; aᵀ only produces the
+                    // upstream gradient
+                    ws.cpacks[l].t2.ensure(BOp::T(bt), cgen);
+                    if l > 0 {
+                        ws.cpacks[l].t.ensure(BOp::T(a), cgen);
+                    }
+                }
+                TrainKernel::Codebook { w, .. } => {
+                    ws.cpacks[l].n.ensure(BOp::N(w), cgen);
+                    if l > 0 {
+                        ws.cpacks[l].t.ensure(BOp::T(w), cgen);
+                    }
+                }
+            }
+        }
+
+        // ---- stages 1+2: sharded forward + local backward ------------------
+        let state_ro: &ParamState = state;
+        let cstate_ro: &CompressedTrainState = cstate;
+        let (shards, wpacks, cpacks) = ws.shards_and_all_packs();
+        parallel_map_mut(shards, threads, |_, sh| {
+            shard_forward_backward_compressed(
+                sh, spec, state_ro, cstate_ro, wpacks, cpacks, x, y, b,
+            );
+        });
+
+        // ---- stage 3: deterministic tree reduce of all gradient shards -----
+        tree_reduce_mut(&mut ws.shards, threads, |dst, src| {
+            for (d, s) in dst.dw.iter_mut().zip(src.dw.iter()) {
+                for (a, &v) in d.data.iter_mut().zip(s.data.iter()) {
+                    *a += v;
+                }
+            }
+            for (d, s) in dst.db.iter_mut().zip(src.db.iter()) {
+                for (a, &v) in d.iter_mut().zip(s.iter()) {
+                    *a += v;
+                }
+            }
+            for (d, s) in dst.dvals.iter_mut().zip(src.dvals.iter()) {
+                for (a, &v) in d.iter_mut().zip(s.iter()) {
+                    *a += v;
+                }
+            }
+            for (d, s) in dst.da.iter_mut().zip(src.da.iter()) {
+                for (a, &v) in d.data.iter_mut().zip(s.data.iter()) {
+                    *a += v;
+                }
+            }
+            for (d, s) in dst.dbt.iter_mut().zip(src.dbt.iter()) {
+                for (a, &v) in d.data.iter_mut().zip(s.data.iter()) {
+                    *a += v;
+                }
+            }
+            dst.ce_sum += src.ce_sum;
+        });
+        let shard0 = &ws.shards[0];
+        let ce = shard0.ce_sum / b as f64;
+
+        // ---- stage 4: per-layer updates, serial (compressed params are
+        // small; a fixed layer order keeps the pass trivially deterministic)
+        let mut penalty = 0.0f64;
+        for l in 0..nl {
+            match &mut cstate.kernels[l] {
+                TrainKernel::Dense => {
+                    penalty += fused_layer_update(
+                        &mut state.weights[l],
+                        &mut state.w_momenta[l],
+                        &mut state.biases[l],
+                        &mut state.b_momenta[l],
+                        &shard0.dw[l],
+                        &shard0.db[l],
+                        &deltas[l],
+                        &lambdas[l],
+                        mu[l],
+                        lr,
+                    );
+                }
+                TrainKernel::Sparse { csr, vm } => {
+                    nesterov_vec(&mut csr.values, vm, &shard0.dvals[l], lr);
+                    nesterov_vec(
+                        &mut state.biases[l],
+                        &mut state.b_momenta[l],
+                        &shard0.db[l],
+                        lr,
+                    );
+                }
+                TrainKernel::Factored { a, bt, am, btm } => {
+                    nesterov_vec(&mut a.data, &mut am.data, &shard0.da[l].data, lr);
+                    nesterov_vec(&mut bt.data, &mut btm.data, &shard0.dbt[l].data, lr);
+                    nesterov_vec(
+                        &mut state.biases[l],
+                        &mut state.b_momenta[l],
+                        &shard0.db[l],
+                        lr,
+                    );
+                }
+                TrainKernel::Codebook { codebook, assignments, cm, cg, w } => {
+                    // one fixed-serial-order scatter of the reduced dense
+                    // dW onto the centers, then SGD on the k centers and an
+                    // in-place refresh of the materialized view
+                    gather_backward_into(&shard0.dw[l].data, assignments, cg);
+                    nesterov_vec(codebook, cm, cg, lr);
+                    for (wi, &asg) in w.data.iter_mut().zip(assignments.iter()) {
+                        *wi = codebook[asg as usize];
+                    }
+                    nesterov_vec(
+                        &mut state.biases[l],
+                        &mut state.b_momenta[l],
+                        &shard0.db[l],
+                        lr,
+                    );
+                }
+            }
+        }
+        // both weight stores moved: expire cached panels on each
+        cstate.bump_generation();
         state.bump_generation();
         Ok((ce + penalty) as f32)
     }

@@ -138,6 +138,9 @@ impl Backend for PjrtBackend {
             let bm = it.next().unwrap();
             state.b_momenta[l].copy_from_slice(&lit_to_f32(&bm)?);
         }
+        // weights rewritten in place: native-side panels packed from this
+        // state (e.g. a later native eval) must expire
+        state.bump_generation();
         let loss = it.next().unwrap().get_first_element::<f32>().context("reading loss")?;
         Ok(loss)
     }

@@ -128,6 +128,48 @@ impl TrainDriver {
             &mut self.ws.borrow_mut(),
         )
     }
+
+    /// Compression-aware variant of [`TrainDriver::step`]: layers covered
+    /// by a trainable compressed kernel update Θ in `cstate` directly (no
+    /// penalty — their weights are `Δ(Θ)` by construction); the remaining
+    /// layers take the ordinary dense penalized update.  Fails on backends
+    /// without compressed train kernels (the PJRT artifact path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_compressed(
+        &self,
+        state: &mut ParamState,
+        cstate: &mut crate::infer::train::CompressedTrainState,
+        x: &[f32],
+        y: &[i32],
+        deltas: &[Matrix],
+        lambdas: &[Matrix],
+        mu: &[f32],
+        lr: f32,
+    ) -> Result<f32> {
+        let nl = self.n_layers();
+        ensure!(
+            deltas.len() == nl && lambdas.len() == nl && mu.len() == nl,
+            "per-layer penalty inputs mismatch: {} deltas / {} lambdas / {} mu entries for \
+             {nl} layers",
+            deltas.len(),
+            lambdas.len(),
+            mu.len()
+        );
+        ensure!(x.len() == self.batch * self.widths[0], "bad x batch size");
+        ensure!(y.len() == self.batch, "bad y batch size");
+        self.backend.borrow_mut().train_step_compressed(
+            &self.spec,
+            state,
+            cstate,
+            x,
+            y,
+            deltas,
+            lambdas,
+            mu,
+            lr,
+            &mut self.ws.borrow_mut(),
+        )
+    }
 }
 
 /// Driver for the eval pass: loss and error over a dataset.

@@ -81,6 +81,23 @@ pub fn matmul_gather(
     Matrix::from_vec(b, n, data)
 }
 
+/// Backward of [`matmul_gather`] w.r.t. the codebook: scatter-accumulate
+/// the dense weight gradient over the assignment map,
+/// `d_codebook[assignments[i]] += dw[i]`.
+///
+/// `d_codebook` is fully overwritten.  The scatter runs serially in
+/// ascending flat-index order — the same fixed-serial-order contract as
+/// [`crate::linalg::conv::col2im_into`] — so compressed training stays
+/// bit-identical across thread counts: the caller reduces per-shard dense
+/// `dW`s deterministically first and scatters exactly once per step.
+pub fn gather_backward_into(dw: &[f32], assignments: &[u32], d_codebook: &mut [f32]) {
+    assert_eq!(dw.len(), assignments.len(), "gather_backward_into length mismatch");
+    d_codebook.iter_mut().for_each(|v| *v = 0.0);
+    for (&g, &a) in dw.iter().zip(assignments.iter()) {
+        d_codebook[a as usize] += g;
+    }
+}
+
 /// `x · (scale * S)` where `S[r, c] = values[r * cols + c] ∈ {-1, 0, +1}`.
 ///
 /// Accumulates `±x` per output and multiplies by the shared scale once at

@@ -119,6 +119,76 @@ impl Csr {
         }
         Matrix::from_vec(b, n, data)
     }
+
+    /// Serial `x · self` into a caller-owned buffer (x: b x rows, out
+    /// resized to b x cols).  Same ascending-k accumulation order as
+    /// [`Csr::left_matmul`]; the compressed L step parallelizes over
+    /// microbatch shards *above* this kernel, so each shard's forward is
+    /// serial and the result is independent of the thread count.
+    pub fn left_matmul_into(&self, x: &Matrix, out: &mut Matrix) {
+        assert_eq!(x.cols, self.rows, "sparse left_matmul_into shape mismatch");
+        let (b, k, n) = (x.rows, self.rows, self.cols);
+        out.reset(b, n);
+        out.data.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..b {
+            let x_row = &x.data[i * k..(i + 1) * k];
+            let o_row = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in x_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                for e in self.row_ptr[kk]..self.row_ptr[kk + 1] {
+                    o_row[self.col_idx[e] as usize] += a * self.values[e];
+                }
+            }
+        }
+    }
+
+    /// Backprop through the sparse product: `dH = dZ · selfᵀ` into a
+    /// caller-owned buffer (dz: b x cols, out resized to b x rows).  Entry
+    /// `(i, r)` accumulates `dz[i, col[e]] · val[e]` over row `r`'s stored
+    /// entries in ascending order — a fixed serial order, so the result is
+    /// the same for every thread count.
+    pub fn matmul_nt_into(&self, dz: &Matrix, out: &mut Matrix) {
+        assert_eq!(dz.cols, self.cols, "sparse matmul_nt_into shape mismatch");
+        let (b, k, n) = (dz.rows, self.rows, self.cols);
+        out.reset(b, k);
+        for i in 0..b {
+            let dz_row = &dz.data[i * n..(i + 1) * n];
+            let o_row = &mut out.data[i * k..(i + 1) * k];
+            for r in 0..k {
+                let mut acc = 0.0f32;
+                for e in self.row_ptr[r]..self.row_ptr[r + 1] {
+                    acc += dz_row[self.col_idx[e] as usize] * self.values[e];
+                }
+                o_row[r] = acc;
+            }
+        }
+    }
+
+    /// Gradient of the loss w.r.t. the stored nonzero values at a fixed
+    /// sparsity pattern: `dvals[e @ (r, c)] = Σ_i x[i, r] · dz[i, c]`
+    /// (x: b x rows, dz: b x cols), the CSR-masked entries of the dense
+    /// `dW = xᵀ · dZ`.  Accumulates the batch dimension in ascending order
+    /// per entry — fixed serial order, thread-count independent.
+    pub fn grad_values_into(&self, x: &Matrix, dz: &Matrix, dvals: &mut [f32]) {
+        assert_eq!(x.cols, self.rows, "sparse grad_values_into x shape mismatch");
+        assert_eq!(dz.cols, self.cols, "sparse grad_values_into dz shape mismatch");
+        assert_eq!(x.rows, dz.rows, "sparse grad_values_into batch mismatch");
+        assert_eq!(dvals.len(), self.nnz(), "sparse grad_values_into nnz mismatch");
+        let (b, k, n) = (x.rows, self.rows, self.cols);
+        for r in 0..k {
+            let (e0, e1) = (self.row_ptr[r], self.row_ptr[r + 1]);
+            for e in e0..e1 {
+                let c = self.col_idx[e] as usize;
+                let mut acc = 0.0f32;
+                for i in 0..b {
+                    acc += x.data[i * k + r] * dz.data[i * n + c];
+                }
+                dvals[e] = acc;
+            }
+        }
+    }
 }
 
 #[cfg(test)]

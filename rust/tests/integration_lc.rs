@@ -28,6 +28,7 @@ fn tiny_lc_config() -> LcConfig {
         threads: 2,
         eval_every: 0,
         quiet: true,
+        l_mode: lc::lc::LMode::Dense,
     }
 }
 

@@ -18,14 +18,30 @@
 //! * `lc_stream_*` — the streaming loader: a single whole-stream chunk
 //!   reproduces the in-memory run bit for bit, and chunked streaming runs
 //!   are bitwise thread-count invariant.
+//! * `compressed_*_finite_differences` — the compression-aware L step's
+//!   backward kernels (CSR values at a fixed pattern, factored U/V chain
+//!   incl. rank-1 and the rank-full dense fallback, codebook centers incl.
+//!   a dead center) against central differences of the compressed step's
+//!   loss, plus the dense-fallback layer trained in the same step.
+//! * `lc_compressed_*` — `--l-mode compressed` end to end: bitwise
+//!   thread-count invariance of the whole LC run, and accuracy/distortion
+//!   parity with the dense-mode run.
+//! * `weight_mutation_paths_expire_pack_cache` — every path that rewrites
+//!   weights in place (C-step scatter, train steps, Θ materialization,
+//!   snapshot refresh, checkpoint restore) must bump the generation stamp
+//!   so cached GEMM panels repack.
 
 use lc::compress::prune::ConstraintL0;
 use lc::compress::quantize::AdaptiveQuant;
 use lc::compress::task::{TaskSet, TaskSpec};
 use lc::compress::view::View;
+use lc::compress::{CContext, Theta};
+use lc::infer::train::{CompressedTrainState, TrainKernel};
+use lc::lc::AuxState;
+use lc::linalg::gemm::{BOp, PackedPanel};
 use lc::data::stream::StreamConfig;
 use lc::data::synth;
-use lc::lc::{LcAlgorithm, LcConfig, MuSchedule};
+use lc::lc::{LMode, LcAlgorithm, LcConfig, MuSchedule};
 use lc::lc::schedule::LrSchedule;
 use lc::linalg::conv::Conv2dShape;
 use lc::models::{Activation, LayerOp, ModelSpec, ParamState};
@@ -293,6 +309,7 @@ fn lc_outcome_bit_identical_across_thread_counts() {
             threads,
             eval_every: 0,
             quiet: true,
+            l_mode: LMode::Dense,
         };
         let alg = LcAlgorithm::new(&mut rt, spec.clone(), tasks(), cfg).unwrap();
         let state = ParamState::init(&spec, 9);
@@ -315,6 +332,429 @@ fn lc_outcome_bit_identical_across_thread_counts() {
         }
         assert_eq!(got.final_test.error, want.final_test.error, "t={threads}");
     }
+}
+
+fn zeros_like(spec: &ModelSpec) -> Vec<Matrix> {
+    (0..spec.n_layers())
+        .map(|l| {
+            let (m, n) = spec.layer_shape(l);
+            Matrix::zeros(m, n)
+        })
+        .collect()
+}
+
+/// Plan compressed train kernels from hand-built per-layer Θs.  The
+/// placeholder compression scheme is never invoked by `plan` — it only
+/// needs the task→layer map and the Θ values.
+fn plan_from(spec: &ModelSpec, per_layer: &[(usize, &Theta)]) -> CompressedTrainState {
+    let tasks = TaskSet::new(
+        per_layer
+            .iter()
+            .map(|(l, _)| TaskSpec {
+                name: format!("t{l}"),
+                layers: vec![*l],
+                view: View::Vector,
+                compression: Box::new(AdaptiveQuant::new(2)),
+            })
+            .collect(),
+    );
+    let thetas: Vec<&Theta> = per_layer.iter().map(|&(_, t)| t).collect();
+    CompressedTrainState::plan(spec, &tasks, &thetas)
+}
+
+/// Loss at (`state`, `cstate`) through the compressed step (lr = 0 leaves
+/// every parameter untouched; the loss is evaluated at the start).
+#[allow(clippy::too_many_arguments)]
+fn closs_at(
+    driver: &TrainDriver,
+    state: &ParamState,
+    cstate: &CompressedTrainState,
+    x: &[f32],
+    y: &[i32],
+    deltas: &[Matrix],
+    lambdas: &[Matrix],
+    mu: &[f32],
+) -> f64 {
+    let mut s = state.clone();
+    let mut c = cstate.clone();
+    driver.step_compressed(&mut s, &mut c, x, y, deltas, lambdas, mu, 0.0).unwrap() as f64
+}
+
+#[test]
+fn compressed_csr_and_codebook_gradients_match_finite_differences() {
+    // layer 0 trains CSR values at a fixed pattern, layer 1 trains 4
+    // codebook centers (one dead: no assignment maps to it).  Kink-safe
+    // like the dense fd test: CSR values are ≤ 0.05 in magnitude and the
+    // hidden biases sit at ±2, far from the ReLU boundary.
+    let sp = spec(&[6, 5, 4], 8);
+    let driver = TrainDriver::native_for_spec(&sp, 2);
+
+    let mut rng = Xoshiro256::new(71);
+    let mut state0 = ParamState::init(&sp, 71);
+    for (j, v) in state0.biases[0].iter_mut().enumerate() {
+        *v = if j % 2 == 0 { 2.0 } else { -2.0 };
+    }
+    for v in state0.biases[1].iter_mut() {
+        *v = rng.uniform_in(-0.1, 0.1);
+    }
+
+    let indices: Vec<u32> = (0..30u32).step_by(3).collect();
+    let values: Vec<f32> = indices.iter().map(|_| rng.uniform_in(-0.05, 0.05)).collect();
+    let theta0 = Theta::Sparse { len: 30, indices, values };
+    let assignments: Vec<u32> = (0..20).map(|i| (i % 3) as u32).collect();
+    let theta1 = Theta::Quantized { codebook: vec![0.3, -0.2, 0.45, 0.7], assignments };
+    let cs0 = plan_from(&sp, &[(0, &theta0), (1, &theta1)]);
+    assert_eq!(cs0.kernel_name(0), "csr");
+    assert_eq!(cs0.kernel_name(1), "codebook");
+
+    let mut x = vec![0.0f32; sp.batch * sp.widths[0]];
+    for v in x.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    let y: Vec<i32> = (0..sp.batch).map(|i| (i % 4) as i32).collect();
+    let zeros = zeros_like(&sp);
+    let mu = vec![0.0f32; sp.n_layers()];
+
+    // analytic gradient from one fresh-momenta Nesterov step on Θ
+    let lr = 0.5f32;
+    let mut s1 = state0.clone();
+    let mut c1 = cs0.clone();
+    driver.step_compressed(&mut s1, &mut c1, &x, &y, &zeros, &zeros, &mu, lr).unwrap();
+    let scale = (lr * (1.0 + MOMENTUM)) as f64;
+    let eps = 1e-2f32;
+
+    // CSR values
+    let (v0, v1) = match (&cs0.kernels[0], &c1.kernels[0]) {
+        (TrainKernel::Sparse { csr: a, .. }, TrainKernel::Sparse { csr: b, .. }) => {
+            (a.values.clone(), b.values.clone())
+        }
+        _ => unreachable!(),
+    };
+    let gmax0: f64 =
+        v0.iter().zip(v1.iter()).map(|(&a, &b)| ((a - b) as f64 / scale).abs()).fold(0.0, f64::max);
+    for e in 0..v0.len() {
+        let analytic = (v0[e] - v1[e]) as f64 / scale;
+        let probe = |d: f32| {
+            let mut c = cs0.clone();
+            if let TrainKernel::Sparse { csr, .. } = &mut c.kernels[0] {
+                csr.values[e] += d;
+            }
+            closs_at(&driver, &state0, &c, &x, &y, &zeros, &zeros, &mu)
+        };
+        let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+        assert!(
+            (fd - analytic).abs() <= 2e-2 * gmax0.max(1e-2),
+            "csr value[{e}]: fd {fd:.6e} vs analytic {analytic:.6e} (gmax {gmax0:.3e})"
+        );
+    }
+
+    // codebook centers, the dead one included
+    let (cb0, cb1) = match (&cs0.kernels[1], &c1.kernels[1]) {
+        (
+            TrainKernel::Codebook { codebook: a, .. },
+            TrainKernel::Codebook { codebook: b, .. },
+        ) => (a.clone(), b.clone()),
+        _ => unreachable!(),
+    };
+    assert_eq!(cb1[3].to_bits(), cb0[3].to_bits(), "dead center must not move");
+    let gmax1: f64 = cb0
+        .iter()
+        .zip(cb1.iter())
+        .map(|(&a, &b)| ((a - b) as f64 / scale).abs())
+        .fold(0.0, f64::max);
+    for j in 0..cb0.len() {
+        let analytic = (cb0[j] - cb1[j]) as f64 / scale;
+        let probe = |d: f32| {
+            let mut c = cs0.clone();
+            if let TrainKernel::Codebook { codebook, .. } = &mut c.kernels[1] {
+                codebook[j] += d;
+            }
+            c.refresh(); // re-materialize w, expire cached panels
+            closs_at(&driver, &state0, &c, &x, &y, &zeros, &zeros, &mu)
+        };
+        let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+        if j == 3 {
+            assert_eq!(fd, 0.0, "dead center has exactly zero fd gradient");
+            assert_eq!(analytic, 0.0, "dead center has exactly zero analytic gradient");
+        } else {
+            assert!(
+                (fd - analytic).abs() <= 2e-2 * gmax1.max(1e-2),
+                "codebook[{j}]: fd {fd:.6e} vs analytic {analytic:.6e} (gmax {gmax1:.3e})"
+            );
+        }
+    }
+
+    // biases flow through the compressed shards' column-sum path
+    let gmaxb: f64 = state0.biases[0]
+        .iter()
+        .zip(s1.biases[0].iter())
+        .map(|(&a, &b)| ((a - b) as f64 / scale).abs())
+        .fold(0.0, f64::max);
+    for i in 0..state0.biases[0].len() {
+        let analytic = (state0.biases[0][i] - s1.biases[0][i]) as f64 / scale;
+        let probe = |d: f32| {
+            let mut s = state0.clone();
+            s.biases[0][i] += d;
+            closs_at(&driver, &s, &cs0, &x, &y, &zeros, &zeros, &mu)
+        };
+        let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+        assert!(
+            (fd - analytic).abs() <= 2e-2 * gmaxb.max(1e-2),
+            "b0[{i}]: fd {fd:.6e} vs analytic {analytic:.6e}"
+        );
+    }
+}
+
+#[test]
+fn compressed_factored_gradients_match_finite_differences() {
+    // layer 0 trains the low-rank factors (rank 2 and the rank-1 edge);
+    // layer 1 is uncovered and takes the dense *penalized* update inside
+    // the same compressed step — both gradients must match central
+    // differences of the returned loss.
+    let sp = spec(&[6, 5, 4], 8);
+    let driver = TrainDriver::native_for_spec(&sp, 2);
+    let mut rng = Xoshiro256::new(81);
+    let mut state0 = ParamState::init(&sp, 81);
+    for (j, v) in state0.biases[0].iter_mut().enumerate() {
+        *v = if j % 2 == 0 { 2.0 } else { -2.0 };
+    }
+    for v in state0.weights[1].data.iter_mut() {
+        *v = rng.uniform_in(-0.5, 0.5);
+    }
+    let mut x = vec![0.0f32; sp.batch * sp.widths[0]];
+    for v in x.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    let y: Vec<i32> = (0..sp.batch).map(|i| (i % 4) as i32).collect();
+    let deltas = rand_like(&sp, 83, 0.2);
+    let lambdas = rand_like(&sp, 84, 0.1);
+    let mu = vec![0.0f32, 0.5];
+
+    for rank in [2usize, 1] {
+        let mut u = Matrix::zeros(6, rank);
+        let mut v = Matrix::zeros(5, rank);
+        for e in u.data.iter_mut() {
+            *e = rng.uniform_in(-0.3, 0.3);
+        }
+        for e in v.data.iter_mut() {
+            *e = rng.uniform_in(-0.3, 0.3);
+        }
+        let s: Vec<f32> = (0..rank).map(|j| 0.5 / (j + 1) as f32).collect();
+        let theta0 = Theta::LowRank { u, s, v };
+        let cs0 = plan_from(&sp, &[(0, &theta0)]);
+        assert_eq!(cs0.kernel_name(0), "factored", "rank {rank}");
+        assert_eq!(cs0.kernel_name(1), "dense", "uncovered layer stays dense");
+
+        let lr = 0.5f32;
+        let mut s1 = state0.clone();
+        let mut c1 = cs0.clone();
+        driver.step_compressed(&mut s1, &mut c1, &x, &y, &deltas, &lambdas, &mu, lr).unwrap();
+        let scale = (lr * (1.0 + MOMENTUM)) as f64;
+        let eps = 1e-2f32;
+
+        let (a0, bt0, a1, bt1) = match (&cs0.kernels[0], &c1.kernels[0]) {
+            (
+                TrainKernel::Factored { a, bt, .. },
+                TrainKernel::Factored { a: a2, bt: bt2, .. },
+            ) => (a.clone(), bt.clone(), a2.clone(), bt2.clone()),
+            _ => unreachable!(),
+        };
+        let gmax: f64 = a0
+            .data
+            .iter()
+            .zip(a1.data.iter())
+            .chain(bt0.data.iter().zip(bt1.data.iter()))
+            .map(|(&p, &q)| ((p - q) as f64 / scale).abs())
+            .fold(0.0, f64::max);
+        for (which, p0, p1) in [("a", &a0, &a1), ("bt", &bt0, &bt1)] {
+            for i in 0..p0.data.len() {
+                let analytic = (p0.data[i] - p1.data[i]) as f64 / scale;
+                let probe = |d: f32| {
+                    let mut c = cs0.clone();
+                    if let TrainKernel::Factored { a, bt, .. } = &mut c.kernels[0] {
+                        let t = if which == "a" { a } else { bt };
+                        t.data[i] += d;
+                    }
+                    c.refresh();
+                    closs_at(&driver, &state0, &c, &x, &y, &deltas, &lambdas, &mu)
+                };
+                let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+                assert!(
+                    (fd - analytic).abs() <= 2e-2 * gmax.max(1e-2),
+                    "rank {rank} {which}[{i}]: fd {fd:.6e} vs analytic {analytic:.6e}"
+                );
+            }
+        }
+
+        // the dense-fallback layer's gradient includes its penalty terms
+        let gmax1: f64 = state0.weights[1]
+            .data
+            .iter()
+            .zip(s1.weights[1].data.iter())
+            .map(|(&p, &q)| ((p - q) as f64 / scale).abs())
+            .fold(0.0, f64::max);
+        for i in 0..state0.weights[1].data.len() {
+            let analytic = (state0.weights[1].data[i] - s1.weights[1].data[i]) as f64 / scale;
+            let probe = |d: f32| {
+                let mut st = state0.clone();
+                st.weights[1].data[i] += d;
+                closs_at(&driver, &st, &cs0, &x, &y, &deltas, &lambdas, &mu)
+            };
+            let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+            assert!(
+                (fd - analytic).abs() <= 2e-2 * gmax1.max(1e-2),
+                "rank {rank} dense w1[{i}]: fd {fd:.6e} vs analytic {analytic:.6e}"
+            );
+        }
+    }
+
+    // rank-full edge: 5·(6+5) = 55 MACs > 30 dense MACs ⇒ dense fallback
+    let mut u = Matrix::zeros(6, 5);
+    let mut v = Matrix::zeros(5, 5);
+    rng.fill_normal(&mut u.data, 0.0, 0.1);
+    rng.fill_normal(&mut v.data, 0.0, 0.1);
+    let full = Theta::LowRank { u, s: vec![1.0; 5], v };
+    let cs_full = plan_from(&sp, &[(0, &full)]);
+    assert_eq!(cs_full.kernel_name(0), "dense", "rank-full must train dense");
+}
+
+#[test]
+fn lc_compressed_outcome_bit_identical_across_thread_counts() {
+    // end-to-end with --l-mode compressed: codebook + CSR train kernels,
+    // materialize, C step — bitwise across threads 1/2/4
+    let data = synth::generate(384, 5, 2);
+    let (train, test) = data.split(256);
+    let run = |threads: usize| {
+        let mut rt = Runtime::native_with_threads(threads);
+        let spec = lc::models::lookup("mlp-small").unwrap();
+        let mut cfg = stream_lc_cfg(threads);
+        cfg.l_mode = LMode::Compressed;
+        let alg = LcAlgorithm::new(&mut rt, spec.clone(), qp_tasks(), cfg).unwrap();
+        alg.run(ParamState::init(&spec, 9), &train, &test).unwrap()
+    };
+    let want = run(1);
+    for threads in [2usize, 4] {
+        let got = run(threads);
+        for l in 0..want.compressed_state.weights.len() {
+            assert_eq!(
+                bits(&got.compressed_state.weights[l].data),
+                bits(&want.compressed_state.weights[l].data),
+                "compressed-mode weights[{l}] diverge at threads={threads}"
+            );
+            assert_eq!(
+                bits(&got.compressed_state.biases[l]),
+                bits(&want.compressed_state.biases[l]),
+                "biases[{l}] t={threads}"
+            );
+        }
+        assert_eq!(got.final_test.error, want.final_test.error, "t={threads}");
+    }
+}
+
+#[test]
+fn lc_compressed_mode_tracks_dense_mode_quality() {
+    // same experiment, dense vs compressed L mode, from the same
+    // pretrained reference: final accuracy within tolerance, and the
+    // Θ-trained weights (exactly representable by construction) must not
+    // leave more C-step distortion than the dense path does
+    let data = synth::generate(384, 5, 2);
+    let (train, test) = data.split(256);
+    let run = |mode: LMode| {
+        let mut rt = Runtime::native_with_threads(2);
+        let spec = lc::models::lookup("mlp-small").unwrap();
+        let mut cfg = stream_lc_cfg(2);
+        cfg.mu = MuSchedule { mu0: 1e-3, growth: 1.6, steps: 5 };
+        cfg.l_mode = mode;
+        let alg = LcAlgorithm::new(&mut rt, spec.clone(), qp_tasks(), cfg).unwrap();
+        let mut state = ParamState::init(&spec, 9);
+        alg.train_reference(&mut state, &train, 3, &LrSchedule { lr0: 0.1, decay: 0.98 })
+            .unwrap();
+        alg.run(state, &train, &test).unwrap()
+    };
+    let dense = run(LMode::Dense);
+    let comp = run(LMode::Compressed);
+    assert!(
+        (comp.final_test.error - dense.final_test.error).abs() <= 0.15,
+        "compressed-mode test error {} strays from dense-mode {}",
+        comp.final_test.error,
+        dense.final_test.error
+    );
+    let d_last = dense.records.last().unwrap();
+    let c_last = comp.records.last().unwrap();
+    for (ti, (&cd, &dd)) in
+        c_last.task_distortions.iter().zip(d_last.task_distortions.iter()).enumerate()
+    {
+        assert!(
+            cd <= dd * 1.25 + 1e-3,
+            "task {ti}: compressed-mode distortion {cd:.3e} vs dense-mode {dd:.3e}"
+        );
+    }
+}
+
+#[test]
+fn weight_mutation_paths_expire_pack_cache() {
+    // every path that rewrites a ParamState's weights must move its
+    // generation stamp so cached GEMM panels repack (a stale hit would
+    // silently train on old weights)
+    let sp = lc::models::lookup("mlp-small").unwrap();
+    let mut state = ParamState::init(&sp, 3);
+    let mut panel = PackedPanel::default();
+    let mut miss =
+        |state: &ParamState| panel.ensure(BOp::N(&state.weights[0]), state.generation());
+
+    assert!(miss(&state), "first pack is a miss");
+    assert!(!miss(&state), "unchanged generation hits");
+
+    // C-step scatter target: set_weights
+    let snap = state.weights.clone();
+    state.set_weights(&snap);
+    assert!(miss(&state), "set_weights must expire cached panels");
+
+    // L step: one train step
+    let driver = TrainDriver::native_for_spec(&sp, 2);
+    let (x, y) = batch_for(&sp, 5);
+    let zeros = zeros_like(&sp);
+    let mu = vec![0.0f32; sp.n_layers()];
+    driver.step(&mut state, &x, &y, &zeros, &zeros, &mu, 0.01).unwrap();
+    assert!(miss(&state), "train step must expire cached panels");
+    assert!(!miss(&state));
+
+    // compressed L step: materialize_into
+    let tasks = qp_tasks();
+    let ctx = CContext::default();
+    let thetas: Vec<Theta> = tasks
+        .tasks
+        .iter()
+        .map(|t| t.compression.compress(&t.gather(&state.weights), &ctx))
+        .collect();
+    let refs: Vec<&Theta> = thetas.iter().collect();
+    let cs = CompressedTrainState::plan(&sp, &tasks, &refs);
+    cs.materialize_into(&mut state);
+    assert!(miss(&state), "materialize_into must expire cached panels");
+
+    // dual update mutates λ only: the weight stamp must NOT move
+    let mut aux = AuxState::new(&sp, &tasks);
+    let g = state.generation();
+    aux.dual_update(&state, 1e-3, true, 2);
+    assert_eq!(state.generation(), g, "dual update leaves the weight store untouched");
+
+    // eval-snapshot refresh rewrites the snapshot in place: its stamp moves
+    let g1 = aux.refresh_snapshot(&state).generation();
+    let g2 = aux.refresh_snapshot(&state).generation();
+    assert_ne!(g1, g2, "refresh_snapshot must expire panels packed from the snapshot");
+
+    // checkpoint restore materializes a distinct weight store
+    let dir = std::env::temp_dir().join("lcc_gen_audit_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("state.lcck");
+    lc::models::checkpoint::save(&state, &path).unwrap();
+    let restored = lc::models::checkpoint::load(&path).unwrap();
+    assert_ne!(
+        restored.generation(),
+        state.generation(),
+        "restored checkpoint must carry its own fresh stamp"
+    );
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
@@ -489,6 +929,7 @@ fn stream_lc_cfg(threads: usize) -> LcConfig {
         threads,
         eval_every: 0,
         quiet: true,
+        l_mode: LMode::Dense,
     }
 }
 

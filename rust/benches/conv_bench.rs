@@ -97,7 +97,8 @@ fn main() {
         let stats = stream::for_each_batch(&cfg, batch, &mut rng, |x, y| {
             // touch the data so synthesis can't be optimized away
             checksum += x[0] as f64 + y[0] as f64;
-        });
+        })
+        .expect("streaming bench pass failed");
         let secs = t0.elapsed().as_secs_f64();
         std::hint::black_box(checksum);
         assert!(
@@ -221,6 +222,7 @@ fn main() {
                 eval_every: 0,
                 quiet: true,
                 l_mode: lc::lc::LMode::Dense,
+                ..Default::default()
             };
             let alg = LcAlgorithm::new(&mut rt, spec.clone(), tasks(), cfg).unwrap();
             let t0 = Instant::now();

@@ -36,6 +36,7 @@ fn main() {
         eval_every: 0,
         quiet: tasks_quiet,
         l_mode: lc::lc::LMode::Dense,
+        ..Default::default()
     };
 
     Bencher::header("end-to-end: one LC step vs one reference epoch (lenet300, 2048 ex)");

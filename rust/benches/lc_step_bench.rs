@@ -323,6 +323,89 @@ fn main() {
         });
     }
 
+    // --- resume overhead: durable run-state save/load vs one C step --------
+    {
+        use lc::models::checkpoint::{self, RunFingerprint};
+        use std::time::Instant;
+
+        let mut aux = AuxState::new(&spec, &tasks);
+        let mut thetas: Vec<Option<Theta>> = tasks.tasks.iter().map(|_| None).collect();
+        let mut monitor = Monitor::new(true);
+        let t_step = Instant::now();
+        aux.c_step(&tasks, 0, mu, &state, mu, &mut thetas, &mut monitor, 1);
+        aux.dual_update(&state, mu, true, 1);
+        let c_step_ms = t_step.elapsed().as_secs_f64() * 1e3;
+
+        let fp = RunFingerprint {
+            mu0: mu,
+            growth: 1.1,
+            steps: 40,
+            lr0: 0.09,
+            decay: 0.98,
+            epochs_per_step: 1,
+            first_step_epochs: 0,
+            use_al: true,
+            seed: 42,
+            l_mode: 0,
+            n_tasks: tasks.tasks.len() as u64,
+        };
+        let theta_refs: Vec<Theta> =
+            thetas.iter().map(|t| t.as_ref().unwrap().clone()).collect();
+        let task_lens: Vec<usize> = tasks
+            .tasks
+            .iter()
+            .map(|t| t.layers.iter().map(|&l| WIDTHS[l] * WIDTHS[l + 1]).sum())
+            .collect();
+        let dir = std::env::temp_dir()
+            .join(format!("lcc_bench_run_state_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let iters = if quick { 3u64 } else { 10 };
+        let mut last = None;
+        let t_save = Instant::now();
+        for i in 0..iters {
+            last = Some(
+                checkpoint::save_run_state(
+                    &dir,
+                    2,
+                    &fp,
+                    i as usize + 1,
+                    [1, 2, 3, 4],
+                    &state,
+                    &aux.lambdas,
+                    &theta_refs,
+                )
+                .unwrap(),
+            );
+        }
+        let save_ms = t_save.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        let path = last.unwrap();
+        let t_load = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(
+                checkpoint::load_run_state(&path, &spec, &task_lens, &fp).unwrap(),
+            );
+        }
+        let load_ms = t_load.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        std::fs::remove_dir_all(&dir).ok();
+
+        let overhead = save_ms / c_step_ms.max(1e-9);
+        println!(
+            "resume overhead ({n_weights} weights): save {save_ms:.3}ms, load {load_ms:.3}ms, \
+             one C step {c_step_ms:.3}ms ({overhead:.2}x of a C step per checkpoint)"
+        );
+        records.push(Record {
+            bench: "resume_overhead".into(),
+            fields: vec![
+                ("n_weights".into(), n_weights.to_string()),
+                ("save_ms".into(), format!("{save_ms:.4}")),
+                ("load_ms".into(), format!("{load_ms:.4}")),
+                ("c_step_ms".into(), format!("{c_step_ms:.4}")),
+                ("save_over_c_step".into(), format!("{overhead:.3}")),
+            ],
+        });
+    }
+
     // --- BENCH_lc_step.json ------------------------------------------------
     write_bench_json("BENCH_lc_step.json", &records);
 }

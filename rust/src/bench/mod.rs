@@ -204,7 +204,9 @@ pub struct Record {
 
 /// Serialize `records` to `path` as the flat JSON array CI's bench-smoke
 /// job uploads (`BENCH_lc_step.json`, `BENCH_l_step.json`,
-/// `BENCH_gemm.json`), and print the confirmation line.
+/// `BENCH_gemm.json`), and print the confirmation line.  Written through
+/// the atomic temp-and-rename path (no integrity footer — CI parses the
+/// file as plain JSON), so a crash mid-bench never leaves a torn report.
 pub fn write_bench_json(path: &str, records: &[Record]) {
     let mut json = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
@@ -224,7 +226,8 @@ pub fn write_bench_json(path: &str, records: &[Record]) {
         json.push_str(&format!("}}{}\n", if i + 1 < records.len() { "," } else { "" }));
     }
     json.push_str("]\n");
-    std::fs::write(path, &json).unwrap_or_else(|e| panic!("write {path}: {e}"));
+    crate::util::durable::write_atomic(std::path::Path::new(path), json.as_bytes())
+        .unwrap_or_else(|e| panic!("write {path}: {e}"));
     println!("\nwrote {path} ({} records)", records.len());
 }
 

@@ -19,11 +19,20 @@
 //! backend uses.  This is what lets the streaming L step keep the
 //! bit-identical-across-thread-counts contract.
 
+//! Error propagation: the producer declares the `stream.read` failpoint
+//! before synthesizing each chunk, and any producer-side error travels
+//! through the chunk channel as a `Result` — both entry points return
+//! `Result<StreamStats>`, so an IO failure reaches the caller as a
+//! contextual error instead of a silent early stop.
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 
+use anyhow::{Context, Result};
+
 use super::{synth, BatchIter, Dataset};
+use crate::util::failpoint;
 use crate::util::rng::Xoshiro256;
 
 /// A synthetic stream: samples `0..total` of `synth`'s deterministic
@@ -96,18 +105,24 @@ struct Chunk {
 
 /// Run `f(chunk_index, &chunk)` over every chunk of the stream while a
 /// producer thread synthesizes the next chunk concurrently.  At most two
-/// chunks are ever resident.
-pub fn for_each_chunk<F>(cfg: &StreamConfig, mut f: F) -> StreamStats
+/// chunks are ever resident.  A producer-side read error (exercised by
+/// the `stream.read` failpoint) aborts the pass and is returned with the
+/// failing chunk index attached.
+pub fn for_each_chunk<F>(cfg: &StreamConfig, mut f: F) -> Result<StreamStats>
 where
     F: FnMut(usize, &Dataset),
 {
     let n_chunks = cfg.n_chunks();
+    // Failpoint hits in the producer are attributed to this (consuming)
+    // thread, matching thread-scoped in-process arming.
+    let owner = std::thread::current().id();
     let live = Arc::new(AtomicUsize::new(0));
     let high = Arc::new(AtomicUsize::new(0));
     let mut rows = 0usize;
     let mut delivered = 0usize;
+    let mut failed: Option<anyhow::Error> = None;
     std::thread::scope(|scope| {
-        let (tx, rx) = mpsc::sync_channel::<Chunk>(0);
+        let (tx, rx) = mpsc::sync_channel::<Result<Chunk>>(0);
         let producer_live = Arc::clone(&live);
         let producer_high = Arc::clone(&high);
         let cfg = *cfg;
@@ -118,21 +133,43 @@ where
                 // already counted; serial generation (threads = 1) keeps
                 // the producer off the training backend's worker pool
                 let token = ResidencyToken::acquire(&producer_live, &producer_high);
-                let data = synth::generate_range(lo, hi, cfg.seed, 1);
-                if tx.send(Chunk { data, _token: token }).is_err() {
-                    return; // consumer hung up (e.g. panicked mid-pass)
+                let item = failpoint::hit_owned("stream.read", owner)
+                    .with_context(|| format!("reading stream chunk {c}/{n_chunks}"))
+                    .map(|()| {
+                        let data = synth::generate_range(lo, hi, cfg.seed, 1);
+                        Chunk { data, _token: token }
+                    });
+                let was_err = item.is_err();
+                if tx.send(item).is_err() || was_err {
+                    // consumer hung up (e.g. panicked mid-pass), or the
+                    // error just sent ends the stream
+                    return;
                 }
             }
         });
-        for (c, chunk) in rx.iter().enumerate() {
-            rows += chunk.data.len();
-            f(c, &chunk.data);
-            delivered = c + 1;
-            // chunk (and its token) dropped here, freeing one residency slot
+        for (c, item) in rx.iter().enumerate() {
+            match item {
+                Ok(chunk) => {
+                    rows += chunk.data.len();
+                    f(c, &chunk.data);
+                    delivered = c + 1;
+                    // chunk (and its token) dropped here, freeing one
+                    // residency slot
+                }
+                Err(e) => {
+                    failed = Some(e);
+                    break;
+                    // rx dropped at scope end; a producer blocked in send
+                    // observes the hang-up and exits
+                }
+            }
         }
     });
+    if let Some(e) = failed {
+        return Err(e);
+    }
     debug_assert_eq!(delivered, n_chunks);
-    StreamStats { chunks: delivered, rows, max_resident_chunks: high.load(Ordering::SeqCst) }
+    Ok(StreamStats { chunks: delivered, rows, max_resident_chunks: high.load(Ordering::SeqCst) })
 }
 
 /// Run `f(&x, &y)` over shuffled fixed-size batches drawn chunk by chunk
@@ -144,7 +181,7 @@ pub fn for_each_batch<F>(
     batch: usize,
     rng: &mut Xoshiro256,
     mut f: F,
-) -> StreamStats
+) -> Result<StreamStats>
 where
     F: FnMut(&[f32], &[i32]),
 {
@@ -157,9 +194,9 @@ where
             batch_rows += y.len();
             f(&x, &y);
         }
-    });
+    })?;
     stats.rows = batch_rows;
-    stats
+    Ok(stats)
 }
 
 #[cfg(test)]
@@ -180,7 +217,8 @@ mod tests {
             assert_eq!(chunk.dim, synth::DIM);
             images.extend_from_slice(&chunk.images);
             labels.extend_from_slice(&chunk.labels);
-        });
+        })
+        .unwrap();
         assert_eq!(stats.chunks, 4);
         assert_eq!(stats.rows, 100);
         let whole = synth::generate(100, 9, 2);
@@ -196,7 +234,8 @@ mod tests {
             // blocks in send with its chunk already synthesized
             std::thread::sleep(std::time::Duration::from_millis(2));
             assert!(!chunk.is_empty());
-        });
+        })
+        .unwrap();
         assert!(stats.max_resident_chunks >= 1);
         assert!(
             stats.max_resident_chunks <= 2,
@@ -229,7 +268,8 @@ mod tests {
         let mut got = Vec::new();
         let stats = for_each_batch(&cfg, batch, &mut rng, |x, y| {
             got.push((x.to_vec(), y.to_vec()));
-        });
+        })
+        .unwrap();
         assert_eq!(stats.rows, 7 * batch, "per-chunk ragged tails dropped");
         assert_eq!(got, want);
     }
@@ -242,7 +282,8 @@ mod tests {
         let run = || {
             let mut rng = Xoshiro256::new(3);
             let mut out: Vec<(Vec<f32>, Vec<i32>)> = Vec::new();
-            for_each_batch(&cfg, 4, &mut rng, |x, y| out.push((x.to_vec(), y.to_vec())));
+            for_each_batch(&cfg, 4, &mut rng, |x, y| out.push((x.to_vec(), y.to_vec())))
+                .unwrap();
             out
         };
         assert_eq!(run(), run());
@@ -251,8 +292,30 @@ mod tests {
     #[test]
     fn empty_stream_is_legal() {
         let cfg = StreamConfig { total: 0, chunk: 8, seed: 1 };
-        let stats = for_each_chunk(&cfg, |_, _| panic!("no chunks expected"));
+        let stats = for_each_chunk(&cfg, |_, _| panic!("no chunks expected")).unwrap();
         assert_eq!(stats.chunks, 0);
         assert_eq!(stats.rows, 0);
+    }
+
+    #[test]
+    fn read_error_reaches_the_caller_with_context() {
+        // producer failure on chunk 2 must surface as a contextual error,
+        // not a silent early stop; chunks before the failure are delivered
+        let cfg = StreamConfig { total: 96, chunk: 16, seed: 7 };
+        failpoint::arm("stream.read", failpoint::Action::IoErr, 3);
+        let mut seen = Vec::new();
+        let err = for_each_chunk(&cfg, |c, _| seen.push(c)).unwrap_err();
+        failpoint::clear("stream.read");
+        assert_eq!(seen, vec![0, 1], "chunks before the failure still delivered");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stream chunk 2/6"), "{msg}");
+        assert!(msg.contains("stream.read"), "{msg}");
+
+        // and through the batch path
+        failpoint::arm("stream.read", failpoint::Action::IoErr, 1);
+        let mut rng = Xoshiro256::new(1);
+        let err = for_each_batch(&cfg, 8, &mut rng, |_, _| {}).unwrap_err();
+        failpoint::clear("stream.read");
+        assert!(format!("{err:#}").contains("stream chunk 0/6"), "{err:#}");
     }
 }

@@ -189,6 +189,7 @@ pub fn scaled_quant_config(threads: usize) -> LcConfig {
         eval_every: 0,
         quiet: true,
         l_mode: crate::lc::LMode::Dense,
+        ..Default::default()
     }
 }
 
@@ -206,6 +207,7 @@ pub fn scaled_lowrank_config(threads: usize) -> LcConfig {
         eval_every: 0,
         quiet: true,
         l_mode: crate::lc::LMode::Dense,
+        ..Default::default()
     }
 }
 

@@ -13,9 +13,10 @@
 //!
 //! The quadratic-penalty variant is AL with λ pinned at 0 (`use_al: false`).
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::aux::AuxState;
 use super::monitor::Monitor;
@@ -27,9 +28,11 @@ use crate::data::{BatchIter, Dataset};
 use crate::infer::train::CompressedTrainState;
 use crate::linalg::gemm;
 use crate::metrics::{account, Compressed};
+use crate::models::checkpoint::{self, RunFingerprint, RunState};
 use crate::models::{ModelSpec, ParamState};
 use crate::runtime::trainer::{EvalDriver, EvalResult, TrainDriver};
 use crate::tensor::Matrix;
+use crate::util::failpoint;
 use crate::util::rng::Xoshiro256;
 
 /// Which execution path the L step's SGD epochs take.
@@ -75,6 +78,13 @@ pub struct LcConfig {
     pub quiet: bool,
     /// Dense penalized L step vs training through the compressed kernels.
     pub l_mode: LMode,
+    /// Save an LCRS run-state record every N LC steps (0 = never).
+    pub save_every: usize,
+    /// Directory for LCRS records; checkpointing needs both this and a
+    /// nonzero `save_every`.
+    pub run_dir: Option<PathBuf>,
+    /// How many run-state generations to keep (older ones are pruned).
+    pub keep_checkpoints: usize,
 }
 
 impl Default for LcConfig {
@@ -90,6 +100,9 @@ impl Default for LcConfig {
             eval_every: 0,
             quiet: false,
             l_mode: LMode::Dense,
+            save_every: 0,
+            run_dir: None,
+            keep_checkpoints: 3,
         }
     }
 }
@@ -141,6 +154,13 @@ enum TrainSource<'a> {
     /// Chunked synthetic stream, at most two chunks resident
     /// (see [`crate::data::stream`]).
     Stream(&'a StreamConfig),
+}
+
+/// How the LC loop starts: from scratch (direct-compression init) or from
+/// a restored LCRS run state (continue mid-schedule).
+enum RunInit {
+    Fresh(ParamState),
+    Resumed(RunState),
 }
 
 /// The LC coordinator.
@@ -220,7 +240,7 @@ impl LcAlgorithm {
                         }
                         Err(e) => fail = Some(e),
                     }
-                });
+                })?;
                 if let Some(e) = fail {
                     return Err(e);
                 }
@@ -303,12 +323,72 @@ impl LcAlgorithm {
                 }
                 Err(e) => fail = Some(e),
             }
-        });
+        })?;
         if let Some(e) = fail {
             return Err(e);
         }
         anyhow::ensure!(n > 0, "evaluate_stream: empty stream");
         Ok(EvalResult { mean_loss: loss_weighted / n as f64, error: err_weighted / n as f64, n })
+    }
+
+    /// The configuration identity stamped into (and required back from)
+    /// every LCRS record of this run.
+    pub fn fingerprint(&self) -> RunFingerprint {
+        RunFingerprint {
+            mu0: self.cfg.mu.mu0,
+            growth: self.cfg.mu.growth,
+            steps: self.cfg.mu.steps as u64,
+            lr0: self.cfg.lr.lr0,
+            decay: self.cfg.lr.decay,
+            epochs_per_step: self.cfg.epochs_per_step as u64,
+            first_step_epochs: self.cfg.first_step_epochs.unwrap_or(0) as u64,
+            use_al: self.cfg.use_al,
+            seed: self.cfg.seed,
+            l_mode: match self.cfg.l_mode {
+                LMode::Dense => 0,
+                LMode::Compressed => 1,
+            },
+            n_tasks: self.tasks.tasks.len() as u64,
+        }
+    }
+
+    /// Decompressed weight count per task's Θ — the bound the LCRS loader
+    /// checks wire counts against.
+    fn task_lens(&self) -> Vec<usize> {
+        self.tasks
+            .tasks
+            .iter()
+            .map(|t| {
+                t.layers
+                    .iter()
+                    .map(|&l| {
+                        let (m, n) = self.spec.layer_shape(l);
+                        m * n
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Load the newest usable LCRS record from `run_dir`, validating it
+    /// against this run's fingerprint, model, and task structure.
+    fn load_run_state(&self, run_dir: &Path) -> Result<RunState> {
+        let fp = self.fingerprint();
+        let lens = self.task_lens();
+        match checkpoint::latest_run_state(run_dir, &self.spec, &lens, &fp)? {
+            Some((path, rs)) => {
+                if !self.cfg.quiet {
+                    crate::info!(
+                        "resuming from {} at LC step {}/{}",
+                        path.display(),
+                        rs.next_step,
+                        self.cfg.mu.steps
+                    );
+                }
+                Ok(rs)
+            }
+            None => bail!("no usable run state in {}", run_dir.display()),
+        }
     }
 
     /// Run the LC loop starting from a (pretrained) state.
@@ -320,7 +400,7 @@ impl LcAlgorithm {
     ) -> Result<LcOutcome> {
         // labels checked once up front; the per-step path only debug-asserts
         self.train.validate_dataset(train_data)?;
-        self.run_loop(state, TrainSource::InMemory(train_data), test_data)
+        self.run_loop(RunInit::Fresh(state), TrainSource::InMemory(train_data), test_data)
     }
 
     /// [`Self::run`] with the L steps fed from a chunked synthetic stream:
@@ -332,12 +412,41 @@ impl LcAlgorithm {
         train_data: &StreamConfig,
         test_data: &Dataset,
     ) -> Result<LcOutcome> {
-        self.run_loop(state, TrainSource::Stream(train_data), test_data)
+        self.run_loop(RunInit::Fresh(state), TrainSource::Stream(train_data), test_data)
+    }
+
+    /// Continue an interrupted run from the newest usable LCRS record in
+    /// `run_dir`.  The restored loop picks up at the checkpointed step
+    /// with the exact weights, momenta, multipliers, Θs, and RNG stream,
+    /// so the final model is bit-identical to an uninterrupted run (the
+    /// step-k math depends on nothing else: batch order comes from the
+    /// restored RNG, momenta are reset at each L step anyway, and the μ/lr
+    /// schedules are pure functions of the step index).
+    pub fn resume(
+        &self,
+        run_dir: &Path,
+        train_data: &Dataset,
+        test_data: &Dataset,
+    ) -> Result<LcOutcome> {
+        self.train.validate_dataset(train_data)?;
+        let rs = self.load_run_state(run_dir)?;
+        self.run_loop(RunInit::Resumed(rs), TrainSource::InMemory(train_data), test_data)
+    }
+
+    /// [`Self::resume`] over a chunked synthetic stream.
+    pub fn resume_stream(
+        &self,
+        run_dir: &Path,
+        train_data: &StreamConfig,
+        test_data: &Dataset,
+    ) -> Result<LcOutcome> {
+        let rs = self.load_run_state(run_dir)?;
+        self.run_loop(RunInit::Resumed(rs), TrainSource::Stream(train_data), test_data)
     }
 
     fn run_loop(
         &self,
-        mut state: ParamState,
+        init: RunInit,
         source: TrainSource<'_>,
         test_data: &Dataset,
     ) -> Result<LcOutcome> {
@@ -362,23 +471,36 @@ impl LcAlgorithm {
             );
         }
 
-        // --- direct-compression init: Θ ← Π(w), λ = 0 ---------------------
-        aux.c_step(
-            &self.tasks,
-            usize::MAX,
-            mu_floor,
-            &state,
-            0.0, // λ not yet active
-            &mut thetas,
-            &mut monitor,
-            threads,
-        );
+        // --- initialize: fresh direct compression, or a restored state ----
+        let (mut state, start_step, mut rng) = match init {
+            RunInit::Fresh(state) => {
+                // direct-compression init: Θ ← Π(w), λ = 0
+                aux.c_step(
+                    &self.tasks,
+                    usize::MAX,
+                    mu_floor,
+                    &state,
+                    0.0, // λ not yet active
+                    &mut thetas,
+                    &mut monitor,
+                    threads,
+                );
+                (state, 0usize, Xoshiro256::new(self.cfg.seed))
+            }
+            RunInit::Resumed(rs) => {
+                // the checkpointed C step's Δ(Θ) and λ, bit-exact
+                aux.restore(&self.tasks, &rs.lambdas, &rs.thetas);
+                for (slot, theta) in thetas.iter_mut().zip(rs.thetas) {
+                    *slot = Some(theta);
+                }
+                (rs.state, rs.next_step, Xoshiro256::from_state(rs.rng))
+            }
+        };
 
         // --- main loop -----------------------------------------------------
-        let mut rng = Xoshiro256::new(self.cfg.seed);
         let (mut x, mut y) = (Vec::new(), Vec::new());
         let mut mu_vec = vec![0.0f32; nl];
-        for (step, mu) in self.cfg.mu.iter() {
+        for (step, mu) in self.cfg.mu.iter().skip(start_step) {
             let lr = self.cfg.lr.lr_at(step);
             let epochs = if step == 0 {
                 self.cfg.first_step_epochs.unwrap_or(self.cfg.epochs_per_step)
@@ -491,6 +613,32 @@ impl LcAlgorithm {
                 c_secs,
                 test_eval,
             });
+
+            // end-of-step checkpoint: the C step and dual update above
+            // committed this step's Θ/λ, so (state, λ, Θ, rng, step+1) is
+            // exactly what a bit-identical resume needs.  A failed save is
+            // a hard error — silently continuing would leave the user
+            // believing they are crash-safe when they are not.
+            if self.cfg.save_every > 0 && (step + 1) % self.cfg.save_every == 0 {
+                if let Some(dir) = &self.cfg.run_dir {
+                    let theta_refs: Vec<Theta> = thetas
+                        .iter()
+                        .map(|t| t.as_ref().expect("Θ committed by this step's C step").clone())
+                        .collect();
+                    checkpoint::save_run_state(
+                        dir,
+                        self.cfg.keep_checkpoints,
+                        &self.fingerprint(),
+                        step + 1,
+                        rng.state(),
+                        &state,
+                        &aux.lambdas,
+                        &theta_refs,
+                    )?;
+                }
+            }
+            // pure crash site between steps, for the kill/resume matrix
+            failpoint::hit("lc.step_end")?;
         }
 
         // --- finalize: the compressed model is Δ(Θ) -------------------------

@@ -89,6 +89,24 @@ impl AuxState {
         &self.covered
     }
 
+    /// Restore the auxiliary state from a run-state checkpoint: copy the
+    /// saved multipliers λ into the persistent buffers and scatter each
+    /// task's committed Θ back into the deltas — exactly the state the C
+    /// step of the checkpointed step left behind, so the resumed L step
+    /// sees bit-identical `Δ(Θ)` and `λ`.
+    pub fn restore(&mut self, tasks: &TaskSet, lambdas: &[Matrix], thetas: &[Theta]) {
+        let AuxState { deltas, lambdas: own, ws, .. } = self;
+        assert_eq!(lambdas.len(), own.len(), "one λ matrix per layer");
+        assert_eq!(thetas.len(), tasks.tasks.len(), "one Θ per task");
+        for (dst, src) in own.iter_mut().zip(lambdas.iter()) {
+            assert_eq!((dst.rows, dst.cols), (src.rows, src.cols), "λ shape mismatch");
+            dst.data.copy_from_slice(&src.data);
+        }
+        for (task, theta) in tasks.tasks.iter().zip(thetas.iter()) {
+            task.scatter_from(theta, deltas, ws);
+        }
+    }
+
     /// Run all tasks' C steps on `w_eff = w − λ/μ` (λ shift only when
     /// `mu_for_lambda > 0`), scatter the decompressed results into the
     /// persistent deltas, and return per-task distortions.  Gathers,

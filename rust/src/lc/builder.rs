@@ -113,6 +113,12 @@ impl Experiment {
             eval_every: lc_sec.usize_or("eval_every", 0),
             quiet: lc_sec.get("quiet").and_then(|v| v.as_bool()).unwrap_or(false),
             l_mode: LMode::Dense, // resolved later: CLI > config > env
+            save_every: lc_sec.usize_or("save_every", 0),
+            run_dir: lc_sec
+                .get("run_dir")
+                .and_then(|v| v.as_str())
+                .map(std::path::PathBuf::from),
+            keep_checkpoints: lc_sec.usize_or("keep_checkpoints", 3),
         };
 
         let (backend, numerics, l_mode) = match cfg.section("runtime") {

@@ -37,7 +37,8 @@ use lc::util::log::{set_level, Level};
 const VALUE_OPTS: &[&str] = &[
     "model", "epochs", "out", "out-compressed", "checkpoint", "config", "artifacts", "seed",
     "n-train", "n-test", "lr0", "threads", "backend", "numerics", "l-mode", "eval-batch", "qps",
-    "requests", "max-batch", "max-delay-us", "swap-checkpoint",
+    "requests", "max-batch", "max-delay-us", "max-queue", "swap-checkpoint", "save-every",
+    "run-dir", "resume",
 ];
 
 fn main() {
@@ -85,10 +86,13 @@ fn usage() {
          train    --model NAME [--epochs N] [--seed S] --out FILE.lcck\n  \
          eval     --checkpoint FILE.lcck [--n-test N]\n  \
          compress --config EXP.lcc [--checkpoint REF.lcck] [--out-compressed FILE.lccz]\n           \
-         [--l-mode dense|compressed] (train the L step through the compressed kernels)\n  \
+         [--l-mode dense|compressed] (train the L step through the compressed kernels)\n           \
+         [--save-every N --run-dir DIR] (durable run state every N LC steps)\n           \
+         [--resume DIR] (continue a crashed run bit-identically from DIR)\n  \
          infer    --checkpoint FILE.lccz|FILE.lcck [--n-test N] [--no-compare] [--eval-batch N]\n  \
          serve    --checkpoint FILE.lccz [--requests N] [--qps Q] [--max-batch N]\n           \
-         [--max-delay-us US] [--eval-batch N] [--swap-checkpoint FILE.lccz] [--bench]\n\
+         [--max-delay-us US] [--max-queue N] [--eval-batch N]\n           \
+         [--swap-checkpoint FILE.lccz] [--bench]\n\
          common options: --artifacts DIR (default ./artifacts),\n                 \
          --backend auto|native|pjrt (default auto),\n                 \
          --numerics exact|fast (GEMM numerics; default exact), --quiet, --verbose"
@@ -281,6 +285,17 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let mut exp = Experiment::from_config(&cfg).map_err(anyhow::Error::msg)?;
     apply_numerics(args, exp.numerics)?;
     exp.lc.l_mode = resolve_l_mode(args, exp.l_mode)?;
+    // checkpointing: CLI overrides config; --resume implies the run dir
+    if args.get("save-every").is_some() {
+        exp.lc.save_every = args.get_parse("save-every", 0).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(d) = args.get("run-dir") {
+        exp.lc.run_dir = Some(PathBuf::from(d));
+    }
+    let resume_dir: Option<PathBuf> = args.get("resume").map(PathBuf::from);
+    if let Some(d) = &resume_dir {
+        exp.lc.run_dir = Some(d.clone());
+    }
     let mut rt = runtime_from_args(args, exp.backend)?;
     lc::info!(
         "L-step backend: {} / l_mode {:?} ({})",
@@ -293,47 +308,60 @@ fn cmd_compress(args: &Args) -> Result<()> {
 
     let alg = LcAlgorithm::new(&mut rt, exp.spec.clone(), exp.tasks, exp.lc.clone())?;
 
-    // reference model: load checkpoint or train from scratch
-    let mut state = match args.get("checkpoint") {
-        Some(p) => {
-            let s = checkpoint::load(Path::new(p))?;
-            if s.spec != exp.spec {
-                bail!("checkpoint model {:?} != config model {:?}", s.spec.name, exp.spec.name);
-            }
-            s
-        }
+    // resume: the run-state record carries the full LC state, so the
+    // reference model (and its training) is skipped entirely
+    let (out, reference) = match &resume_dir {
+        Some(dir) => (alg.resume(dir, &train_data, &test_data)?, None),
         None => {
-            let mut s = ParamState::init(&exp.spec, exp.model_seed);
-            lc::info!("training reference for {} epochs", exp.reference_epochs);
-            alg.train_reference(
-                &mut s,
-                &train_data,
-                exp.reference_epochs,
-                &LrSchedule { lr0: 0.1, decay: 0.98 },
-            )?;
-            s
+            // reference model: load checkpoint or train from scratch
+            let mut state = match args.get("checkpoint") {
+                Some(p) => {
+                    let s = checkpoint::load(Path::new(p))?;
+                    if s.spec != exp.spec {
+                        bail!(
+                            "checkpoint model {:?} != config model {:?}",
+                            s.spec.name,
+                            exp.spec.name
+                        );
+                    }
+                    s
+                }
+                None => {
+                    let mut s = ParamState::init(&exp.spec, exp.model_seed);
+                    lc::info!("training reference for {} epochs", exp.reference_epochs);
+                    alg.train_reference(
+                        &mut s,
+                        &train_data,
+                        exp.reference_epochs,
+                        &LrSchedule { lr0: 0.1, decay: 0.98 },
+                    )?;
+                    s
+                }
+            };
+            state.reset_momenta();
+            let ref_train = alg.evaluate(&state, &train_data)?;
+            let ref_test = alg.evaluate(&state, &test_data)?;
+            println!(
+                "reference: train_err={} test_err={}",
+                pct(ref_train.error),
+                pct(ref_test.error)
+            );
+            let out = alg.run(state, &train_data, &test_data)?;
+            (out, Some((ref_train.error, ref_test.error)))
         }
     };
-    state.reset_momenta();
-    let ref_train = alg.evaluate(&state, &train_data)?;
-    let ref_test = alg.evaluate(&state, &test_data)?;
-    println!(
-        "reference: train_err={} test_err={}",
-        pct(ref_train.error),
-        pct(ref_test.error)
-    );
-
-    let out = alg.run(state, &train_data, &test_data)?;
     let mut t =
         Table::new(&["", "train err", "test err", "storage ratio", "FLOPs ratio", "params"]);
-    t.row(&[
-        "reference".into(),
-        pct(ref_train.error),
-        pct(ref_test.error),
-        "1.0x".into(),
-        "1.0x".into(),
-        exp.spec.n_params().to_string(),
-    ]);
+    if let Some((ref_train_err, ref_test_err)) = reference {
+        t.row(&[
+            "reference".into(),
+            pct(ref_train_err),
+            pct(ref_test_err),
+            "1.0x".into(),
+            "1.0x".into(),
+            exp.spec.n_params().to_string(),
+        ]);
+    }
     t.row(&[
         "LC compressed".into(),
         pct(out.final_train.error),
@@ -530,6 +558,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch: usize = args.get_parse("max-batch", 32).map_err(anyhow::Error::msg)?;
     let max_delay_us: u64 =
         args.get_parse("max-delay-us", 1000u64).map_err(anyhow::Error::msg)?;
+    let max_queue: usize = args.get_parse("max-queue", 1024).map_err(anyhow::Error::msg)?;
     let eval_batch: Option<usize> = match args.get("eval-batch") {
         Some(_) => Some(args.get_parse("eval-batch", 512).map_err(anyhow::Error::msg)?),
         None => None,
@@ -579,7 +608,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("{}", gemm_banner());
-    let engine = ServeEngine::start(slot, BatchPolicy { max_batch, max_delay_us })?;
+    let engine = ServeEngine::start(slot, BatchPolicy { max_batch, max_delay_us, max_queue })?;
     let (_, pool) = load_data(0, n_test, 1, threads);
     let swap: Option<PathBuf> = args.get("swap-checkpoint").map(PathBuf::from);
     let halfway = requests / 2;

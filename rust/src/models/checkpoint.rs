@@ -1,5 +1,13 @@
-//! Checkpoint I/O for [`ParamState`] and for *compressed* models
-//! (substrate; no serde available).
+//! Checkpoint I/O for [`ParamState`], for *compressed* models, and for
+//! LCRS run-state records (substrate; no serde available).
+//!
+//! Every on-disk artifact is written through [`crate::util::durable`]
+//! (temp sibling → fsync → rename → directory fsync) and ends with a
+//! 16-byte CRC32 integrity footer that every path-based load verifies
+//! first: a crash can only ever leave the old complete file or the new
+//! complete file, and torn or bit-rotted files are rejected instead of
+//! parsed.  The byte layouts documented below are the *payloads inside*
+//! that footer.
 //!
 //! Dense format (little-endian):
 //! ```text
@@ -25,7 +33,7 @@
 //! materializing dense weights ([`crate::infer::CompressedModel`]).
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, ensure, Context, Result};
 
@@ -34,6 +42,7 @@ use crate::compress::Theta;
 use crate::infer::{CompressedLayer, CompressedModel};
 use crate::linalg::conv::Conv2dShape;
 use crate::tensor::{Matrix, Workspace};
+use crate::util::durable;
 use crate::util::mmap::MappedFile;
 
 use super::{lookup, mlp_ops, Activation, LayerOp, ModelSpec, OpKind, ParamState};
@@ -58,9 +67,7 @@ const MAX_CODEBOOK: usize = 1 << 20;
 const MAX_ADDITIVE_PARTS: usize = 64;
 
 pub fn save(state: &ParamState, path: &Path) -> Result<()> {
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
+    let mut f: Vec<u8> = Vec::new();
     f.write_all(MAGIC)?;
     f.write_all(&VERSION.to_le_bytes())?;
     let name = state.spec.name.as_bytes();
@@ -74,44 +81,53 @@ pub fn save(state: &ParamState, path: &Path) -> Result<()> {
         write_f32s(&mut f, &state.weights[l].data)?;
         write_f32s(&mut f, &state.biases[l])?;
     }
-    Ok(())
+    durable::write_atomic_footered(path, f)
+        .with_context(|| format!("writing {}", path.display()))
 }
 
 pub fn load(path: &Path) -> Result<ParamState> {
-    let mut f = std::io::BufReader::new(
-        std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
-    );
+    let bytes = durable::read_verified(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    load_state_bytes(&bytes, &path.display().to_string())
+}
+
+/// Parse a dense checkpoint payload (the bytes *inside* the integrity
+/// footer).  Split from [`load`] so corruption tests can drive the parser
+/// directly; like the LCCZ parser, truncated or corrupt input must return
+/// an error, never panic.
+pub fn load_state_bytes(bytes: &[u8], label: &str) -> Result<ParamState> {
+    let mut r: &[u8] = bytes;
+    let f = &mut r;
     let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic).with_context(|| format!("{label}: reading magic"))?;
     if &magic != MAGIC {
-        bail!("{}: not an lcc checkpoint", path.display());
+        bail!("{label}: not an lcc checkpoint");
     }
-    let version = read_u32(&mut f)?;
+    let version = read_u32(f)?;
     if version != VERSION {
-        bail!("{}: unsupported checkpoint version {version}", path.display());
+        bail!("{label}: unsupported checkpoint version {version}");
     }
-    let name_len = read_u32(&mut f)? as usize;
+    let name_len = read_u32(f)? as usize;
+    ensure!(name_len <= MAX_NAME_LEN, "{label}: model name of {name_len} bytes");
     let mut name = vec![0u8; name_len];
-    f.read_exact(&mut name)?;
+    f.read_exact(&mut name).with_context(|| format!("{label}: reading model name"))?;
     let name = String::from_utf8(name).context("checkpoint model name")?;
-    let n_widths = read_u32(&mut f)? as usize;
+    let n_widths = read_u32(f)? as usize;
+    ensure!(n_widths <= MAX_WIDTHS, "{label}: {n_widths} widths");
     let mut widths = Vec::with_capacity(n_widths);
     for _ in 0..n_widths {
-        widths.push(read_u32(&mut f)? as usize);
+        widths.push(read_u32(f)? as usize);
     }
     let spec: ModelSpec = lookup(&name).map_err(anyhow::Error::msg)?;
     if spec.widths != widths {
-        bail!(
-            "{}: checkpoint widths {widths:?} do not match registry {:?}",
-            path.display(),
-            spec.widths
-        );
+        bail!("{label}: checkpoint widths {widths:?} do not match registry {:?}", spec.widths);
     }
     let mut state = ParamState::init(&spec, 0);
     for l in 0..spec.n_layers() {
-        read_f32s(&mut f, &mut state.weights[l].data)?;
-        read_f32s(&mut f, &mut state.biases[l])?;
+        read_f32s(f, &mut state.weights[l].data)?;
+        read_f32s(f, &mut state.biases[l])?;
     }
+    ensure!(r.is_empty(), "{label}: {} trailing bytes after checkpoint payload", r.len());
     state.reset_momenta();
     Ok(state)
 }
@@ -267,9 +283,7 @@ pub fn save_compressed(ck: &CompressedCheckpoint, path: &Path) -> Result<()> {
     ensure!(ck.widths.len() == ck.n_layers() + 1, "widths count != ops + 1");
     ensure!(ck.layers.len() == ck.n_layers(), "layer count != ops");
     ensure!(ck.biases.len() == ck.n_layers(), "bias count != ops");
-    let mut f = std::io::BufWriter::new(
-        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
-    );
+    let mut f: Vec<u8> = Vec::new();
     f.write_all(MAGIC_COMPRESSED)?;
     f.write_all(&VERSION_COMPRESSED.to_le_bytes())?;
     let name = ck.name.as_bytes();
@@ -300,7 +314,8 @@ pub fn save_compressed(ck: &CompressedCheckpoint, path: &Path) -> Result<()> {
         ensure!(ck.biases[l].len() == ck.ops[l].bias_len(), "layer {l}: bias length");
         write_f32s(&mut f, &ck.biases[l])?;
     }
-    Ok(())
+    durable::write_atomic_footered(path, f)
+        .with_context(|| format!("writing {}", path.display()))
 }
 
 /// Load a compressed checkpoint.  The model name is *not* required to be
@@ -311,7 +326,11 @@ pub fn save_compressed(ck: &CompressedCheckpoint, path: &Path) -> Result<()> {
 /// a buffered read feeds the same parser.
 pub fn load_compressed(path: &Path) -> Result<CompressedCheckpoint> {
     let m = MappedFile::open(path)?;
-    load_compressed_bytes(m.bytes(), &path.display().to_string())
+    let label = path.display().to_string();
+    // The footer check walks the mapped bytes once; the payload slice it
+    // returns still borrows the mapping, so parsing stays zero-copy.
+    let payload = durable::verify_footer(m.bytes(), &label)?;
+    load_compressed_bytes(payload, &label)
 }
 
 /// Parse a compressed checkpoint from raw bytes (the mmap'd registry
@@ -380,7 +399,273 @@ pub fn load_compressed_bytes(bytes: &[u8], label: &str) -> Result<CompressedChec
         layers.push(payload);
         biases.push(b);
     }
+    ensure!(r.is_empty(), "{label}: {} trailing bytes after checkpoint payload", r.len());
     Ok(CompressedCheckpoint { name, ops, widths, layers, biases })
+}
+
+// ---------------------------------------------------------------------------
+// LCRS run-state records: everything the LC loop needs to resume bit-identically.
+// ---------------------------------------------------------------------------
+
+const MAGIC_RUN_STATE: &[u8; 4] = b"LCRS";
+const VERSION_RUN_STATE: u32 = 1;
+/// Run-state files are named `step_NNNNNN.lcrs` inside the run directory.
+pub const RUN_STATE_EXT: &str = "lcrs";
+
+/// The configuration identity of an LC run, stored in every LCRS record
+/// and required to match on load: resuming under a different μ schedule,
+/// learning rate, seed, or task structure would silently diverge from the
+/// uninterrupted run, so it is an error instead.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunFingerprint {
+    pub mu0: f64,
+    pub growth: f64,
+    pub steps: u64,
+    pub lr0: f64,
+    pub decay: f64,
+    pub epochs_per_step: u64,
+    /// 0 encodes "no first-step override".
+    pub first_step_epochs: u64,
+    pub use_al: bool,
+    pub seed: u64,
+    pub l_mode: u8,
+    pub n_tasks: u64,
+}
+
+/// A restored LC run state (see [`save_run_state`] for the contents).
+pub struct RunState {
+    /// The LC step the resumed loop starts at (steps `0..next_step` are done).
+    pub next_step: usize,
+    /// Batch-order RNG state at the moment of the save.
+    pub rng: [u64; 4],
+    /// Trained weights, biases, and optimizer momenta.
+    pub state: ParamState,
+    /// Lagrange multipliers λ, one matrix per layer.
+    pub lambdas: Vec<Matrix>,
+    /// Committed Θ per task (the C-step results of step `next_step − 1`).
+    pub thetas: Vec<Theta>,
+}
+
+fn run_state_file_name(next_step: usize) -> String {
+    format!("step_{next_step:06}.{RUN_STATE_EXT}")
+}
+
+/// Durably write one LCRS record into `dir` (created if missing) and
+/// rotate: after the write, only the newest `keep` records remain.  The
+/// record captures the complete end-of-step state — Θ per task, λ, the
+/// μ-schedule position (`next_step`), weights, optimizer momenta, and the
+/// RNG stream — under the run's [`RunFingerprint`], so a resumed loop is
+/// bit-identical to one that never stopped.
+#[allow(clippy::too_many_arguments)]
+pub fn save_run_state(
+    dir: &Path,
+    keep: usize,
+    fp: &RunFingerprint,
+    next_step: usize,
+    rng: [u64; 4],
+    state: &ParamState,
+    lambdas: &[Matrix],
+    thetas: &[Theta],
+) -> Result<PathBuf> {
+    ensure!(lambdas.len() == state.spec.n_layers(), "one λ matrix per layer");
+    ensure!(thetas.len() as u64 == fp.n_tasks, "one Θ per task");
+    let mut f: Vec<u8> = Vec::new();
+    f.write_all(MAGIC_RUN_STATE)?;
+    f.write_all(&VERSION_RUN_STATE.to_le_bytes())?;
+    write_fingerprint(&mut f, fp)?;
+    let name = state.spec.name.as_bytes();
+    f.write_all(&(name.len() as u32).to_le_bytes())?;
+    f.write_all(name)?;
+    f.write_all(&(state.spec.widths.len() as u32).to_le_bytes())?;
+    for &w in &state.spec.widths {
+        f.write_all(&(w as u32).to_le_bytes())?;
+    }
+    f.write_all(&(next_step as u64).to_le_bytes())?;
+    for s in rng {
+        f.write_all(&s.to_le_bytes())?;
+    }
+    for l in 0..state.spec.n_layers() {
+        write_f32s(&mut f, &state.weights[l].data)?;
+        write_f32s(&mut f, &state.biases[l])?;
+        write_f32s(&mut f, &state.w_momenta[l].data)?;
+        write_f32s(&mut f, &state.b_momenta[l])?;
+        ensure!(
+            (lambdas[l].rows, lambdas[l].cols) == state.spec.layer_shape(l),
+            "layer {l}: λ shape mismatch"
+        );
+        write_f32s(&mut f, &lambdas[l].data)?;
+    }
+    for t in thetas {
+        write_theta(&mut f, t)?;
+    }
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+    let path = dir.join(run_state_file_name(next_step));
+    durable::write_atomic_footered(&path, f)
+        .with_context(|| format!("writing {}", path.display()))?;
+    prune_run_states(dir, keep.max(1))?;
+    Ok(path)
+}
+
+fn write_fingerprint<W: Write>(w: &mut W, fp: &RunFingerprint) -> Result<()> {
+    for v in [fp.mu0, fp.growth, fp.lr0, fp.decay] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for v in [fp.steps, fp.epochs_per_step, fp.first_step_epochs, fp.seed, fp.n_tasks] {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.write_all(&[u8::from(fp.use_al), fp.l_mode])?;
+    Ok(())
+}
+
+fn read_fingerprint<R: Read>(r: &mut R) -> Result<RunFingerprint> {
+    let mut f64s = [0.0f64; 4];
+    for v in f64s.iter_mut() {
+        let mut buf = [0u8; 8];
+        r.read_exact(&mut buf)?;
+        *v = f64::from_le_bytes(buf);
+    }
+    let mut u64s = [0u64; 5];
+    for v in u64s.iter_mut() {
+        *v = read_u64(r)?;
+    }
+    let mut flags = [0u8; 2];
+    r.read_exact(&mut flags)?;
+    ensure!(flags[0] <= 1, "bad use_al flag {}", flags[0]);
+    Ok(RunFingerprint {
+        mu0: f64s[0],
+        growth: f64s[1],
+        lr0: f64s[2],
+        decay: f64s[3],
+        steps: u64s[0],
+        epochs_per_step: u64s[1],
+        first_step_epochs: u64s[2],
+        seed: u64s[3],
+        n_tasks: u64s[4],
+        use_al: flags[0] != 0,
+        l_mode: flags[1],
+    })
+}
+
+/// Load one LCRS record.  `task_lens[i]` is the decompressed weight count
+/// of task `i`'s Θ (the caller owns the task structure), bounding every
+/// wire-derived allocation; the stored fingerprint, model name, and
+/// widths must match `spec`/`expect_fp`.
+pub fn load_run_state(
+    path: &Path,
+    spec: &ModelSpec,
+    task_lens: &[usize],
+    expect_fp: &RunFingerprint,
+) -> Result<RunState> {
+    let bytes = durable::read_verified(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let label = path.display().to_string();
+    let mut r: &[u8] = &bytes;
+    let f = &mut r;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic).with_context(|| format!("{label}: reading magic"))?;
+    if &magic != MAGIC_RUN_STATE {
+        bail!("{label}: not an lcc run-state record");
+    }
+    let version = read_u32(f)?;
+    if version != VERSION_RUN_STATE {
+        bail!("{label}: unsupported run-state version {version}");
+    }
+    let fp = read_fingerprint(f)?;
+    ensure!(
+        &fp == expect_fp,
+        "{label}: run state was written under a different configuration \
+         (stored {fp:?}, current {expect_fp:?}); resuming would diverge"
+    );
+    let name_len = read_u32(f)? as usize;
+    ensure!(name_len <= MAX_NAME_LEN, "{label}: model name of {name_len} bytes");
+    let mut name = vec![0u8; name_len];
+    f.read_exact(&mut name).with_context(|| format!("{label}: reading model name"))?;
+    let name = String::from_utf8(name).context("run-state model name")?;
+    ensure!(name == spec.name, "{label}: run state is for model {name:?}, not {:?}", spec.name);
+    let n_widths = read_u32(f)? as usize;
+    ensure!(n_widths <= MAX_WIDTHS, "{label}: {n_widths} widths");
+    let mut widths = Vec::with_capacity(n_widths);
+    for _ in 0..n_widths {
+        widths.push(read_u32(f)? as usize);
+    }
+    ensure!(widths == spec.widths, "{label}: run-state widths {widths:?} != spec {:?}", spec.widths);
+    let next_step = read_u64(f)? as usize;
+    ensure!(next_step as u64 <= fp.steps, "{label}: next_step {next_step} beyond the μ schedule");
+    let mut rng = [0u64; 4];
+    for s in rng.iter_mut() {
+        *s = read_u64(f)?;
+    }
+    // A fresh-generation state: mutating its buffers before first use is
+    // safe for the GEMM pack cache (no panel was ever packed from it).
+    let mut state = ParamState::init(spec, 0);
+    let mut lambdas = Vec::with_capacity(spec.n_layers());
+    for l in 0..spec.n_layers() {
+        read_f32s(f, &mut state.weights[l].data)?;
+        read_f32s(f, &mut state.biases[l])?;
+        read_f32s(f, &mut state.w_momenta[l].data)?;
+        read_f32s(f, &mut state.b_momenta[l])?;
+        let (m, n) = spec.layer_shape(l);
+        let mut lam = Matrix::zeros(m, n);
+        read_f32s(f, &mut lam.data)?;
+        lambdas.push(lam);
+    }
+    ensure!(task_lens.len() as u64 == fp.n_tasks, "{label}: task count mismatch");
+    let mut thetas = Vec::with_capacity(task_lens.len());
+    for &len in task_lens {
+        thetas.push(read_theta(f, len)?);
+    }
+    ensure!(r.is_empty(), "{label}: {} trailing bytes after run state", r.len());
+    Ok(RunState { next_step, rng, state, lambdas, thetas })
+}
+
+/// All LCRS files in `dir`, sorted ascending by file name (and hence by
+/// step — the zero-padded naming makes the orders agree).  Temp siblings
+/// from interrupted atomic writes (dotfiles) are excluded.
+fn run_state_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("step_") && name.ends_with(&format!(".{RUN_STATE_EXT}")) {
+            files.push(entry.path());
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Load the newest *usable* run state from `dir`: torn or corrupt records
+/// (e.g. a file written by a crashed process that bypassed the atomic
+/// path) are skipped with a warning, falling back to the next-newest good
+/// generation.  `Ok(None)` when the directory holds no usable record.
+pub fn latest_run_state(
+    dir: &Path,
+    spec: &ModelSpec,
+    task_lens: &[usize],
+    expect_fp: &RunFingerprint,
+) -> Result<Option<(PathBuf, RunState)>> {
+    if !dir.is_dir() {
+        return Ok(None);
+    }
+    for path in run_state_files(dir)?.into_iter().rev() {
+        match load_run_state(&path, spec, task_lens, expect_fp) {
+            Ok(rs) => return Ok(Some((path, rs))),
+            Err(e) => {
+                crate::info!("skipping unusable run state {}: {e:#}", path.display());
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Delete all but the newest `keep` LCRS records in `dir`.
+fn prune_run_states(dir: &Path, keep: usize) -> Result<()> {
+    let files = run_state_files(dir)?;
+    for old in files.iter().take(files.len().saturating_sub(keep)) {
+        std::fs::remove_file(old).with_context(|| format!("pruning {}", old.display()))?;
+    }
+    Ok(())
 }
 
 const OP_DENSE: u8 = 0;
@@ -849,6 +1134,9 @@ mod tests {
         let dir = std::env::temp_dir().join("lcc_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("v1.lccz");
+        // the v1 *payload* predates the op graph; the integrity footer is
+        // orthogonal to the payload version and always required on disk
+        durable::append_footer(&mut buf);
         std::fs::write(&path, &buf).unwrap();
         let loaded = load_compressed(&path).unwrap();
         assert_eq!(loaded.ops, mlp_ops(&widths));
@@ -889,9 +1177,11 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("trunc.lccz");
         save_compressed(&ck, &path).unwrap();
-        let bytes = std::fs::read(&path).unwrap();
+        let file = std::fs::read(&path).unwrap();
         std::fs::remove_file(&path).unwrap();
-        assert!(load_compressed_bytes(&bytes, "full").is_ok());
+        // the parser sees the payload inside the integrity footer
+        let bytes = durable::verify_footer(&file, "trunc").unwrap();
+        assert!(load_compressed_bytes(bytes, "full").is_ok());
         for cut in 0..bytes.len() {
             assert!(
                 load_compressed_bytes(&bytes[..cut], "prefix").is_err(),
@@ -899,6 +1189,60 @@ mod tests {
                 bytes.len()
             );
         }
+        // and the footer check itself rejects every strict prefix of the
+        // file, so torn writes die before the parser even runs
+        for cut in 0..file.len() {
+            assert!(durable::verify_footer(&file[..cut], "prefix").is_err());
+        }
+    }
+
+    #[test]
+    fn dense_every_truncation_errors_never_panics() {
+        // PR-8 hardening for LCCZ, extended to the dense .lcck parser:
+        // every strict prefix of a valid payload must return Err
+        let spec = lookup("mlp-small").unwrap();
+        let state = ParamState::init(&spec, 17);
+        let dir = std::env::temp_dir().join("lcc_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.lcck");
+        save(&state, &path).unwrap();
+        let file = std::fs::read(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        let bytes = durable::verify_footer(&file, "trunc").unwrap();
+        assert!(load_state_bytes(bytes, "full").is_ok());
+        // the header region byte by byte, then the bulk f32 payload at a
+        // coarse stride (every cut point in ~320k bytes is pure slowdown;
+        // the parser consumes f32s uniformly)
+        let header = 4 + 4 + 4 + "mlp-small".len() + 4 + 3 * 4;
+        let cuts = (0..header).chain((header..bytes.len()).step_by(1013));
+        for cut in cuts {
+            assert!(
+                load_state_bytes(&bytes[..cut], "prefix").is_err(),
+                "prefix of {cut}/{} bytes should fail to parse",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn dense_bit_flip_rejected_by_footer() {
+        // a single flipped bit anywhere in the file must fail the CRC
+        // check at load (sampled positions; CRC32 catches any 1-bit flip)
+        let spec = lookup("mlp-small").unwrap();
+        let state = ParamState::init(&spec, 23);
+        let dir = std::env::temp_dir().join("lcc_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flip.lcck");
+        save(&state, &path).unwrap();
+        let file = std::fs::read(&path).unwrap();
+        assert!(load(&path).is_ok());
+        for pos in (0..file.len()).step_by(977).chain([file.len() - 1]) {
+            let mut bad = file.clone();
+            bad[pos] ^= 1 << (pos % 8);
+            std::fs::write(&path, &bad).unwrap();
+            assert!(load(&path).is_err(), "flip at byte {pos} accepted");
+        }
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]
@@ -992,6 +1336,89 @@ mod tests {
         assert_eq!(v2.widths, v1.widths);
         assert_eq!(v2.biases, v1.biases);
         assert_eq!(v2.to_dense_weights().unwrap(), v1.to_dense_weights().unwrap());
+    }
+
+    fn sample_fp() -> RunFingerprint {
+        RunFingerprint {
+            mu0: 9e-5,
+            growth: 1.1,
+            steps: 10,
+            lr0: 0.09,
+            decay: 0.98,
+            epochs_per_step: 3,
+            first_step_epochs: 0,
+            use_al: true,
+            seed: 42,
+            l_mode: 0,
+            n_tasks: 1,
+        }
+    }
+
+    #[test]
+    fn run_state_roundtrip_rotation_and_fallback() {
+        let spec = ModelSpec::mlp("rs-test", &[4, 3, 2], 8, 8);
+        let mut state = ParamState::init(&spec, 31);
+        state.w_momenta[0].data[3] = 0.125;
+        state.b_momenta[1][0] = -2.5;
+        let lambdas = vec![
+            Matrix::from_vec(4, 3, (0..12).map(|i| i as f32 * 0.5 - 2.0).collect()),
+            Matrix::zeros(3, 2),
+        ];
+        let thetas = vec![Theta::Quantized {
+            codebook: vec![-1.0, 2.0],
+            assignments: vec![0, 1, 1, 0, 1, 0, 0, 0, 1, 1, 0, 1],
+        }];
+        let task_lens = [12usize];
+        let fp = sample_fp();
+        let dir = std::env::temp_dir().join(format!("lcc_runstate_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        for step in 1..=5usize {
+            save_run_state(&dir, 2, &fp, step, [step as u64; 4], &state, &lambdas, &thetas)
+                .unwrap();
+        }
+        // rotation: only the newest 2 generations survive
+        let files = run_state_files(&dir).unwrap();
+        let names: Vec<String> = files
+            .iter()
+            .map(|p| p.file_name().unwrap().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["step_000004.lcrs", "step_000005.lcrs"]);
+
+        let (path, rs) = latest_run_state(&dir, &spec, &task_lens, &fp).unwrap().unwrap();
+        assert!(path.ends_with("step_000005.lcrs"));
+        assert_eq!(rs.next_step, 5);
+        assert_eq!(rs.rng, [5u64; 4]);
+        // bit-exact restoration of every component
+        for l in 0..2 {
+            assert_eq!(rs.state.weights[l].data, state.weights[l].data);
+            assert_eq!(rs.state.biases[l], state.biases[l]);
+            assert_eq!(rs.state.w_momenta[l].data, state.w_momenta[l].data);
+            assert_eq!(rs.state.b_momenta[l], state.b_momenta[l]);
+            assert_eq!(rs.lambdas[l], lambdas[l]);
+        }
+        assert_eq!(rs.thetas[0].decompress(), thetas[0].decompress());
+
+        // a different run configuration must be refused
+        let mut fp2 = fp.clone();
+        fp2.seed += 1;
+        let err = load_run_state(&path, &spec, &task_lens, &fp2).unwrap_err();
+        assert!(err.to_string().contains("different configuration"), "{err}");
+
+        // corrupt the newest record: resume falls back to the previous one
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x08;
+        std::fs::write(&path, &raw).unwrap();
+        let (fb_path, fb) = latest_run_state(&dir, &spec, &task_lens, &fp).unwrap().unwrap();
+        assert!(fb_path.ends_with("step_000004.lcrs"));
+        assert_eq!(fb.next_step, 4);
+
+        // both unusable → no run state (not an error, not garbage)
+        std::fs::remove_file(&fb_path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert!(latest_run_state(&dir, &spec, &task_lens, &fp).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -26,18 +26,22 @@ use anyhow::{anyhow, ensure, Result};
 use super::stats::{global_stats, ServeStats};
 use crate::serve::registry::ModelSlot;
 
-/// Size-or-deadline batching policy.
+/// Size-or-deadline batching policy with a bounded admission queue.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// Flush as soon as this many requests are queued.
     pub max_batch: usize,
     /// Flush at the latest this long after the oldest queued request.
     pub max_delay_us: u64,
+    /// Admission bound: a submit that would make the queue deeper than
+    /// this is shed with an immediate error instead of growing the queue
+    /// (and its latency tail) without limit.
+    pub max_queue: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 32, max_delay_us: 1_000 }
+        BatchPolicy { max_batch: 32, max_delay_us: 1_000, max_queue: 1024 }
     }
 }
 
@@ -101,6 +105,7 @@ impl ServeEngine {
     /// Start the collector thread over `slot` with `policy`.
     pub fn start(slot: Arc<ModelSlot>, policy: BatchPolicy) -> Result<ServeEngine> {
         ensure!(policy.max_batch >= 1, "max_batch must be >= 1");
+        ensure!(policy.max_queue >= 1, "max_queue must be >= 1");
         let dim = slot.session().in_dim();
         let shared = Arc::new(Shared {
             q: Mutex::new(QueueState { pending: VecDeque::new(), shutdown: false }),
@@ -127,7 +132,9 @@ impl ServeEngine {
     }
 
     /// Enqueue one example (`x` must be exactly the model's input dim) and
-    /// return immediately; await the answer via [`Pending::wait`].
+    /// return immediately; await the answer via [`Pending::wait`].  A full
+    /// queue (`max_queue` requests already pending) sheds the request with
+    /// an immediate error — accepted requests are still never dropped.
     pub fn submit(&self, x: &[f32]) -> Result<Pending> {
         ensure!(
             x.len() == self.shared.dim,
@@ -140,6 +147,16 @@ impl ServeEngine {
         let depth = {
             let mut q = self.shared.q.lock().unwrap();
             ensure!(!q.shutdown, "serve engine is shutting down");
+            if q.pending.len() >= self.policy.max_queue {
+                let pending = q.pending.len();
+                drop(q);
+                self.shared.stats.record_rejected();
+                global_stats().record_rejected();
+                anyhow::bail!(
+                    "serve queue full ({pending} pending, max_queue {})",
+                    self.policy.max_queue
+                );
+            }
             q.pending.push_back(req);
             q.pending.len()
         };

@@ -37,6 +37,8 @@ pub struct LoadReport {
     pub submitted: usize,
     pub completed: usize,
     pub failed: usize,
+    /// Requests shed at submit (queue at its admission bound).
+    pub shed: usize,
     pub p50_us: u64,
     pub p99_us: u64,
     pub mean_us: u64,
@@ -55,10 +57,11 @@ impl LoadReport {
         let gens: Vec<String> =
             self.generations.iter().map(|(g, n)| format!("g{g}:{n}")).collect();
         format!(
-            "{} ok / {} failed of {} in {:.3}s — {:.0} qps, latency p50 {}us p99 {}us \
+            "{} ok / {} failed / {} shed of {} in {:.3}s — {:.0} qps, latency p50 {}us p99 {}us \
              (mean {}us, max {}us), mean batch {:.1}, generations [{}]",
             self.completed,
             self.failed,
+            self.shed,
             self.submitted,
             self.wall_secs,
             self.qps_sustained,
@@ -107,7 +110,8 @@ pub fn run_load(
         on_request(i);
         match engine.submit(data.image(i % n_pool)) {
             Ok(p) => handles.push(p),
-            Err(_) => report.failed += 1,
+            // shed at the admission bound: counted, never waited on
+            Err(_) => report.shed += 1,
         }
     }
     let mut lat_us: Vec<u64> = Vec::with_capacity(handles.len());
@@ -194,7 +198,12 @@ pub fn bench_sweep(
             let slot = registry.publish_model(model.clone(), format!("sweep:{label}"), false)?;
             let engine = ServeEngine::start(
                 slot,
-                BatchPolicy { max_batch: batch, max_delay_us: opts.max_delay_us },
+                BatchPolicy {
+                    max_batch: batch,
+                    max_delay_us: opts.max_delay_us,
+                    // the sweep measures latency, not shedding: admit all
+                    max_queue: opts.requests.max(1),
+                },
             )?;
             let report = run_load(
                 &engine,
@@ -203,9 +212,10 @@ pub fn bench_sweep(
                 |_| {},
             )?;
             ensure!(
-                report.failed == 0 && report.completed == report.submitted,
-                "{label} batch {batch}: {} failed / {} completed of {}",
+                report.failed == 0 && report.shed == 0 && report.completed == report.submitted,
+                "{label} batch {batch}: {} failed / {} shed / {} completed of {}",
                 report.failed,
+                report.shed,
                 report.completed,
                 report.submitted
             );
@@ -220,6 +230,7 @@ pub fn bench_sweep(
                     ("requests".into(), report.submitted.to_string()),
                     ("completed".into(), report.completed.to_string()),
                     ("failed".into(), report.failed.to_string()),
+                    ("shed".into(), report.shed.to_string()),
                     ("p50_us".into(), report.p50_us.to_string()),
                     ("p99_us".into(), report.p99_us.to_string()),
                     ("mean_us".into(), report.mean_us.to_string()),
@@ -238,8 +249,14 @@ pub fn bench_sweep(
     let max_batch = opts.batches.iter().copied().max().unwrap_or(32);
     let registry = ModelRegistry::new(opts.threads).with_eval_batch(Some(opts.eval_batch));
     let slot = registry.publish_model(model.clone(), format!("swap:{label}:a"), false)?;
-    let engine =
-        ServeEngine::start(slot, BatchPolicy { max_batch, max_delay_us: opts.max_delay_us })?;
+    let engine = ServeEngine::start(
+        slot,
+        BatchPolicy {
+            max_batch,
+            max_delay_us: opts.max_delay_us,
+            max_queue: opts.requests.max(1),
+        },
+    )?;
     let halfway = opts.requests / 2;
     let mut swapped = false;
     let swap_report = run_load(
@@ -264,6 +281,7 @@ pub fn bench_sweep(
             ("requests".into(), swap_report.submitted.to_string()),
             ("completed".into(), swap_report.completed.to_string()),
             ("failed".into(), swap_report.failed.to_string()),
+            ("shed".into(), swap_report.shed.to_string()),
             ("generations".into(), swap_report.generations.len().to_string()),
             ("p99_us".into(), swap_report.p99_us.to_string()),
             ("qps_sustained".into(), format!("{:.1}", swap_report.qps_sustained)),

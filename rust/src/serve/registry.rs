@@ -13,10 +13,18 @@
 //! Checkpoints load through [`MappedFile`]: on 64-bit unix the LCCZ bytes
 //! are parsed straight out of the page cache
 //! ([`load_compressed_bytes`]), with a buffered read everywhere else.
+//!
+//! Publishing degrades gracefully: [`ModelRegistry::publish_file`]
+//! verifies the durable-write integrity footer before parsing, retries a
+//! failing publish per [`PublishPolicy`] (a writer may still be
+//! mid-rename), and on final failure leaves the slot untouched — the
+//! previous generation keeps serving and the rejection is counted in
+//! [`ServeStats`](super::stats::ServeStats).
 
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -24,6 +32,7 @@ use crate::infer::CompressedModel;
 use crate::models::checkpoint::load_compressed_bytes;
 use crate::models::lookup;
 use crate::util::mmap::MappedFile;
+use crate::util::{durable, failpoint};
 
 use super::session::InferSession;
 use super::stats::global_stats;
@@ -31,6 +40,25 @@ use super::stats::global_stats;
 /// Fallback eval-batch for checkpoints whose model name is not in the
 /// registry (matches `lcc infer`).
 const DEFAULT_EVAL_BATCH: usize = 512;
+
+/// Bounded retry for file publishes.  A checkpoint that fails to open,
+/// verify, or parse is retried `retries` more times with `backoff`
+/// between attempts (a concurrent durable writer finishes its rename in
+/// well under one backoff); a publish that still fails is rejected
+/// without touching the serving slot.
+#[derive(Clone, Copy, Debug)]
+pub struct PublishPolicy {
+    /// Additional attempts after the first failure.
+    pub retries: usize,
+    /// Sleep between attempts.
+    pub backoff: Duration,
+}
+
+impl Default for PublishPolicy {
+    fn default() -> Self {
+        PublishPolicy { retries: 2, backoff: Duration::from_millis(50) }
+    }
+}
 
 /// One named slot holding the active session.
 pub struct ModelSlot {
@@ -61,6 +89,7 @@ pub struct ModelRegistry {
     threads: usize,
     /// Overrides the checkpoint's registry/default eval batch when set.
     eval_batch: Option<usize>,
+    publish_policy: PublishPolicy,
     next_gen: AtomicU64,
     slots: Mutex<Vec<Arc<ModelSlot>>>,
 }
@@ -70,6 +99,7 @@ impl ModelRegistry {
         ModelRegistry {
             threads,
             eval_batch: None,
+            publish_policy: PublishPolicy::default(),
             next_gen: AtomicU64::new(0),
             slots: Mutex::new(Vec::new()),
         }
@@ -81,20 +111,66 @@ impl ModelRegistry {
         self
     }
 
+    /// Override the retry policy for [`publish_file`](Self::publish_file).
+    pub fn with_publish_policy(mut self, policy: PublishPolicy) -> ModelRegistry {
+        self.publish_policy = policy;
+        self
+    }
+
     /// Load an LCCZ checkpoint (mmap'd where possible) and publish it into
     /// its model's slot, creating the slot on first publish and
     /// hot-swapping otherwise.
+    ///
+    /// Torn or corrupt files never reach the slot: the integrity footer is
+    /// verified before parsing, failures are retried per the registry's
+    /// [`PublishPolicy`], and a publish that exhausts its retries returns
+    /// `Err` with the slot — and whatever generation it was serving —
+    /// untouched.
     pub fn publish_file(&self, path: &Path) -> Result<Arc<ModelSlot>> {
         let label = path.display().to_string();
+        let mut last_err = None;
+        for attempt in 0..=self.publish_policy.retries {
+            if attempt > 0 {
+                global_stats().record_publish_retry();
+                std::thread::sleep(self.publish_policy.backoff);
+            }
+            match self.try_publish_file(path, &label) {
+                Ok(slot) => return Ok(slot),
+                Err(e) => {
+                    crate::info!(
+                        "publish attempt {}/{} for {label} failed: {e:#}",
+                        attempt + 1,
+                        self.publish_policy.retries + 1
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        global_stats().record_publish_rejected();
+        Err(last_err.expect("at least one publish attempt ran")).with_context(|| {
+            format!(
+                "rejecting publish of {label} after {} attempts; \
+                 the previous generation keeps serving",
+                self.publish_policy.retries + 1
+            )
+        })
+    }
+
+    /// One publish attempt: open, verify the durable footer, parse, build
+    /// the model, swap it in.  Only the final `publish_model` touches the
+    /// slot, so any earlier failure leaves serving state unchanged.
+    fn try_publish_file(&self, path: &Path, label: &str) -> Result<Arc<ModelSlot>> {
+        failpoint::hit("registry.publish")?;
         let mapped = MappedFile::open(path)?;
-        let ck = load_compressed_bytes(mapped.bytes(), &label)
-            .with_context(|| format!("loading {label}"))?;
+        let payload = durable::verify_footer(mapped.bytes(), label)?;
+        let ck =
+            load_compressed_bytes(payload, label).with_context(|| format!("loading {label}"))?;
         let eval_batch = self
             .eval_batch
             .or_else(|| lookup(&ck.name).ok().map(|s| s.eval_batch))
             .unwrap_or(DEFAULT_EVAL_BATCH);
         let model = ck.to_model(eval_batch)?;
-        self.publish_model(model, label, mapped.is_mapped())
+        self.publish_model(model, label.to_string(), mapped.is_mapped())
     }
 
     /// Publish an already-built model (the in-process path: an LC run
@@ -173,6 +249,69 @@ mod tests {
         // the old session stays fully usable while anyone holds it
         let x = vec![0.1f32; s1.in_dim()];
         s1.predict_batch(&x, 1).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn torn_or_corrupt_publish_never_replaces_a_live_generation() {
+        let dir = std::env::temp_dir().join("lcc_registry_torn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.lccz");
+        save_compressed(&tiny_ck(7), &path).unwrap();
+
+        let reg = ModelRegistry::new(1)
+            .with_eval_batch(Some(4))
+            .with_publish_policy(PublishPolicy { retries: 1, backoff: Duration::ZERO });
+        let slot = reg.publish_file(&path).unwrap();
+        let gen_before = slot.session().generation();
+
+        let good = std::fs::read(&path).unwrap();
+        let rejected_before = global_stats().publish_rejected();
+        let retries_before = global_stats().publish_retries();
+
+        // torn write: everything but the last few bytes
+        std::fs::write(&path, &good[..good.len() - 5]).unwrap();
+        let err = reg.publish_file(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("previous generation keeps serving"), "{err:#}");
+
+        // bit flip inside the payload
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x10;
+        std::fs::write(&path, &flipped).unwrap();
+        reg.publish_file(&path).unwrap_err();
+
+        // slot untouched both times, and the old session still answers
+        let s = slot.session();
+        assert_eq!(s.generation(), gen_before);
+        let x = vec![0.0f32; s.in_dim()];
+        s.predict_batch(&x, 1).unwrap();
+        assert!(global_stats().publish_rejected() >= rejected_before + 2);
+        assert!(global_stats().publish_retries() >= retries_before + 2);
+
+        // restoring the good bytes publishes again
+        std::fs::write(&path, &good).unwrap();
+        assert!(reg.publish_file(&path).is_ok());
+        assert!(slot.session().generation() > gen_before);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn transient_publish_failure_recovers_within_retry_budget() {
+        let dir = std::env::temp_dir().join("lcc_registry_retry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.lccz");
+        save_compressed(&tiny_ck(9), &path).unwrap();
+
+        let retries_before = global_stats().publish_retries();
+        crate::util::failpoint::arm("registry.publish", crate::util::failpoint::Action::IoErr, 1);
+        let reg = ModelRegistry::new(1)
+            .with_eval_batch(Some(4))
+            .with_publish_policy(PublishPolicy { retries: 2, backoff: Duration::ZERO });
+        let slot = reg.publish_file(&path).unwrap();
+        crate::util::failpoint::clear("registry.publish");
+        assert_eq!(slot.session().generation(), 1);
+        assert!(global_stats().publish_retries() >= retries_before + 1);
         std::fs::remove_file(&path).unwrap();
     }
 

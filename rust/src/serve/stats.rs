@@ -34,6 +34,13 @@ pub struct ServeStats {
     queue_depth_hw: AtomicU64,
     /// Hot-swaps (publishes into an already-occupied slot).
     swaps: AtomicU64,
+    /// Requests shed at submit because the queue was at `max_queue`.
+    rejected: AtomicU64,
+    /// Publishes abandoned after exhausting retries (torn/corrupt
+    /// checkpoint); the previous generation kept serving.
+    publish_rejected: AtomicU64,
+    /// Individual publish attempts that failed and were retried.
+    publish_retries: AtomicU64,
 }
 
 impl ServeStats {
@@ -49,6 +56,9 @@ impl ServeStats {
             batch_hist: [Z; BATCH_BUCKETS.len() + 1],
             queue_depth_hw: Z,
             swaps: Z,
+            rejected: Z,
+            publish_rejected: Z,
+            publish_retries: Z,
         }
     }
 
@@ -72,6 +82,21 @@ impl ServeStats {
         let bucket =
             BATCH_BUCKETS.iter().position(|&ub| size <= ub).unwrap_or(BATCH_BUCKETS.len());
         self.batch_hist[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request shed at submit (queue at its admission bound).
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One publish abandoned after exhausting its retries.
+    pub fn record_publish_rejected(&self) {
+        self.publish_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One failed publish attempt that will be retried.
+    pub fn record_publish_retry(&self) {
+        self.publish_retries.fetch_add(1, Ordering::Relaxed);
     }
 
     /// One request answered (`ok` = no error).
@@ -105,6 +130,15 @@ impl ServeStats {
     pub fn swaps(&self) -> u64 {
         self.swaps.load(Ordering::Relaxed)
     }
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+    pub fn publish_rejected(&self) -> u64 {
+        self.publish_rejected.load(Ordering::Relaxed)
+    }
+    pub fn publish_retries(&self) -> u64 {
+        self.publish_retries.load(Ordering::Relaxed)
+    }
 
     /// Histogram snapshot as (bucket label, count), zero buckets included.
     pub fn batch_histogram(&self) -> Vec<(String, u64)> {
@@ -129,16 +163,19 @@ impl ServeStats {
             .map(|(l, c)| format!("{l}:{c}"))
             .collect();
         format!(
-            "serve gen {} / in-flight {} / done {} ({} failed) / batches {} [{}] / queue-hw {} \
-             / swaps {}",
+            "serve gen {} / in-flight {} / done {} ({} failed, {} shed) / batches {} [{}] \
+             / queue-hw {} / swaps {} / publish-rejected {} ({} retries)",
             self.generation(),
             self.in_flight(),
             self.completed(),
             self.failed(),
+            self.rejected(),
             self.batches(),
             hist.join(" "),
             self.queue_depth_hw(),
             self.swaps(),
+            self.publish_rejected(),
+            self.publish_retries(),
         )
     }
 }
@@ -177,6 +214,10 @@ mod tests {
         s.record_done(true);
         s.record_done(true);
         s.record_done(false);
+        s.record_rejected();
+        s.record_rejected();
+        s.record_publish_retry();
+        s.record_publish_rejected();
         assert_eq!(s.generation(), 4);
         assert_eq!(s.swaps(), 1);
         assert_eq!(s.in_flight(), 0);
@@ -191,8 +232,13 @@ mod tests {
         assert_eq!(hist[3], ("<=8".to_string(), 1));
         assert_eq!(hist[6], ("<=64".to_string(), 1));
         assert_eq!(hist[7], (">64".to_string(), 2));
+        assert_eq!(s.rejected(), 2);
+        assert_eq!(s.publish_retries(), 1);
+        assert_eq!(s.publish_rejected(), 1);
         let line = s.metrics_line();
         assert!(line.contains("gen 4"), "{line}");
         assert!(line.contains("queue-hw 7"), "{line}");
+        assert!(line.contains("2 shed"), "{line}");
+        assert!(line.contains("publish-rejected 1 (1 retries)"), "{line}");
     }
 }

@@ -1,0 +1,254 @@
+//! Durable atomic file writes with integrity footers.
+//!
+//! Every artifact the framework persists (`.lcck` dense checkpoints,
+//! `.lccz` compressed checkpoints, `.lcrs` run-state records,
+//! `BENCH_*.json`) goes through [`write_atomic`]: write a temp sibling,
+//! fsync it, rename over the destination, fsync the directory.  A crash
+//! at any instant leaves either the old complete file or the new
+//! complete file — never a torn one — and the rename is the commit
+//! point.
+//!
+//! Checkpoint formats additionally carry a 16-byte CRC32 footer
+//! (`[b"LCCF"][payload_len u64 le][crc32 u32 le]`) appended by
+//! [`write_atomic_footered`] and checked by [`verify_footer`] /
+//! [`read_verified`], so a file torn by a path that bypassed the atomic
+//! writer — or flipped by bit rot — is rejected at load rather than
+//! parsed into garbage.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::Path;
+
+use crate::util::failpoint::{self, Action};
+
+/// Footer magic. Distinct from any payload magic so a truncated payload
+/// can never alias a valid footer.
+pub const FOOTER_MAGIC: &[u8; 4] = b"LCCF";
+/// Footer length in bytes: magic + payload_len u64 + crc32 u32.
+pub const FOOTER_LEN: usize = 16;
+
+/// CRC-32 (IEEE 802.3, the zlib/PNG polynomial), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Append the integrity footer for the current contents of `buf`.
+pub fn append_footer(buf: &mut Vec<u8>) {
+    let len = buf.len() as u64;
+    let crc = crc32(buf);
+    buf.extend_from_slice(FOOTER_MAGIC);
+    buf.extend_from_slice(&len.to_le_bytes());
+    buf.extend_from_slice(&crc.to_le_bytes());
+}
+
+/// Check the integrity footer on `bytes` and return the payload slice
+/// with the footer stripped. Zero-copy: the returned slice borrows from
+/// the input (mmap-friendly).
+pub fn verify_footer<'a>(bytes: &'a [u8], label: &str) -> io::Result<&'a [u8]> {
+    let corrupt = |what: &str| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{label}: {what} (file torn or corrupt; integrity footer check failed)"),
+        )
+    };
+    if bytes.len() < FOOTER_LEN {
+        return Err(corrupt("shorter than the integrity footer"));
+    }
+    let (payload_plus, footer) = bytes.split_at(bytes.len() - FOOTER_LEN);
+    if &footer[0..4] != FOOTER_MAGIC {
+        return Err(corrupt("missing footer magic"));
+    }
+    let len = u64::from_le_bytes(footer[4..12].try_into().unwrap());
+    if len != payload_plus.len() as u64 {
+        return Err(corrupt("footer length disagrees with file size"));
+    }
+    let want = u32::from_le_bytes(footer[12..16].try_into().unwrap());
+    let got = crc32(payload_plus);
+    if want != got {
+        return Err(corrupt("CRC32 mismatch"));
+    }
+    Ok(payload_plus)
+}
+
+/// Read `path` and verify its integrity footer, returning the payload.
+pub fn read_verified(path: &Path) -> io::Result<Vec<u8>> {
+    let bytes = fs::read(path)?;
+    let label = path.display().to_string();
+    let payload_len = verify_footer(&bytes, &label)?.len();
+    let mut owned = bytes;
+    owned.truncate(payload_len);
+    Ok(owned)
+}
+
+/// Atomically replace `path` with `bytes`: write a temp sibling, fsync,
+/// rename into place, fsync the directory. Failpoints `ckpt.mid_write`
+/// (torn half-write / IO error mid-stream) and `ckpt.pre_rename` (crash
+/// after the temp file is complete but before the commit rename) make
+/// the crash windows testable.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "path has no file name"))?;
+    let tmp = path.with_file_name(format!(".{name}.tmp.{}", std::process::id()));
+
+    let result = (|| -> io::Result<()> {
+        let mut f = File::create(&tmp)?;
+        match failpoint::check("ckpt.mid_write") {
+            None => f.write_all(bytes)?,
+            Some(Action::Panic) => panic!("failpoint ckpt.mid_write: injected panic"),
+            Some(Action::Partial) => {
+                // Simulate a crash mid-write(2): half the payload lands.
+                f.write_all(&bytes[..bytes.len() / 2])?;
+                f.sync_all()?;
+                return Err(io::Error::other("failpoint ckpt.mid_write: injected torn write"));
+            }
+            Some(Action::IoErr) => {
+                return Err(io::Error::other("failpoint ckpt.mid_write: injected IO error"));
+            }
+        }
+        f.sync_all()?;
+        drop(f);
+        failpoint::hit("ckpt.pre_rename")?;
+        fs::rename(&tmp, path)?;
+        #[cfg(unix)]
+        if let Some(dir) = dir {
+            File::open(dir)?.sync_all()?;
+        }
+        #[cfg(not(unix))]
+        let _ = dir;
+        Ok(())
+    })();
+
+    if result.is_err() {
+        // Best-effort cleanup; the temp sibling is garbage either way and
+        // loaders never look at dotfile `.tmp` siblings.
+        let _ = fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// [`write_atomic`] with the CRC32 integrity footer appended.
+pub fn write_atomic_footered(path: &Path, payload: Vec<u8>) -> io::Result<()> {
+    let mut buf = payload;
+    append_footer(&mut buf);
+    write_atomic(path, &buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::failpoint;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("lcc_durable_{tag}_{}", std::process::id()));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard check value for the IEEE polynomial.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn footer_roundtrip_and_rejection() {
+        let mut buf = b"hello payload".to_vec();
+        append_footer(&mut buf);
+        assert_eq!(verify_footer(&buf, "t").unwrap(), b"hello payload");
+
+        // Every strict prefix must be rejected.
+        for n in 0..buf.len() {
+            assert!(verify_footer(&buf[..n], "t").is_err(), "prefix {n} accepted");
+        }
+        // Every single-bit flip must be rejected.
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x10;
+            assert!(verify_footer(&bad, "t").is_err(), "flip at {i} accepted");
+        }
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_survives_reread() {
+        let dir = tmpdir("replace");
+        let path = dir.join("a.bin");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second, longer").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second, longer");
+        // No temp siblings left behind.
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn footered_roundtrip_via_disk() {
+        let dir = tmpdir("footered");
+        let path = dir.join("b.bin");
+        write_atomic_footered(&path, b"payload bytes".to_vec()).unwrap();
+        assert_eq!(read_verified(&path).unwrap(), b"payload bytes");
+        // Corrupt one byte on disk: read_verified must reject.
+        let mut raw = fs::read(&path).unwrap();
+        raw[3] ^= 0x40;
+        fs::write(&path, &raw).unwrap();
+        assert!(read_verified(&path).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pre_rename_failure_preserves_old_contents() {
+        let dir = tmpdir("prerename");
+        let path = dir.join("c.bin");
+        write_atomic(&path, b"old good data").unwrap();
+        failpoint::arm("ckpt.pre_rename", failpoint::Action::IoErr, 1);
+        let err = write_atomic(&path, b"new data that must not land").unwrap_err();
+        failpoint::clear("ckpt.pre_rename");
+        assert!(err.to_string().contains("ckpt.pre_rename"), "{err}");
+        assert_eq!(fs::read(&path).unwrap(), b"old good data");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn mid_write_partial_is_cleaned_up_and_old_file_intact() {
+        let dir = tmpdir("midwrite");
+        let path = dir.join("d.bin");
+        write_atomic(&path, b"old good data").unwrap();
+        failpoint::arm("ckpt.mid_write", failpoint::Action::Partial, 1);
+        let err = write_atomic(&path, b"0123456789abcdef").unwrap_err();
+        failpoint::clear("ckpt.mid_write");
+        assert!(err.to_string().contains("torn"), "{err}");
+        assert_eq!(fs::read(&path).unwrap(), b"old good data");
+        let leftovers: Vec<_> = fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

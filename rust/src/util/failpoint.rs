@@ -1,0 +1,254 @@
+//! Deterministic fault injection (substrate; no `fail` crate offline).
+//!
+//! Production code declares named *sites* at the places where the outside
+//! world can hurt it — a checkpoint rename, a stream read, a registry
+//! publish — by calling [`hit`].  A site is inert (one mutex-guarded map
+//! lookup) until *armed*, either programmatically ([`arm`], for
+//! in-process tests) or via the `LCC_FAILPOINTS` environment variable
+//! (for subprocess kill/restart matrices):
+//!
+//! ```text
+//! LCC_FAILPOINTS="ckpt.pre_rename=panic@1,stream.read=ioerr@2"
+//! ```
+//!
+//! Each entry is `site=action[@N]`: the site fires its action on exactly
+//! the `N`-th hit (default 1) and is inert on every other hit — a
+//! deterministic trigger, not a probability.  Actions:
+//!
+//! * `panic` — panic at the site (a subprocess dies with a nonzero exit,
+//!   exactly like a crash or `kill -9` between two syscalls);
+//! * `ioerr` — [`hit`] returns an injected [`std::io::Error`], exercising
+//!   the error-propagation path;
+//! * `partial` — like `ioerr`, but sites that move bulk data (the durable
+//!   checkpoint writer) first perform a *torn* half-write, simulating a
+//!   crash mid-`write(2)`.
+//!
+//! The registered sites are listed in [`SITES`] so tests can iterate the
+//! full kill matrix without hand-maintaining a copy.
+
+use std::collections::HashMap;
+use std::io;
+use std::sync::{Mutex, OnceLock};
+use std::thread::{self, ThreadId};
+
+/// Every failpoint site compiled into the library, for matrix tests.
+pub const SITES: &[&str] = &[
+    "ckpt.mid_write",
+    "ckpt.pre_rename",
+    "stream.read",
+    "registry.publish",
+    "lc.step_end",
+];
+
+/// What an armed site does on its triggering hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Panic at the site (subprocess: nonzero exit, i.e. a crash).
+    Panic,
+    /// Return an injected IO error from [`hit`].
+    IoErr,
+    /// IO error after a torn half-write (durable writer only; plain
+    /// [`hit`] call sites treat it as [`Action::IoErr`]).
+    Partial,
+}
+
+impl Action {
+    fn parse(s: &str) -> Result<Action, String> {
+        match s {
+            "panic" => Ok(Action::Panic),
+            "ioerr" => Ok(Action::IoErr),
+            "partial" => Ok(Action::Partial),
+            other => Err(format!("unknown failpoint action {other:?}")),
+        }
+    }
+}
+
+struct SiteState {
+    action: Action,
+    /// Fire on exactly this hit count (1-based).
+    nth: u64,
+    hits: u64,
+    /// `Some(tid)`: only hits owned by that thread count ([`arm`], so
+    /// parallel unit tests never trip each other's failpoints).  `None`:
+    /// every hit counts (`LCC_FAILPOINTS` subprocess matrices).
+    owner: Option<ThreadId>,
+}
+
+fn registry() -> &'static Mutex<HashMap<String, SiteState>> {
+    static REG: OnceLock<Mutex<HashMap<String, SiteState>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut map = HashMap::new();
+        if let Ok(spec) = std::env::var("LCC_FAILPOINTS") {
+            match parse_spec(&spec) {
+                Ok(sites) => {
+                    for (name, st) in sites {
+                        map.insert(name, st);
+                    }
+                }
+                Err(e) => eprintln!("warning: ignoring LCC_FAILPOINTS: {e}"),
+            }
+        }
+        Mutex::new(map)
+    })
+}
+
+fn parse_spec(spec: &str) -> Result<Vec<(String, SiteState)>, String> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (site, rest) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("entry {entry:?} is not site=action[@N]"))?;
+        let (action, nth) = match rest.split_once('@') {
+            Some((a, n)) => (
+                Action::parse(a)?,
+                n.parse::<u64>().map_err(|_| format!("bad hit count in {entry:?}"))?,
+            ),
+            None => (Action::parse(rest)?, 1),
+        };
+        if nth == 0 {
+            return Err(format!("hit count must be >= 1 in {entry:?}"));
+        }
+        out.push((site.to_string(), SiteState { action, nth, hits: 0, owner: None }));
+    }
+    Ok(out)
+}
+
+/// Arm `site` to fire `action` on its `nth` hit (1-based), resetting any
+/// previous arming and hit count.  Test-only convenience; production
+/// arming goes through `LCC_FAILPOINTS`.  The arming is scoped to the
+/// calling thread: hits owned by other threads neither fire nor advance
+/// the counter, so parallel tests sharing a process can't trip each
+/// other's failpoints.
+pub fn arm(site: &str, action: Action, nth: u64) {
+    assert!(nth >= 1, "failpoint hit count is 1-based");
+    registry().lock().unwrap().insert(
+        site.to_string(),
+        SiteState { action, nth, hits: 0, owner: Some(thread::current().id()) },
+    );
+}
+
+/// Disarm `site` (a no-op if it was never armed).
+pub fn clear(site: &str) {
+    registry().lock().unwrap().remove(site);
+}
+
+/// Record one hit on `site` and return the action to perform if this hit
+/// is the armed trigger.  Used directly by sites with bespoke behavior
+/// (the durable writer's torn half-write); everything else calls [`hit`].
+pub fn check(site: &str) -> Option<Action> {
+    check_owned(site, thread::current().id())
+}
+
+/// Like [`check`], attributing the hit to `owner` — for sites that run on
+/// a helper thread working on someone's behalf (the streaming producer
+/// attributes its reads to the consuming caller).
+pub fn check_owned(site: &str, owner: ThreadId) -> Option<Action> {
+    let mut reg = registry().lock().unwrap();
+    let st = reg.get_mut(site)?;
+    if st.owner.is_some_and(|t| t != owner) {
+        return None;
+    }
+    st.hits += 1;
+    if st.hits == st.nth {
+        Some(st.action)
+    } else {
+        None
+    }
+}
+
+/// Declare a failpoint site: returns an injected error or panics when the
+/// site is armed and this is the triggering hit, and is a cheap no-op
+/// otherwise.
+pub fn hit(site: &str) -> io::Result<()> {
+    fire(site, check(site))
+}
+
+/// [`hit`] with the ownership semantics of [`check_owned`].
+pub fn hit_owned(site: &str, owner: ThreadId) -> io::Result<()> {
+    fire(site, check_owned(site, owner))
+}
+
+fn fire(site: &str, action: Option<Action>) -> io::Result<()> {
+    match action {
+        None => Ok(()),
+        Some(Action::Panic) => panic!("failpoint {site}: injected panic"),
+        Some(Action::IoErr) | Some(Action::Partial) => {
+            Err(io::Error::other(format!("failpoint {site}: injected IO error")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_sites_are_noops() {
+        for _ in 0..3 {
+            assert!(hit("fp.test.unarmed").is_ok());
+        }
+    }
+
+    #[test]
+    fn fires_on_exactly_the_nth_hit() {
+        arm("fp.test.nth", Action::IoErr, 3);
+        assert!(hit("fp.test.nth").is_ok());
+        assert!(hit("fp.test.nth").is_ok());
+        let err = hit("fp.test.nth").unwrap_err();
+        assert!(err.to_string().contains("fp.test.nth"), "{err}");
+        // after the trigger the site is inert again
+        assert!(hit("fp.test.nth").is_ok());
+        clear("fp.test.nth");
+    }
+
+    #[test]
+    #[should_panic(expected = "injected panic")]
+    fn panic_action_panics() {
+        arm("fp.test.panic", Action::Panic, 1);
+        let _ = hit("fp.test.panic");
+    }
+
+    #[test]
+    fn spec_parsing() {
+        let sites = parse_spec("a.b=panic, c.d=ioerr@4 ,e=partial").unwrap();
+        assert_eq!(sites.len(), 3);
+        assert_eq!(sites[0].0, "a.b");
+        assert_eq!(sites[0].1.action, Action::Panic);
+        assert_eq!(sites[0].1.nth, 1);
+        assert_eq!(sites[1].1.action, Action::IoErr);
+        assert_eq!(sites[1].1.nth, 4);
+        assert_eq!(sites[2].1.action, Action::Partial);
+        assert!(parse_spec("nonsense").is_err());
+        assert!(parse_spec("a=explode").is_err());
+        assert!(parse_spec("a=panic@0").is_err());
+        assert!(parse_spec("a=panic@x").is_err());
+    }
+
+    #[test]
+    fn clear_disarms() {
+        arm("fp.test.clear", Action::IoErr, 1);
+        clear("fp.test.clear");
+        assert!(hit("fp.test.clear").is_ok());
+    }
+
+    #[test]
+    fn armed_sites_are_thread_scoped() {
+        arm("fp.test.scope", Action::IoErr, 1);
+        // Another thread's hits neither fire nor advance the counter...
+        std::thread::spawn(|| {
+            for _ in 0..4 {
+                assert!(hit("fp.test.scope").is_ok());
+            }
+        })
+        .join()
+        .unwrap();
+        // ...but a hit owned by the arming thread still triggers, even if
+        // performed elsewhere (the streaming-producer pattern).
+        let owner = thread::current().id();
+        std::thread::spawn(move || hit_owned("fp.test.scope", owner))
+            .join()
+            .unwrap()
+            .unwrap_err();
+        clear("fp.test.scope");
+    }
+}

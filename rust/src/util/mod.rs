@@ -6,6 +6,8 @@
 
 pub mod cli;
 pub mod config;
+pub mod durable;
+pub mod failpoint;
 pub mod log;
 pub mod mmap;
 pub mod rng;

@@ -47,6 +47,19 @@ impl Xoshiro256 {
         }
     }
 
+    /// Snapshot the full 256-bit generator state (for run-state
+    /// checkpoints: restoring via [`Xoshiro256::from_state`] continues
+    /// the exact sequence, which the bit-identical-resume contract
+    /// depends on).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from a [`Xoshiro256::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     /// Derive an independent stream (for per-thread / per-task RNGs).
     pub fn split(&mut self, stream: u64) -> Xoshiro256 {
         Xoshiro256::new(self.next_u64() ^ stream.wrapping_mul(0xA24BAED4963EE407))

@@ -1,0 +1,208 @@
+//! Kill/restart/resume matrix over the compiled failpoint sites.
+//!
+//! Each scenario runs the real `lcc` binary as a subprocess with a crash
+//! injected via `LCC_FAILPOINTS` (see `lc::util::failpoint`), checks the
+//! injected fault is fatal, then resumes from the surviving LCRS run
+//! state and requires the final compressed checkpoint to be
+//! **byte-identical** to an uninterrupted run — the contract `lcc
+//! compress --resume` advertises.
+//!
+//! Sites that never execute on the in-memory compress path are covered by
+//! in-process unit tests instead (`stream.read` in `data::stream`,
+//! `registry.publish` in `serve::registry`); a completeness check below
+//! keeps this split from silently drifting as sites are added.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+/// A tiny but real LC experiment: mlp-small, one adaptive-quant task on
+/// layer 0, 4 LC steps of 1 epoch each over 512 synthetic examples.
+const CONFIG: &str = r#"
+[model]
+name = "mlp-small"
+seed = 5
+reference_epochs = 1
+
+[data]
+n_train = 512
+n_test = 256
+seed = 1
+
+[lc]
+mu0 = 9e-5
+mu_growth = 1.1
+l_steps = 4
+epochs_per_step = 1
+lr0 = 0.09
+lr_decay = 0.98
+al = true
+seed = 42
+threads = 2
+quiet = true
+
+[task.q]
+layers = [0]
+view = "vector"
+compression = "adaptive_quant"
+k = 2
+"#;
+
+/// The `lcc` binary with a clean failpoint environment (the test runner's
+/// own env must never leak an arming into a run that should succeed).
+fn lcc() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_lcc"));
+    c.env_remove("LCC_FAILPOINTS");
+    c
+}
+
+fn check(label: &str, out: &Output) {
+    assert!(
+        out.status.success(),
+        "{label} failed ({}):\n--- stdout ---\n{}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+fn compress_args(config: &Path, out_compressed: &Path) -> Vec<String> {
+    vec![
+        "compress".into(),
+        "--config".into(),
+        config.display().to_string(),
+        "--out-compressed".into(),
+        out_compressed.display().to_string(),
+        "--quiet".into(),
+    ]
+}
+
+fn lcrs_files(dir: &Path) -> Vec<PathBuf> {
+    let mut v: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("listing {}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|e| e == "lcrs"))
+        .collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn kill_restart_resume_matrix_is_bit_identical() {
+    let root = std::env::temp_dir().join(format!("lcc_fault_matrix_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let config = root.join("exp.lcc");
+    std::fs::write(&config, CONFIG).unwrap();
+
+    // --- 1. the uninterrupted baseline ---------------------------------
+    let base = root.join("base.lccz");
+    let out = lcc().args(compress_args(&config, &base)).output().unwrap();
+    check("baseline compress", &out);
+    let base_bytes = std::fs::read(&base).unwrap();
+
+    // --- 2. checkpointing itself must not perturb the run --------------
+    let ck = root.join("ck.lccz");
+    let ck_run = root.join("run_ck");
+    let mut args = compress_args(&config, &ck);
+    args.extend([
+        "--save-every".into(),
+        "1".into(),
+        "--run-dir".into(),
+        ck_run.display().to_string(),
+    ]);
+    let out = lcc().args(&args).output().unwrap();
+    check("checkpointed compress", &out);
+    assert_eq!(
+        std::fs::read(&ck).unwrap(),
+        base_bytes,
+        "saving run state every step changed the final model"
+    );
+    // 4 steps saved, keep_checkpoints defaults to 3
+    assert_eq!(lcrs_files(&ck_run).len(), 3, "rotation should keep 3 generations");
+
+    // --- 3. the kill matrix --------------------------------------------
+    // Hit accounting: with save_every=1 the durable writer runs once per
+    // LC step, so `@2` for the ckpt.* sites crashes inside the *second*
+    // save (end of step 1) with the step-0 record already committed;
+    // lc.step_end=panic@2 crashes between steps 1 and 2 with two records
+    // on disk.  Every scenario therefore has a generation to resume from.
+    let matrix: &[(&str, &str)] = &[
+        ("lc.step_end", "lc.step_end=panic@2"),
+        ("ckpt.pre_rename", "ckpt.pre_rename=panic@2"),
+        ("ckpt.mid_write", "ckpt.mid_write=partial@2"),
+        ("ckpt.mid_write", "ckpt.mid_write=ioerr@2"),
+    ];
+    let unit_tested = ["stream.read", "registry.publish"];
+    for site in lc::util::failpoint::SITES {
+        assert!(
+            matrix.iter().any(|(s, _)| s == site) || unit_tested.contains(site),
+            "failpoint site {site} is covered by neither the kill matrix nor a unit test"
+        );
+    }
+
+    for (i, (site, spec)) in matrix.iter().enumerate() {
+        let run_dir = root.join(format!("run_kill_{i}"));
+        let mut args = vec![
+            "compress".into(),
+            "--config".into(),
+            config.display().to_string(),
+            "--quiet".into(),
+            "--save-every".into(),
+            "1".into(),
+            "--run-dir".into(),
+            run_dir.display().to_string(),
+        ];
+        let killed = lcc().args(&args).env("LCC_FAILPOINTS", spec).output().unwrap();
+        assert!(
+            !killed.status.success(),
+            "{spec} should be fatal, but the run exited cleanly:\n{}",
+            String::from_utf8_lossy(&killed.stderr)
+        );
+        assert!(
+            !lcrs_files(&run_dir).is_empty(),
+            "{site}: the crashed run left no durable generation to resume from"
+        );
+
+        let resumed = root.join(format!("resumed_{i}.lccz"));
+        args = compress_args(&config, &resumed);
+        args.extend(["--resume".into(), run_dir.display().to_string()]);
+        let out = lcc().args(&args).output().unwrap();
+        check(&format!("resume after {spec}"), &out);
+        assert_eq!(
+            std::fs::read(&resumed).unwrap(),
+            base_bytes,
+            "{spec}: resumed model is not bit-identical to the uninterrupted run"
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+/// A run directory holding only garbage (or nothing usable) must fail the
+/// resume with a clear error, not start silently from scratch.
+#[test]
+fn resume_from_unusable_run_dir_is_a_hard_error() {
+    let root = std::env::temp_dir().join(format!("lcc_fault_nodir_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let config = root.join("exp.lcc");
+    std::fs::write(&config, CONFIG).unwrap();
+    let run_dir = root.join("run_garbage");
+    std::fs::create_dir_all(&run_dir).unwrap();
+    std::fs::write(run_dir.join("step_000001.lcrs"), b"definitely not a run state").unwrap();
+
+    let args = [
+        "compress",
+        "--config",
+        config.to_str().unwrap(),
+        "--resume",
+        run_dir.to_str().unwrap(),
+        "--quiet",
+    ];
+    let out = lcc().args(args).output().unwrap();
+    assert!(!out.status.success(), "resume from garbage must fail");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("no usable run state"), "unexpected error: {stderr}");
+
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -29,6 +29,7 @@ fn tiny_lc_config() -> LcConfig {
         eval_every: 0,
         quiet: true,
         l_mode: lc::lc::LMode::Dense,
+        ..Default::default()
     }
 }
 

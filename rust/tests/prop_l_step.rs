@@ -310,6 +310,7 @@ fn lc_outcome_bit_identical_across_thread_counts() {
             eval_every: 0,
             quiet: true,
             l_mode: LMode::Dense,
+            ..Default::default()
         };
         let alg = LcAlgorithm::new(&mut rt, spec.clone(), tasks(), cfg).unwrap();
         let state = ParamState::init(&spec, 9);
@@ -930,6 +931,7 @@ fn stream_lc_cfg(threads: usize) -> LcConfig {
         eval_every: 0,
         quiet: true,
         l_mode: LMode::Dense,
+        ..Default::default()
     }
 }
 

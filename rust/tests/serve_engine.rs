@@ -96,7 +96,7 @@ fn single_request_matches_predict_batch_exactly() {
     let direct = session.predict_batch(&x, 1).unwrap();
 
     let engine =
-        ServeEngine::start(slot, BatchPolicy { max_batch: 1, max_delay_us: 100 }).unwrap();
+        ServeEngine::start(slot, BatchPolicy { max_batch: 1, max_delay_us: 100, ..BatchPolicy::default() }).unwrap();
     let resp = engine.submit(&x).unwrap().wait().unwrap();
     assert_eq!(resp.batch_size, 1);
     assert_eq!(resp.generation, 1);
@@ -113,7 +113,7 @@ fn coalesces_bursts_into_batches() {
     let slot = registry.publish_model(model, "inline", false).unwrap();
     // generous deadline: the collector prefers filling max_batch
     let engine =
-        ServeEngine::start(slot, BatchPolicy { max_batch: 8, max_delay_us: 50_000 }).unwrap();
+        ServeEngine::start(slot, BatchPolicy { max_batch: 8, max_delay_us: 50_000, ..BatchPolicy::default() }).unwrap();
     let pool = toy_dataset(32, 16, 10);
     let report =
         run_load(&engine, &pool, LoadSpec { n_requests: 64, qps: 0.0 }, |_| {}).unwrap();
@@ -138,7 +138,7 @@ fn deadline_flushes_partial_batches() {
     let slot = registry.publish_model(model, "inline", false).unwrap();
     // max_batch far above the offered load: only the deadline can flush
     let engine =
-        ServeEngine::start(slot, BatchPolicy { max_batch: 64, max_delay_us: 2_000 }).unwrap();
+        ServeEngine::start(slot, BatchPolicy { max_batch: 64, max_delay_us: 2_000, ..BatchPolicy::default() }).unwrap();
     let x = vec![0.2f32; 16];
     let pending: Vec<_> = (0..3).map(|_| engine.submit(&x).unwrap()).collect();
     // responses arrive while the engine is alive and far from max_batch,
@@ -158,7 +158,7 @@ fn hot_swap_under_load_loses_nothing() {
         .publish_model(quant_sparse_model(&widths, 8, 21), "gen-a", false)
         .unwrap();
     let engine =
-        ServeEngine::start(slot, BatchPolicy { max_batch: 8, max_delay_us: 500 }).unwrap();
+        ServeEngine::start(slot, BatchPolicy { max_batch: 8, max_delay_us: 500, ..BatchPolicy::default() }).unwrap();
     let pool = toy_dataset(32, 16, 10);
     let n = 200;
     let report = run_load(&engine, &pool, LoadSpec { n_requests: n, qps: 0.0 }, |i| {
@@ -233,13 +233,47 @@ fn drop_drains_pending_requests() {
     let slot = registry.publish_model(model, "inline", false).unwrap();
     // a deadline far in the future: only the drop-flush can answer these
     let engine =
-        ServeEngine::start(slot, BatchPolicy { max_batch: 64, max_delay_us: 10_000_000 })
+        ServeEngine::start(slot, BatchPolicy { max_batch: 64, max_delay_us: 10_000_000, ..BatchPolicy::default() })
             .unwrap();
     let x = vec![0.1f32; 16];
     let pending: Vec<_> = (0..5).map(|_| engine.submit(&x).unwrap()).collect();
     drop(engine); // shutdown must flush, not discard
     for p in pending {
         let r = p.wait().expect("accepted requests survive engine drop");
+        assert_eq!(r.logits.len(), 10);
+    }
+}
+
+#[test]
+fn full_queue_sheds_deterministically_and_serves_the_rest() {
+    let model = quant_sparse_model(&[16, 12, 10], 8, 61);
+    let registry = ModelRegistry::new(2);
+    let slot = registry.publish_model(model, "inline", false).unwrap();
+    // deadline and max_batch both out of reach: the queue holds exactly
+    // what submit admitted until the drop-flush
+    let engine = ServeEngine::start(
+        slot,
+        BatchPolicy { max_batch: 64, max_delay_us: 500_000, max_queue: 4 },
+    )
+    .unwrap();
+    let x = vec![0.1f32; 16];
+    let mut accepted = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..8 {
+        match engine.submit(&x) {
+            Ok(p) => accepted.push(p),
+            Err(e) => {
+                shed += 1;
+                assert!(format!("{e:#}").contains("serve queue full"), "{e:#}");
+            }
+        }
+    }
+    assert_eq!(accepted.len(), 4, "admission bound must admit exactly max_queue");
+    assert_eq!(shed, 4);
+    assert_eq!(engine.stats().rejected(), 4);
+    drop(engine); // accepted requests still answered by the drop-flush
+    for p in accepted {
+        let r = p.wait().expect("admitted requests are never dropped");
         assert_eq!(r.logits.len(), 10);
     }
 }
